@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 13's OOM story: reverse-mode unrolling memory vs
+//! the 16 GiB accelerator budget, across problem sizes (paper scale).
+use idiff::coordinator::experiments::fig4;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    fig4::run_memory(&args);
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 14: final validation loss parity across methods.
+use idiff::coordinator::experiments::fig4;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    fig4::run_val_loss(&args);
+}

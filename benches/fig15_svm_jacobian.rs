@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 15: SVM Jacobian error vs solution error.
+use idiff::coordinator::experiments::fig15;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    fig15::run(&args);
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 17: MD position-sensitivity norms across seeds —
+//! implicit (BiCGSTAB) converges, unrolling through FIRE diverges.
+use idiff::coordinator::experiments::md_sens;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    md_sens::run(&args);
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 3 (Jacobian estimate error vs iterate error).
+//! Rows/series printed match the paper's curves: implicit, unrolled, bound.
+use idiff::coordinator::experiments::fig3;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    fig3::run(&args);
+}

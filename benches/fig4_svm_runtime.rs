@@ -1,0 +1,28 @@
+//! Regenerates paper Fig. 4(a–c): CPU runtime of implicit diff vs unrolling
+//! for multiclass-SVM hyper-parameter optimization across problem sizes.
+//! `--solver md|pg|bcd` picks the panel; defaults run all three at CI scale.
+use idiff::coordinator::experiments::fig4;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    match args.get_or("solver", "all") {
+        "md" => {
+            fig4::run_md(&args);
+        }
+        "pg" => {
+            fig4::run_pg(&args);
+        }
+        "bcd" => {
+            fig4::run_bcd(&args);
+        }
+        _ => {
+            println!("--- Fig. 4(a): mirror descent ---");
+            fig4::run_md(&args);
+            println!("--- Fig. 4(b): proximal gradient ---");
+            fig4::run_pg(&args);
+            println!("--- Fig. 4(c): block coordinate descent ---");
+            fig4::run_bcd(&args);
+        }
+    }
+}

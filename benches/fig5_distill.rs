@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 5/16 + the §4.2 runtime claim: dataset
+//! distillation with implicit diff vs unrolling (speedup printed; distilled
+//! prototypes dumped to results/fig5_distilled.txt).
+use idiff::coordinator::experiments::distill;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    distill::run(&args);
+}

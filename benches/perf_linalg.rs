@@ -1,0 +1,44 @@
+//! §Perf micro-benchmarks for the L3 hot paths: gemm, gemv, CG iterations,
+//! simplex projection, softmax rows. Used to drive the optimization pass
+//! recorded in EXPERIMENTS.md §Perf.
+use idiff::linalg::{op::DenseOp, Mat};
+use idiff::util::bench::{bench, black_box, BenchConfig};
+use idiff::util::cli::Args;
+use idiff::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse();
+    let n = args.get_usize("n", 256);
+    let mut rng = Rng::new(1);
+    let a = Mat::randn(n, n, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    let spd = a.gram().plus_diag(1.0);
+    let v = rng.normal_vec(n);
+    let cfg = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 1 };
+
+    let flops = 2.0 * (n as f64).powi(3);
+    let m = bench(&format!("gemm {n}x{n}x{n}"), cfg, || black_box(a.matmul(&b)));
+    println!("  → {:.2} GFLOP/s", flops / m.mean_s() / 1e9);
+    bench(&format!("gemm-t {n}x{n}x{n} (AᵀB)"), cfg, || black_box(a.t_matmul(&b)));
+    bench(&format!("gram {n}x{n}"), cfg, || black_box(a.gram()));
+    let cfg_fast = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 50 };
+    bench(&format!("gemv {n}x{n}"), cfg_fast, || black_box(a.matvec(&v)));
+    bench(&format!("gemv-t {n}x{n}"), cfg_fast, || black_box(a.matvec_t(&v)));
+    bench(&format!("cg solve {n} (tol 1e-10)"), cfg, || {
+        let mut x = vec![0.0; n];
+        idiff::linalg::cg::cg(&DenseOp::symmetric(&spd), &v, &mut x, 1e-10, 4 * n);
+        black_box(x)
+    });
+    let y = rng.normal_vec(4096);
+    bench("simplex projection d=4096", cfg_fast, || {
+        let mut out = vec![0.0; 4096];
+        idiff::proj::simplex::project_simplex(&y, &mut out);
+        black_box(out)
+    });
+    let rows = rng.normal_vec(700 * 5);
+    bench("softmax rows 700x5", cfg_fast, || {
+        let mut out = vec![0.0; 700 * 5];
+        idiff::proj::simplex::softmax_rows(&rows, 5, &mut out);
+        black_box(out)
+    });
+}

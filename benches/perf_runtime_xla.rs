@@ -1,0 +1,41 @@
+//! §Perf: XLA-oracle dispatch overhead vs the native Rust oracle on the
+//! shared ridge problem (request-path cost of the AOT layer).
+use idiff::coordinator::experiments::xla_parity::load_shared_problem;
+use idiff::diff::spec::RootMap;
+use idiff::ml::ridge::RidgeRoot;
+use idiff::runtime::{artifacts_dir, XlaRidgeRoot, XlaRuntime};
+use idiff::util::bench::{bench, black_box, BenchConfig};
+
+fn main() {
+    let dir = artifacts_dir();
+    let rt = match XlaRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: {e:#} — run `make artifacts`");
+            return;
+        }
+    };
+    let rp = load_shared_problem(&dir).expect("ridge_data.json");
+    let d = rp.dim();
+    let native = RidgeRoot(&rp);
+    let oracle = XlaRidgeRoot { rt: &rt, d, design: rp.x.data.clone(), targets: rp.y.clone() };
+    let theta = vec![1.5; d];
+    let x = rp.solve_closed_form_vec(&theta);
+    let cfg = BenchConfig { warmup_iters: 3, samples: 10, reps_per_sample: 20 };
+    let mut out = vec![0.0; d];
+    bench("native ridge F eval", cfg, || {
+        native.eval(&x, &theta, &mut out);
+        black_box(out[0])
+    });
+    bench("xla ridge F eval (PJRT dispatch)", cfg, || {
+        oracle.eval(&x, &theta, &mut out);
+        black_box(out[0])
+    });
+    bench("native implicit jacobian", cfg, || {
+        black_box(idiff::diff::root::jacobian_via_root(&native, &x, &theta))
+    });
+    let cfg_slow = BenchConfig { warmup_iters: 1, samples: 3, reps_per_sample: 1 };
+    bench("xla implicit jacobian", cfg_slow, || {
+        black_box(idiff::diff::root::jacobian_via_root(&oracle, &x, &theta))
+    });
+}

@@ -1,0 +1,9 @@
+//! Executable form of paper Table 1: every optimality mapping instantiated
+//! and its implicit Jacobian checked against finite differences.
+use idiff::coordinator::experiments::table1;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    table1::run(&args);
+}

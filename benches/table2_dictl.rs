@@ -1,0 +1,9 @@
+//! Regenerates paper Table 2: survival-prediction AUC for L1/L2 logreg,
+//! unsupervised DictL + logreg, and task-driven DictL (bilevel implicit).
+use idiff::coordinator::experiments::table2;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    table2::run(&args);
+}

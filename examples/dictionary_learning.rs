@@ -1,0 +1,17 @@
+//! Task-driven dictionary learning (paper §4.3, Table 2) on the synthetic
+//! gene-expression cohort — the full four-method comparison at small scale.
+//!
+//! Run: cargo run --release --example dictionary_learning -- [--p 200 --splits 3]
+use idiff::coordinator::experiments::table2;
+use idiff::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse();
+    if args.get("p").is_none() {
+        args.options.insert("p".into(), "200".into());
+    }
+    if args.get("splits").is_none() {
+        args.options.insert("splits".into(), "3".into());
+    }
+    table2::run(&args);
+}

@@ -1,0 +1,35 @@
+//! Hypergradient request server + self-test client: the Rust binary on the
+//! request path (Python was build-time only). Starts the TCP server, fires
+//! a few JSON requests at it, prints the responses.
+//!
+//! Run: cargo run --release --example hypergrad_server
+use idiff::coordinator::serve::HypergradServer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() {
+    let addr = "127.0.0.1:7979";
+    std::thread::spawn(move || {
+        let _ = HypergradServer::new_default().serve(addr);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let theta: Vec<String> = (0..8).map(|_| "1.0".to_string()).collect();
+    let reqs = vec![
+        r#"{"op": "ping"}"#.to_string(),
+        format!(r#"{{"op": "ridge_hypergrad", "theta": [{t}], "v": [{t}]}}"#, t = theta.join(",")),
+        format!(r#"{{"op": "ridge_jacobian", "theta": [{t}]}}"#, t = theta.join(",")),
+        r#"{"op": "bogus"}"#.to_string(),
+    ];
+    for req in reqs {
+        stream.write_all(req.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let shown = if resp.len() > 140 { format!("{}…", &resp[..140]) } else { resp.clone() };
+        println!("→ {req}\n← {shown}");
+    }
+    println!("hypergrad_server example OK");
+}

@@ -1,0 +1,28 @@
+//! Multiclass-SVM hyper-parameter optimization (paper §4.1): bi-level
+//! optimization of the regularization parameter with implicit
+//! differentiation through the projected-gradient fixed point, using a BCD
+//! solver — solver and fixed point independently chosen (Fig. 4c).
+//!
+//! Run: cargo run --release --example svm_hyperopt -- [--p 100 --outer-iters 30]
+use idiff::coordinator::experiments::fig4::{self, DiffFp, Solver};
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let p = args.get_usize("p", 100);
+    let outer_iters = args.get_usize("outer-iters", 30);
+    let setup = fig4::setup(args.get_usize("m", 140), p, 5, 40, args.get_u64("seed", 3));
+    let mut lambda = 0.0f64;
+    let mut outer = idiff::bilevel::outer::OuterGd::new(5e-3, 100);
+    for it in 0..outer_iters {
+        let theta = lambda.exp();
+        let x_star = fig4::inner_solve(&setup, Solver::Bcd, theta, 60);
+        let loss = setup.svm.outer_loss(&setup.x_val, &setup.y_val, &x_star, theta);
+        let g = fig4::hypergrad_implicit(&setup, DiffFp::ProjGrad, &x_star, theta);
+        let mut th = [lambda];
+        outer.step(&mut th, &[g]);
+        lambda = th[0];
+        println!("outer {it:>3}: θ = {theta:.4}  val loss = {loss:.4}  dL/dλ = {g:+.4}");
+    }
+    println!("final θ = {:.4}", lambda.exp());
+}

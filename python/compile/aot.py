@@ -1,0 +1,68 @@
+"""AOT pipeline: lower every L2 oracle to HLO **text** + write the manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the runtime's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md). Lowering goes stablehlo →
+XlaComputation(return_tuple=True) → as_hlo_text, and the Rust side unwraps
+the 1-tuple.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    # keep_unused: oracle signatures stay uniform even when an argument does
+    # not affect the output (e.g. x in ∂₁F·v for a linear F) — the Rust side
+    # always passes the full argument list.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"oracles": []}
+    for name, (fn, args) in model.oracle_specs().items():
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        n_out = len(fn(*args))
+        manifest["oracles"].append(
+            {
+                "name": name,
+                "file": fname,
+                "in_shapes": [list(a.shape) for a in args],
+                "n_outputs": n_out,
+            }
+        )
+        print(f"[aot] {name}: {len(text)} chars, in_shapes={[list(a.shape) for a in args]}")
+    model.export_ridge_data(out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['oracles'])} oracles to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L1 Pallas kernels: fused elementwise operators.
+
+- ``soft_threshold``: the lasso prox ST(y, λ) = sign(y)·max(|y| − λ, 0),
+  fused in one VMEM pass (paper Appendix C.2).
+- ``row_softmax``: the KL/Bregman projection onto the simplex, one row block
+  per grid step (paper Appendix C.1).
+
+Lane-aligned (·, 128)-style blocks on TPU; interpret=True on this CPU image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_threshold_kernel(y_ref, lam_ref, o_ref):
+    y = y_ref[...]
+    lam = lam_ref[0]
+    o_ref[...] = jnp.sign(y) * jnp.maximum(jnp.abs(y) - lam, 0.0)
+
+
+@jax.jit
+def soft_threshold(y, lam):
+    """ST(y, λ) for a flat f32 vector y and scalar λ (shape (1,))."""
+    (n,) = y.shape
+    block = n
+    # single block: the operator is memory-bound; one fused pass
+    return pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
+        interpret=True,
+    )(y, lam)
+
+
+def _row_softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def row_softmax(x, block_rows: int = 8):
+    """Row-wise softmax of an (m, k) matrix, one row-block per grid step."""
+    m, k = x.shape
+    b = min(block_rows, m)
+    while m % b != 0:
+        b -= 1
+    return pl.pallas_call(
+        _row_softmax_kernel,
+        grid=(m // b,),
+        in_specs=[pl.BlockSpec((b, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=True,
+    )(x)

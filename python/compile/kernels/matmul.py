@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: VMEM-tiled matmul (the Gram / Hessian-vector hot spot).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiles are sized for VMEM and
+shaped for the 128×128 MXU; on this CPU image the kernel runs under
+``interpret=True`` (real-TPU lowering emits a Mosaic custom call the CPU
+PJRT client cannot execute). Correctness is pinned to ``ref.matmul_ref`` by
+pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += X[i,k] @ Y[k,j].
+
+    The k axis revisits the same output block, so o_ref doubles as the f32
+    accumulator: zeroed at k = 0, accumulated into afterwards.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``target`` (keeps the grid
+    exact without padding logic)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Tiled ``x @ y`` via Pallas (interpret mode on CPU).
+
+    Block sizes default to the MXU-native 128; for small operands the
+    blocks shrink to exact divisors so the grid tiles the problem.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def matvec(a, v):
+    """A @ v through the tiled kernel (v lifted to a column)."""
+    return matmul(a, v[:, None])[:, 0]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+(pytest asserts allclose between each kernel and its ref across shapes)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def soft_threshold_ref(y, lam):
+    return jnp.sign(y) * jnp.maximum(jnp.abs(y) - lam[0], 0.0)
+
+
+def row_softmax_ref(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def ridge_f_ref(x_vec, theta, design, targets):
+    """F(x, θ) = Φᵀ(Φx − y) + θ⊙x — the Fig. 1 optimality mapping."""
+    r = design @ x_vec - targets
+    return design.T @ r + theta * x_vec

@@ -1,0 +1,116 @@
+"""L2 — the JAX compute graphs AOT-compiled for the Rust runtime.
+
+Ridge regression (the paper's Fig. 1 running example) on a fixed synthetic
+design matrix: the optimality mapping F(x, θ) = Φᵀ(Φx − y) + θ⊙x and its two
+JVP oracles, with every matrix product routed through the L1 Pallas matmul
+kernel so the whole three-layer stack (Pallas → JAX → HLO → Rust PJRT) is
+exercised on the Rust request path.
+
+The design matrix is generated HERE (numpy PRNG) and exported alongside the
+HLO artifacts (``ridge_data.json``) so the Rust side constructs the *same*
+problem for its native-vs-XLA parity check — no cross-language PRNG
+dependency.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import elementwise, matmul
+
+# Fixed problem size for the AOT artifacts (shapes are static in HLO).
+RIDGE_M = 64
+RIDGE_D = 16
+RIDGE_SEED = 12345
+
+
+def make_ridge_data():
+    """Standardized correlated design + targets (diabetes-like, f32)."""
+    rng = np.random.default_rng(RIDGE_SEED)
+    latent = rng.standard_normal((RIDGE_M, RIDGE_D // 2))
+    mixing = rng.standard_normal((RIDGE_D // 2, RIDGE_D))
+    x = latent @ mixing + 0.5 * rng.standard_normal((RIDGE_M, RIDGE_D))
+    x -= x.mean(axis=0, keepdims=True)
+    x /= np.linalg.norm(x, axis=0, keepdims=True)
+    w = rng.standard_normal(RIDGE_D)
+    y = x @ w + 0.05 * rng.standard_normal(RIDGE_M)
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+DESIGN, TARGETS = make_ridge_data()
+_DESIGN_J = jnp.asarray(DESIGN)
+_TARGETS_J = jnp.asarray(TARGETS)
+
+
+# NOTE: the design matrix and targets are passed as runtime ARGUMENTS, not
+# baked in as constants — ``as_hlo_text()`` elides large constants
+# (``constant({...})``), which would zero them out after the text round-trip.
+
+def _mm(a, v):
+    """a @ v through the Pallas matmul kernel (v a vector)."""
+    return matmul.matmul(a, v[:, None])[:, 0]
+
+
+def ridge_f(x, theta, design, targets):
+    """F(x, θ) = Φᵀ(Φx − y) + θ⊙x."""
+    r = _mm(design, x) - targets
+    return (_mm(design.T, r) + theta * x,)
+
+
+def ridge_f_jvp_x(x, theta, v, design, targets):
+    """∂₁F·v = Φᵀ(Φv) + θ⊙v (x, targets unused: F is linear in x; kept for
+    a uniform oracle signature)."""
+    del x, targets
+    return (_mm(design.T, _mm(design, v)) + theta * v,)
+
+
+def ridge_f_jvp_theta(x, theta, v):
+    """∂₂F·v = v⊙x."""
+    del theta
+    return (v * x,)
+
+
+def lasso_prox(y, lam):
+    """The L1 soft-threshold kernel as a standalone oracle."""
+    return (elementwise.soft_threshold(y, lam),)
+
+
+def simplex_kl_projection(scores):
+    """Row-softmax (KL projection onto simplex rows) as an oracle."""
+    return (elementwise.row_softmax(scores),)
+
+
+def oracle_specs():
+    """Manifest of everything aot.py lowers: name → (fn, example args)."""
+    d = RIDGE_D
+    xv = jnp.zeros((d,), jnp.float32)
+    dm = jnp.zeros((RIDGE_M, d), jnp.float32)
+    tv = jnp.zeros((RIDGE_M,), jnp.float32)
+    return {
+        "ridge_f": (ridge_f, (xv, xv, dm, tv)),
+        "ridge_f_jvp_x": (ridge_f_jvp_x, (xv, xv, xv, dm, tv)),
+        "ridge_f_jvp_theta": (ridge_f_jvp_theta, (xv, xv, xv)),
+        "lasso_prox": (lasso_prox, (jnp.zeros((256,), jnp.float32), jnp.zeros((1,), jnp.float32))),
+        "simplex_kl_projection": (simplex_kl_projection, (jnp.zeros((32, 8), jnp.float32),)),
+    }
+
+
+def export_ridge_data(out_dir: str):
+    """Write the shared problem data for the Rust parity check."""
+    payload = {
+        "m": RIDGE_M,
+        "d": RIDGE_D,
+        "x": [float(v) for v in DESIGN.reshape(-1)],
+        "y": [float(v) for v in TARGETS],
+    }
+    with open(os.path.join(out_dir, "ridge_data.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def ridge_f_reference(x, theta):
+    """Pure-jnp reference for tests (no Pallas)."""
+    r = _DESIGN_J @ x - _TARGETS_J
+    return _DESIGN_J.T @ r + theta * x

@@ -1,0 +1,108 @@
+"""L1 kernel correctness: Pallas vs pure-jnp refs, hypothesis-swept shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, matmul, ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 40),
+        k=st.integers(1, 40),
+        n=st.integers(1, 40),
+    )
+    def test_matches_ref_random_shapes(self, m, k, n):
+        x = rand((m, k))
+        y = rand((k, n))
+        got = matmul.matmul(x, y)
+        want = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize(
+        "shape",
+        [(128, 128, 128), (256, 64, 128), (64, 256, 32), (1, 128, 1), (200, 200, 200)],
+    )
+    def test_tiled_shapes(self, shape):
+        m, k, n = shape
+        x = rand((m, k))
+        y = rand((k, n))
+        np.testing.assert_allclose(
+            matmul.matmul(x, y), ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5
+        )
+
+    def test_explicit_small_blocks(self):
+        x = rand((64, 64))
+        y = rand((64, 64))
+        got = matmul.matmul(x, y, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5)
+
+    def test_matvec(self):
+        a = rand((48, 32))
+        v = rand((32,))
+        np.testing.assert_allclose(matmul.matvec(a, v), a @ v, rtol=1e-5, atol=1e-5)
+
+    def test_identity(self):
+        x = rand((32, 32))
+        eye = np.eye(32, dtype=np.float32)
+        np.testing.assert_allclose(matmul.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+class TestSoftThreshold:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 512), lam=st.floats(0.0, 3.0))
+    def test_matches_ref(self, n, lam):
+        y = rand((n,), scale=2.0)
+        lam_arr = np.array([lam], dtype=np.float32)
+        got = elementwise.soft_threshold(y, lam_arr)
+        want = ref.soft_threshold_ref(y, lam_arr)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_kills_small_entries(self):
+        y = np.array([0.5, -0.5, 2.0, -2.0], dtype=np.float32)
+        lam = np.array([1.0], dtype=np.float32)
+        got = np.asarray(elementwise.soft_threshold(y, lam))
+        np.testing.assert_allclose(got, [0.0, 0.0, 1.0, -1.0], atol=1e-7)
+
+    def test_nonexpansive(self):
+        a = rand((128,))
+        b = rand((128,))
+        lam = np.array([0.7], dtype=np.float32)
+        pa = np.asarray(elementwise.soft_threshold(a, lam))
+        pb = np.asarray(elementwise.soft_threshold(b, lam))
+        assert np.linalg.norm(pa - pb) <= np.linalg.norm(a - b) + 1e-6
+
+
+class TestRowSoftmax:
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 40), k=st.integers(1, 16))
+    def test_matches_ref(self, m, k):
+        x = rand((m, k), scale=3.0)
+        got = elementwise.row_softmax(x)
+        want = ref.row_softmax_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = rand((16, 8), scale=5.0)
+        got = np.asarray(elementwise.row_softmax(x))
+        np.testing.assert_allclose(got.sum(axis=1), np.ones(16), rtol=1e-5)
+        assert (got > 0).all()
+
+    def test_shift_invariance(self):
+        x = rand((4, 6))
+        a = np.asarray(elementwise.row_softmax(x))
+        b = np.asarray(elementwise.row_softmax(x + 100.0))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_dtype_preserved(self):
+        x = rand((8, 4))
+        assert elementwise.row_softmax(x).dtype == jnp.float32

@@ -1,0 +1,62 @@
+"""L2 model oracles: Pallas-backed ridge F vs pure-jnp reference, gradient
+consistency, and shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def rand_vec(seed, n=model.RIDGE_D):
+    return np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+
+
+class TestRidgeOracles:
+    def test_f_matches_reference(self):
+        x = jnp.asarray(rand_vec(1))
+        theta = jnp.abs(jnp.asarray(rand_vec(2)))
+        (got,) = model.ridge_f(x, theta, model._DESIGN_J, model._TARGETS_J)
+        want = model.ridge_f_reference(x, theta)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_f_is_gradient_of_objective(self):
+        # F must equal ∇_x [½‖Φx−y‖² + ½Σθᵢxᵢ²]
+        def obj(x, theta):
+            r = jnp.asarray(model.DESIGN) @ x - jnp.asarray(model.TARGETS)
+            return 0.5 * jnp.sum(r**2) + 0.5 * jnp.sum(theta * x * x)
+
+        x = jnp.asarray(rand_vec(3))
+        theta = jnp.abs(jnp.asarray(rand_vec(4)))
+        g = jax.grad(obj, argnums=0)(x, theta)
+        (f,) = model.ridge_f(x, theta, model._DESIGN_J, model._TARGETS_J)
+        np.testing.assert_allclose(f, g, rtol=2e-4, atol=2e-4)
+
+    def test_jvp_x_matches_autodiff(self):
+        x = jnp.asarray(rand_vec(5))
+        theta = jnp.abs(jnp.asarray(rand_vec(6)))
+        v = jnp.asarray(rand_vec(7))
+        (got,) = model.ridge_f_jvp_x(x, theta, v, model._DESIGN_J, model._TARGETS_J)
+        _, want = jax.jvp(lambda xx: model.ridge_f_reference(xx, theta), (x,), (v,))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_jvp_theta_matches_autodiff(self):
+        x = jnp.asarray(rand_vec(8))
+        theta = jnp.abs(jnp.asarray(rand_vec(9)))
+        v = jnp.asarray(rand_vec(10))
+        (got,) = model.ridge_f_jvp_theta(x, theta, v)
+        _, want = jax.jvp(lambda tt: model.ridge_f_reference(x, tt), (theta,), (v,))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_design_standardized(self):
+        x = model.DESIGN
+        np.testing.assert_allclose(x.mean(axis=0), 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.linalg.norm(x, axis=0), 1.0, rtol=1e-5)
+
+    def test_oracle_specs_shapes(self):
+        specs = model.oracle_specs()
+        assert set(specs) >= {"ridge_f", "ridge_f_jvp_x", "ridge_f_jvp_theta"}
+        for name, (fn, args) in specs.items():
+            outs = fn(*args)
+            assert isinstance(outs, tuple), name
+            assert all(o.dtype == jnp.float32 for o in outs), name

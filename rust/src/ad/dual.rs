@@ -1,0 +1,216 @@
+//! Forward-mode autodiff with dual numbers, generic over any [`Real`] so
+//! that `Dual<Dual<f64>>` gives exact second-order (Hessian-vector) products
+//! by forward-over-forward composition.
+
+use super::real::Real;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Dual number v + εd (ε² = 0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dual<T: Real = f64> {
+    pub v: T,
+    pub d: T,
+}
+
+impl<T: Real> Dual<T> {
+    pub fn new(v: T, d: T) -> Dual<T> {
+        Dual { v, d }
+    }
+    pub fn constant(v: T) -> Dual<T> {
+        Dual { v, d: T::from_f64(0.0) }
+    }
+    /// Seed with tangent 1 (the variable being differentiated).
+    pub fn seeded(v: T) -> Dual<T> {
+        Dual { v, d: T::from_f64(1.0) }
+    }
+}
+
+impl<T: Real> Add for Dual<T> {
+    type Output = Dual<T>;
+    fn add(self, o: Dual<T>) -> Dual<T> {
+        Dual { v: self.v + o.v, d: self.d + o.d }
+    }
+}
+impl<T: Real> Sub for Dual<T> {
+    type Output = Dual<T>;
+    fn sub(self, o: Dual<T>) -> Dual<T> {
+        Dual { v: self.v - o.v, d: self.d - o.d }
+    }
+}
+impl<T: Real> Mul for Dual<T> {
+    type Output = Dual<T>;
+    fn mul(self, o: Dual<T>) -> Dual<T> {
+        Dual { v: self.v * o.v, d: self.d * o.v + self.v * o.d }
+    }
+}
+impl<T: Real> Div for Dual<T> {
+    type Output = Dual<T>;
+    fn div(self, o: Dual<T>) -> Dual<T> {
+        Dual { v: self.v / o.v, d: (self.d * o.v - self.v * o.d) / (o.v * o.v) }
+    }
+}
+impl<T: Real> Neg for Dual<T> {
+    type Output = Dual<T>;
+    fn neg(self) -> Dual<T> {
+        Dual { v: -self.v, d: -self.d }
+    }
+}
+
+impl<T: Real> Real for Dual<T> {
+    fn from_f64(x: f64) -> Dual<T> {
+        Dual::constant(T::from_f64(x))
+    }
+    fn value(&self) -> f64 {
+        self.v.value()
+    }
+    fn exp(self) -> Dual<T> {
+        let e = self.v.exp();
+        Dual { v: e, d: self.d * e }
+    }
+    fn ln(self) -> Dual<T> {
+        Dual { v: self.v.ln(), d: self.d / self.v }
+    }
+    fn sqrt(self) -> Dual<T> {
+        let s = self.v.sqrt();
+        Dual { v: s, d: self.d / (T::from_f64(2.0) * s) }
+    }
+    fn relu(self) -> Dual<T> {
+        if self.v.value() > 0.0 {
+            self
+        } else {
+            Dual::constant(T::from_f64(0.0))
+        }
+    }
+    fn abs(self) -> Dual<T> {
+        if self.v.value() >= 0.0 {
+            self
+        } else {
+            -self
+        }
+    }
+}
+
+/// JVP of a vector function written generically: returns (f(x), ∂f(x)·v).
+pub fn jvp<FVec>(f: FVec, x: &[f64], v: &[f64]) -> (Vec<f64>, Vec<f64>)
+where
+    FVec: Fn(&[Dual<f64>]) -> Vec<Dual<f64>>,
+{
+    assert_eq!(x.len(), v.len());
+    let xd: Vec<Dual<f64>> = x.iter().zip(v).map(|(&xi, &vi)| Dual::new(xi, vi)).collect();
+    let out = f(&xd);
+    (out.iter().map(|o| o.v).collect(), out.iter().map(|o| o.d).collect())
+}
+
+/// Gradient of a scalar function by forward mode (d passes — fine for small d,
+/// used as a cross-check against the reverse tape).
+pub fn grad_forward<FS>(f: FS, x: &[f64]) -> Vec<f64>
+where
+    FS: Fn(&[Dual<f64>]) -> Dual<f64>,
+{
+    let mut g = vec![0.0; x.len()];
+    let mut xd: Vec<Dual<f64>> = x.iter().map(|&xi| Dual::constant(xi)).collect();
+    for i in 0..x.len() {
+        xd[i].d = 1.0;
+        g[i] = f(&xd).d;
+        xd[i].d = 0.0;
+    }
+    g
+}
+
+/// Hessian-vector product of a scalar generic function via forward-over-
+/// forward: H(x)·v = d/dε ∇f(x + εv).
+pub fn hvp<FS>(f: FS, x: &[f64], v: &[f64]) -> Vec<f64>
+where
+    FS: Fn(&[Dual<Dual<f64>>]) -> Dual<Dual<f64>>,
+{
+    let n = x.len();
+    let mut out = vec![0.0; n];
+    // Outer dual carries direction v; inner dual extracts one gradient coord.
+    let mut xd: Vec<Dual<Dual<f64>>> = (0..n)
+        .map(|i| Dual::new(Dual::new(x[i], 0.0), Dual::new(v[i], 0.0)))
+        .collect();
+    for i in 0..n {
+        xd[i].v.d = 1.0; // seed inner (gradient) direction e_i
+        let y = f(&xd);
+        out[i] = y.d.d; // ∂²/∂ε∂x_i
+        xd[i].v.d = 0.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::real::dot_r;
+
+    fn rosen<T: Real>(x: &[T]) -> T {
+        let a = T::from_f64(1.0) - x[0];
+        let b = x[1] - x[0] * x[0];
+        a * a + T::from_f64(100.0) * b * b
+    }
+
+    #[test]
+    fn jvp_of_linear_map_is_exact() {
+        let f = |x: &[Dual<f64>]| vec![x[0] * Dual::constant(2.0) + x[1], x[1] * x[1]];
+        let (y, dy) = jvp(f, &[3.0, 4.0], &[1.0, 0.5]);
+        assert_eq!(y, vec![10.0, 16.0]);
+        assert!((dy[0] - 2.5).abs() < 1e-15);
+        assert!((dy[1] - 4.0).abs() < 1e-15); // 2*x1*v1 = 2*4*0.5
+    }
+
+    #[test]
+    fn grad_forward_rosenbrock() {
+        let g = grad_forward(|x| rosen(x), &[1.2, 1.0]);
+        // analytic: dx0 = -2(1-x0) - 400 x0 (x1 - x0²); dx1 = 200 (x1 - x0²)
+        let x0 = 1.2;
+        let x1 = 1.0;
+        let g0 = -2.0 * (1.0 - x0) - 400.0 * x0 * (x1 - x0 * x0);
+        let g1 = 200.0 * (x1 - x0 * x0);
+        assert!((g[0] - g0).abs() < 1e-10);
+        assert!((g[1] - g1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn hvp_of_quadratic_is_matrix_product() {
+        // f(x) = ½ xᵀ diag(1,2,3) x → H v = diag(1,2,3) v
+        let f = |x: &[Dual<Dual<f64>>]| {
+            let c1 = Dual::<Dual<f64>>::from_f64(0.5);
+            let w = [1.0, 2.0, 3.0];
+            let mut s = Dual::<Dual<f64>>::from_f64(0.0);
+            for i in 0..3 {
+                s = s + Dual::<Dual<f64>>::from_f64(w[i]) * x[i] * x[i];
+            }
+            c1 * s
+        };
+        let h = hvp(f, &[0.3, -0.7, 2.0], &[1.0, 1.0, 1.0]);
+        assert!((h[0] - 1.0).abs() < 1e-12);
+        assert!((h[1] - 2.0).abs() < 1e-12);
+        assert!((h[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elementary_function_rules() {
+        let x = Dual::seeded(2.0);
+        assert!((x.exp().d - 2.0f64.exp()).abs() < 1e-12);
+        assert!((x.ln().d - 0.5).abs() < 1e-12);
+        assert!((x.sqrt().d - 0.25 / 2.0f64.sqrt() * 2.0).abs() < 1e-12);
+        assert!(((x * x).d - 4.0).abs() < 1e-12);
+        // d/dε |−(2+ε)| = sign(−2)·(−1) = 1
+        assert!((Real::abs(-x).d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relu_branches_on_value() {
+        assert_eq!(Dual::new(1.0, 5.0).relu().d, 5.0);
+        assert_eq!(Dual::new(-1.0, 5.0).relu().d, 0.0);
+    }
+
+    #[test]
+    fn generic_dot_with_duals() {
+        let a = [Dual::seeded(1.0), Dual::constant(2.0)];
+        let b = [Dual::constant(3.0), Dual::constant(4.0)];
+        let d = dot_r(&a, &b);
+        assert_eq!(d.v, 11.0);
+        assert_eq!(d.d, 3.0);
+    }
+}

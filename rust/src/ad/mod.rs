@@ -1,0 +1,21 @@
+//! From-scratch automatic differentiation.
+//!
+//! The paper's recipe is "autodiff of F + implicit function theorem". The
+//! autodiff half is built here:
+//!
+//! - [`real`]: a `Real` scalar trait so user code (optimality mappings,
+//!   objectives, energies) is written once, generically, and evaluated with
+//!   plain `f64`, forward-mode [`dual::Dual`] numbers (JVPs), second-order
+//!   duals (`Dual<Dual<f64>>`, Hessian-vector products by
+//!   forward-over-forward), or reverse-mode [`tape::Var`] (gradients/VJPs).
+//! - [`num_grad`]: central finite differences, used by tests as an
+//!   independent oracle for every analytic/AD derivative in the crate.
+
+pub mod dual;
+pub mod num_grad;
+pub mod real;
+pub mod tape;
+
+pub use dual::Dual;
+pub use real::Real;
+pub use tape::{grad as tape_grad, Tape, Var};

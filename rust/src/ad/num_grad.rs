@@ -1,0 +1,96 @@
+//! Central finite differences — the independent numerical oracle that every
+//! analytic/AD derivative in the crate is tested against, and the
+//! ground-truth Jacobian for Fig. 15 (the paper uses finite differences
+//! there too).
+
+/// Central-difference gradient of a scalar function.
+pub fn grad_fd(f: impl Fn(&[f64]) -> f64, x: &[f64], h: f64) -> Vec<f64> {
+    let n = x.len();
+    let mut g = vec![0.0; n];
+    let mut xp = x.to_vec();
+    for i in 0..n {
+        let xi = x[i];
+        xp[i] = xi + h;
+        let fp = f(&xp);
+        xp[i] = xi - h;
+        let fm = f(&xp);
+        xp[i] = xi;
+        g[i] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
+/// Central-difference JVP of a vector function: (f(x+hv) − f(x−hv)) / 2h.
+pub fn jvp_fd(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], v: &[f64], h: f64) -> Vec<f64> {
+    let xp: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi + h * vi).collect();
+    let xm: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi - h * vi).collect();
+    let fp = f(&xp);
+    let fm = f(&xm);
+    fp.iter().zip(&fm).map(|(&a, &b)| (a - b) / (2.0 * h)).collect()
+}
+
+/// Full dense Jacobian by central differences (p outputs × n inputs).
+pub fn jacobian_fd(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], h: f64) -> Vec<Vec<f64>> {
+    let n = x.len();
+    let mut cols = Vec::with_capacity(n);
+    let mut xp = x.to_vec();
+    for j in 0..n {
+        let xj = x[j];
+        xp[j] = xj + h;
+        let fp = f(&xp);
+        xp[j] = xj - h;
+        let fm = f(&xp);
+        xp[j] = xj;
+        cols.push(fp.iter().zip(&fm).map(|(&a, &b)| (a - b) / (2.0 * h)).collect::<Vec<f64>>());
+    }
+    // transpose columns → rows
+    let p = cols[0].len();
+    (0..p).map(|i| (0..n).map(|j| cols[j][i]).collect()).collect()
+}
+
+/// VJP via the dense FD Jacobian (test-only helper).
+pub fn vjp_fd(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], u: &[f64], h: f64) -> Vec<f64> {
+    let jac = jacobian_fd(f, x, h);
+    let n = x.len();
+    let mut out = vec![0.0; n];
+    for (i, row) in jac.iter().enumerate() {
+        for j in 0..n {
+            out[j] += u[i] * row[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_of_quadratic() {
+        let g = grad_fd(|x| x[0] * x[0] + 3.0 * x[1], &[2.0, 5.0], 1e-6);
+        assert!((g[0] - 4.0).abs() < 1e-6);
+        assert!((g[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jvp_linear_map() {
+        let f = |x: &[f64]| vec![2.0 * x[0] + x[1], -x[1]];
+        let j = jvp_fd(f, &[1.0, 1.0], &[1.0, 2.0], 1e-6);
+        assert!((j[0] - 4.0).abs() < 1e-8);
+        assert!((j[1] + 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn jacobian_and_vjp_consistent() {
+        let f = |x: &[f64]| vec![x[0] * x[1], x[0].exp()];
+        let x = [0.5, 2.0];
+        let jac = jacobian_fd(f, &x, 1e-6);
+        assert!((jac[0][0] - 2.0).abs() < 1e-6);
+        assert!((jac[0][1] - 0.5).abs() < 1e-6);
+        assert!((jac[1][0] - 0.5f64.exp()).abs() < 1e-6);
+        let u = [1.0, 1.0];
+        let v = vjp_fd(f, &x, &u, 1e-6);
+        assert!((v[0] - (2.0 + 0.5f64.exp())).abs() < 1e-6);
+        assert!((v[1] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,142 @@
+//! The `Real` scalar abstraction: write a numeric program once, evaluate it
+//! with f64 / dual numbers / tape variables. This is what lets the crate's
+//! optimality mappings be "user code that autodiff handles", as in the paper.
+
+use std::fmt::Debug;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Scalar field with the elementary functions the catalog needs.
+pub trait Real:
+    Copy
+    + Clone
+    + Debug
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+{
+    fn from_f64(x: f64) -> Self;
+    /// Primal (value) part, discarding derivative information.
+    fn value(&self) -> f64;
+
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn sqrt(self) -> Self;
+    /// max(self, 0) — the ReLU/positive-part used by projections.
+    fn relu(self) -> Self;
+    fn abs(self) -> Self;
+    /// Branch on the primal value: if value >= 0 pick `a` else `b`.
+    /// (This is how non-smooth operators pick their a.e.-derivative branch.)
+    fn select_ge0(self, a: Self, b: Self) -> Self {
+        if self.value() >= 0.0 {
+            a
+        } else {
+            b
+        }
+    }
+    fn powi(self, n: i32) -> Self {
+        let mut out = Self::from_f64(1.0);
+        let neg = n < 0;
+        for _ in 0..n.abs() {
+            out = out * self;
+        }
+        if neg {
+            Self::from_f64(1.0) / out
+        } else {
+            out
+        }
+    }
+    fn max_r(self, other: Self) -> Self {
+        if self.value() >= other.value() {
+            self
+        } else {
+            other
+        }
+    }
+    fn min_r(self, other: Self) -> Self {
+        if self.value() <= other.value() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Real for f64 {
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    fn value(&self) -> f64 {
+        *self
+    }
+    fn exp(self) -> f64 {
+        f64::exp(self)
+    }
+    fn ln(self) -> f64 {
+        f64::ln(self)
+    }
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+    fn relu(self) -> f64 {
+        if self > 0.0 {
+            self
+        } else {
+            0.0
+        }
+    }
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+}
+
+/// Dot product over any Real.
+pub fn dot_r<T: Real>(a: &[T], b: &[T]) -> T {
+    assert_eq!(a.len(), b.len());
+    let mut s = T::from_f64(0.0);
+    for i in 0..a.len() {
+        s = s + a[i] * b[i];
+    }
+    s
+}
+
+/// Sum over any Real.
+pub fn sum_r<T: Real>(a: &[T]) -> T {
+    let mut s = T::from_f64(0.0);
+    for &x in a {
+        s = s + x;
+    }
+    s
+}
+
+/// Lift an f64 slice into any Real.
+pub fn lift<T: Real>(xs: &[f64]) -> Vec<T> {
+    xs.iter().map(|&x| T::from_f64(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_real_ops() {
+        let x = <f64 as Real>::from_f64(2.0);
+        assert_eq!(x.powi(3), 8.0);
+        assert_eq!(x.powi(-1), 0.5);
+        assert_eq!((-1.5f64).relu(), 0.0);
+        assert_eq!(1.5f64.relu(), 1.5);
+        assert_eq!(2.0f64.max_r(3.0), 3.0);
+        assert_eq!(2.0f64.min_r(3.0), 2.0);
+    }
+
+    #[test]
+    fn generic_helpers() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot_r(&a, &b), 32.0);
+        assert_eq!(sum_r(&a), 6.0);
+        let lifted: Vec<f64> = lift(&a);
+        assert_eq!(lifted, a.to_vec());
+    }
+}

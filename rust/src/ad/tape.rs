@@ -1,0 +1,312 @@
+//! Reverse-mode autodiff on an explicit tape (Wengert list).
+//!
+//! Scalar-level graph; each `Var` owns an index into a shared arena. Used
+//! for gradients of scalar objectives (MD energy, outer losses) and for
+//! VJPs of user mappings via one reverse sweep per output (fine for the
+//! moderate output dimensions the experiments use; the catalog mappings
+//! override with analytic VJPs on hot paths).
+
+use std::cell::RefCell;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+use std::rc::Rc;
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    // Up to two parents with local partial derivatives.
+    parents: [usize; 2],
+    partials: [f64; 2],
+    n_parents: u8,
+}
+
+/// Shared tape arena.
+#[derive(Clone, Default)]
+pub struct Tape {
+    nodes: Rc<RefCell<Vec<Node>>>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.borrow().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Create an input (leaf) variable.
+    pub fn var(&self, value: f64) -> Var {
+        let idx = self.push(Node { parents: [0, 0], partials: [0.0, 0.0], n_parents: 0 });
+        Var { tape: self.clone(), idx, v: value }
+    }
+
+    /// Lift a slice into tape variables.
+    pub fn vars(&self, values: &[f64]) -> Vec<Var> {
+        values.iter().map(|&v| self.var(v)).collect()
+    }
+
+    fn push(&self, n: Node) -> usize {
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(n);
+        nodes.len() - 1
+    }
+
+    /// Reverse sweep from `output`: returns adjoints for every node.
+    pub fn backward(&self, output: &Var) -> Vec<f64> {
+        let nodes = self.nodes.borrow();
+        let mut adj = vec![0.0; nodes.len()];
+        adj[output.idx] = 1.0;
+        for i in (0..=output.idx).rev() {
+            let a = adj[i];
+            if a == 0.0 {
+                continue;
+            }
+            let n = &nodes[i];
+            for p in 0..n.n_parents as usize {
+                adj[n.parents[p]] += a * n.partials[p];
+            }
+        }
+        adj
+    }
+}
+
+/// A scalar variable living on a tape.
+#[derive(Clone)]
+pub struct Var {
+    tape: Tape,
+    idx: usize,
+    pub v: f64,
+}
+
+impl std::fmt::Debug for Var {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Var({}, idx={})", self.v, self.idx)
+    }
+}
+
+impl Var {
+    pub fn value(&self) -> f64 {
+        self.v
+    }
+
+    fn unary(&self, value: f64, partial: f64) -> Var {
+        let idx = self.tape.push(Node {
+            parents: [self.idx, 0],
+            partials: [partial, 0.0],
+            n_parents: 1,
+        });
+        Var { tape: self.tape.clone(), idx, v: value }
+    }
+
+    fn binary(&self, other: &Var, value: f64, pa: f64, pb: f64) -> Var {
+        let idx = self.tape.push(Node {
+            parents: [self.idx, other.idx],
+            partials: [pa, pb],
+            n_parents: 2,
+        });
+        Var { tape: self.tape.clone(), idx, v: value }
+    }
+
+    /// Adjoint of this variable after a backward sweep.
+    pub fn adjoint(&self, adjoints: &[f64]) -> f64 {
+        adjoints[self.idx]
+    }
+}
+
+// --- operator overloads on references (Var is cheap-cloneable) ---
+
+impl Add for &Var {
+    type Output = Var;
+    fn add(self, o: &Var) -> Var {
+        self.binary(o, self.v + o.v, 1.0, 1.0)
+    }
+}
+impl Sub for &Var {
+    type Output = Var;
+    fn sub(self, o: &Var) -> Var {
+        self.binary(o, self.v - o.v, 1.0, -1.0)
+    }
+}
+impl Mul for &Var {
+    type Output = Var;
+    fn mul(self, o: &Var) -> Var {
+        self.binary(o, self.v * o.v, o.v, self.v)
+    }
+}
+impl Div for &Var {
+    type Output = Var;
+    fn div(self, o: &Var) -> Var {
+        self.binary(o, self.v / o.v, 1.0 / o.v, -self.v / (o.v * o.v))
+    }
+}
+
+// Owned-value operator impls so `Var` satisfies `Real`.
+impl Add for Var {
+    type Output = Var;
+    fn add(self, o: Var) -> Var {
+        (&self).add(&o)
+    }
+}
+impl Sub for Var {
+    type Output = Var;
+    fn sub(self, o: Var) -> Var {
+        (&self).sub(&o)
+    }
+}
+impl Mul for Var {
+    type Output = Var;
+    fn mul(self, o: Var) -> Var {
+        (&self).mul(&o)
+    }
+}
+impl Div for Var {
+    type Output = Var;
+    fn div(self, o: Var) -> Var {
+        (&self).div(&o)
+    }
+}
+impl Neg for Var {
+    type Output = Var;
+    fn neg(self) -> Var {
+        self.unary(-self.v, -1.0)
+    }
+}
+
+// NOTE: `Real` requires Copy, which a tape Var cannot satisfy (it owns an Rc).
+// Tape programs therefore use `Var` directly with reference operators; the
+// generic `Real` path is served by f64/Dual. `grad` below is the main entry.
+
+/// Gradient of a scalar tape program.
+pub fn grad(f: impl Fn(&[Var]) -> Var, x: &[f64]) -> (f64, Vec<f64>) {
+    let tape = Tape::new();
+    let vars = tape.vars(x);
+    let out = f(&vars);
+    let adj = tape.backward(&out);
+    (out.v, vars.iter().map(|v| v.adjoint(&adj)).collect())
+}
+
+/// VJP of a vector-valued tape program: uᵀ ∂f(x). One tape build, one
+/// backward sweep per nonzero output is avoided by seeding a weighted sum —
+/// uᵀf is a scalar whose gradient is exactly uᵀ∂f.
+pub fn vjp(f: impl Fn(&[Var]) -> Vec<Var>, x: &[f64], u: &[f64]) -> Vec<f64> {
+    let tape = Tape::new();
+    let vars = tape.vars(x);
+    let outs = f(&vars);
+    assert_eq!(outs.len(), u.len());
+    // s = Σ u_i f_i(x); ∇s = uᵀ ∂f.
+    let mut s = tape.var(0.0);
+    for (o, &ui) in outs.iter().zip(u) {
+        let w = tape.var(ui); // constant leaf (gets zero adjoint influence back)
+        s = &s + &(&w * o);
+    }
+    let adj = tape.backward(&s);
+    vars.iter().map(|v| v.adjoint(&adj)).collect()
+}
+
+// --- elementary functions on Var ---
+impl Var {
+    pub fn exp_v(&self) -> Var {
+        let e = self.v.exp();
+        self.unary(e, e)
+    }
+    pub fn ln_v(&self) -> Var {
+        self.unary(self.v.ln(), 1.0 / self.v)
+    }
+    pub fn sqrt_v(&self) -> Var {
+        let s = self.v.sqrt();
+        self.unary(s, 0.5 / s)
+    }
+    pub fn powi_v(&self, n: i32) -> Var {
+        self.unary(self.v.powi(n), n as f64 * self.v.powi(n - 1))
+    }
+    pub fn relu_v(&self) -> Var {
+        if self.v > 0.0 {
+            self.unary(self.v, 1.0)
+        } else {
+            self.unary(0.0, 0.0)
+        }
+    }
+    pub fn scale(&self, c: f64) -> Var {
+        self.unary(self.v * c, c)
+    }
+    pub fn add_const(&self, c: f64) -> Var {
+        self.unary(self.v + c, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::num_grad;
+
+    #[test]
+    fn grad_of_quadratic() {
+        let (val, g) = grad(
+            |x| {
+                let a = &x[0] * &x[0];
+                let b = &x[1] * &x[1];
+                let s = &a + &b;
+                s.scale(0.5)
+            },
+            &[3.0, -4.0],
+        );
+        assert!((val - 12.5).abs() < 1e-12);
+        assert!((g[0] - 3.0).abs() < 1e-12);
+        assert!((g[1] + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let f = |x: &[Var]| {
+            let e = x[0].exp_v();
+            let l = x[1].add_const(3.0).ln_v();
+            let p = &e * &l;
+            let q = x[2].sqrt_v();
+            &p + &(&q / &x[0])
+        };
+        let x0 = [0.7, 1.3, 2.5];
+        let (_, g) = grad(f, &x0);
+        let gfd = num_grad::grad_fd(
+            |x| x[0].exp() * (x[1] + 3.0).ln() + x[2].sqrt() / x[0],
+            &x0,
+            1e-6,
+        );
+        for i in 0..3 {
+            assert!((g[i] - gfd[i]).abs() < 1e-5, "i={i}: {} vs {}", g[i], gfd[i]);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_jacobian_transpose() {
+        // f(x) = [x0*x1, x0+x1, x1²] at (2,3); J = [[3,2],[1,1],[0,6]]
+        let f = |x: &[Var]| vec![&x[0] * &x[1], &x[0] + &x[1], &x[1] * &x[1]];
+        let u = [1.0, -1.0, 0.5];
+        let v = vjp(f, &[2.0, 3.0], &u);
+        // Jᵀu = [3*1 + 1*(-1) + 0, 2*1 + 1*(-1) + 6*0.5] = [2, 4]
+        assert!((v[0] - 2.0).abs() < 1e-12);
+        assert!((v[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relu_zero_grad_in_inactive_branch() {
+        let (_, g) = grad(|x| x[0].relu_v(), &[-2.0]);
+        assert_eq!(g[0], 0.0);
+        let (_, g) = grad(|x| x[0].relu_v(), &[2.0]);
+        assert_eq!(g[0], 1.0);
+    }
+
+    #[test]
+    fn reused_subexpression_accumulates() {
+        // f = (x²)·(x²) = x⁴ → f' = 4x³
+        let (_, g) = grad(
+            |x| {
+                let sq = &x[0] * &x[0];
+                &sq * &sq
+            },
+            &[1.5],
+        );
+        assert!((g[0] - 4.0 * 1.5f64.powi(3)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Bi-level optimization machinery (paper §4): hypergradients of an outer
+//! loss L(x*(θ), θ) through the inner solution, computed either by implicit
+//! differentiation (VJP through the optimality mapping) or by unrolling, and
+//! small outer optimizers (GD, momentum, Adam).
+
+use crate::diff::root::implicit_vjp;
+use crate::diff::spec::{FixedPointMap, FixedPointResidual, RootMap};
+use crate::linalg::solve::LinearSolveConfig;
+
+/// How the hypergradient is obtained — the axis Figs. 3/4 compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HypergradMethod {
+    Implicit,
+    UnrollForward,
+    UnrollReverse,
+}
+
+/// Hypergradient of L(x*(θ), θ) via implicit differentiation of a root map:
+/// ∇θ = (∂x*)ᵀ ∇_x L + ∇_θ L.
+pub fn hypergrad_implicit<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    grad_x_outer: &[f64],
+    grad_theta_outer: &[f64],
+    cfg: &LinearSolveConfig,
+) -> Vec<f64> {
+    let (mut g, _rep) = implicit_vjp(m, x_star, theta, grad_x_outer, cfg);
+    for (gi, &go) in g.iter_mut().zip(grad_theta_outer) {
+        *gi += go;
+    }
+    g
+}
+
+/// Hypergradient via a fixed-point mapping (residual form of Eq. 3).
+pub fn hypergrad_fixed_point<T: FixedPointMap>(
+    t: T,
+    x_star: &[f64],
+    theta: &[f64],
+    grad_x_outer: &[f64],
+    grad_theta_outer: &[f64],
+    cfg: &LinearSolveConfig,
+) -> Vec<f64> {
+    let res = FixedPointResidual(t);
+    hypergrad_implicit(&res, x_star, theta, grad_x_outer, grad_theta_outer, cfg)
+}
+
+/// Hypergradient via reverse-mode unrolling of the fixed-point iteration.
+pub fn hypergrad_unroll_reverse<T: FixedPointMap>(
+    t: &T,
+    x0: &[f64],
+    theta: &[f64],
+    grad_x_outer: &[f64],
+    grad_theta_outer: &[f64],
+    iters: usize,
+) -> Vec<f64> {
+    let (_x, mut g) = crate::unroll::unroll_vjp(t, x0, theta, grad_x_outer, iters);
+    for (gi, &go) in g.iter_mut().zip(grad_theta_outer) {
+        *gi += go;
+    }
+    g
+}
+
+/// Outer optimizers.
+pub mod outer {
+    /// Plain gradient step with optional inverse-sqrt decay after `warmup`.
+    pub struct OuterGd {
+        pub step0: f64,
+        pub warmup: usize,
+        t: usize,
+    }
+
+    impl OuterGd {
+        pub fn new(step0: f64, warmup: usize) -> Self {
+            OuterGd { step0, warmup, t: 0 }
+        }
+        pub fn step(&mut self, theta: &mut [f64], grad: &[f64]) {
+            let eta = if self.t < self.warmup {
+                self.step0
+            } else {
+                self.step0 / ((self.t - self.warmup + 1) as f64).sqrt()
+            };
+            for i in 0..theta.len() {
+                theta[i] -= eta * grad[i];
+            }
+            self.t += 1;
+        }
+    }
+
+    /// Heavy-ball momentum (the dataset-distillation outer optimizer:
+    /// momentum 0.9, step 1 in the paper's Appendix F.3).
+    pub struct Momentum {
+        pub step: f64,
+        pub beta: f64,
+        v: Vec<f64>,
+    }
+
+    impl Momentum {
+        pub fn new(step: f64, beta: f64, dim: usize) -> Self {
+            Momentum { step, beta, v: vec![0.0; dim] }
+        }
+        pub fn step(&mut self, theta: &mut [f64], grad: &[f64]) {
+            for i in 0..theta.len() {
+                self.v[i] = self.beta * self.v[i] + grad[i];
+                theta[i] -= self.step * self.v[i];
+            }
+        }
+    }
+
+    /// Adam [Kingma & Ba, 56] with the default hyper-parameters — the
+    /// outer optimizer of the task-driven dictionary-learning experiment.
+    pub struct Adam {
+        pub step: f64,
+        pub beta1: f64,
+        pub beta2: f64,
+        pub eps: f64,
+        m: Vec<f64>,
+        v: Vec<f64>,
+        t: usize,
+    }
+
+    impl Adam {
+        pub fn new(step: f64, dim: usize) -> Self {
+            Adam { step, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+        }
+        pub fn step(&mut self, theta: &mut [f64], grad: &[f64]) {
+            self.t += 1;
+            let b1t = 1.0 - self.beta1.powi(self.t as i32);
+            let b2t = 1.0 - self.beta2.powi(self.t as i32);
+            for i in 0..theta.len() {
+                self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+                self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+                let mhat = self.m[i] / b1t;
+                let vhat = self.v[i] / b2t;
+                theta[i] -= self.step * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::spec::ClosureRoot;
+    use crate::linalg::vecops;
+
+    /// Inner: x*(θ) = 2θ (root of x − 2θ). Outer: L = ½‖x*‖² + ½‖θ‖².
+    /// ∇θL = 4θ + θ = 5θ.
+    #[test]
+    fn implicit_hypergrad_linear_case() {
+        let f = ClosureRoot {
+            d: 2,
+            n: 2,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = x[0] - 2.0 * th[0];
+                out[1] = x[1] - 2.0 * th[1];
+            },
+            symmetric: true,
+        };
+        let theta = [1.0, -0.5];
+        let x = [2.0, -1.0];
+        let grad_x = x; // ∇_x L = x*
+        let grad_t = theta; // ∇_θ L = θ
+        let g = hypergrad_implicit(&f, &x, &theta, &grad_x, &grad_t, &LinearSolveConfig::default());
+        assert!((g[0] - 5.0).abs() < 1e-8, "{g:?}");
+        assert!((g[1] + 2.5).abs() < 1e-8);
+    }
+
+    /// Unrolled reverse hypergradient approaches the implicit one as the
+    /// iteration count grows.
+    #[test]
+    fn unroll_converges_to_implicit() {
+        struct T;
+        impl crate::diff::spec::FixedPointMap for T {
+            fn dim_x(&self) -> usize {
+                1
+            }
+            fn dim_theta(&self) -> usize {
+                1
+            }
+            fn eval(&self, x: &[f64], th: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * x[0] + th[0];
+            }
+            fn jvp_x(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * v[0];
+            }
+            fn vjp_x(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * u[0];
+            }
+            fn jvp_theta(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                out[0] = v[0];
+            }
+            fn vjp_theta(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                out[0] = u[0];
+            }
+        }
+        // x* = θ/0.3; L = x* → ∂L/∂θ = 1/0.3
+        let theta = [0.6];
+        let x_star = [2.0];
+        let gi = hypergrad_fixed_point(T, &x_star, &theta, &[1.0], &[0.0], &LinearSolveConfig::default());
+        assert!((gi[0] - 1.0 / 0.3).abs() < 1e-8);
+        let g30 = hypergrad_unroll_reverse(&T, &[0.0], &theta, &[1.0], &[0.0], 30);
+        let g100 = hypergrad_unroll_reverse(&T, &[0.0], &theta, &[1.0], &[0.0], 100);
+        assert!((g100[0] - gi[0]).abs() < (g30[0] - gi[0]).abs());
+        assert!((g100[0] - gi[0]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn outer_optimizers_minimize_quadratic() {
+        // minimize ½‖θ − a‖² with all three optimizers.
+        let a = [3.0, -1.0];
+        for opt in 0..3 {
+            let mut theta = [0.0, 0.0];
+            let mut gd = outer::OuterGd::new(0.2, 10);
+            let mut mom = outer::Momentum::new(0.1, 0.9, 2);
+            let mut adam = outer::Adam::new(0.2, 2);
+            for _ in 0..300 {
+                let grad: Vec<f64> = (0..2).map(|i| theta[i] - a[i]).collect();
+                match opt {
+                    0 => gd.step(&mut theta, &grad),
+                    1 => mom.step(&mut theta, &grad),
+                    _ => adam.step(&mut theta, &grad),
+                }
+            }
+            let err = vecops::norm2(&vecops::sub(&theta, &a));
+            assert!(err < 1e-2, "optimizer {opt} err={err}");
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 15 — Jacobian error vs solution error on the multiclass SVM
+//! (θ = 1), ground truth from a tightly-converged BCD solve + central
+//! finite differences (as in the paper's Appendix F.1).
+
+use super::fig4::{setup, Solver};
+use crate::diff::spec::FixedPointResidual;
+use crate::linalg::solve::{LinearSolveConfig, LinearSolverKind};
+use crate::linalg::vecops;
+use crate::mappings::prox_grad::ProjGradFixedPoint;
+use crate::ml::svm::MulticlassSvm;
+use crate::proj::simplex::RowsSimplexProjection;
+use crate::util::bench::{write_figure, Series};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Json {
+    let sizes = args.get_usize_list("sizes", &[20, 40, 80]);
+    let m = args.get_usize("m", 60);
+    let k = args.get_usize("k", 3);
+    let seed = args.get_u64("seed", 5);
+    let theta = 1.0;
+
+    let mut series = Vec::new();
+    for &p in &sizes {
+        let sd = setup(m, p, k, 10, seed);
+        let svm = &sd.svm;
+        // Ground truth: very tight BCD solve + FD Jacobian dx*/dθ.
+        let x_star = svm.solve_bcd(theta, 4000);
+        let h = 1e-5;
+        let xp = svm.solve_bcd(theta + h, 4000);
+        let xm = svm.solve_bcd(theta - h, 4000);
+        let jac_true: Vec<f64> =
+            xp.iter().zip(&xm).map(|(a, b)| (a - b) / (2.0 * h)).collect();
+
+        let mut s = Series::new(&format!("p={p}"));
+        let cfg = LinearSolveConfig {
+            kind: LinearSolverKind::NormalCg,
+            tol: 1e-10,
+            max_iter: 4000,
+            gmres_restart: 30,
+        };
+        for &iters in &[2usize, 5, 10, 25, 50, 100, 200, 400] {
+            let x_hat = super::fig4::inner_solve(&sd, Solver::Bcd, theta, iters);
+            let sol_err = vecops::norm2(&vecops::sub(&x_hat, &x_star));
+            // implicit Jacobian estimate at x̂ via the PG fixed point
+            let eta = svm.pg_step(theta);
+            let obj = MulticlassSvm::new(svm.x_tr.clone(), svm.y_tr.clone());
+            let t = ProjGradFixedPoint::new(obj, RowsSimplexProjection { m: svm.m(), k: svm.k }, eta);
+            let res = FixedPointResidual(t);
+            let (jac_est, _) =
+                crate::diff::root::implicit_jvp(&res, &x_hat, &[theta], &[1.0], &cfg);
+            let jac_err = vecops::norm2(&vecops::sub(&jac_est, &jac_true));
+            s.push(sol_err, jac_err, 0.0);
+            println!("p={p} iters={iters:<5} sol_err={sol_err:.3e} jac_err={jac_err:.3e}");
+        }
+        series.push(s);
+    }
+    write_figure("fig15", &series);
+    Json::obj(vec![("series", Json::Arr(series.iter().map(Series::to_json).collect()))])
+}

@@ -1,0 +1,97 @@
+//! Fig. 3 — Jacobian estimate error vs iterate error on ridge regression
+//! (diabetes-like data), for implicit differentiation vs forward-mode
+//! unrolling, overlaid with Theorem 1's bound.
+
+use crate::data::regression::diabetes_like;
+use crate::diff::precision;
+use crate::diff::root::jacobian_via_root;
+use crate::diff::spec::FixedPointResidual;
+use crate::linalg::vecops;
+use crate::mappings::stationary::GradientDescentFixedPoint;
+use crate::ml::ridge::{RidgeProblem, RidgeRoot};
+use crate::util::bench::{write_figure, Series};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Json {
+    let m = args.get_usize("m", 442);
+    let p = args.get_usize("p", 10);
+    let seed = args.get_u64("seed", 7);
+    let theta_val = args.get_f64("theta", 1.0);
+
+    let (x_mat, y) = diabetes_like(m, p, seed);
+    let rp = RidgeProblem::new(x_mat.clone(), y);
+    let theta = vec![theta_val; p];
+    let x_star = rp.solve_closed_form_vec(&theta);
+    let jac_true = rp.jacobian_closed_form(&theta);
+
+    // GD step from the Hessian's Lipschitz bound.
+    let lip = rp.gram.fro_norm() + theta_val;
+    let step = 1.0 / lip;
+
+    let mut s_implicit = Series::new("implicit");
+    let mut s_unroll = Series::new("unroll (forward)");
+    let mut s_bound = Series::new("theorem-1 bound");
+    let consts = precision::ridge_constants(&x_mat, &theta, &x_star);
+    let mut bound_pairs = Vec::new();
+
+    let iter_grid: Vec<usize> =
+        args.get_usize_list("iters", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048]);
+    let root = RidgeRoot(&rp);
+    for &t in &iter_grid {
+        let x_hat = crate::solvers::gd::gd_fixed_iters(&rp, &vec![0.0; p], &theta, step, t);
+        let iter_err = vecops::norm2(&vecops::sub(&x_hat, &x_star));
+        // implicit estimate J(x̂, θ)
+        let jac_imp = jacobian_via_root(&root, &x_hat, &theta);
+        let mut err_imp = 0.0;
+        for i in 0..jac_imp.data.len() {
+            let d = jac_imp.data[i] - jac_true.data[i];
+            err_imp += d * d;
+        }
+        let err_imp = err_imp.sqrt();
+        // unrolled estimate: forward-mode through t GD iterations, per basis dir
+        let fp = GradientDescentFixedPoint {
+            obj: RidgeProblem::new(x_mat.clone(), rp.y.clone()),
+            eta: step,
+        };
+        let res = FixedPointResidual(fp);
+        let mut err_unr = 0.0;
+        {
+            let mut e = vec![0.0; p];
+            for j in 0..p {
+                e[j] = 1.0;
+                let (_, dx) = crate::unroll::unroll_jvp(&res.0, &vec![0.0; p], &theta, &e, t);
+                for i in 0..p {
+                    let d = dx[i] - jac_true.at(i, j);
+                    err_unr += d * d;
+                }
+                e[j] = 0.0;
+            }
+        }
+        let err_unr = err_unr.sqrt();
+        s_implicit.push(iter_err, err_imp, 0.0);
+        s_unroll.push(iter_err, err_unr, 0.0);
+        s_bound.push(iter_err, consts.bound(iter_err), 0.0);
+        // Below ~1e-6 the measured Jacobian error is dominated by the CG
+        // solve tolerance, not Theorem 1's term — exclude from the check.
+        if iter_err > 1e-6 {
+            bound_pairs.push(precision::ErrorPair { iterate_err: iter_err, jacobian_err: err_imp });
+        }
+    }
+    // Empirical Theorem-1 check (5% numerical slack).
+    let worst = precision::check_bound(&consts, &bound_pairs, 0.05);
+    println!("fig3: worst bound ratio = {worst:.4} (must be ≤ 1)");
+    println!("{:<12} {:>14} {:>14} {:>14}", "iter_err", "implicit", "unroll", "bound");
+    for i in 0..s_implicit.rows.len() {
+        println!(
+            "{:<12.3e} {:>14.3e} {:>14.3e} {:>14.3e}",
+            s_implicit.rows[i].0, s_implicit.rows[i].1, s_unroll.rows[i].1, s_bound.rows[i].1
+        );
+    }
+    let series = vec![s_implicit, s_unroll, s_bound];
+    write_figure("fig3", &series);
+    Json::obj(vec![
+        ("worst_bound_ratio", Json::Num(worst)),
+        ("series", Json::Arr(series.iter().map(Series::to_json).collect())),
+    ])
+}

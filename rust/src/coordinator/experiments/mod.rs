@@ -1,0 +1,12 @@
+//! Experiment implementations, one module per paper table/figure.
+//! Benches and examples call these with their own configs; the CLI
+//! dispatches through [`crate::coordinator::registry`].
+
+pub mod distill;
+pub mod fig15;
+pub mod fig3;
+pub mod fig4;
+pub mod md_sens;
+pub mod table1;
+pub mod table2;
+pub mod xla_parity;

@@ -1,0 +1,98 @@
+//! XLA runtime parity — load the AOT-compiled JAX/Pallas ridge oracle and
+//! verify it produces the same F/JVP values and the same implicit Jacobian
+//! as the native Rust oracle (the three-layer composition check).
+//!
+//! The problem data is exported by `python/compile/aot.py` into
+//! `artifacts/ridge_data.json` so both sides operate on identical inputs.
+
+use crate::diff::root::jacobian_via_root;
+use crate::diff::spec::RootMap;
+use crate::linalg::Mat;
+use crate::ml::ridge::{RidgeProblem, RidgeRoot};
+use crate::runtime::{artifacts_dir, XlaRidgeRoot, XlaRuntime};
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Load the shared ridge problem the artifacts were compiled against.
+pub fn load_shared_problem(dir: &std::path::Path) -> anyhow::Result<RidgeProblem> {
+    let text = std::fs::read_to_string(dir.join("ridge_data.json"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("ridge_data: {e}"))?;
+    let m = doc.usize_or("m", 0);
+    let d = doc.usize_or("d", 0);
+    let x: Vec<f64> = doc
+        .get("x")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default();
+    let y: Vec<f64> = doc
+        .get("y")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default();
+    anyhow::ensure!(x.len() == m * d && y.len() == m, "ridge_data shape mismatch");
+    Ok(RidgeProblem::new(Mat::from_vec(m, d, x), y))
+}
+
+fn rel_max_err(a: &[f64], b: &[f64]) -> f64 {
+    let scale = b.iter().fold(1e-12f64, |m, &v| m.max(v.abs()));
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max)
+        / scale
+}
+
+pub fn run(_args: &Args) -> Json {
+    let dir = artifacts_dir();
+    let rt = match XlaRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("xla parity SKIPPED: {e:#} (run `make artifacts` first)");
+            return Json::obj(vec![("skipped", Json::Bool(true))]);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let rp = match load_shared_problem(&dir) {
+        Ok(rp) => rp,
+        Err(e) => {
+            println!("xla parity SKIPPED: {e:#}");
+            return Json::obj(vec![("skipped", Json::Bool(true))]);
+        }
+    };
+    let d = rp.dim();
+    let native = RidgeRoot(&rp);
+    let oracle = XlaRidgeRoot { rt: &rt, d, design: rp.x.data.clone(), targets: rp.y.clone() };
+
+    let theta = vec![1.5; d];
+    let x_star = rp.solve_closed_form_vec(&theta);
+
+    // F parity at a generic (non-root) point — at x* both sides are ≈0 and
+    // the relative metric would divide by noise.
+    let x_generic: Vec<f64> = x_star.iter().map(|v| v + 1.0).collect();
+    let f_native = native.eval_vec(&x_generic, &theta);
+    let f_xla = oracle.eval_vec(&x_generic, &theta);
+    let max_f = rel_max_err(&f_xla, &f_native);
+    // JVP parity
+    let v: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut jn = vec![0.0; d];
+    native.jvp_x(&x_star, &theta, &v, &mut jn);
+    let mut jx = vec![0.0; d];
+    oracle.jvp_x(&x_star, &theta, &v, &mut jx);
+    let max_jvp = rel_max_err(&jx, &jn);
+    // Implicit Jacobian through BOTH oracles
+    let jac_native = jacobian_via_root(&native, &x_star, &theta);
+    let jac_xla = jacobian_via_root(&oracle, &x_star, &theta);
+    let max_jac = rel_max_err(&jac_xla.data, &jac_native.data);
+    println!("rel max |F_native − F_xla|      = {max_f:.3e}");
+    println!("rel max |JVP_native − JVP_xla|  = {max_jvp:.3e}");
+    println!("rel max |Jac_native − Jac_xla|  = {max_jac:.3e}");
+    // f32 artifacts → parity at f32 precision.
+    let ok = max_f < 1e-3 && max_jvp < 1e-3 && max_jac < 1e-3;
+    println!("xla parity: {}", if ok { "OK" } else { "FAILED" });
+    Json::obj(vec![
+        ("max_f_err", Json::Num(max_f)),
+        ("max_jvp_err", Json::Num(max_jvp)),
+        ("max_jac_err", Json::Num(max_jac)),
+        ("ok", Json::Bool(ok)),
+    ])
+}

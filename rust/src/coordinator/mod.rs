@@ -1,0 +1,63 @@
+//! Experiment coordinator: a registry of named experiments (one per paper
+//! table/figure), a config layer (CLI → JSON), a runner that times each
+//! experiment and writes `results/<name>.json`/`.csv`, and the hypergradient
+//! request server (see `serve`).
+
+pub mod experiments;
+pub mod serve;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// An experiment produces a JSON report (also written to results/).
+pub type ExperimentFn = fn(&Args) -> Json;
+
+/// Registry of all experiments, keyed by the paper artifact they regenerate.
+pub fn registry() -> Vec<(&'static str, &'static str, ExperimentFn)> {
+    vec![
+        ("fig3", "Jacobian estimate error vs iterate error (ridge)", experiments::fig3::run),
+        ("fig4a", "SVM hyperopt runtime — mirror descent solver + MD fixed point", experiments::fig4::run_md),
+        ("fig4b", "SVM hyperopt runtime — prox-grad solver + PG fixed point", experiments::fig4::run_pg),
+        ("fig4c", "SVM hyperopt runtime — BCD solver, MD & PG fixed points", experiments::fig4::run_bcd),
+        ("fig13", "unrolling reverse-mode memory model + OOM boundary (16 GiB)", experiments::fig4::run_memory),
+        ("fig14", "validation loss parity across methods", experiments::fig4::run_val_loss),
+        ("fig15", "Jacobian error vs solution error (multiclass SVM)", experiments::fig15::run),
+        ("distill", "dataset distillation: implicit vs unrolled (Fig. 5/16)", experiments::distill::run),
+        ("table2", "cancer survival AUC: 4 methods (Table 2)", experiments::table2::run),
+        ("fig17", "MD position sensitivity: implicit vs unrolled FIRE", experiments::md_sens::run),
+        ("table1", "catalog coverage: every optimality mapping vs FD", experiments::table1::run),
+        ("xla", "XLA runtime parity: native vs AOT ridge oracle", experiments::xla_parity::run),
+    ]
+}
+
+/// Run one experiment by name; returns its report.
+pub fn run_experiment(name: &str, args: &Args) -> Option<Json> {
+    for (id, desc, f) in registry() {
+        if id == name {
+            println!("=== {id}: {desc} ===");
+            let t = Timer::start();
+            let report = f(args);
+            let dt = t.elapsed_s();
+            println!("=== {id} done in {:.2}s ===", dt);
+            let _ = std::fs::create_dir_all("results");
+            let wrapped = Json::obj(vec![
+                ("experiment", Json::Str(id.to_string())),
+                ("seconds", Json::Num(dt)),
+                ("report", report.clone()),
+            ]);
+            let _ = std::fs::write(format!("results/{id}.json"), wrapped.to_string_pretty());
+            return Some(report);
+        }
+    }
+    None
+}
+
+/// List experiments for --help / `idiff list`.
+pub fn list_experiments() {
+    let mut t = crate::util::table::Table::new(&["id", "regenerates"]);
+    for (id, desc, _) in registry() {
+        t.row_strs(&[id, desc]);
+    }
+    t.print();
+}

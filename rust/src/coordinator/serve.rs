@@ -1,0 +1,164 @@
+//! Hypergradient request server — a minimal line-protocol TCP service that
+//! keeps the rust binary on the request path (Python is build-time only).
+//!
+//! Protocol (one JSON object per line):
+//!   {"op": "ridge_jacobian", "theta": [...]}            → {"jacobian": [[...]]}
+//!   {"op": "ridge_hypergrad", "theta": [...], "v": [..]} → {"grad": [...]}
+//!   {"op": "ping"}                                       → {"ok": true}
+//! Unknown ops return {"error": "..."}.
+
+use crate::diff::root::{implicit_vjp, jacobian_via_root};
+use crate::ml::ridge::{RidgeProblem, RidgeRoot};
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub struct HypergradServer {
+    rp: RidgeProblem,
+}
+
+impl HypergradServer {
+    pub fn new_default() -> HypergradServer {
+        let (x, y) = crate::data::regression::diabetes_like(64, 8, 7);
+        HypergradServer { rp: RidgeProblem::new(x, y) }
+    }
+
+    /// Handle one JSON request line.
+    pub fn handle(&self, line: &str) -> Json {
+        let req = match json::parse(line) {
+            Ok(r) => r,
+            Err(e) => return Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+        };
+        match req.str_or("op", "") {
+            "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+            "ridge_jacobian" => {
+                let theta = match parse_vec(&req, "theta", self.rp.dim()) {
+                    Ok(t) => t,
+                    Err(e) => return e,
+                };
+                let x_star = self.rp.solve_closed_form_vec(&theta);
+                let root = RidgeRoot(&self.rp);
+                let jac = jacobian_via_root(&root, &x_star, &theta);
+                let rows: Vec<Json> =
+                    (0..jac.rows).map(|i| Json::arr_f64(jac.row(i))).collect();
+                Json::obj(vec![("jacobian", Json::Arr(rows))])
+            }
+            "ridge_hypergrad" => {
+                let theta = match parse_vec(&req, "theta", self.rp.dim()) {
+                    Ok(t) => t,
+                    Err(e) => return e,
+                };
+                let v = match parse_vec(&req, "v", self.rp.dim()) {
+                    Ok(t) => t,
+                    Err(e) => return e,
+                };
+                let x_star = self.rp.solve_closed_form_vec(&theta);
+                let root = RidgeRoot(&self.rp);
+                let (g, _) = implicit_vjp(
+                    &root,
+                    &x_star,
+                    &theta,
+                    &v,
+                    &crate::linalg::solve::LinearSolveConfig::default(),
+                );
+                Json::obj(vec![("grad", Json::arr_f64(&g))])
+            }
+            other => Json::obj(vec![("error", Json::Str(format!("unknown op '{other}'")))]),
+        }
+    }
+
+    /// Serve until the process is killed. One thread per connection.
+    pub fn serve(self, addr: &str) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        println!("hypergrad server listening on {addr}");
+        let me = std::sync::Arc::new(self);
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let me = me.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(&me, stream);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(server: &HypergradServer, stream: TcpStream) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = server.handle(&line);
+        writer.write_all(resp.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn parse_vec(req: &Json, key: &str, expected: usize) -> Result<Vec<f64>, Json> {
+    let arr = req
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Json::obj(vec![("error", Json::Str(format!("missing '{key}'")))]))?;
+    let v: Vec<f64> = arr.iter().filter_map(Json::as_f64).collect();
+    if v.len() != expected {
+        return Err(Json::obj(vec![(
+            "error",
+            Json::Str(format!("'{key}' must have length {expected}")),
+        )]));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping() {
+        let s = HypergradServer::new_default();
+        let r = s.handle(r#"{"op": "ping"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn jacobian_request() {
+        let s = HypergradServer::new_default();
+        let theta = vec![1.0; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("ridge_jacobian".into())),
+            ("theta", Json::arr_f64(&theta)),
+        ]);
+        let r = s.handle(&req.to_string_compact());
+        let jac = r.get("jacobian").and_then(Json::as_arr).expect("jacobian");
+        assert_eq!(jac.len(), 8);
+        // parity with the closed form
+        let truth = s.rp.jacobian_closed_form(&theta);
+        let row0 = jac[0].as_arr().unwrap();
+        for j in 0..8 {
+            assert!((row0[j].as_f64().unwrap() - truth.at(0, j)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hypergrad_request_and_errors() {
+        let s = HypergradServer::new_default();
+        let r = s.handle(r#"{"op": "nope"}"#);
+        assert!(r.get("error").is_some());
+        let r = s.handle("not json");
+        assert!(r.get("error").is_some());
+        let theta = vec![1.0; 8];
+        let v = vec![1.0; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("ridge_hypergrad".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&v)),
+        ]);
+        let r = s.handle(&req.to_string_compact());
+        let g = r.get("grad").and_then(Json::as_arr).expect("grad");
+        assert_eq!(g.len(), 8);
+    }
+}

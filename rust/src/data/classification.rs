@@ -1,0 +1,140 @@
+//! Port of scikit-learn's `make_classification` [Guyon 50] — the generator
+//! the multiclass-SVM experiment uses (Appendix F.1: m=700, k=5, 10%
+//! informative features, the rest noise).
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+pub struct ClassificationDataset {
+    pub x: Mat,          // m × p features
+    pub labels: Vec<usize>, // class ids in [0, k)
+    pub k: usize,
+}
+
+impl ClassificationDataset {
+    /// One-hot label matrix m × k.
+    pub fn one_hot(&self) -> Mat {
+        let m = self.labels.len();
+        let mut y = Mat::zeros(m, self.k);
+        for (i, &c) in self.labels.iter().enumerate() {
+            *y.at_mut(i, c) = 1.0;
+        }
+        y
+    }
+}
+
+/// Generate a k-class dataset: informative features are Gaussian clusters at
+/// class-dependent centroids (hypercube vertices scaled by `class_sep`); the
+/// remaining features are pure noise.
+pub fn make_classification(
+    m: usize,
+    p: usize,
+    k: usize,
+    informative_frac: f64,
+    class_sep: f64,
+    rng: &mut Rng,
+) -> ClassificationDataset {
+    let n_inf = ((p as f64 * informative_frac).round() as usize).clamp(1, p);
+    // Class centroids in the informative subspace.
+    let mut centroids = Mat::zeros(k, n_inf);
+    for c in 0..k {
+        for j in 0..n_inf {
+            // Deterministic hypercube-ish pattern + jitter.
+            let sign = if ((c >> (j % 8)) & 1) == 1 { 1.0 } else { -1.0 };
+            *centroids.at_mut(c, j) = class_sep * sign + 0.3 * rng.normal();
+        }
+    }
+    let mut x = Mat::zeros(m, p);
+    let mut labels = Vec::with_capacity(m);
+    for i in 0..m {
+        let c = i % k; // balanced classes
+        labels.push(c);
+        for j in 0..n_inf {
+            *x.at_mut(i, j) = centroids.at(c, j) + rng.normal();
+        }
+        for j in n_inf..p {
+            *x.at_mut(i, j) = rng.normal();
+        }
+    }
+    // Shuffle rows so class order is not trivially sorted.
+    let perm = rng.permutation(m);
+    let mut xs = Mat::zeros(m, p);
+    let mut ls = vec![0usize; m];
+    for (dst, &src) in perm.iter().enumerate() {
+        xs.row_mut(dst).copy_from_slice(x.row(src));
+        ls[dst] = labels[src];
+    }
+    ClassificationDataset { x: xs, labels: ls, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let mut rng = Rng::new(1);
+        let ds = make_classification(100, 20, 5, 0.1, 2.0, &mut rng);
+        assert_eq!(ds.x.rows, 100);
+        assert_eq!(ds.x.cols, 20);
+        assert_eq!(ds.labels.len(), 100);
+        let mut counts = vec![0; 5];
+        for &c in &ds.labels {
+            counts[c] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let mut rng = Rng::new(2);
+        let ds = make_classification(30, 10, 3, 0.2, 1.0, &mut rng);
+        let y = ds.one_hot();
+        for i in 0..30 {
+            let s: f64 = y.row(i).iter().sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_in_informative_dims() {
+        // Nearest-centroid on informative features should beat chance easily.
+        let mut rng = Rng::new(3);
+        let k = 4;
+        let ds = make_classification(200, 30, k, 0.2, 3.0, &mut rng);
+        let n_inf = 6;
+        // compute class means
+        let mut means = Mat::zeros(k, n_inf);
+        let mut counts = vec![0.0; k];
+        for i in 0..200 {
+            let c = ds.labels[i];
+            counts[c] += 1.0;
+            for j in 0..n_inf {
+                *means.at_mut(c, j) += ds.x.at(i, j);
+            }
+        }
+        for c in 0..k {
+            for j in 0..n_inf {
+                *means.at_mut(c, j) /= counts[c];
+            }
+        }
+        let mut correct = 0;
+        for i in 0..200 {
+            let mut best = 0;
+            let mut bestd = f64::INFINITY;
+            for c in 0..k {
+                let d: f64 = (0..n_inf)
+                    .map(|j| (ds.x.at(i, j) - means.at(c, j)).powi(2))
+                    .sum();
+                if d < bestd {
+                    bestd = d;
+                    best = c;
+                }
+            }
+            if best == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "accuracy {correct}/200");
+    }
+}

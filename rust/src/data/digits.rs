@@ -1,0 +1,133 @@
+//! Synthetic 28×28 10-class digit-like images (MNIST substitute for the
+//! dataset-distillation experiment). Each class has a smooth Gaussian-bump
+//! prototype; samples are noisy prototypes. Distillation should recover
+//! per-class prototypes — the role Fig. 5's distilled digits play.
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const PIXELS: usize = SIDE * SIDE;
+
+/// Class prototypes: each class places 3 Gaussian bumps at class-specific
+/// locations (deterministic given the class id).
+pub fn class_prototype(class: usize) -> Vec<f64> {
+    let mut img = vec![0.0; PIXELS];
+    for b in 0..3 {
+        // deterministic pseudo-positions per (class, bump)
+        let cx = 4.0 + 20.0 * (((class * 7 + b * 13 + 3) % 11) as f64 / 10.0);
+        let cy = 4.0 + 20.0 * (((class * 5 + b * 17 + 1) % 11) as f64 / 10.0);
+        let sigma = 2.0 + ((class + b) % 3) as f64;
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                img[y * SIDE + x] += (-d2 / (2.0 * sigma * sigma)).exp();
+            }
+        }
+    }
+    // normalize to [0, 1]
+    let max = img.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    for v in img.iter_mut() {
+        *v /= max;
+    }
+    img
+}
+
+pub struct DigitsDataset {
+    pub x: Mat,            // m × 784, values in [0, 1]-ish
+    pub labels: Vec<usize>, // 0..10
+}
+
+/// Sample m noisy digit images, balanced across 10 classes.
+pub fn make_digits(m: usize, noise: f64, rng: &mut Rng) -> DigitsDataset {
+    let protos: Vec<Vec<f64>> = (0..10).map(class_prototype).collect();
+    let mut x = Mat::zeros(m, PIXELS);
+    let mut labels = Vec::with_capacity(m);
+    for i in 0..m {
+        let c = i % 10;
+        labels.push(c);
+        let row = x.row_mut(i);
+        for j in 0..PIXELS {
+            row[j] = (protos[c][j] + noise * rng.normal()).clamp(-0.5, 1.5);
+        }
+    }
+    let perm = rng.permutation(m);
+    let mut xs = Mat::zeros(m, PIXELS);
+    let mut ls = vec![0usize; m];
+    for (dst, &src) in perm.iter().enumerate() {
+        xs.row_mut(dst).copy_from_slice(x.row(src));
+        ls[dst] = labels[src];
+    }
+    DigitsDataset { x: xs, labels: ls }
+}
+
+/// Render an image row as coarse ASCII art (for the Fig. 5 dump).
+pub fn ascii_render(img: &[f64]) -> String {
+    let ramp = [' ', '.', ':', '+', '#', '@'];
+    let mut out = String::new();
+    for y in (0..SIDE).step_by(2) {
+        for x in 0..SIDE {
+            let v = img[y * SIDE + x].clamp(0.0, 1.0);
+            let idx = ((v * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1);
+            out.push(ramp[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototypes_distinct_across_classes() {
+        for a in 0..10 {
+            for b in a + 1..10 {
+                let pa = class_prototype(a);
+                let pb = class_prototype(b);
+                let d: f64 = pa.iter().zip(&pb).map(|(x, y)| (x - y) * (x - y)).sum();
+                assert!(d > 1.0, "classes {a},{b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_shape_and_balance() {
+        let mut rng = Rng::new(1);
+        let ds = make_digits(100, 0.1, &mut rng);
+        assert_eq!(ds.x.rows, 100);
+        assert_eq!(ds.x.cols, 784);
+        let mut counts = vec![0; 10];
+        for &c in &ds.labels {
+            counts[c] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn samples_close_to_their_prototype() {
+        let mut rng = Rng::new(2);
+        let ds = make_digits(50, 0.05, &mut rng);
+        for i in 0..50 {
+            let proto = class_prototype(ds.labels[i]);
+            let d: f64 = ds.x.row(i).iter().zip(&proto).map(|(x, p)| (x - p) * (x - p)).sum();
+            let d_other: f64 = ds
+                .x
+                .row(i)
+                .iter()
+                .zip(&class_prototype((ds.labels[i] + 1) % 10))
+                .map(|(x, p)| (x - p) * (x - p))
+                .sum();
+            assert!(d < d_other, "sample {i} closer to wrong prototype");
+        }
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let img = class_prototype(3);
+        let art = ascii_render(&img);
+        assert_eq!(art.lines().count(), 14);
+        assert!(art.lines().all(|l| l.chars().count() == 28));
+    }
+}

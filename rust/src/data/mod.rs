@@ -1,0 +1,12 @@
+//! Synthetic dataset substrates.
+//!
+//! The paper's data inputs that are gated (scikit-learn's diabetes, MNIST,
+//! TCGA breast-cancer expression) are replaced by generators matching their
+//! shapes and the statistical structure each experiment relies on — see
+//! DESIGN.md §Substitutions.
+
+pub mod classification;
+pub mod digits;
+pub mod gene_expr;
+pub mod regression;
+pub mod splits;

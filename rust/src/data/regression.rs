@@ -1,0 +1,91 @@
+//! Diabetes-like regression data (Fig. 3 substitute): standardized,
+//! correlated features with a dense linear signal plus noise — the same
+//! shape (m=442, p=10) and conditioning regime as [Efron et al., 35].
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Generate (Φ, y) with correlated standardized columns.
+pub fn diabetes_like(m: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    // Latent factors induce column correlation (like body measurements).
+    let n_latent = (p / 2).max(1);
+    let factors = Mat::randn(m, n_latent, &mut rng);
+    let mixing = Mat::randn(n_latent, p, &mut rng);
+    let mut x = factors.matmul(&mixing);
+    for v in x.data.iter_mut() {
+        *v += 0.5 * rng.normal();
+    }
+    // Standardize columns (mean 0, norm 1 — like sklearn's diabetes).
+    for j in 0..p {
+        let mut mean = 0.0;
+        for i in 0..m {
+            mean += x.at(i, j);
+        }
+        mean /= m as f64;
+        let mut norm = 0.0;
+        for i in 0..m {
+            let c = x.at(i, j) - mean;
+            *x.at_mut(i, j) = c;
+            norm += c * c;
+        }
+        let norm = norm.sqrt().max(1e-12);
+        for i in 0..m {
+            *x.at_mut(i, j) /= norm;
+        }
+    }
+    let w_true = rng.normal_vec(p);
+    let mut y = x.matvec(&w_true);
+    for v in y.iter_mut() {
+        *v = *v * 100.0 + 5.0 * rng.normal(); // diabetes-scale targets
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn columns_standardized() {
+        let (x, y) = diabetes_like(442, 10, 1);
+        assert_eq!(x.rows, 442);
+        assert_eq!(y.len(), 442);
+        for j in 0..10 {
+            let col = x.col(j);
+            let mean: f64 = col.iter().sum::<f64>() / 442.0;
+            let norm: f64 = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(mean.abs() < 1e-10);
+            assert!((norm - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn features_are_correlated() {
+        let (x, _) = diabetes_like(442, 10, 2);
+        // with latent factors, at least one off-diagonal |corr| should be large
+        let mut max_corr = 0.0f64;
+        for a in 0..10 {
+            for b in a + 1..10 {
+                let ca = x.col(a);
+                let cb = x.col(b);
+                let corr: f64 = ca.iter().zip(&cb).map(|(u, v)| u * v).sum();
+                max_corr = max_corr.max(corr.abs());
+            }
+        }
+        assert!(max_corr > 0.3, "max |corr| = {max_corr}");
+    }
+
+    #[test]
+    fn signal_is_learnable() {
+        let (x, y) = diabetes_like(200, 8, 3);
+        // Least squares residual should be far below total variance.
+        let ridge = crate::ml::ridge::RidgeProblem::new(x.clone(), y.clone());
+        let w = ridge.solve_closed_form(1e-6);
+        let pred = x.matvec(&w);
+        let ss_res: f64 = pred.iter().zip(&y).map(|(p, t)| (p - t) * (p - t)).sum();
+        let ymean: f64 = y.iter().sum::<f64>() / y.len() as f64;
+        let ss_tot: f64 = y.iter().map(|t| (t - ymean) * (t - ymean)).sum();
+        assert!(ss_res < 0.2 * ss_tot, "R² too low: {}", 1.0 - ss_res / ss_tot);
+    }
+}

@@ -1,0 +1,62 @@
+//! Train/validation/test splitting utilities (paper Appendix F.2 uses
+//! repeated 60/20/20 random splits).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Random fractional split. Fractions must sum to ≤ 1; remainder goes to test.
+pub fn random_split(m: usize, frac_train: f64, frac_val: f64, rng: &mut Rng) -> Split {
+    let perm = rng.permutation(m);
+    let n_train = (m as f64 * frac_train).round() as usize;
+    let n_val = (m as f64 * frac_val).round() as usize;
+    Split {
+        train: perm[..n_train].to_vec(),
+        val: perm[n_train..(n_train + n_val).min(m)].to_vec(),
+        test: perm[(n_train + n_val).min(m)..].to_vec(),
+    }
+}
+
+/// Select rows of a matrix by index.
+pub fn take_rows(x: &crate::linalg::Mat, idx: &[usize]) -> crate::linalg::Mat {
+    let mut out = crate::linalg::Mat::zeros(idx.len(), x.cols);
+    for (dst, &src) in idx.iter().enumerate() {
+        out.row_mut(dst).copy_from_slice(x.row(src));
+    }
+    out
+}
+
+/// Select entries of a vector by index.
+pub fn take<Tv: Copy>(v: &[Tv], idx: &[usize]) -> Vec<Tv> {
+    idx.iter().map(|&i| v[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_partitions_everything() {
+        let mut rng = Rng::new(1);
+        let s = random_split(100, 0.6, 0.2, &mut rng);
+        assert_eq!(s.train.len(), 60);
+        assert_eq!(s.val.len(), 20);
+        assert_eq!(s.test.len(), 20);
+        let mut all: Vec<usize> = s.train.iter().chain(&s.val).chain(&s.test).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_rows_selects() {
+        let x = crate::linalg::Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let sub = take_rows(&x, &[2, 0]);
+        assert_eq!(sub.row(0), &[4.0, 5.0]);
+        assert_eq!(sub.row(1), &[0.0, 1.0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! `@custom_fixed_point`: implicit differentiation on top of a solver given a
+//! fixed-point iteration T (paper §2.1, "Differentiating a fixed point").
+
+use super::spec::{FixedPointMap, FixedPointResidual, RootMap};
+use crate::linalg::mat::Mat;
+use crate::linalg::solve::LinearSolveConfig;
+
+/// Pairs a black-box solver with a fixed-point mapping T; differentiation
+/// goes through the residual F(x, θ) = T(x, θ) − x.
+pub struct CustomFixedPoint<T: FixedPointMap, S>
+where
+    S: Fn(&[f64], &[f64]) -> Vec<f64>,
+{
+    pub residual: FixedPointResidual<T>,
+    pub solver: S,
+    pub cfg: LinearSolveConfig,
+}
+
+impl<T: FixedPointMap, S> CustomFixedPoint<T, S>
+where
+    S: Fn(&[f64], &[f64]) -> Vec<f64>,
+{
+    pub fn new(t: T, solver: S) -> Self {
+        CustomFixedPoint { residual: FixedPointResidual(t), solver, cfg: LinearSolveConfig::default() }
+    }
+
+    pub fn with_cfg(mut self, cfg: LinearSolveConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn solve(&self, init: &[f64], theta: &[f64]) -> Vec<f64> {
+        (self.solver)(init, theta)
+    }
+
+    /// ∂x*(θ)·v via A = I − ∂₁T, B = ∂₂T.
+    pub fn jvp(&self, x_star: &[f64], theta: &[f64], v_theta: &[f64]) -> Vec<f64> {
+        super::root::implicit_jvp(&self.residual, x_star, theta, v_theta, &self.cfg).0
+    }
+
+    /// vᵀ∂x*(θ).
+    pub fn vjp(&self, x_star: &[f64], theta: &[f64], v_x: &[f64]) -> Vec<f64> {
+        super::root::implicit_vjp(&self.residual, x_star, theta, v_x, &self.cfg).0
+    }
+
+    pub fn jacobian(&self, x_star: &[f64], theta: &[f64]) -> Mat {
+        super::root::jacobian_via_root(&self.residual, x_star, theta)
+    }
+
+    /// Residual norm ‖T(x, θ) − x‖ — a convergence diagnostic.
+    pub fn residual_norm(&self, x: &[f64], theta: &[f64]) -> f64 {
+        let mut out = vec![0.0; x.len()];
+        self.residual.eval(x, theta, &mut out);
+        crate::linalg::vecops::norm2(&out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::spec::FixedPointMap;
+
+    /// T(x, θ) = 0.5 x + θ → x*(θ) = 2θ, ∂x* = 2.
+    struct Affine;
+    impl FixedPointMap for Affine {
+        fn dim_x(&self) -> usize {
+            1
+        }
+        fn dim_theta(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * x[0] + theta[0];
+        }
+    }
+
+    #[test]
+    fn fixed_point_jacobian() {
+        let cfp = CustomFixedPoint::new(Affine, |init: &[f64], theta: &[f64]| {
+            // naive fixed-point iteration as the black-box solver
+            let mut x = init.to_vec();
+            for _ in 0..200 {
+                x[0] = 0.5 * x[0] + theta[0];
+            }
+            x
+        });
+        let theta = [3.0];
+        let x = cfp.solve(&[0.0], &theta);
+        assert!((x[0] - 6.0).abs() < 1e-9);
+        assert!(cfp.residual_norm(&x, &theta) < 1e-9);
+        let j = cfp.jacobian(&x, &theta);
+        assert!((j.at(0, 0) - 2.0).abs() < 1e-6);
+        let jv = cfp.jvp(&x, &theta, &[1.0]);
+        assert!((jv[0] - 2.0).abs() < 1e-6);
+        let vj = cfp.vjp(&x, &theta, &[1.0]);
+        assert!((vj[0] - 2.0).abs() < 1e-6);
+    }
+
+    /// Gradient-descent fixed point on a quadratic: T(x,θ) = x − η∇₁f,
+    /// f = ½(x−θ)² → x* = θ; η must cancel (paper Eq. 5 remark).
+    struct GdQuad {
+        eta: f64,
+    }
+    impl FixedPointMap for GdQuad {
+        fn dim_x(&self) -> usize {
+            1
+        }
+        fn dim_theta(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            out[0] = x[0] - self.eta * (x[0] - theta[0]);
+        }
+    }
+
+    #[test]
+    fn step_size_cancels_in_linear_system() {
+        for eta in [0.1, 0.5, 1.3] {
+            let cfp = CustomFixedPoint::new(GdQuad { eta }, |_i: &[f64], th: &[f64]| th.to_vec());
+            let theta = [2.0];
+            let x = cfp.solve(&[0.0], &theta);
+            let j = cfp.jacobian(&x, &theta);
+            assert!((j.at(0, 0) - 1.0).abs() < 1e-6, "eta={eta}: {}", j.at(0, 0));
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The implicit-differentiation engine — paper §2.1.
+//!
+//! Given an optimality mapping `F(x, θ)` with root `x*(θ)` (or a fixed-point
+//! map `T`), the implicit function theorem gives the linear system (Eq. 2)
+//!
+//! ```text
+//!   A J = B,   A = −∂₁F(x*, θ) ∈ R^{d×d},   B = ∂₂F(x*, θ) ∈ R^{d×n}
+//! ```
+//!
+//! - JVP: solve A (J v) = B v  (forward mode)
+//! - VJP: solve Aᵀ u = v, then vᵀJ = uᵀB  (reverse mode; one solve is
+//!   reused across different θ-blocks, as the paper notes)
+//!
+//! All solves are matrix-free through [`crate::linalg::LinOp`]; only JVPs and
+//! VJPs of `F` are ever required.
+
+pub mod fixed_point;
+pub mod precision;
+pub mod root;
+pub mod spec;
+
+pub use fixed_point::CustomFixedPoint;
+pub use root::{implicit_jvp, implicit_vjp, jacobian_via_root, CustomRoot};
+pub use spec::{FixedPointMap, FixedPointResidual, RootMap};

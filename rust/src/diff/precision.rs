@@ -1,0 +1,140 @@
+//! Jacobian precision guarantees (paper §3, Theorem 1, Corollaries 1–2).
+//!
+//! `J(x̂, θ)` evaluated at an *approximate* solution x̂ satisfies
+//! `‖J(x̂,θ) − ∂x*(θ)‖ ≤ (β/α + γR/α²)‖x̂ − x*(θ)‖`. This module computes the
+//! empirical quantities used in the Fig. 3 overlay: the theoretical constant
+//! for a given quadratic/regularized problem and the bound line.
+
+use crate::linalg::mat::Mat;
+
+/// Constants of Theorem 1 (for problems where they can be computed).
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionConstants {
+    /// α: lower bound on ‖A(x,θ)v‖/‖v‖ (strong convexity of f for the
+    /// gradient-descent fixed point).
+    pub alpha: f64,
+    /// β: Lipschitz constant of B in x.
+    pub beta: f64,
+    /// γ: Lipschitz constant of A in x (operator norm).
+    pub gamma: f64,
+    /// R: bound on ‖B(x*,θ)‖.
+    pub r: f64,
+}
+
+impl PrecisionConstants {
+    /// The slope C = β/α + γR/α² of Theorem 1's bound.
+    pub fn bound_slope(&self) -> f64 {
+        self.beta / self.alpha + self.gamma * self.r / (self.alpha * self.alpha)
+    }
+
+    /// Theorem 1's bound on the Jacobian error for a given iterate error.
+    pub fn bound(&self, iterate_err: f64) -> f64 {
+        self.bound_slope() * iterate_err
+    }
+}
+
+/// Constants for ridge regression f(x, θ) = ½‖Φx − y‖² + ½Σθᵢxᵢ²
+/// (the Fig. 3 problem) with per-coordinate regularization θ ∈ R^d:
+/// A(x,θ) = ΦᵀΦ + diag(θ) (x-independent ⇒ γ = 0),
+/// B(x,θ) = −∂₂∇₁f = −diag(x) ⇒ β = 1 (‖diag(x)−diag(x')‖ = ‖x−x'‖),
+/// R = ‖x*‖.
+pub fn ridge_constants(phi: &Mat, theta: &[f64], x_star: &[f64]) -> PrecisionConstants {
+    let gram = phi.gram();
+    // α = λ_min(ΦᵀΦ) + min θ ≥ min θ (cheap lower bound: power-iterate the
+    // inverse is overkill; use min θ plus smallest Gershgorin estimate ≥ 0).
+    let min_theta = theta.iter().cloned().fold(f64::INFINITY, f64::min);
+    let alpha = min_theta + lambda_min_lower(&gram).max(0.0);
+    let r = crate::linalg::vecops::norm2(x_star);
+    PrecisionConstants { alpha, beta: 1.0, gamma: 0.0, r }
+}
+
+/// Crude symmetric-PSD λ_min lower bound by inverse power iteration would
+/// need a solve; instead return 0 when Gershgorin cannot certify positivity
+/// (the θ term already makes α positive for ridge).
+fn lambda_min_lower(a: &Mat) -> f64 {
+    let n = a.rows;
+    let mut lo = f64::INFINITY;
+    for i in 0..n {
+        let mut off = 0.0;
+        for j in 0..n {
+            if j != i {
+                off += a.at(i, j).abs();
+            }
+        }
+        lo = lo.min(a.at(i, i) - off);
+    }
+    lo
+}
+
+/// Empirical check record: one (iterate error, jacobian error) pair.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorPair {
+    pub iterate_err: f64,
+    pub jacobian_err: f64,
+}
+
+/// Verify Theorem 1 empirically: every pair must satisfy the bound (with
+/// slack for numerical error). Returns the worst observed ratio
+/// jacobian_err / bound(iterate_err).
+pub fn check_bound(consts: &PrecisionConstants, pairs: &[ErrorPair], slack: f64) -> f64 {
+    let mut worst: f64 = 0.0;
+    for p in pairs {
+        if p.iterate_err <= 0.0 {
+            continue;
+        }
+        let ratio = p.jacobian_err / consts.bound(p.iterate_err).max(1e-300);
+        worst = worst.max(ratio);
+        assert!(
+            ratio <= 1.0 + slack,
+            "Theorem 1 violated: err={} bound={} ratio={}",
+            p.jacobian_err,
+            consts.bound(p.iterate_err),
+            ratio
+        );
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn slope_formula() {
+        let c = PrecisionConstants { alpha: 2.0, beta: 1.0, gamma: 0.5, r: 4.0 };
+        assert!((c.bound_slope() - (0.5 + 0.5)).abs() < 1e-12);
+        assert!((c.bound(0.1) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_constants_positive() {
+        let mut rng = Rng::new(1);
+        let phi = Mat::randn(30, 5, &mut rng);
+        let theta = vec![1.0; 5];
+        let x = rng.normal_vec(5);
+        let c = ridge_constants(&phi, &theta, &x);
+        assert!(c.alpha >= 1.0);
+        assert_eq!(c.gamma, 0.0);
+        assert!(c.r > 0.0);
+    }
+
+    #[test]
+    fn check_bound_accepts_valid_pairs() {
+        let c = PrecisionConstants { alpha: 1.0, beta: 1.0, gamma: 0.0, r: 1.0 };
+        let pairs = [
+            ErrorPair { iterate_err: 0.1, jacobian_err: 0.05 },
+            ErrorPair { iterate_err: 1.0, jacobian_err: 0.9 },
+        ];
+        let worst = check_bound(&c, &pairs, 0.0);
+        assert!(worst <= 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Theorem 1 violated")]
+    fn check_bound_rejects_violations() {
+        let c = PrecisionConstants { alpha: 1.0, beta: 1.0, gamma: 0.0, r: 1.0 };
+        let pairs = [ErrorPair { iterate_err: 0.1, jacobian_err: 0.5 }];
+        check_bound(&c, &pairs, 0.0);
+    }
+}

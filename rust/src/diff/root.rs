@@ -1,0 +1,272 @@
+//! Differentiating a root (paper §2.1): implicit JVP / VJP / dense Jacobian,
+//! and the `CustomRoot` decorator-equivalent that attaches them to a solver.
+
+use super::spec::RootMap;
+use crate::linalg::mat::Mat;
+use crate::linalg::op::FnOp;
+use crate::linalg::solve::{self, LinearSolveConfig, SolveReport};
+
+/// The A = −∂₁F operator at (x, θ), matrix-free.
+fn a_op<'a, M: RootMap + ?Sized>(
+    m: &'a M,
+    x: &'a [f64],
+    theta: &'a [f64],
+) -> impl crate::linalg::op::LinOp + 'a {
+    let d = m.dim_x();
+    let fwd = move |v: &[f64], y: &mut [f64]| {
+        m.jvp_x(x, theta, v, y);
+        for yi in y.iter_mut() {
+            *yi = -*yi;
+        }
+    };
+    let tr = move |u: &[f64], y: &mut [f64]| {
+        m.vjp_x(x, theta, u, y);
+        for yi in y.iter_mut() {
+            *yi = -*yi;
+        }
+    };
+    FnOp { d, fwd, tr, symmetric: m.a_symmetric() }
+}
+
+/// Forward-mode implicit differentiation: J v where A J = B (Eq. 2), i.e.
+/// solve A (Jv) = B v. Returns (Jv, solve report).
+pub fn implicit_jvp<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    v_theta: &[f64],
+    cfg: &LinearSolveConfig,
+) -> (Vec<f64>, SolveReport) {
+    let d = m.dim_x();
+    let mut bv = vec![0.0; d];
+    m.jvp_theta(x_star, theta, v_theta, &mut bv);
+    let a = a_op(m, x_star, theta);
+    let mut jv = vec![0.0; d];
+    let rep = solve::solve(&a, &bv, &mut jv, cfg);
+    (jv, rep)
+}
+
+/// Reverse-mode implicit differentiation: vᵀJ.
+/// Solves Aᵀ u = v once, then returns uᵀB = ∂₂Fᵀ u.
+pub fn implicit_vjp<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    v_x: &[f64],
+    cfg: &LinearSolveConfig,
+) -> (Vec<f64>, SolveReport) {
+    let d = m.dim_x();
+    let n = m.dim_theta();
+    let a = a_op(m, x_star, theta);
+    let mut u = vec![0.0; d];
+    let rep = solve::solve_t(&a, v_x, &mut u, cfg);
+    let mut out = vec![0.0; n];
+    m.vjp_theta(x_star, theta, &u, &mut out);
+    (out, rep)
+}
+
+/// The paper's VJP-reuse trick: factor the Aᵀu = v solve out so several
+/// θ-blocks (or several B's) can reuse one solve. Returns u.
+pub fn implicit_vjp_u<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    v_x: &[f64],
+    cfg: &LinearSolveConfig,
+) -> (Vec<f64>, SolveReport) {
+    let a = a_op(m, x_star, theta);
+    let mut u = vec![0.0; m.dim_x()];
+    let rep = solve::solve_t(&a, v_x, &mut u, cfg);
+    (u, rep)
+}
+
+/// Dense Jacobian ∂x*(θ) ∈ R^{d×n}, assembled column-by-column with JVPs
+/// (used for Fig. 3 / Fig. 15 error studies; hot paths use jvp/vjp).
+pub fn jacobian_via_root<M: RootMap + ?Sized>(m: &M, x_star: &[f64], theta: &[f64]) -> Mat {
+    // Full-restart GMRES is exact within d iterations even on the indefinite
+    // saddle systems KKT mappings produce (where BiCGSTAB can break down);
+    // CG still kicks in automatically for symmetric mappings.
+    let d_full = m.dim_x().max(1);
+    let cfg = if m.a_symmetric() {
+        LinearSolveConfig::default()
+    } else {
+        LinearSolveConfig {
+            kind: crate::linalg::solve::LinearSolverKind::Gmres,
+            tol: 1e-11,
+            max_iter: 6 * d_full,
+            gmres_restart: d_full.min(400),
+        }
+    };
+    let (d, n) = (m.dim_x(), m.dim_theta());
+    let mut jac = Mat::zeros(d, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let (col, _rep) = implicit_jvp(m, x_star, theta, &e, &cfg);
+        for i in 0..d {
+            *jac.at_mut(i, j) = col[i];
+        }
+        e[j] = 0.0;
+    }
+    jac
+}
+
+/// `@custom_root`: pairs a solver closure with an optimality mapping,
+/// exposing `solve`, `jvp` and `vjp` — the Rust analogue of decorating a
+/// solver in Figure 1 of the paper. The solver is a black box (it may be a
+/// hand-written loop, a closed-form solve, an XLA executable…); only `F`
+/// enters the differentiation rule.
+pub struct CustomRoot<M: RootMap, S>
+where
+    S: Fn(&[f64], &[f64]) -> Vec<f64>,
+{
+    pub mapping: M,
+    pub solver: S,
+    pub cfg: LinearSolveConfig,
+}
+
+impl<M: RootMap, S> CustomRoot<M, S>
+where
+    S: Fn(&[f64], &[f64]) -> Vec<f64>,
+{
+    pub fn new(mapping: M, solver: S) -> Self {
+        CustomRoot { mapping, solver, cfg: LinearSolveConfig::default() }
+    }
+
+    pub fn with_cfg(mut self, cfg: LinearSolveConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run the wrapped solver: x*(θ) from `init`.
+    pub fn solve(&self, init: &[f64], theta: &[f64]) -> Vec<f64> {
+        (self.solver)(init, theta)
+    }
+
+    /// Forward-mode derivative of the solution in direction `v_theta`.
+    pub fn jvp(&self, x_star: &[f64], theta: &[f64], v_theta: &[f64]) -> Vec<f64> {
+        implicit_jvp(&self.mapping, x_star, theta, v_theta, &self.cfg).0
+    }
+
+    /// Reverse-mode derivative: vᵀ ∂x*(θ).
+    pub fn vjp(&self, x_star: &[f64], theta: &[f64], v_x: &[f64]) -> Vec<f64> {
+        implicit_vjp(&self.mapping, x_star, theta, v_x, &self.cfg).0
+    }
+
+    /// Dense Jacobian of the solution.
+    pub fn jacobian(&self, x_star: &[f64], theta: &[f64]) -> Mat {
+        jacobian_via_root(&self.mapping, x_star, theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::spec::ClosureRoot;
+    use crate::linalg::vecops;
+
+    /// F(x, θ) = x − Mθ for a fixed matrix M → x*(θ) = Mθ, ∂x* = M.
+    fn linear_root() -> ClosureRoot<impl Fn(&[f64], &[f64], &mut [f64])> {
+        ClosureRoot {
+            d: 2,
+            n: 3,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                let m = [[1.0, 2.0, 0.5], [-1.0, 0.0, 3.0]];
+                for i in 0..2 {
+                    out[i] = x[i] - (m[i][0] * th[0] + m[i][1] * th[1] + m[i][2] * th[2]);
+                }
+            },
+            symmetric: true, // A = I
+        }
+    }
+
+    #[test]
+    fn jvp_recovers_matrix_column() {
+        let f = linear_root();
+        let th = [1.0, 2.0, 3.0];
+        let x = [1.0 + 4.0 + 1.5, -1.0 + 9.0];
+        let cfg = LinearSolveConfig::default();
+        let (jv, rep) = implicit_jvp(&f, &x, &th, &[1.0, 0.0, 0.0], &cfg);
+        assert!(rep.converged);
+        assert!((jv[0] - 1.0).abs() < 1e-8);
+        assert!((jv[1] + 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn vjp_recovers_matrix_row() {
+        let f = linear_root();
+        let th = [1.0, 2.0, 3.0];
+        let x = [6.5, 8.0];
+        let cfg = LinearSolveConfig::default();
+        let (vj, rep) = implicit_vjp(&f, &x, &th, &[1.0, 0.0], &cfg);
+        assert!(rep.converged);
+        assert!((vj[0] - 1.0).abs() < 1e-8);
+        assert!((vj[1] - 2.0).abs() < 1e-8);
+        assert!((vj[2] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn jvp_vjp_adjoint_identity() {
+        // ⟨v_x, J v_θ⟩ = ⟨Jᵀ v_x, v_θ⟩ for arbitrary directions.
+        let f = linear_root();
+        let th = [0.3, -1.0, 0.7];
+        let x = [0.3 - 2.0 + 0.35, -0.3 + 2.1];
+        let cfg = LinearSolveConfig::default();
+        let v_theta = [0.2, 0.4, -0.6];
+        let v_x = [1.5, -0.5];
+        let (jv, _) = implicit_jvp(&f, &x, &th, &v_theta, &cfg);
+        let (vj, _) = implicit_vjp(&f, &x, &th, &v_x, &cfg);
+        let lhs = vecops::dot(&v_x, &jv);
+        let rhs = vecops::dot(&vj, &v_theta);
+        assert!((lhs - rhs).abs() < 1e-8, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dense_jacobian_matches() {
+        let f = linear_root();
+        let th = [1.0, 1.0, 1.0];
+        let x = [3.5, 2.0];
+        let j = jacobian_via_root(&f, &x, &th);
+        let expected = [[1.0, 2.0, 0.5], [-1.0, 0.0, 3.0]];
+        for i in 0..2 {
+            for k in 0..3 {
+                assert!((j.at(i, k) - expected[i][k]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn custom_root_wraps_solver() {
+        let f = linear_root();
+        let cr = CustomRoot::new(f, |_init: &[f64], th: &[f64]| {
+            let m = [[1.0, 2.0, 0.5], [-1.0, 0.0, 3.0]];
+            (0..2)
+                .map(|i| m[i][0] * th[0] + m[i][1] * th[1] + m[i][2] * th[2])
+                .collect()
+        });
+        let th = [2.0, 0.0, 1.0];
+        let x = cr.solve(&[0.0, 0.0], &th);
+        assert!((x[0] - 2.5).abs() < 1e-12);
+        let j = cr.jacobian(&x, &th);
+        assert!((j.at(1, 2) - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn one_dimensional_root_scalar_formula() {
+        // d=1: F(x, θ) = x² − θ (x* = √θ); ∇x* = 1/(2√θ) = Bᵀ/A.
+        let f = ClosureRoot {
+            d: 1,
+            n: 1,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = x[0] * x[0] - th[0];
+            },
+            symmetric: false,
+        };
+        let th = [4.0];
+        let x = [2.0];
+        let cfg = LinearSolveConfig::default();
+        let (j, rep) = implicit_jvp(&f, &x, &th, &[1.0], &cfg);
+        assert!(rep.converged);
+        assert!((j[0] - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,242 @@
+//! User-facing specification traits: how an optimality mapping `F` or a
+//! fixed-point map `T` exposes itself to the engine.
+//!
+//! Mirrors the paper's design: the engine only ever needs the four Jacobian
+//! products of `F` (∂₁F·v, ∂₂F·v, ∂₁Fᵀ·u, ∂₂Fᵀ·u). Catalog mappings
+//! implement them via composition/autodiff; defaults fall back to central
+//! finite differences so *any* `eval`-only mapping still works out of the
+//! box (at FD accuracy).
+
+use crate::ad::num_grad;
+
+/// An optimality mapping F : R^d × R^n → R^d with root x*(θ).
+pub trait RootMap {
+    /// Dimension d of the variable x.
+    fn dim_x(&self) -> usize;
+    /// Dimension n of the parameter θ.
+    fn dim_theta(&self) -> usize;
+
+    /// out = F(x, θ).
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// out = ∂₁F(x, θ) · v.
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|xx| self.eval_vec(xx, theta), x, v, fd_step(x));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₂F(x, θ) · v.
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|tt| self.eval_vec(x, tt), theta, v, fd_step(theta));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₁F(x, θ)ᵀ · u.
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|xx| self.eval_vec(xx, theta), x, u, fd_step(x));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₂F(x, θ)ᵀ · u.
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|tt| self.eval_vec(x, tt), theta, u, fd_step(theta));
+        out.copy_from_slice(&r);
+    }
+
+    /// Whether A = −∂₁F is symmetric (enables CG; true for stationary-point
+    /// mappings of twice-differentiable objectives, where A is the Hessian).
+    fn a_symmetric(&self) -> bool {
+        false
+    }
+
+    /// Convenience allocating eval.
+    fn eval_vec(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim_x()];
+        self.eval(x, theta, &mut out);
+        out
+    }
+}
+
+fn fd_step(v: &[f64]) -> f64 {
+    let scale = v.iter().fold(1.0f64, |m, &x| m.max(x.abs()));
+    1e-6 * scale
+}
+
+/// A fixed-point mapping T : R^d × R^n → R^d with x*(θ) = T(x*(θ), θ).
+pub trait FixedPointMap {
+    fn dim_x(&self) -> usize;
+    fn dim_theta(&self) -> usize;
+
+    /// out = T(x, θ).
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// out = ∂₁T(x, θ) · v.
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|xx| self.eval_vec(xx, theta), x, v, fd_step(x));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₂T(x, θ) · v.
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|tt| self.eval_vec(x, tt), theta, v, fd_step(theta));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₁T(x, θ)ᵀ · u.
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|xx| self.eval_vec(xx, theta), x, u, fd_step(x));
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₂T(x, θ)ᵀ · u.
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|tt| self.eval_vec(x, tt), theta, u, fd_step(theta));
+        out.copy_from_slice(&r);
+    }
+
+    /// Whether I − ∂₁T is symmetric.
+    fn a_symmetric(&self) -> bool {
+        false
+    }
+
+    fn eval_vec(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim_x()];
+        self.eval(x, theta, &mut out);
+        out
+    }
+}
+
+/// Adapter: a fixed point T becomes the root map F(x, θ) = T(x, θ) − x
+/// (paper Eq. 3), so A = I − ∂₁T and B = ∂₂T.
+pub struct FixedPointResidual<T: FixedPointMap>(pub T);
+
+impl<T: FixedPointMap> RootMap for FixedPointResidual<T> {
+    fn dim_x(&self) -> usize {
+        self.0.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.0.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.0.eval(x, theta, out);
+        for i in 0..x.len() {
+            out[i] -= x[i];
+        }
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.0.jvp_x(x, theta, v, out);
+        for i in 0..v.len() {
+            out[i] -= v[i];
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.0.jvp_theta(x, theta, v, out);
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.0.vjp_x(x, theta, u, out);
+        for i in 0..u.len() {
+            out[i] -= u[i];
+        }
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.0.vjp_theta(x, theta, u, out);
+    }
+    fn a_symmetric(&self) -> bool {
+        self.0.a_symmetric()
+    }
+}
+
+/// A RootMap defined by plain closures over generic evaluation — the
+/// "user writes F directly in Python" analogue. Derivatives come from the
+/// finite-difference defaults unless wrapped by catalog types.
+pub struct ClosureRoot<E>
+where
+    E: Fn(&[f64], &[f64], &mut [f64]),
+{
+    pub d: usize,
+    pub n: usize,
+    pub f: E,
+    pub symmetric: bool,
+}
+
+impl<E: Fn(&[f64], &[f64], &mut [f64])> RootMap for ClosureRoot<E> {
+    fn dim_x(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        self.n
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        (self.f)(x, theta, out)
+    }
+    fn a_symmetric(&self) -> bool {
+        self.symmetric
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Quad; // F(x, θ) = x − θ (root x* = θ), d = n = 2
+
+    impl RootMap for Quad {
+        fn dim_x(&self) -> usize {
+            2
+        }
+        fn dim_theta(&self) -> usize {
+            2
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            for i in 0..2 {
+                out[i] = x[i] - theta[i];
+            }
+        }
+    }
+
+    #[test]
+    fn fd_defaults_give_identity_jacobians() {
+        let m = Quad;
+        let x = [1.0, 2.0];
+        let th = [1.0, 2.0];
+        let mut out = [0.0; 2];
+        m.jvp_x(&x, &th, &[1.0, 0.0], &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!(out[1].abs() < 1e-6);
+        m.jvp_theta(&x, &th, &[0.0, 1.0], &mut out);
+        assert!(out[0].abs() < 1e-6);
+        assert!((out[1] + 1.0).abs() < 1e-6);
+        m.vjp_x(&x, &th, &[2.0, 3.0], &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!((out[1] - 3.0).abs() < 1e-6);
+    }
+
+    struct Contraction; // T(x, θ) = 0.5 x + θ, fixed point x* = 2θ
+
+    impl FixedPointMap for Contraction {
+        fn dim_x(&self) -> usize {
+            1
+        }
+        fn dim_theta(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * x[0] + theta[0];
+        }
+    }
+
+    #[test]
+    fn residual_adapter() {
+        let r = FixedPointResidual(Contraction);
+        let mut out = [0.0];
+        // F(2θ, θ) = 0
+        r.eval(&[2.0], &[1.0], &mut out);
+        assert!(out[0].abs() < 1e-12);
+        // ∂₁F = ∂₁T − I = −0.5
+        r.jvp_x(&[2.0], &[1.0], &[1.0], &mut out);
+        assert!((out[0] + 0.5).abs() < 1e-6);
+        // ∂₂F = ∂₂T = 1
+        r.jvp_theta(&[2.0], &[1.0], &[1.0], &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+    }
+}

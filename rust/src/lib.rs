@@ -1,0 +1,65 @@
+//! # `idiff` — Efficient and Modular Implicit Differentiation
+//!
+//! A Rust + JAX + Pallas reproduction of *Efficient and Modular Implicit
+//! Differentiation* (Blondel et al., NeurIPS 2022 — the JAXopt paper).
+//!
+//! The library lets you differentiate the solution `x*(θ)` of an optimization
+//! problem through a user-supplied **optimality mapping** `F(x, θ)` (root
+//! form, `F(x*(θ), θ) = 0`) or **fixed-point mapping** `T(x, θ)`
+//! (`x*(θ) = T(x*(θ), θ)`), combining the implicit function theorem with
+//! automatic differentiation of `F` — exactly the paper's recipe, with the
+//! same decoupling: *any* solver can be paired with *any* optimality mapping.
+//!
+//! ## Layer map
+//! - **L3 (this crate)**: the implicit-diff engine ([`diff`]), the catalog of
+//!   optimality mappings ([`mappings`], paper Table 1), projections
+//!   ([`proj`], Appendix C.1) and proximity operators ([`prox`], C.2),
+//!   matrix-free linear solvers ([`linalg`]), a from-scratch autodiff
+//!   ([`ad`]), inner solvers ([`solvers`]), the unrolling baseline
+//!   ([`unroll`]), bi-level drivers ([`bilevel`]), datasets/models
+//!   ([`data`], [`ml`]), molecular dynamics ([`md`]), the PJRT runtime
+//!   ([`runtime`]) and the experiment coordinator ([`coordinator`]).
+//! - **L2/L1 (build-time Python)**: `python/compile/` lowers JAX + Pallas
+//!   compute oracles to HLO text artifacts which [`runtime`] loads and
+//!   executes on the request path — Python never runs at serve time.
+//!
+//! ## Quickstart (paper Figure 1 equivalent)
+//! ```
+//! use idiff::ml::ridge::{RidgeProblem, RidgeRoot};
+//! // Ridge regression: F(x, θ) = ∇₁f(x, θ) = Xᵀ(Xx − y) + θ⊙x.
+//! let (xm, y) = idiff::data::regression::diabetes_like(64, 8, 7);
+//! let ridge = RidgeProblem::new(xm, y);
+//! let theta = vec![10.0; 8];
+//! let x_star = ridge.solve_closed_form_vec(&theta);
+//! let jac = idiff::diff::jacobian_via_root(&RidgeRoot(&ridge), &x_star, &theta);
+//! assert_eq!((jac.rows, jac.cols), (8, 8));
+//! ```
+#![allow(clippy::needless_range_loop)]
+
+pub mod ad;
+pub mod bilevel;
+pub mod coordinator;
+pub mod data;
+pub mod diff;
+pub mod linalg;
+pub mod mappings;
+pub mod md;
+pub mod ml;
+pub mod proj;
+pub mod prox;
+pub mod runtime;
+pub mod solvers;
+pub mod unroll;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::ad::dual::Dual;
+    pub use crate::diff::fixed_point::CustomFixedPoint;
+    pub use crate::diff::root::{implicit_jvp, implicit_vjp, CustomRoot};
+    pub use crate::diff::spec::{FixedPointMap, RootMap};
+    pub use crate::linalg::op::LinOp;
+    pub use crate::linalg::solve::{LinearSolveConfig, LinearSolverKind};
+    pub use crate::linalg::Mat;
+    pub use crate::util::rng::Rng;
+}

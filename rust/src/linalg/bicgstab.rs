@@ -1,0 +1,124 @@
+//! BiCGSTAB [van der Vorst, 81] for general (non-symmetric) systems.
+//! Used by the molecular-dynamics sensitivity experiment (paper §4.4 uses
+//! BiCGSTAB for the tangent linear solve).
+
+use super::op::LinOp;
+use super::solve::SolveReport;
+use super::vecops::{axpy, dot, norm2};
+
+/// Solve A x = b with BiCGSTAB. `x` holds the initial guess on entry.
+pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) -> SolveReport {
+    let d = a.dim();
+    let bnorm = norm2(b).max(1e-30);
+
+    let mut r = vec![0.0; d];
+    a.apply(x, &mut r);
+    for i in 0..d {
+        r[i] = b[i] - r[i];
+    }
+    let r0 = r.clone(); // shadow residual
+    let mut rho = 1.0;
+    let mut alpha = 1.0;
+    let mut omega = 1.0;
+    let mut v = vec![0.0; d];
+    let mut p = vec![0.0; d];
+    let mut s = vec![0.0; d];
+    let mut t = vec![0.0; d];
+
+    for it in 0..max_iter {
+        let res = norm2(&r) / bnorm;
+        if res <= tol {
+            return SolveReport { iterations: it, residual: res, converged: true };
+        }
+        let rho_new = dot(&r0, &r);
+        if rho_new.abs() < 1e-300 {
+            return SolveReport { iterations: it, residual: res, converged: false };
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        // p = r + beta (p − omega v)
+        for i in 0..d {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        a.apply(&p, &mut v);
+        let r0v = dot(&r0, &v);
+        if r0v.abs() < 1e-300 {
+            return SolveReport { iterations: it, residual: res, converged: false };
+        }
+        alpha = rho / r0v;
+        for i in 0..d {
+            s[i] = r[i] - alpha * v[i];
+        }
+        if norm2(&s) / bnorm <= tol {
+            axpy(alpha, &p, x);
+            return SolveReport { iterations: it + 1, residual: norm2(&s) / bnorm, converged: true };
+        }
+        a.apply(&s, &mut t);
+        let tt = dot(&t, &t);
+        if tt.abs() < 1e-300 {
+            return SolveReport { iterations: it, residual: res, converged: false };
+        }
+        omega = dot(&t, &s) / tt;
+        axpy(alpha, &p, x);
+        axpy(omega, &s, x);
+        for i in 0..d {
+            r[i] = s[i] - omega * t[i];
+        }
+        if omega.abs() < 1e-300 {
+            return SolveReport { iterations: it + 1, residual: norm2(&r) / bnorm, converged: false };
+        }
+    }
+    let res = norm2(&r) / bnorm;
+    SolveReport { iterations: max_iter, residual: res, converged: res <= tol }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::linalg::op::DenseOp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_nonsymmetric_system() {
+        let mut rng = Rng::new(1);
+        let n = 25;
+        // Diagonally dominant non-symmetric matrix.
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64;
+        }
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; n];
+        let rep = bicgstab(&DenseOp::new(&a), &b, &mut x, 1e-12, 500);
+        assert!(rep.converged, "{rep:?}");
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn also_handles_spd() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(12, 12, &mut rng).gram().plus_diag(0.5);
+        let x_true = rng.normal_vec(12);
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; 12];
+        let rep = bicgstab(&DenseOp::new(&a), &b, &mut x, 1e-12, 300);
+        assert!(rep.converged);
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_immediate() {
+        let a = Mat::eye(5);
+        let b = vec![0.0; 5];
+        let mut x = vec![0.0; 5];
+        let rep = bicgstab(&DenseOp::new(&a), &b, &mut x, 1e-12, 10);
+        assert!(rep.converged);
+        assert_eq!(rep.iterations, 0);
+    }
+}

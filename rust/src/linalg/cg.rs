@@ -1,0 +1,108 @@
+//! Conjugate gradient [Hestenes & Stiefel, 51] for symmetric positive
+//! (semi-)definite systems — the paper's default when A is SPD.
+
+use super::op::LinOp;
+use super::solve::SolveReport;
+use super::vecops::{axpby, axpy, dot, norm2};
+
+/// Solve A x = b with CG. `x` holds the initial guess on entry and the
+/// solution on exit. All work buffers are allocated once up front.
+pub fn cg(a: &dyn LinOp, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) -> SolveReport {
+    let d = a.dim();
+    assert_eq!(b.len(), d);
+    assert_eq!(x.len(), d);
+    let bnorm = norm2(b).max(1e-30);
+
+    let mut r = vec![0.0; d];
+    let mut p = vec![0.0; d];
+    let mut ap = vec![0.0; d];
+
+    // r = b − A x
+    a.apply(x, &mut ap);
+    for i in 0..d {
+        r[i] = b[i] - ap[i];
+    }
+    p.copy_from_slice(&r);
+    let mut rs = dot(&r, &r);
+
+    for it in 0..max_iter {
+        let res = rs.sqrt() / bnorm;
+        if res <= tol {
+            return SolveReport { iterations: it, residual: res, converged: true };
+        }
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap.abs() < 1e-300 {
+            return SolveReport { iterations: it, residual: res, converged: false };
+        }
+        let alpha = rs / pap;
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs;
+        rs = rs_new;
+        // p = r + beta p
+        axpby(1.0, &r, beta, &mut p);
+    }
+    SolveReport { iterations: max_iter, residual: rs.sqrt() / bnorm, converged: rs.sqrt() / bnorm <= tol }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::linalg::op::DenseOp;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::randn(n, n, &mut rng);
+        a.gram().plus_diag(1.0)
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        let a = spd(20, 1);
+        let mut rng = Rng::new(2);
+        let x_true = rng.normal_vec(20);
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; 20];
+        let rep = cg(&DenseOp::symmetric(&a), &b, &mut x, 1e-12, 200);
+        assert!(rep.converged, "{rep:?}");
+        for i in 0..20 {
+            assert!((x[i] - x_true[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn identity_converges_in_one_iteration() {
+        let a = Mat::eye(8);
+        let b = vec![1.0; 8];
+        let mut x = vec![0.0; 8];
+        let rep = cg(&DenseOp::symmetric(&a), &b, &mut x, 1e-14, 10);
+        assert!(rep.converged);
+        assert!(rep.iterations <= 2);
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let a = spd(40, 3);
+        let mut rng = Rng::new(4);
+        let x_true = rng.normal_vec(40);
+        let b = a.matvec(&x_true);
+        let mut cold = vec![0.0; 40];
+        let rep_cold = cg(&DenseOp::symmetric(&a), &b, &mut cold, 1e-10, 500);
+        let mut warm = x_true.iter().map(|v| v + 1e-6).collect::<Vec<_>>();
+        let rep_warm = cg(&DenseOp::symmetric(&a), &b, &mut warm, 1e-10, 500);
+        assert!(rep_warm.iterations < rep_cold.iterations);
+    }
+
+    #[test]
+    fn exact_in_at_most_d_iterations() {
+        let a = spd(15, 5);
+        let b = vec![1.0; 15];
+        let mut x = vec![0.0; 15];
+        let rep = cg(&DenseOp::symmetric(&a), &b, &mut x, 1e-10, 15 + 2);
+        assert!(rep.converged, "CG must converge within d iterations: {rep:?}");
+    }
+}

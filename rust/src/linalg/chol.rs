@@ -1,0 +1,135 @@
+//! Dense Cholesky factorization + solves, for small SPD systems (KKT blocks,
+//! affine-projection Gram matrices, ridge closed forms).
+
+use super::mat::Mat;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor A = L Lᵀ. Returns None if A is not (numerically) positive
+    /// definite.
+    pub fn factor(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    *l.at_mut(i, j) = s.sqrt();
+                } else {
+                    *l.at_mut(i, j) = s / l.at(j, j);
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Solve A x = b via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.at(i, k) * y[k];
+            }
+            y[i] = s / self.l.at(i, i);
+        }
+        // Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l.at(k, i) * x[k];
+            }
+            x[i] = s / self.l.at(i, i);
+        }
+        x
+    }
+
+    /// Solve for multiple right-hand sides (columns of B).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col = self.solve(&b.col(j));
+            for i in 0..b.rows {
+                *out.at_mut(i, j) = col[i];
+            }
+        }
+        out
+    }
+
+    /// log det(A) = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factor_and_solve() {
+        let mut rng = Rng::new(1);
+        let n = 15;
+        let a = Mat::randn(n + 3, n, &mut rng).gram().plus_diag(0.1);
+        let ch = Cholesky::factor(&a).unwrap();
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, −1
+        assert!(Cholesky::factor(&a).is_none());
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(8, 6, &mut rng).gram().plus_diag(0.5);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l.matmul_t(&ch.l);
+        for i in 0..a.data.len() {
+            assert!((rec.data[i] - a.data[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_identity() {
+        let ch = Cholesky::factor(&Mat::eye(5)).unwrap();
+        assert!(ch.logdet().abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_rhs() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(10, 7, &mut rng).gram().plus_diag(1.0);
+        let ch = Cholesky::factor(&a).unwrap();
+        let b = Mat::randn(7, 3, &mut rng);
+        let x = ch.solve_mat(&b);
+        let ax = a.matmul(&x);
+        for i in 0..b.data.len() {
+            assert!((ax.data[i] - b.data[i]).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Restarted GMRES(m) [Saad & Schultz, 75] for general systems — the paper's
+//! named alternative to BiCGSTAB for non-symmetric A.
+
+use super::op::LinOp;
+use super::solve::SolveReport;
+use super::vecops::{axpy, dot, norm2};
+
+/// Solve A x = b with GMRES restarted every `restart` iterations.
+pub fn gmres(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+    restart: usize,
+) -> SolveReport {
+    let d = a.dim();
+    let m = restart.max(1).min(d);
+    let bnorm = norm2(b).max(1e-30);
+    let mut total_iters = 0;
+
+    let mut r = vec![0.0; d];
+    loop {
+        // r = b − A x
+        a.apply(x, &mut r);
+        for i in 0..d {
+            r[i] = b[i] - r[i];
+        }
+        let beta = norm2(&r);
+        let res = beta / bnorm;
+        if res <= tol {
+            return SolveReport { iterations: total_iters, residual: res, converged: true };
+        }
+        if total_iters >= max_iter {
+            return SolveReport { iterations: total_iters, residual: res, converged: false };
+        }
+
+        // Arnoldi with modified Gram–Schmidt.
+        let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+        v.push(r.iter().map(|&ri| ri / beta).collect());
+        let mut h = vec![vec![0.0; m]; m + 1]; // (m+1) x m Hessenberg
+        // Givens rotation accumulators.
+        let mut cs = vec![0.0; m];
+        let mut sn = vec![0.0; m];
+        let mut g = vec![0.0; m + 1];
+        g[0] = beta;
+
+        let mut k_used = 0;
+        for k in 0..m {
+            if total_iters >= max_iter {
+                break;
+            }
+            total_iters += 1;
+            let mut w = vec![0.0; d];
+            a.apply(&v[k], &mut w);
+            for (j, vj) in v.iter().enumerate().take(k + 1) {
+                h[j][k] = dot(&w, vj);
+                axpy(-h[j][k], vj, &mut w);
+            }
+            h[k + 1][k] = norm2(&w);
+            // Apply previous Givens rotations to the new column.
+            for j in 0..k {
+                let tmp = cs[j] * h[j][k] + sn[j] * h[j + 1][k];
+                h[j + 1][k] = -sn[j] * h[j][k] + cs[j] * h[j + 1][k];
+                h[j][k] = tmp;
+            }
+            // New rotation to eliminate h[k+1][k].
+            let denom = (h[k][k] * h[k][k] + h[k + 1][k] * h[k + 1][k]).sqrt();
+            if denom < 1e-300 {
+                k_used = k + 1;
+                break;
+            }
+            cs[k] = h[k][k] / denom;
+            sn[k] = h[k + 1][k] / denom;
+            h[k][k] = denom;
+            h[k + 1][k] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] *= cs[k];
+            k_used = k + 1;
+            let rel = g[k + 1].abs() / bnorm;
+            if rel <= tol {
+                break;
+            }
+            if h[k + 1][k].abs() > 0.0 && k + 1 < m {
+                // next basis vector (w already orthogonalized)
+                let hnext = norm2(&w);
+                if hnext < 1e-300 {
+                    break;
+                }
+                v.push(w.iter().map(|&wi| wi / hnext).collect());
+                h[k + 1][k] = 0.0; // already rotated away
+            } else if k + 1 < m {
+                let hnext = norm2(&w);
+                if hnext < 1e-300 {
+                    break;
+                }
+                v.push(w.iter().map(|&wi| wi / hnext).collect());
+            }
+        }
+
+        // Back-substitute y from the triangular H and update x.
+        let k = k_used;
+        if k == 0 {
+            return SolveReport { iterations: total_iters, residual: res, converged: false };
+        }
+        let mut y = vec![0.0; k];
+        for i in (0..k).rev() {
+            let mut s = g[i];
+            for j in i + 1..k {
+                s -= h[i][j] * y[j];
+            }
+            y[i] = if h[i][i].abs() > 1e-300 { s / h[i][i] } else { 0.0 };
+        }
+        for (j, yj) in y.iter().enumerate() {
+            axpy(*yj, &v[j], x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::linalg::op::DenseOp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_nonsymmetric_system() {
+        let mut rng = Rng::new(1);
+        let n = 30;
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64;
+        }
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; n];
+        let rep = gmres(&DenseOp::new(&a), &b, &mut x, 1e-11, 600, 20);
+        assert!(rep.converged, "{rep:?}");
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "i={i} {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn full_krylov_is_exact() {
+        let mut rng = Rng::new(2);
+        let n = 12;
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += 4.0;
+        }
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; n];
+        let rep = gmres(&DenseOp::new(&a), &b, &mut x, 1e-10, 5 * n, n);
+        assert!(rep.converged, "{rep:?}");
+    }
+
+    #[test]
+    fn small_restart_still_converges() {
+        let mut rng = Rng::new(3);
+        let n = 20;
+        let a = Mat::randn(n, n, &mut rng).gram().plus_diag(2.0);
+        let b = rng.normal_vec(n);
+        let mut x = vec![0.0; n];
+        let rep = gmres(&DenseOp::new(&a), &b, &mut x, 1e-9, 2000, 5);
+        assert!(rep.converged, "{rep:?}");
+        let mut ax = vec![0.0; n];
+        a.matvec_into(&x, &mut ax);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Dense LU with partial pivoting, for small general (non-SPD) systems —
+//! dense Jacobian assembly (paper Eq. 2 with explicit A), KKT systems and the
+//! Newton fixed point's inner solve.
+
+use super::mat::Mat;
+
+/// LU factorization with partial pivoting: P A = L U.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    /// Packed LU factors (unit lower + upper).
+    lu: Mat,
+    /// Row permutation.
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor A. Returns None if A is numerically singular.
+    pub fn factor(a: &Mat) -> Option<Lu> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot selection.
+            let mut pmax = lu.at(k, k).abs();
+            let mut prow = k;
+            for i in k + 1..n {
+                let v = lu.at(i, k).abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = i;
+                }
+            }
+            if pmax < 1e-300 {
+                return None;
+            }
+            if prow != k {
+                for j in 0..n {
+                    let t = lu.at(k, j);
+                    *lu.at_mut(k, j) = lu.at(prow, j);
+                    *lu.at_mut(prow, j) = t;
+                }
+                piv.swap(k, prow);
+                sign = -sign;
+            }
+            let pivot = lu.at(k, k);
+            for i in k + 1..n {
+                let m = lu.at(i, k) / pivot;
+                *lu.at_mut(i, k) = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        *lu.at_mut(i, j) -= m * lu.at(k, j);
+                    }
+                }
+            }
+        }
+        Some(Lu { lu, piv, sign })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // Apply permutation then forward-substitute (unit lower).
+        let mut y: Vec<f64> = (0..n).map(|i| b[self.piv[i]]).collect();
+        for i in 1..n {
+            let mut s = y[i];
+            for k in 0..i {
+                s -= self.lu.at(i, k) * y[k];
+            }
+            y[i] = s;
+        }
+        // Back-substitute (upper).
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.lu.at(i, k) * y[k];
+            }
+            y[i] = s / self.lu.at(i, i);
+        }
+        y
+    }
+
+    /// Solve A X = B column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col = self.solve(&b.col(j));
+            for i in 0..b.rows {
+                *out.at_mut(i, j) = col[i];
+            }
+        }
+        out
+    }
+
+    /// Solve Aᵀ x = b (for VJPs: the paper solves Aᵀu = v).
+    pub fn solve_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        // Uᵀ y = b (forward, Uᵀ is lower).
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.lu.at(k, i) * y[k];
+            }
+            y[i] = s / self.lu.at(i, i);
+        }
+        // Lᵀ z = y (backward, unit diagonal).
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.lu.at(k, i) * y[k];
+            }
+            y[i] = s;
+        }
+        // Undo permutation: x[piv[i]] = z[i].
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            x[self.piv[i]] = y[i];
+        }
+        x
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows {
+            d *= self.lu.at(i, i);
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_general_system() {
+        let mut rng = Rng::new(1);
+        let n = 12;
+        let a = Mat::randn(n, n, &mut rng);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn solve_transposed_system() {
+        let mut rng = Rng::new(2);
+        let n = 10;
+        let a = Mat::randn(n, n, &mut rng);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec_t(&x_true);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_t(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::factor(&a).is_none());
+    }
+
+    #[test]
+    fn determinant() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,296 @@
+//! Dense row-major matrix with BLAS-like kernels (gemm/gemv/syrk).
+//!
+//! The gemm uses i-k-j loop order with a blocked variant for larger sizes —
+//! cache-friendly without unsafe code. This is the crate's single biggest
+//! hot spot (SVM objective, logistic regression, Gram matrices), so it gets
+//! perf attention in EXPERIMENTS.md §Perf.
+
+use super::vecops;
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// y = A x (allocating).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into caller buffer.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = vecops::dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x (allocating).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// y = Aᵀ x into caller buffer — row-major friendly (axpy over rows).
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            vecops::axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// C = A · B. Blocked i-k-j gemm.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "gemm shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        gemm_acc(self, b, &mut c);
+        c
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "tgemm shape mismatch");
+        let (m, n, p) = (self.cols, b.cols, self.rows);
+        let mut c = Mat::zeros(m, n);
+        for k in 0..p {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for i in 0..m {
+                let aki = arow[i];
+                if aki != 0.0 {
+                    vecops::axpy(aki, brow, c.row_mut(i));
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A · Bᵀ without materializing Bᵀ.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "gemm_t shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            for j in 0..b.rows {
+                c.data[i * b.rows + j] = vecops::dot(self.row(i), b.row(j));
+            }
+        }
+        c
+    }
+
+    /// Gram matrix AᵀA (symmetric rank-k update).
+    pub fn gram(&self) -> Mat {
+        self.t_matmul(self)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        vecops::norm2(&self.data)
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// self += alpha * other.
+    pub fn add_scaled(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        vecops::axpy(alpha, &other.data, &mut self.data);
+    }
+
+    /// A + alpha * I (square only).
+    pub fn plus_diag(&self, alpha: f64) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            out.data[i * self.cols + i] += alpha;
+        }
+        out
+    }
+}
+
+/// C += A · B, blocked over k then i for cache locality (i-k-j order: the
+/// inner loop is a unit-stride axpy over a row of B and a row of C).
+fn gemm_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, p, n) = (a.rows, a.cols, b.cols);
+    const KB: usize = 64;
+    for k0 in (0..p).step_by(KB) {
+        let kend = (k0 + KB).min(p);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for k in k0..kend {
+                let aik = arow[k];
+                if aik != 0.0 {
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    vecops::axpy(aik, brow, crow);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, p, n) in &[(3usize, 4usize, 5usize), (17, 33, 9), (64, 65, 66), (1, 7, 1)] {
+            let a = Mat::randn(m, p, &mut rng);
+            let b = Mat::randn(p, n, &mut rng);
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            for i in 0..c.data.len() {
+                assert!((c.data[i] - c0.data[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matmuls_consistent() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(13, 7, &mut rng);
+        let b = Mat::randn(13, 5, &mut rng);
+        let c1 = a.t_matmul(&b);
+        let c2 = a.transpose().matmul(&b);
+        for i in 0..c1.data.len() {
+            assert!((c1.data[i] - c2.data[i]).abs() < 1e-10);
+        }
+        let d = Mat::randn(4, 7, &mut rng);
+        let e1 = a.matmul_t(&d);
+        let e2 = a.matmul(&d.transpose());
+        for i in 0..e1.data.len() {
+            assert!((e1.data[i] - e2.data[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matvecs() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(10, 6, &mut rng);
+        let g = a.gram();
+        assert_eq!(g.rows, 6);
+        for i in 0..6 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..6 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eye_and_plus_diag() {
+        let i3 = Mat::eye(3);
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(i3.matvec(&x), x.to_vec());
+        let shifted = Mat::zeros(2, 2).plus_diag(5.0);
+        assert_eq!(shifted.at(0, 0), 5.0);
+        assert_eq!(shifted.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(5, 8, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

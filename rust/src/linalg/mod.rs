@@ -1,0 +1,22 @@
+//! Dense + matrix-free linear algebra substrate.
+//!
+//! Everything the implicit-differentiation engine needs to solve the linear
+//! systems of paper Eq. (2): a dense matrix type with BLAS-like kernels, a
+//! matrix-free [`op::LinOp`] abstraction (the paper's "all we need from F is
+//! its JVPs or VJPs"), and the iterative solvers the paper names — conjugate
+//! gradient [51], GMRES [75], BiCGSTAB [81] — plus normal-equation CG and
+//! dense LU/Cholesky factorizations for small systems.
+
+pub mod bicgstab;
+pub mod cg;
+pub mod chol;
+pub mod gmres;
+pub mod lu;
+pub mod mat;
+pub mod op;
+pub mod solve;
+pub mod vecops;
+
+pub use mat::Mat;
+pub use op::LinOp;
+pub use solve::{LinearSolveConfig, LinearSolverKind, SolveReport};

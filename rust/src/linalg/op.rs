@@ -1,0 +1,222 @@
+//! Matrix-free linear operators.
+//!
+//! The paper's linear systems (Eq. 2) are solved with matrix-free methods:
+//! "all we need from F is its JVPs or VJPs". `LinOp` is that abstraction; it
+//! is implemented by dense matrices, by autodiff-derived Jacobian operators
+//! (∂₁F as a JVP closure) and by the XLA runtime oracles.
+
+use super::mat::Mat;
+
+/// A linear map R^n → R^n (square; the implicit-function-theorem system
+/// A J = B always has square A = −∂₁F).
+pub trait LinOp {
+    /// Dimension d of the (square) operator.
+    fn dim(&self) -> usize;
+    /// y = A x.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// y = Aᵀ x. Default errors for operators with no transpose available.
+    fn apply_t(&self, _x: &[f64], _y: &mut [f64]) {
+        panic!("this LinOp does not implement a transpose product");
+    }
+    /// Whether the operator is (numerically) symmetric — enables CG.
+    fn is_symmetric(&self) -> bool {
+        false
+    }
+
+    /// Materialize as a dense matrix (d columns of basis products). For tests
+    /// and small systems only.
+    fn to_dense(&self) -> Mat {
+        let d = self.dim();
+        let mut m = Mat::zeros(d, d);
+        let mut e = vec![0.0; d];
+        let mut col = vec![0.0; d];
+        for j in 0..d {
+            e[j] = 1.0;
+            self.apply(&e, &mut col);
+            for i in 0..d {
+                *m.at_mut(i, j) = col[i];
+            }
+            e[j] = 0.0;
+        }
+        m
+    }
+}
+
+/// Dense matrix as a LinOp.
+pub struct DenseOp<'a> {
+    pub a: &'a Mat,
+    pub symmetric: bool,
+}
+
+impl<'a> DenseOp<'a> {
+    pub fn new(a: &'a Mat) -> DenseOp<'a> {
+        assert_eq!(a.rows, a.cols);
+        DenseOp { a, symmetric: false }
+    }
+    pub fn symmetric(a: &'a Mat) -> DenseOp<'a> {
+        assert_eq!(a.rows, a.cols);
+        DenseOp { a, symmetric: true }
+    }
+}
+
+impl LinOp for DenseOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.a.matvec_into(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.a.matvec_t_into(x, y);
+    }
+    fn is_symmetric(&self) -> bool {
+        self.symmetric
+    }
+}
+
+/// LinOp from closures (the autodiff JVP/VJP path).
+pub struct FnOp<F, G>
+where
+    F: Fn(&[f64], &mut [f64]),
+    G: Fn(&[f64], &mut [f64]),
+{
+    pub d: usize,
+    pub fwd: F,
+    pub tr: G,
+    pub symmetric: bool,
+}
+
+impl<F, G> FnOp<F, G>
+where
+    F: Fn(&[f64], &mut [f64]),
+    G: Fn(&[f64], &mut [f64]),
+{
+    pub fn new(d: usize, fwd: F, tr: G) -> Self {
+        FnOp { d, fwd, tr, symmetric: false }
+    }
+    pub fn sym(d: usize, fwd: F, tr: G) -> Self {
+        FnOp { d, fwd, tr, symmetric: true }
+    }
+}
+
+impl<F, G> LinOp for FnOp<F, G>
+where
+    F: Fn(&[f64], &mut [f64]),
+    G: Fn(&[f64], &mut [f64]),
+{
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        (self.fwd)(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        (self.tr)(x, y);
+    }
+    fn is_symmetric(&self) -> bool {
+        self.symmetric
+    }
+}
+
+/// The transpose view of an operator.
+pub struct TransposedOp<'a, A: LinOp + ?Sized>(pub &'a A);
+
+impl<A: LinOp + ?Sized> LinOp for TransposedOp<'_, A> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.0.apply_t(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.0.apply(x, y);
+    }
+    fn is_symmetric(&self) -> bool {
+        self.0.is_symmetric()
+    }
+}
+
+/// A Aᵀ (for normal-equation CG on non-symmetric systems).
+pub struct AAtOp<'a, A: LinOp + ?Sized> {
+    pub a: &'a A,
+    buf: std::cell::RefCell<Vec<f64>>,
+}
+
+impl<'a, A: LinOp + ?Sized> AAtOp<'a, A> {
+    pub fn new(a: &'a A) -> Self {
+        let d = a.dim();
+        AAtOp { a, buf: std::cell::RefCell::new(vec![0.0; d]) }
+    }
+}
+
+impl<A: LinOp + ?Sized> LinOp for AAtOp<'_, A> {
+    fn dim(&self) -> usize {
+        self.a.dim()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let mut t = self.buf.borrow_mut();
+        self.a.apply_t(x, &mut t);
+        self.a.apply(&t, y);
+    }
+    fn is_symmetric(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_op_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(6, 6, &mut rng);
+        let op = DenseOp::new(&a);
+        assert_eq!(op.to_dense(), a);
+    }
+
+    #[test]
+    fn transposed_op_matches_dense_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 5, &mut rng);
+        let op = DenseOp::new(&a);
+        let t = TransposedOp(&op);
+        assert_eq!(t.to_dense(), a.transpose());
+    }
+
+    #[test]
+    fn aat_is_symmetric_psd() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 4, &mut rng);
+        let op = DenseOp::new(&a);
+        let aat = AAtOp::new(&op);
+        let m = aat.to_dense();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m.at(i, j) - m.at(j, i)).abs() < 1e-10);
+            }
+            assert!(m.at(i, i) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn fn_op_applies_closures() {
+        let op = FnOp::new(
+            3,
+            |x: &[f64], y: &mut [f64]| {
+                for i in 0..3 {
+                    y[i] = 2.0 * x[i];
+                }
+            },
+            |x: &[f64], y: &mut [f64]| {
+                for i in 0..3 {
+                    y[i] = 2.0 * x[i];
+                }
+            },
+        );
+        let mut y = vec![0.0; 3];
+        op.apply(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Linear-solver dispatch — the paper's solver-choice policy in §2.1:
+//! CG when A is symmetric PSD; GMRES or BiCGSTAB otherwise; optionally the
+//! normal equation A Aᵀ u = A v via CG (the `jax.linear_transpose` trick);
+//! and a least-squares fallback for (near-)singular systems.
+
+use super::bicgstab::bicgstab;
+use super::cg::cg;
+use super::gmres::gmres;
+use super::op::{AAtOp, LinOp, TransposedOp};
+
+/// Which iterative method to use for the implicit-diff linear system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinearSolverKind {
+    /// Conjugate gradient (requires symmetric A).
+    Cg,
+    /// BiCGSTAB (general A).
+    BiCgStab,
+    /// Restarted GMRES (general A).
+    Gmres,
+    /// CG on the normal equations A Aᵀ u = b (general A; least-squares-like).
+    NormalCg,
+    /// Pick automatically: CG if `op.is_symmetric()`, BiCGSTAB otherwise.
+    Auto,
+}
+
+/// Solver configuration shared by all methods.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearSolveConfig {
+    pub kind: LinearSolverKind,
+    pub tol: f64,
+    pub max_iter: usize,
+    pub gmres_restart: usize,
+}
+
+impl Default for LinearSolveConfig {
+    fn default() -> Self {
+        LinearSolveConfig { kind: LinearSolverKind::Auto, tol: 1e-10, max_iter: 2500, gmres_restart: 30 }
+    }
+}
+
+impl LinearSolveConfig {
+    pub fn with_kind(kind: LinearSolverKind) -> Self {
+        LinearSolveConfig { kind, ..Default::default() }
+    }
+}
+
+/// Outcome of an iterative solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveReport {
+    pub iterations: usize,
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// Solve A x = b in-place in `x` (initial guess on entry).
+pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
+    let kind = match cfg.kind {
+        LinearSolverKind::Auto => {
+            if a.is_symmetric() {
+                LinearSolverKind::Cg
+            } else {
+                LinearSolverKind::BiCgStab
+            }
+        }
+        k => k,
+    };
+    match kind {
+        LinearSolverKind::Cg => cg(a, b, x, cfg.tol, cfg.max_iter),
+        LinearSolverKind::BiCgStab => bicgstab(a, b, x, cfg.tol, cfg.max_iter),
+        LinearSolverKind::Gmres => gmres(a, b, x, cfg.tol, cfg.max_iter, cfg.gmres_restart),
+        LinearSolverKind::NormalCg => {
+            // Solve A x = b via x = Aᵀ u where A Aᵀ u = b.
+            let aat = AAtOp::new(a);
+            let mut u = vec![0.0; b.len()];
+            let rep = cg(&aat, b, &mut u, cfg.tol, cfg.max_iter);
+            a.apply_t(&u, x);
+            rep
+        }
+        LinearSolverKind::Auto => unreachable!(),
+    }
+}
+
+/// Solve Aᵀ x = b (the VJP-side system of §2.1: first solve Aᵀ u = v).
+pub fn solve_t(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
+    let at = TransposedOp(a);
+    solve(&at, b, x, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::linalg::op::DenseOp;
+    use crate::util::rng::Rng;
+
+    fn check_solution(a: &Mat, b: &[f64], x: &[f64], tol: f64) {
+        let ax = a.matvec(x);
+        for i in 0..b.len() {
+            assert!((ax[i] - b[i]).abs() < tol, "residual at {i}: {} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn auto_uses_cg_for_symmetric() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(10, 10, &mut rng).gram().plus_diag(1.0);
+        let b = rng.normal_vec(10);
+        let mut x = vec![0.0; 10];
+        let rep = solve(&DenseOp::symmetric(&a), &b, &mut x, &LinearSolveConfig::default());
+        assert!(rep.converged);
+        check_solution(&a, &b, &x, 1e-6);
+    }
+
+    #[test]
+    fn all_kinds_agree_on_spd() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(14, 14, &mut rng).gram().plus_diag(2.0);
+        let b = rng.normal_vec(14);
+        for kind in [
+            LinearSolverKind::Cg,
+            LinearSolverKind::BiCgStab,
+            LinearSolverKind::Gmres,
+            LinearSolverKind::NormalCg,
+        ] {
+            let mut x = vec![0.0; 14];
+            let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: 14 };
+            let rep = solve(&DenseOp::symmetric(&a), &b, &mut x, &cfg);
+            assert!(rep.converged, "{kind:?} failed: {rep:?}");
+            check_solution(&a, &b, &x, 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_solve() {
+        let mut rng = Rng::new(3);
+        let n = 9;
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += 5.0;
+        }
+        let b = rng.normal_vec(n);
+        let mut x = vec![0.0; n];
+        let rep = solve_t(&DenseOp::new(&a), &b, &mut x, &LinearSolveConfig::default());
+        assert!(rep.converged);
+        let atx = a.matvec_t(&x);
+        for i in 0..n {
+            assert!((atx[i] - b[i]).abs() < 1e-6);
+        }
+    }
+}

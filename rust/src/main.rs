@@ -1,0 +1,43 @@
+//! `idiff` CLI launcher.
+//!
+//! ```text
+//! idiff list                      # list experiments (one per paper figure/table)
+//! idiff run --exp fig3 [opts]     # run one experiment, write results/<id>.json
+//! idiff run --exp all             # run everything at default (CI) scale
+//! idiff serve [--addr 127.0.0.1:7878]   # hypergradient request server
+//! ```
+
+use idiff::coordinator;
+use idiff::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("list") => coordinator::list_experiments(),
+        Some("run") => {
+            let exp = args.get_or("exp", "");
+            if exp == "all" {
+                for (id, _, _) in coordinator::registry() {
+                    coordinator::run_experiment(id, &args);
+                }
+            } else if coordinator::run_experiment(exp, &args).is_none() {
+                eprintln!("unknown experiment '{exp}'; try `idiff list`");
+                std::process::exit(2);
+            }
+        }
+        Some("serve") => {
+            let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+            let server = coordinator::serve::HypergradServer::new_default();
+            if let Err(e) = server.serve(&addr) {
+                eprintln!("server error: {e}");
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            println!("idiff — Efficient and Modular Implicit Differentiation (NeurIPS 2022) reproduction");
+            println!("usage: idiff <list|run|serve> [--exp NAME] [--key value ...]");
+            println!();
+            coordinator::list_experiments();
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Conic-programming residual map (paper Appendix A, Eq. 18) — the
+//! homogeneous self-dual embedding used by diffcp/cvxpylayers [2, 3]:
+//!
+//! ```text
+//!   F(x, θ) = ((θ − I)Π + I)x,   Π = proj onto R^p × K* × R₊
+//! ```
+//!
+//! where θ(λ) is the skew-symmetric matrix assembled from (c, E, d). The
+//! cone here is K = R^m₊ (LP cone, self-dual), covering linear programs;
+//! the key differentiation oracle is just ∂Π, a diagonal 0/1 mask.
+
+use crate::diff::spec::RootMap;
+use crate::linalg::mat::Mat;
+
+/// Conic residual mapping for the LP cone. θ = (c ‖ d); E fixed.
+pub struct ConicResidualMap {
+    pub e: Mat, // m×p
+}
+
+impl ConicResidualMap {
+    pub fn dims(&self) -> (usize, usize) {
+        (self.e.cols, self.e.rows) // (p, m)
+    }
+    /// N = p + m + 1.
+    pub fn n(&self) -> usize {
+        self.e.cols + self.e.rows + 1
+    }
+
+    /// Π x: identity on the first p coords (free), relu on the next m
+    /// (K* = R^m₊) and relu on the last (R₊).
+    fn proj(&self, x: &[f64], out: &mut [f64]) {
+        let (p, _m) = self.dims();
+        for i in 0..x.len() {
+            out[i] = if i < p { x[i] } else { x[i].max(0.0) };
+        }
+    }
+    /// Diagonal mask of ∂Π at x.
+    fn proj_mask(&self, x: &[f64]) -> Vec<f64> {
+        let (p, _m) = self.dims();
+        (0..x.len())
+            .map(|i| if i < p || x[i] > 0.0 { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// y = θ(c, E, d) · w with the skew structure
+    /// θ = [[0, Eᵀ, c], [−E, 0, d], [−cᵀ, −dᵀ, 0]].
+    fn theta_mul(&self, c: &[f64], d: &[f64], w: &[f64], out: &mut [f64]) {
+        let (p, m) = self.dims();
+        let (wu, rest) = w.split_at(p);
+        let (wv, ww) = rest.split_at(m);
+        let t = ww[0];
+        // top block: Eᵀ wv + c t
+        let etv = self.e.matvec_t(wv);
+        for i in 0..p {
+            out[i] = etv[i] + c[i] * t;
+        }
+        // middle: −E wu + d t
+        let eu = self.e.matvec(wu);
+        for i in 0..m {
+            out[p + i] = -eu[i] + d[i] * t;
+        }
+        // last: −cᵀwu − dᵀwv
+        out[p + m] = -crate::linalg::vecops::dot(c, wu) - crate::linalg::vecops::dot(d, wv);
+    }
+
+    /// θᵀ = −θ for skew-symmetric θ.
+    fn theta_mul_t(&self, c: &[f64], d: &[f64], w: &[f64], out: &mut [f64]) {
+        self.theta_mul(c, d, w, out);
+        for o in out.iter_mut() {
+            *o = -*o;
+        }
+    }
+
+    fn split_theta<'a>(&self, t: &'a [f64]) -> (&'a [f64], &'a [f64]) {
+        t.split_at(self.dims().0)
+    }
+}
+
+impl RootMap for ConicResidualMap {
+    fn dim_x(&self) -> usize {
+        self.n()
+    }
+    fn dim_theta(&self) -> usize {
+        let (p, m) = self.dims();
+        p + m
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let (c, d) = self.split_theta(theta);
+        let n = self.n();
+        let mut pi = vec![0.0; n];
+        self.proj(x, &mut pi);
+        // F = θΠx − Πx + x
+        self.theta_mul(c, d, &pi, out);
+        for i in 0..n {
+            out[i] += x[i] - pi[i];
+        }
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let (c, d) = self.split_theta(theta);
+        let n = self.n();
+        let mask = self.proj_mask(x);
+        let dpi: Vec<f64> = (0..n).map(|i| mask[i] * v[i]).collect();
+        self.theta_mul(c, d, &dpi, out);
+        for i in 0..n {
+            out[i] += v[i] - dpi[i];
+        }
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let (c, d) = self.split_theta(theta);
+        let n = self.n();
+        let mask = self.proj_mask(x);
+        // F = (θ−I)Πx + x ⇒ ∂Fᵀu = ∂Πᵀ(θᵀ−I)u + u = D((−θ−I)u) + u
+        let mut tu = vec![0.0; n];
+        self.theta_mul_t(c, d, u, &mut tu);
+        for i in 0..n {
+            out[i] = mask[i] * (tu[i] - u[i]) + u[i];
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        // dF = dθ · Πx with dθ assembled from (dc, dd).
+        let (p, m) = self.dims();
+        let (dc, dd) = v.split_at(p);
+        let n = self.n();
+        let mut pi = vec![0.0; n];
+        self.proj(x, &mut pi);
+        let (pu, rest) = pi.split_at(p);
+        let (pv, pw) = rest.split_at(m);
+        let t = pw[0];
+        for i in 0..p {
+            out[i] = dc[i] * t;
+        }
+        for i in 0..m {
+            out[p + i] = dd[i] * t;
+        }
+        out[p + m] =
+            -crate::linalg::vecops::dot(dc, pu) - crate::linalg::vecops::dot(dd, pv);
+    }
+    fn vjp_theta(&self, x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let (p, m) = self.dims();
+        let n = self.n();
+        let mut pi = vec![0.0; n];
+        self.proj(x, &mut pi);
+        let (pu, rest) = pi.split_at(p);
+        let (pv, pw) = rest.split_at(m);
+        let t = pw[0];
+        let (u1, restu) = u.split_at(p);
+        let (u2, u3) = restu.split_at(m);
+        // ⟨u, dθ Πx⟩ = Σ dc_i (u1_i t − u3 pu_i) + Σ dd_j (u2_j t − u3 pv_j)
+        for i in 0..p {
+            out[i] = u1[i] * t - u3[0] * pu[i];
+        }
+        for j in 0..m {
+            out[p + j] = u2[j] * t - u3[0] * pv[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (ConicResidualMap, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let (m, p) = (4, 3);
+        let e = Mat::randn(m, p, &mut rng);
+        let map = ConicResidualMap { e };
+        let theta = rng.normal_vec(p + m);
+        let x = rng.normal_vec(p + m + 1);
+        (map, theta, x)
+    }
+
+    #[test]
+    fn jvp_x_matches_fd() {
+        let (map, theta, x) = setup(1);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(map.dim_x());
+        let mut jv = vec![0.0; map.dim_x()];
+        map.jvp_x(&x, &theta, &v, &mut jv);
+        let fd = crate::ad::num_grad::jvp_fd(|xx| map.eval_vec(xx, &theta), &x, &v, 1e-7);
+        for i in 0..jv.len() {
+            assert!((jv[i] - fd[i]).abs() < 1e-6, "i={i}: {} vs {}", jv[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn jvp_theta_matches_fd() {
+        let (map, theta, x) = setup(3);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(map.dim_theta());
+        let mut jt = vec![0.0; map.dim_x()];
+        map.jvp_theta(&x, &theta, &v, &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|tt| map.eval_vec(&x, tt), &theta, &v, 1e-7);
+        for i in 0..jt.len() {
+            assert!((jt[i] - fd[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn adjoint_identities() {
+        let (map, theta, x) = setup(5);
+        let mut rng = Rng::new(6);
+        let v = rng.normal_vec(map.dim_x());
+        let u = rng.normal_vec(map.dim_x());
+        let mut jv = vec![0.0; map.dim_x()];
+        map.jvp_x(&x, &theta, &v, &mut jv);
+        let mut vj = vec![0.0; map.dim_x()];
+        map.vjp_x(&x, &theta, &u, &mut vj);
+        let lhs = crate::linalg::vecops::dot(&u, &jv);
+        let rhs = crate::linalg::vecops::dot(&vj, &v);
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+        let vt = rng.normal_vec(map.dim_theta());
+        let mut jt = vec![0.0; map.dim_x()];
+        map.jvp_theta(&x, &theta, &vt, &mut jt);
+        let mut vjt = vec![0.0; map.dim_theta()];
+        map.vjp_theta(&x, &theta, &u, &mut vjt);
+        let lhs = crate::linalg::vecops::dot(&u, &jt);
+        let rhs = crate::linalg::vecops::dot(&vjt, &vt);
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn skew_structure() {
+        // θ(λ) is skew-symmetric: ⟨w, θw⟩ = 0 for all w.
+        let (map, theta, _x) = setup(7);
+        let (c, d) = map.split_theta(&theta);
+        let mut rng = Rng::new(8);
+        for _ in 0..10 {
+            let w = rng.normal_vec(map.n());
+            let mut tw = vec![0.0; map.n()];
+            map.theta_mul(c, d, &w, &mut tw);
+            let ip = crate::linalg::vecops::dot(&w, &tw);
+            assert!(ip.abs() < 1e-10, "⟨w, θw⟩ = {ip}");
+        }
+    }
+}

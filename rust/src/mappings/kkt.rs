@@ -1,0 +1,295 @@
+//! KKT conditions as a root mapping (paper Eq. 6, Appendix A "Quadratic
+//! programming") for the QP
+//!
+//! ```text
+//!   argmin_z ½zᵀQz + cᵀz   s.t.  Ez = d,  Mz ≤ h
+//! ```
+//!
+//! with x = (z, ν, λ) grouping primal and dual variables and differentiable
+//! parameters θ = (c ‖ d ‖ h). This recovers OptNet [6] as a special case;
+//! no manual derivation is needed beyond writing F itself.
+
+use crate::diff::spec::RootMap;
+use crate::linalg::mat::Mat;
+
+/// QP KKT mapping. Matrices are fixed per instance; θ = (c, d, h).
+pub struct QpKktMapping {
+    pub q: Mat, // p×p symmetric PSD
+    pub e: Mat, // q_e×p
+    pub m: Mat, // r×p
+}
+
+impl QpKktMapping {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.q.rows, self.e.rows, self.m.rows)
+    }
+
+    fn split_x<'a>(&self, x: &'a [f64]) -> (&'a [f64], &'a [f64], &'a [f64]) {
+        let (p, qe, _r) = self.dims();
+        let (z, rest) = x.split_at(p);
+        let (nu, lam) = rest.split_at(qe);
+        (z, nu, lam)
+    }
+
+    fn split_theta<'a>(&self, t: &'a [f64]) -> (&'a [f64], &'a [f64], &'a [f64]) {
+        let (p, qe, _r) = self.dims();
+        let (c, rest) = t.split_at(p);
+        let (d, h) = rest.split_at(qe);
+        (c, d, h)
+    }
+}
+
+impl RootMap for QpKktMapping {
+    fn dim_x(&self) -> usize {
+        let (p, qe, r) = self.dims();
+        p + qe + r
+    }
+    fn dim_theta(&self) -> usize {
+        let (p, qe, r) = self.dims();
+        p + qe + r
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let (p, qe, r) = self.dims();
+        let (z, nu, lam) = self.split_x(x);
+        let (c, d, h) = self.split_theta(theta);
+        // stationarity: Qz + c + Eᵀν + Mᵀλ
+        let qz = self.q.matvec(z);
+        let etnu = self.e.matvec_t(nu);
+        let mtlam = self.m.matvec_t(lam);
+        for i in 0..p {
+            out[i] = qz[i] + c[i] + etnu[i] + mtlam[i];
+        }
+        // primal feasibility (equality): Ez − d
+        let ez = self.e.matvec(z);
+        for i in 0..qe {
+            out[p + i] = ez[i] - d[i];
+        }
+        // complementary slackness: λ∘(Mz − h)
+        let mz = self.m.matvec(z);
+        for i in 0..r {
+            out[p + qe + i] = lam[i] * (mz[i] - h[i]);
+        }
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let (p, qe, r) = self.dims();
+        let (z, _nu, lam) = self.split_x(x);
+        let (_c, _d, h) = self.split_theta(theta);
+        let (dz, rest) = v.split_at(p);
+        let (dnu, dlam) = rest.split_at(qe);
+        let qdz = self.q.matvec(dz);
+        let etdnu = self.e.matvec_t(dnu);
+        let mtdlam = self.m.matvec_t(dlam);
+        for i in 0..p {
+            out[i] = qdz[i] + etdnu[i] + mtdlam[i];
+        }
+        let edz = self.e.matvec(dz);
+        out[p..p + qe].copy_from_slice(&edz);
+        let mz = self.m.matvec(z);
+        let mdz = self.m.matvec(dz);
+        for i in 0..r {
+            out[p + qe + i] = dlam[i] * (mz[i] - h[i]) + lam[i] * mdz[i];
+        }
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let (p, qe, r) = self.dims();
+        let (z, _nu, lam) = self.split_x(x);
+        let (_c, _d, h) = self.split_theta(theta);
+        let (u1, rest) = u.split_at(p);
+        let (u2, u3) = rest.split_at(qe);
+        // z-block: Qᵀu1 + Eᵀu2 + Mᵀ(λ∘u3)
+        let qu = self.q.matvec_t(u1);
+        let etu = self.e.matvec_t(u2);
+        let lu3: Vec<f64> = (0..r).map(|i| lam[i] * u3[i]).collect();
+        let mtu = self.m.matvec_t(&lu3);
+        for i in 0..p {
+            out[i] = qu[i] + etu[i] + mtu[i];
+        }
+        // ν-block: E u1
+        let eu = self.e.matvec(u1);
+        out[p..p + qe].copy_from_slice(&eu);
+        // λ-block: M u1 + (Mz − h)∘u3
+        let mu = self.m.matvec(u1);
+        let mz = self.m.matvec(z);
+        for i in 0..r {
+            out[p + qe + i] = mu[i] + (mz[i] - h[i]) * u3[i];
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let (p, qe, r) = self.dims();
+        let (_z, _nu, lam) = self.split_x(x);
+        let (dc, rest) = v.split_at(p);
+        let (dd, dh) = rest.split_at(qe);
+        out[..p].copy_from_slice(dc);
+        for i in 0..qe {
+            out[p + i] = -dd[i];
+        }
+        for i in 0..r {
+            out[p + qe + i] = -lam[i] * dh[i];
+        }
+    }
+    fn vjp_theta(&self, x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let (p, qe, r) = self.dims();
+        let (_z, _nu, lam) = self.split_x(x);
+        let (u1, rest) = u.split_at(p);
+        let (u2, u3) = rest.split_at(qe);
+        out[..p].copy_from_slice(u1);
+        for i in 0..qe {
+            out[p + i] = -u2[i];
+        }
+        for i in 0..r {
+            out[p + qe + i] = -lam[i] * u3[i];
+        }
+    }
+}
+
+/// Solve an equality-constrained QP exactly via the saddle system (paper
+/// Eq. 16). Returns (z, ν).
+pub fn solve_eq_qp(q: &Mat, e: &Mat, c: &[f64], d: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let p = q.rows;
+    let qe = e.rows;
+    let n = p + qe;
+    let mut kkt = Mat::zeros(n, n);
+    for i in 0..p {
+        for j in 0..p {
+            *kkt.at_mut(i, j) = q.at(i, j);
+        }
+        for j in 0..qe {
+            *kkt.at_mut(i, p + j) = e.at(j, i);
+            *kkt.at_mut(p + j, i) = e.at(j, i);
+        }
+    }
+    let mut rhs = vec![0.0; n];
+    for i in 0..p {
+        rhs[i] = -c[i];
+    }
+    for i in 0..qe {
+        rhs[p + i] = d[i];
+    }
+    let lu = crate::linalg::lu::Lu::factor(&kkt).expect("KKT system singular");
+    let sol = lu.solve(&rhs);
+    (sol[..p].to_vec(), sol[p..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::jacobian_via_root;
+    use crate::util::rng::Rng;
+
+    /// Equality-constrained QP: closed-form solution map is linear in θ, so
+    /// the implicit Jacobian must match finite differences of the solver.
+    #[test]
+    fn eq_qp_jacobian_matches_fd() {
+        let mut rng = Rng::new(1);
+        let p = 4;
+        let qe = 2;
+        let q = Mat::randn(p + 2, p, &mut rng).gram().plus_diag(1.0);
+        let e = Mat::randn(qe, p, &mut rng);
+        let mapping = QpKktMapping { q: q.clone(), e: e.clone(), m: Mat::zeros(0, p) };
+
+        let c0 = rng.normal_vec(p);
+        let d0 = rng.normal_vec(qe);
+        let theta: Vec<f64> = c0.iter().chain(&d0).cloned().collect();
+        let (z, nu) = solve_eq_qp(&q, &e, &c0, &d0);
+        let x: Vec<f64> = z.iter().chain(&nu).cloned().collect();
+
+        // residual must vanish
+        let f = mapping.eval_vec(&x, &theta);
+        assert!(crate::linalg::vecops::norm2(&f) < 1e-9);
+
+        let jac = jacobian_via_root(&mapping, &x, &theta);
+        // FD of the solver w.r.t. θ (z-part rows only)
+        let h = 1e-6;
+        for j in 0..theta.len() {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let (zp, nup) = solve_eq_qp(&q, &e, &tp[..p], &tp[p..]);
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let (zm, num) = solve_eq_qp(&q, &e, &tm[..p], &tm[p..]);
+            for i in 0..p {
+                let fd = (zp[i] - zm[i]) / (2.0 * h);
+                assert!((jac.at(i, j) - fd).abs() < 1e-5, "z ({i},{j}): {} vs {fd}", jac.at(i, j));
+            }
+            for i in 0..qe {
+                let fd = (nup[i] - num[i]) / (2.0 * h);
+                assert!((jac.at(p + i, j) - fd).abs() < 1e-5, "ν ({i},{j})");
+            }
+        }
+    }
+
+    /// Inequality QP with known active set: minimize ½(z−1)² s.t. z ≤ 0
+    /// (active) → z* = 0, λ* = 1; sensitivity w.r.t. h: z*(h) = h → dz/dh = 1.
+    #[test]
+    fn active_inequality_sensitivity() {
+        let q = Mat::eye(1);
+        let e = Mat::zeros(0, 1);
+        let m = Mat::eye(1);
+        let mapping = QpKktMapping { q, e, m };
+        // θ = (c, h) = (−1, 0): f = ½z² − z, constraint z ≤ 0.
+        let theta = vec![-1.0, 0.0];
+        let x = vec![0.0, 1.0]; // z = 0, λ = 1
+        let f = mapping.eval_vec(&x, &theta);
+        assert!(crate::linalg::vecops::norm2(&f) < 1e-12);
+        let jac = jacobian_via_root(&mapping, &x, &theta);
+        // dz/dh = 1 (constraint active, solution tracks the boundary)
+        assert!((jac.at(0, 1) - 1.0).abs() < 1e-6, "dz/dh = {}", jac.at(0, 1));
+        // dz/dc = 0 (pinned at the boundary)
+        assert!(jac.at(0, 0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jvp_vjp_adjoint_identity() {
+        let mut rng = Rng::new(2);
+        let (p, qe, r) = (3, 1, 2);
+        let q = Mat::randn(p + 1, p, &mut rng).gram().plus_diag(0.5);
+        let e = Mat::randn(qe, p, &mut rng);
+        let m = Mat::randn(r, p, &mut rng);
+        let mapping = QpKktMapping { q, e, m };
+        let x = rng.normal_vec(p + qe + r);
+        let theta = rng.normal_vec(p + qe + r);
+        let v = rng.normal_vec(p + qe + r);
+        let u = rng.normal_vec(p + qe + r);
+        let mut jv = vec![0.0; p + qe + r];
+        mapping.jvp_x(&x, &theta, &v, &mut jv);
+        let mut vj = vec![0.0; p + qe + r];
+        mapping.vjp_x(&x, &theta, &u, &mut vj);
+        let lhs = crate::linalg::vecops::dot(&u, &jv);
+        let rhs = crate::linalg::vecops::dot(&vj, &v);
+        assert!((lhs - rhs).abs() < 1e-9);
+        // θ side
+        let vt = rng.normal_vec(p + qe + r);
+        let mut jt = vec![0.0; p + qe + r];
+        mapping.jvp_theta(&x, &theta, &vt, &mut jt);
+        let mut vjt = vec![0.0; p + qe + r];
+        mapping.vjp_theta(&x, &theta, &u, &mut vjt);
+        let lhs = crate::linalg::vecops::dot(&u, &jt);
+        let rhs = crate::linalg::vecops::dot(&vjt, &vt);
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobians_match_fd_generic_point() {
+        let mut rng = Rng::new(3);
+        let (p, qe, r) = (3, 1, 2);
+        let q = Mat::randn(p + 1, p, &mut rng).gram().plus_diag(0.5);
+        let e = Mat::randn(qe, p, &mut rng);
+        let m = Mat::randn(r, p, &mut rng);
+        let mapping = QpKktMapping { q, e, m };
+        let x = rng.normal_vec(p + qe + r);
+        let theta = rng.normal_vec(p + qe + r);
+        let v = rng.normal_vec(p + qe + r);
+        let mut jv = vec![0.0; p + qe + r];
+        mapping.jvp_x(&x, &theta, &v, &mut jv);
+        let fd = crate::ad::num_grad::jvp_fd(|xx| mapping.eval_vec(xx, &theta), &x, &v, 1e-7);
+        for i in 0..jv.len() {
+            assert!((jv[i] - fd[i]).abs() < 1e-6);
+        }
+        let mut jt = vec![0.0; p + qe + r];
+        mapping.jvp_theta(&x, &theta, &v, &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|tt| mapping.eval_vec(&x, tt), &theta, &v, 1e-7);
+        for i in 0..jt.len() {
+            assert!((jt[i] - fd[i]).abs() < 1e-6);
+        }
+    }
+}

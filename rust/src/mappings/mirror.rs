@@ -1,0 +1,246 @@
+//! Mirror-descent fixed point (paper Eq. 13, Appendix A) —
+//! x̂ = ∇φ(x), y = x̂ − η∇₁f(x, θ), T(x, θ) = proj^φ_C(y).
+//!
+//! The KL geometry (φ = ⟨x, log x − 1⟩) over products of simplices is the
+//! instance the multiclass-SVM experiment uses: ∇φ(x) = log x and the
+//! Bregman projection is a row-wise softmax, "easy to compute and
+//! differentiate" per the paper.
+
+use super::objective::Objective;
+use crate::diff::spec::FixedPointMap;
+use crate::proj::simplex;
+
+/// Mirror map and Bregman projection for a geometry.
+pub trait MirrorGeometry {
+    fn dim(&self) -> usize;
+    /// x̂ = ∇φ(x).
+    fn mirror_map(&self, x: &[f64], out: &mut [f64]);
+    /// out = ∂∇φ(x) · v (diagonal for separable φ).
+    fn mirror_map_jvp(&self, x: &[f64], v: &[f64], out: &mut [f64]);
+    /// Bregman projection of the dual point y onto C.
+    fn bregman_project(&self, y: &[f64], out: &mut [f64]);
+    /// out = ∂proj(y) · v.
+    fn bregman_project_jvp(&self, y: &[f64], v: &[f64], out: &mut [f64]);
+    /// out = ∂proj(y)ᵀ · v (softmax Jacobian is symmetric; default = jvp).
+    fn bregman_project_vjp(&self, y: &[f64], v: &[f64], out: &mut [f64]) {
+        self.bregman_project_jvp(y, v, out);
+    }
+}
+
+/// KL geometry over a product of m simplices of size k (row-major m×k).
+pub struct KlSimplexRows {
+    pub m: usize,
+    pub k: usize,
+}
+
+impl MirrorGeometry for KlSimplexRows {
+    fn dim(&self) -> usize {
+        self.m * self.k
+    }
+    fn mirror_map(&self, x: &[f64], out: &mut [f64]) {
+        for i in 0..x.len() {
+            out[i] = x[i].max(1e-300).ln();
+        }
+    }
+    fn mirror_map_jvp(&self, x: &[f64], v: &[f64], out: &mut [f64]) {
+        for i in 0..x.len() {
+            out[i] = v[i] / x[i].max(1e-300);
+        }
+    }
+    fn bregman_project(&self, y: &[f64], out: &mut [f64]) {
+        simplex::softmax_rows(y, self.k, out);
+    }
+    fn bregman_project_jvp(&self, y: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut p = vec![0.0; y.len()];
+        simplex::softmax_rows(y, self.k, &mut p);
+        simplex::rows_softmax_jacobian_product(&p, self.k, v, out);
+    }
+}
+
+/// The mirror-descent fixed point T(x, θ) = proj^φ(∇φ(x) − η∇₁f(x, θ)).
+pub struct KlMirrorDescentFixedPoint<O: Objective, G: MirrorGeometry> {
+    pub obj: O,
+    pub geom: G,
+    pub eta: f64,
+}
+
+impl<O: Objective, G: MirrorGeometry> KlMirrorDescentFixedPoint<O, G> {
+    pub fn new(obj: O, geom: G, eta: f64) -> Self {
+        assert_eq!(obj.dim_x(), geom.dim());
+        KlMirrorDescentFixedPoint { obj, geom, eta }
+    }
+
+    /// y = ∇φ(x) − η∇₁f(x, θ).
+    fn dual_point(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
+        let d = x.len();
+        let mut xhat = vec![0.0; d];
+        self.geom.mirror_map(x, &mut xhat);
+        let mut g = vec![0.0; d];
+        self.obj.grad_x(x, theta, &mut g);
+        (0..d).map(|i| xhat[i] - self.eta * g[i]).collect()
+    }
+}
+
+impl<O: Objective, G: MirrorGeometry> FixedPointMap for KlMirrorDescentFixedPoint<O, G> {
+    fn dim_x(&self) -> usize {
+        self.obj.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.obj.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let y = self.dual_point(x, theta);
+        self.geom.bregman_project(&y, out);
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let d = x.len();
+        let y = self.dual_point(x, theta);
+        // dy = ∂∇φ(x)v − η∇₁²f v
+        let mut dphi = vec![0.0; d];
+        self.geom.mirror_map_jvp(x, v, &mut dphi);
+        let mut hv = vec![0.0; d];
+        self.obj.hvp_xx(x, theta, v, &mut hv);
+        let dy: Vec<f64> = (0..d).map(|i| dphi[i] - self.eta * hv[i]).collect();
+        self.geom.bregman_project_jvp(&y, &dy, out);
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let d = x.len();
+        let y = self.dual_point(x, theta);
+        let mut w = vec![0.0; d];
+        self.geom.bregman_project_vjp(&y, u, &mut w);
+        // (∂∇φ)ᵀw − η Hᵀw; ∂∇φ diagonal, H symmetric.
+        let mut dphi_w = vec![0.0; d];
+        self.geom.mirror_map_jvp(x, &w, &mut dphi_w);
+        let mut hw = vec![0.0; d];
+        self.obj.hvp_xx(x, theta, &w, &mut hw);
+        for i in 0..d {
+            out[i] = dphi_w[i] - self.eta * hw[i];
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let d = x.len();
+        let y = self.dual_point(x, theta);
+        let mut cross = vec![0.0; d];
+        self.obj.jvp_x_theta(x, theta, v, &mut cross);
+        let dy: Vec<f64> = cross.iter().map(|c| -self.eta * c).collect();
+        self.geom.bregman_project_jvp(&y, &dy, out);
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let d = x.len();
+        let y = self.dual_point(x, theta);
+        let mut w = vec![0.0; d];
+        self.geom.bregman_project_vjp(&y, u, &mut w);
+        let mut vf = vec![0.0; self.obj.dim_theta()];
+        self.obj.vjp_x_theta(x, theta, &w, &mut vf);
+        for i in 0..out.len() {
+            out[i] = -self.eta * vf[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::spec::FixedPointMap;
+    use crate::linalg::Mat;
+    use crate::mappings::objective::QuadObjective;
+    use crate::util::rng::Rng;
+
+    fn simplex_point(rng: &mut Rng, m: usize, k: usize) -> Vec<f64> {
+        let mut x = vec![0.0; m * k];
+        for r in 0..m {
+            let raw = rng.uniform_vec(k);
+            let s: f64 = raw.iter().sum();
+            for j in 0..k {
+                x[r * k + j] = raw[j] / s;
+            }
+        }
+        x
+    }
+
+    fn random_quad(d: usize, n: usize, seed: u64) -> QuadObjective {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0);
+        let r = Mat::randn(d, n, &mut rng);
+        let c = rng.normal_vec(d);
+        QuadObjective { q, r, c }
+    }
+
+    #[test]
+    fn output_stays_on_simplices() {
+        let (m, k) = (3, 4);
+        let t = KlMirrorDescentFixedPoint::new(
+            random_quad(m * k, 2, 1),
+            KlSimplexRows { m, k },
+            0.5,
+        );
+        let mut rng = Rng::new(2);
+        let x = simplex_point(&mut rng, m, k);
+        let theta = [0.1, -0.3];
+        let out = t.eval_vec(&x, &theta);
+        for r in 0..m {
+            let s: f64 = out[r * k..(r + 1) * k].iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(out[r * k..(r + 1) * k].iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn jacobians_match_fd() {
+        let (m, k) = (2, 3);
+        let t = KlMirrorDescentFixedPoint::new(
+            random_quad(m * k, 2, 3),
+            KlSimplexRows { m, k },
+            0.3,
+        );
+        let mut rng = Rng::new(4);
+        let x = simplex_point(&mut rng, m, k);
+        let theta = [0.2, 0.5];
+        let v = rng.normal_vec(m * k);
+        let mut jv = vec![0.0; m * k];
+        t.jvp_x(&x, &theta, &v, &mut jv);
+        let fd = crate::ad::num_grad::jvp_fd(|xx| t.eval_vec(xx, &theta), &x, &v, 1e-7);
+        for i in 0..m * k {
+            assert!((jv[i] - fd[i]).abs() < 1e-5, "{} vs {}", jv[i], fd[i]);
+        }
+        let vt = rng.normal_vec(2);
+        let mut jt = vec![0.0; m * k];
+        t.jvp_theta(&x, &theta, &vt, &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|tt| t.eval_vec(&x, tt), &theta, &vt, 1e-7);
+        for i in 0..m * k {
+            assert!((jt[i] - fd[i]).abs() < 1e-5);
+        }
+        // adjoints
+        let u = rng.normal_vec(m * k);
+        let mut vx = vec![0.0; m * k];
+        t.vjp_x(&x, &theta, &u, &mut vx);
+        let lhs = crate::linalg::vecops::dot(&u, &jv);
+        let rhs = crate::linalg::vecops::dot(&vx, &v);
+        assert!((lhs - rhs).abs() < 1e-8);
+        let mut vth = vec![0.0; 2];
+        t.vjp_theta(&x, &theta, &u, &mut vth);
+        let lhs = crate::linalg::vecops::dot(&u, &jt);
+        let rhs = crate::linalg::vecops::dot(&vth, &vt);
+        assert!((lhs - rhs).abs() < 1e-8);
+    }
+
+    #[test]
+    fn fixed_point_of_entropy_regularized_problem() {
+        // minimize ⟨x, c⟩ over △ with MD: the fixed point of T is the
+        // constrained optimum (a vertex-leaning distribution).
+        let (m, k) = (1, 4);
+        let mut rng = Rng::new(5);
+        let q = Mat::zeros(k, k).plus_diag(1e-6);
+        let r = Mat::from_fn(k, 1, |i, _| (i as f64) - 1.5); // linear costs via θ
+        let c = vec![0.0; k];
+        let obj = QuadObjective { q, r, c };
+        let t = KlMirrorDescentFixedPoint::new(obj, KlSimplexRows { m, k }, 1.0);
+        let theta = [1.0];
+        let mut x = simplex_point(&mut rng, m, k);
+        for _ in 0..5000 {
+            x = t.eval_vec(&x, &theta);
+        }
+        // cost coefficients increase with i ⇒ optimum concentrates on i = 0.
+        assert!(x[0] > 0.99, "x = {x:?}");
+    }
+}

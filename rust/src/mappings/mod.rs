@@ -1,0 +1,29 @@
+//! Optimality-mapping catalog — paper Table 1.
+//!
+//! | Mapping                  | Type        | Oracles                          |
+//! |--------------------------|-------------|----------------------------------|
+//! | Stationary (Eq. 4/5)     | `RootMap`   | ∇₁f (+ HVP, cross-products)      |
+//! | KKT (Eq. 6)              | `RootMap`   | ∇₁f, H, G and their products     |
+//! | Proximal gradient (7)    | `FixedPointMap` | ∇₁f, prox_{ηg}               |
+//! | Projected gradient (9)   | `FixedPointMap` | ∇₁f, proj_C                  |
+//! | Mirror descent (13)      | `FixedPointMap` | ∇₁f, proj^φ_C, ∇φ            |
+//! | Newton (14)              | `FixedPointMap` | [∂₁G]⁻¹, G                   |
+//! | Block proximal grad (15) | `FixedPointMap` | [∇₁f]ⱼ, [prox]ⱼ              |
+//! | Conic programming (18)   | `RootMap`   | proj onto R^p × K* × R₊          |
+//!
+//! Every mapping decouples *what characterizes optimality* from *how the
+//! problem is solved* — the paper's modularity claim; Fig. 4(c) pairs a BCD
+//! solver with MD/PG fixed points through exactly these types.
+
+pub mod conic;
+pub mod kkt;
+pub mod mirror;
+pub mod newton;
+pub mod objective;
+pub mod prox_grad;
+pub mod stationary;
+
+pub use mirror::{KlMirrorDescentFixedPoint, MirrorGeometry};
+pub use objective::Objective;
+pub use prox_grad::{BlockProxGradFixedPoint, ProjGradFixedPoint, ProxGradFixedPoint};
+pub use stationary::StationaryMapping;

@@ -1,0 +1,181 @@
+//! Newton fixed point (paper Appendix A, Eq. 14):
+//! T(x, θ) = x − η[∂₁G(x, θ)]⁻¹G(x, θ) for a root x of G(·, θ).
+//!
+//! At the root, ∂₁T = (1−η)I so A = ηI, and B = −η[∂₁G]⁻¹∂₂G — the implicit
+//! system reduces to the one obtained by differentiating G directly (the
+//! paper's remark), which the tests verify.
+
+use crate::diff::spec::{FixedPointMap, RootMap};
+use crate::linalg::op::FnOp;
+use crate::linalg::solve::{self, LinearSolveConfig};
+
+/// Newton fixed point built on any root mapping G.
+pub struct NewtonFixedPoint<G: RootMap> {
+    pub g: G,
+    pub eta: f64,
+    pub cfg: LinearSolveConfig,
+}
+
+impl<G: RootMap> NewtonFixedPoint<G> {
+    pub fn new(g: G, eta: f64) -> Self {
+        NewtonFixedPoint { g, eta, cfg: LinearSolveConfig::default() }
+    }
+
+    /// Solve ∂₁G(x, θ) w = rhs.
+    fn solve_jac(&self, x: &[f64], theta: &[f64], rhs: &[f64]) -> Vec<f64> {
+        let d = self.g.dim_x();
+        let op = FnOp {
+            d,
+            fwd: |v: &[f64], y: &mut [f64]| self.g.jvp_x(x, theta, v, y),
+            tr: |u: &[f64], y: &mut [f64]| self.g.vjp_x(x, theta, u, y),
+            symmetric: self.g.a_symmetric(),
+        };
+        let mut w = vec![0.0; d];
+        solve::solve(&op, rhs, &mut w, &self.cfg);
+        w
+    }
+
+    /// Solve ∂₁G(x, θ)ᵀ w = rhs.
+    fn solve_jac_t(&self, x: &[f64], theta: &[f64], rhs: &[f64]) -> Vec<f64> {
+        let d = self.g.dim_x();
+        let op = FnOp {
+            d,
+            fwd: |v: &[f64], y: &mut [f64]| self.g.jvp_x(x, theta, v, y),
+            tr: |u: &[f64], y: &mut [f64]| self.g.vjp_x(x, theta, u, y),
+            symmetric: self.g.a_symmetric(),
+        };
+        let mut w = vec![0.0; d];
+        solve::solve_t(&op, rhs, &mut w, &self.cfg);
+        w
+    }
+}
+
+impl<G: RootMap> FixedPointMap for NewtonFixedPoint<G> {
+    fn dim_x(&self) -> usize {
+        self.g.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.g.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let gx = self.g.eval_vec(x, theta);
+        let step = self.solve_jac(x, theta, &gx);
+        for i in 0..x.len() {
+            out[i] = x[i] - self.eta * step[i];
+        }
+    }
+    // Derivative oracles are evaluated AT THE ROOT (G = 0), where the paper's
+    // simplification holds: ∂₁T = (1−η)I, ∂₂T = −η[∂₁G]⁻¹∂₂G.
+    fn jvp_x(&self, _x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        for i in 0..v.len() {
+            out[i] = (1.0 - self.eta) * v[i];
+        }
+    }
+    fn vjp_x(&self, _x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
+        for i in 0..u.len() {
+            out[i] = (1.0 - self.eta) * u[i];
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut b = vec![0.0; self.g.dim_x()];
+        self.g.jvp_theta(x, theta, v, &mut b);
+        let w = self.solve_jac(x, theta, &b);
+        for i in 0..out.len() {
+            out[i] = -self.eta * w[i];
+        }
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        // (−η[∂₁G]⁻¹∂₂G)ᵀu = −η ∂₂Gᵀ [∂₁G]⁻ᵀ u
+        let w = self.solve_jac_t(x, theta, u);
+        self.g.vjp_theta(x, theta, &w, out);
+        for o in out.iter_mut() {
+            *o *= -self.eta;
+        }
+    }
+    fn a_symmetric(&self) -> bool {
+        true // A = ηI
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::jacobian_via_root;
+    use crate::diff::spec::{ClosureRoot, FixedPointResidual};
+    use crate::linalg::Mat;
+    use crate::mappings::objective::QuadObjective;
+    use crate::mappings::stationary::StationaryMapping;
+    use crate::util::rng::Rng;
+
+    fn quad_mapping(seed: u64) -> (StationaryMapping<QuadObjective>, Vec<f64>, Vec<f64>, Mat) {
+        let mut rng = Rng::new(seed);
+        let d = 5;
+        let n = 3;
+        let q = Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0);
+        let r = Mat::randn(d, n, &mut rng);
+        let c = rng.normal_vec(d);
+        let theta = rng.normal_vec(n);
+        let ch = crate::linalg::chol::Cholesky::factor(&q).unwrap();
+        let rt = r.matvec(&theta);
+        let rhs: Vec<f64> = rt.iter().zip(&c).map(|(a, b)| -(a + b)).collect();
+        let x_star = ch.solve(&rhs);
+        let jac_true = ch.solve_mat(&r.map(|v| -v));
+        (StationaryMapping::new(QuadObjective { q, r, c }), theta, x_star, jac_true)
+    }
+
+    #[test]
+    fn newton_converges_in_one_step_on_quadratic() {
+        let (m, theta, x_star, _) = quad_mapping(1);
+        let newton = NewtonFixedPoint::new(m, 1.0);
+        let mut rng = Rng::new(2);
+        let x0 = rng.normal_vec(5);
+        let x1 = newton.eval_vec(&x0, &theta);
+        for i in 0..5 {
+            assert!((x1[i] - x_star[i]).abs() < 1e-6, "{} vs {}", x1[i], x_star[i]);
+        }
+    }
+
+    #[test]
+    fn newton_fixed_point_recovers_direct_jacobian() {
+        for eta in [0.5, 1.0] {
+            let (m, theta, x_star, jac_true) = quad_mapping(3);
+            let newton = NewtonFixedPoint::new(m, eta);
+            let res = FixedPointResidual(newton);
+            let jac = jacobian_via_root(&res, &x_star, &theta);
+            for i in 0..5 {
+                for j in 0..3 {
+                    assert!(
+                        (jac.at(i, j) - jac_true.at(i, j)).abs() < 1e-6,
+                        "eta={eta} ({i},{j}): {} vs {}",
+                        jac.at(i, j),
+                        jac_true.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn newton_for_scalar_root_finding() {
+        // G(x, θ) = x² − θ; Newton root-finding map; ∂x* = 1/(2√θ).
+        let g = ClosureRoot {
+            d: 1,
+            n: 1,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = x[0] * x[0] - th[0];
+            },
+            symmetric: false,
+        };
+        let newton = NewtonFixedPoint::new(g, 1.0);
+        let theta = [9.0];
+        // iterate the Newton map to find the root
+        let mut x = vec![1.0];
+        for _ in 0..50 {
+            x = newton.eval_vec(&x, &theta);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-10);
+        let res = FixedPointResidual(newton);
+        let jac = jacobian_via_root(&res, &x, &theta);
+        assert!((jac.at(0, 0) - 1.0 / 6.0).abs() < 1e-5);
+    }
+}

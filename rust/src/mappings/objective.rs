@@ -1,0 +1,178 @@
+//! The objective oracle f(x, θ): what a stationary/fixed-point mapping needs
+//! from the inner problem — ∇₁f plus three Jacobian products of ∇₁f.
+//! Models implement these analytically; `FnObjective` derives everything
+//! from a value closure by finite differences (the "just write f" path); and
+//! tests cross-check the two.
+
+use crate::ad::num_grad;
+
+/// Twice-differentiable objective f : R^d × R^n → R.
+pub trait Objective {
+    fn dim_x(&self) -> usize;
+    fn dim_theta(&self) -> usize;
+
+    /// f(x, θ).
+    fn value(&self, x: &[f64], theta: &[f64]) -> f64;
+
+    /// out = ∇₁f(x, θ).
+    fn grad_x(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let g = num_grad::grad_fd(|xx| self.value(xx, theta), x, 1e-6);
+        out.copy_from_slice(&g);
+    }
+
+    /// out = ∇₁²f(x, θ) · v (Hessian-vector product; symmetric).
+    fn hvp_xx(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|xx| self.grad_x_vec(xx, theta), x, v, 1e-5);
+        out.copy_from_slice(&r);
+    }
+
+    /// out = ∂₂∇₁f(x, θ) · v  (v ∈ R^n, out ∈ R^d).
+    fn jvp_x_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|tt| self.grad_x_vec(x, tt), theta, v, 1e-5);
+        out.copy_from_slice(&r);
+    }
+
+    /// out = (∂₂∇₁f(x, θ))ᵀ · u  (u ∈ R^d, out ∈ R^n).
+    fn vjp_x_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|tt| self.grad_x_vec(x, tt), theta, u, 1e-5);
+        out.copy_from_slice(&r);
+    }
+
+    fn grad_x_vec(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim_x()];
+        self.grad_x(x, theta, &mut out);
+        out
+    }
+}
+
+/// Objective from a plain value closure; all derivatives via FD defaults.
+pub struct FnObjective<F: Fn(&[f64], &[f64]) -> f64> {
+    pub d: usize,
+    pub n: usize,
+    pub f: F,
+}
+
+impl<F: Fn(&[f64], &[f64]) -> f64> Objective for FnObjective<F> {
+    fn dim_x(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        self.n
+    }
+    fn value(&self, x: &[f64], theta: &[f64]) -> f64 {
+        (self.f)(x, theta)
+    }
+}
+
+/// A quadratic test objective f = ½xᵀQx + xᵀRθ + cᵀx with analytic oracles —
+/// used across the mapping tests as a ground-truth instance.
+pub struct QuadObjective {
+    pub q: crate::linalg::Mat,   // d×d symmetric
+    pub r: crate::linalg::Mat,   // d×n
+    pub c: Vec<f64>,             // d
+}
+
+impl Objective for QuadObjective {
+    fn dim_x(&self) -> usize {
+        self.q.rows
+    }
+    fn dim_theta(&self) -> usize {
+        self.r.cols
+    }
+    fn value(&self, x: &[f64], theta: &[f64]) -> f64 {
+        let qx = self.q.matvec(x);
+        let rt = self.r.matvec(theta);
+        0.5 * crate::linalg::vecops::dot(x, &qx)
+            + crate::linalg::vecops::dot(x, &rt)
+            + crate::linalg::vecops::dot(x, &self.c)
+    }
+    fn grad_x(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.q.matvec_into(x, out);
+        let rt = self.r.matvec(theta);
+        for i in 0..out.len() {
+            out[i] += rt[i] + self.c[i];
+        }
+    }
+    fn hvp_xx(&self, _x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.q.matvec_into(v, out);
+    }
+    fn jvp_x_theta(&self, _x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.r.matvec_into(v, out);
+    }
+    fn vjp_x_theta(&self, _x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.r.matvec_t_into(u, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    pub fn random_quad(d: usize, n: usize, seed: u64) -> QuadObjective {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0);
+        let r = Mat::randn(d, n, &mut rng);
+        let c = rng.normal_vec(d);
+        QuadObjective { q, r, c }
+    }
+
+    #[test]
+    fn analytic_oracles_match_fd_defaults() {
+        let quad = random_quad(5, 3, 1);
+        let fnobj = FnObjective { d: 5, n: 3, f: |x: &[f64], t: &[f64]| quad.value(x, t) };
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(5);
+        let th = rng.normal_vec(3);
+        // grad
+        let ga = quad.grad_x_vec(&x, &th);
+        let gf = fnobj.grad_x_vec(&x, &th);
+        for i in 0..5 {
+            assert!((ga[i] - gf[i]).abs() < 1e-4, "{} vs {}", ga[i], gf[i]);
+        }
+        // hvp
+        let v = rng.normal_vec(5);
+        let mut ha = vec![0.0; 5];
+        quad.hvp_xx(&x, &th, &v, &mut ha);
+        let mut hf = vec![0.0; 5];
+        fnobj.hvp_xx(&x, &th, &v, &mut hf);
+        for i in 0..5 {
+            assert!((ha[i] - hf[i]).abs() < 1e-2, "{} vs {}", ha[i], hf[i]);
+        }
+        // cross products
+        let vt = rng.normal_vec(3);
+        let mut ca = vec![0.0; 5];
+        quad.jvp_x_theta(&x, &th, &vt, &mut ca);
+        let mut cf = vec![0.0; 5];
+        fnobj.jvp_x_theta(&x, &th, &vt, &mut cf);
+        for i in 0..5 {
+            assert!((ca[i] - cf[i]).abs() < 1e-2);
+        }
+        let u = rng.normal_vec(5);
+        let mut va = vec![0.0; 3];
+        quad.vjp_x_theta(&x, &th, &u, &mut va);
+        let mut vf = vec![0.0; 3];
+        fnobj.vjp_x_theta(&x, &th, &u, &mut vf);
+        for i in 0..3 {
+            assert!((va[i] - vf[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn cross_product_adjoint_identity() {
+        let quad = random_quad(6, 4, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(6);
+        let th = rng.normal_vec(4);
+        let v = rng.normal_vec(4);
+        let u = rng.normal_vec(6);
+        let mut jv = vec![0.0; 6];
+        quad.jvp_x_theta(&x, &th, &v, &mut jv);
+        let mut vj = vec![0.0; 4];
+        quad.vjp_x_theta(&x, &th, &u, &mut vj);
+        let lhs = crate::linalg::vecops::dot(&u, &jv);
+        let rhs = crate::linalg::vecops::dot(&vj, &v);
+        assert!((lhs - rhs).abs() < 1e-10);
+    }
+}

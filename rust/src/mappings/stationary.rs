@@ -1,0 +1,170 @@
+//! Stationary-point condition (paper Eq. 4): F(x, θ) = ∇₁f(x, θ).
+//! A = −∂₁F = −∇₁²f is symmetric (CG applies); B = ∂₂∇₁f.
+//! The gradient-descent fixed point (Eq. 5) yields the same linear system —
+//! the η factor cancels — which the tests verify.
+
+use super::objective::Objective;
+use crate::diff::spec::{FixedPointMap, RootMap};
+
+/// F(x, θ) = ∇₁f(x, θ).
+pub struct StationaryMapping<O: Objective> {
+    pub obj: O,
+}
+
+impl<O: Objective> StationaryMapping<O> {
+    pub fn new(obj: O) -> Self {
+        StationaryMapping { obj }
+    }
+}
+
+impl<O: Objective> RootMap for StationaryMapping<O> {
+    fn dim_x(&self) -> usize {
+        self.obj.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.obj.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.obj.grad_x(x, theta, out);
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.obj.hvp_xx(x, theta, v, out);
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.obj.hvp_xx(x, theta, u, out); // Hessian symmetric
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.obj.jvp_x_theta(x, theta, v, out);
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.obj.vjp_x_theta(x, theta, u, out);
+    }
+    fn a_symmetric(&self) -> bool {
+        true
+    }
+}
+
+/// Gradient-descent fixed point (Eq. 5): T(x, θ) = x − η∇₁f(x, θ).
+pub struct GradientDescentFixedPoint<O: Objective> {
+    pub obj: O,
+    pub eta: f64,
+}
+
+impl<O: Objective> FixedPointMap for GradientDescentFixedPoint<O> {
+    fn dim_x(&self) -> usize {
+        self.obj.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.obj.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.obj.grad_x(x, theta, out);
+        for i in 0..x.len() {
+            out[i] = x[i] - self.eta * out[i];
+        }
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.obj.hvp_xx(x, theta, v, out);
+        for i in 0..v.len() {
+            out[i] = v[i] - self.eta * out[i];
+        }
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_x(x, theta, u, out);
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.obj.jvp_x_theta(x, theta, v, out);
+        for o in out.iter_mut() {
+            *o *= -self.eta;
+        }
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.obj.vjp_x_theta(x, theta, u, out);
+        for o in out.iter_mut() {
+            *o *= -self.eta;
+        }
+    }
+    fn a_symmetric(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::jacobian_via_root;
+    use crate::diff::spec::FixedPointResidual;
+    use crate::linalg::chol::Cholesky;
+    use crate::linalg::Mat;
+    use crate::mappings::objective::QuadObjective;
+    use crate::util::rng::Rng;
+
+    fn random_quad(d: usize, n: usize, seed: u64) -> QuadObjective {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0);
+        let r = Mat::randn(d, n, &mut rng);
+        let c = rng.normal_vec(d);
+        QuadObjective { q, r, c }
+    }
+
+    /// For the quadratic, x*(θ) = −Q⁻¹(Rθ + c) and ∂x* = −Q⁻¹R exactly.
+    fn solve_quad(q: &QuadObjective, theta: &[f64]) -> (Vec<f64>, Mat) {
+        let ch = Cholesky::factor(&q.q).unwrap();
+        let rt = q.r.matvec(theta);
+        let rhs: Vec<f64> = rt.iter().zip(&q.c).map(|(a, b)| -(a + b)).collect();
+        let x = ch.solve(&rhs);
+        let jac_true = {
+            let minus_r = q.r.map(|v| -v);
+            ch.solve_mat(&minus_r)
+        };
+        (x, jac_true)
+    }
+
+    #[test]
+    fn stationary_jacobian_matches_closed_form() {
+        let quad = random_quad(6, 3, 1);
+        let theta = vec![0.5, -1.0, 2.0];
+        let (x_star, jac_true) = solve_quad(&quad, &theta);
+        let m = StationaryMapping::new(quad);
+        let jac = jacobian_via_root(&m, &x_star, &theta);
+        for i in 0..6 {
+            for j in 0..3 {
+                assert!(
+                    (jac.at(i, j) - jac_true.at(i, j)).abs() < 1e-7,
+                    "({i},{j}): {} vs {}",
+                    jac.at(i, j),
+                    jac_true.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gd_fixed_point_gives_same_jacobian_for_any_eta() {
+        let theta = vec![1.0, 0.3, -0.7];
+        let (x_star, jac_true) = solve_quad(&random_quad(5, 3, 2), &theta);
+        for eta in [0.05, 0.2, 0.9] {
+            let fp = GradientDescentFixedPoint { obj: random_quad(5, 3, 2), eta };
+            let res = FixedPointResidual(fp);
+            let jac = jacobian_via_root(&res, &x_star, &theta);
+            for i in 0..5 {
+                for j in 0..3 {
+                    assert!(
+                        (jac.at(i, j) - jac_true.at(i, j)).abs() < 1e-6,
+                        "eta={eta} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn root_is_actually_stationary() {
+        let quad = random_quad(4, 2, 3);
+        let theta = vec![0.1, 0.2];
+        let (x_star, _) = solve_quad(&quad, &theta);
+        let m = StationaryMapping::new(quad);
+        let f = m.eval_vec(&x_star, &theta);
+        assert!(crate::linalg::vecops::norm2(&f) < 1e-10);
+    }
+}

@@ -1,0 +1,310 @@
+//! Molecular dynamics substrate (paper §4.4, JAX-MD [76] stand-in):
+//! 2-D soft-sphere packing in a periodic box, FIRE relaxation, and the
+//! normalized-force optimality mapping F(x, θ) = −∇E(Lx)/… whose root is the
+//! energy-minimizing configuration; θ is the small-particle diameter.
+
+use crate::diff::spec::RootMap;
+
+/// Soft-sphere system: k particles in a periodic square box of side `l`,
+/// positions stored normalized in [0,1)² (x ∈ R^{2k}), half the particles
+/// with diameter 1.0 and half with diameter θ (paper: θ = 0.6).
+pub struct SoftSphereSystem {
+    pub n_particles: usize,
+    pub box_side: f64,
+    /// Which particles carry the θ diameter (the "blue" particles).
+    pub small: Vec<bool>,
+    pub epsilon: f64,
+}
+
+impl SoftSphereSystem {
+    pub fn new(n_particles: usize, box_side: f64) -> SoftSphereSystem {
+        let small = (0..n_particles).map(|i| i % 2 == 1).collect();
+        SoftSphereSystem { n_particles, box_side, small, epsilon: 1.0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        2 * self.n_particles
+    }
+
+    fn diameter(&self, i: usize, theta: f64) -> f64 {
+        if self.small[i] {
+            theta
+        } else {
+            1.0
+        }
+    }
+
+    /// Minimum-image displacement between normalized positions (physical units).
+    #[inline]
+    fn min_image(&self, a: f64, b: f64) -> f64 {
+        let mut d = (a - b) * self.box_side;
+        let l = self.box_side;
+        while d > 0.5 * l {
+            d -= l;
+        }
+        while d < -0.5 * l {
+            d += l;
+        }
+        d
+    }
+
+    /// Total energy: Σ_{i<j} (ε/2)(1 − r/σ_ij)² for r < σ_ij.
+    pub fn energy(&self, x: &[f64], theta: f64) -> f64 {
+        let n = self.n_particles;
+        let mut e = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                let dx = self.min_image(x[2 * i], x[2 * j]);
+                let dy = self.min_image(x[2 * i + 1], x[2 * j + 1]);
+                let r = (dx * dx + dy * dy).sqrt();
+                let sigma = 0.5 * (self.diameter(i, theta) + self.diameter(j, theta));
+                if r < sigma {
+                    let t = 1.0 - r / sigma;
+                    e += 0.5 * self.epsilon * t * t;
+                }
+            }
+        }
+        e
+    }
+
+    /// Forces in NORMALIZED coordinates: F = −∂E/∂x_norm = −L ∂E/∂x_phys.
+    pub fn forces(&self, x: &[f64], theta: f64, out: &mut [f64]) {
+        let n = self.n_particles;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..n {
+            for j in i + 1..n {
+                let dx = self.min_image(x[2 * i], x[2 * j]);
+                let dy = self.min_image(x[2 * i + 1], x[2 * j + 1]);
+                let r2 = dx * dx + dy * dy;
+                let r = r2.sqrt();
+                let sigma = 0.5 * (self.diameter(i, theta) + self.diameter(j, theta));
+                if r < sigma && r > 1e-12 {
+                    // dE/dr = −(ε/σ)(1 − r/σ); physical force on i along +Δ.
+                    let mag = self.epsilon / sigma * (1.0 - r / sigma);
+                    let fx = mag * dx / r * self.box_side;
+                    let fy = mag * dy / r * self.box_side;
+                    out[2 * i] += fx;
+                    out[2 * i + 1] += fy;
+                    out[2 * j] -= fx;
+                    out[2 * j + 1] -= fy;
+                }
+            }
+        }
+    }
+
+    /// Hessian-vector product of the energy in normalized coordinates:
+    /// out = ∂²E/∂x² · v (= −∂F/∂x · v).
+    pub fn hessian_vp(&self, x: &[f64], theta: f64, v: &[f64], out: &mut [f64]) {
+        let n = self.n_particles;
+        let l = self.box_side;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..n {
+            for j in i + 1..n {
+                let dx = self.min_image(x[2 * i], x[2 * j]);
+                let dy = self.min_image(x[2 * i + 1], x[2 * j + 1]);
+                let r2 = dx * dx + dy * dy;
+                let r = r2.sqrt();
+                let sigma = 0.5 * (self.diameter(i, theta) + self.diameter(j, theta));
+                if r < sigma && r > 1e-12 {
+                    // Pair Hessian in physical coords:
+                    // H = (ε/σ²) uuᵀ − (ε/σ)(1−r/σ)(I − uuᵀ)/r; u = Δ/r.
+                    let ux = dx / r;
+                    let uy = dy / r;
+                    let a = self.epsilon / (sigma * sigma); // uuᵀ coefficient
+                    let b = -self.epsilon / sigma * (1.0 - r / sigma) / r; // (I−uuᵀ)
+                    // relative tangent in physical coords
+                    let dvx = (v[2 * i] - v[2 * j]) * l;
+                    let dvy = (v[2 * i + 1] - v[2 * j + 1]) * l;
+                    let udot = ux * dvx + uy * dvy;
+                    let hx = a * ux * udot + b * (dvx - ux * udot);
+                    let hy = a * uy * udot + b * (dvy - uy * udot);
+                    // chain: normalized-coordinate second derivative gains L²
+                    // (one L already in dvx, one here)
+                    out[2 * i] += hx * l;
+                    out[2 * i + 1] += hy * l;
+                    out[2 * j] -= hx * l;
+                    out[2 * j + 1] -= hy * l;
+                }
+            }
+        }
+    }
+
+    /// Mixed derivative ∂F/∂θ (normalized coords): differentiate the force
+    /// magnitude w.r.t. σ then σ w.r.t. θ (0.5 per small particle in pair).
+    pub fn force_theta_jvp(&self, x: &[f64], theta: f64, out: &mut [f64]) {
+        let n = self.n_particles;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..n {
+            for j in i + 1..n {
+                let dsigma = 0.5 * ((self.small[i] as u8 + self.small[j] as u8) as f64);
+                if dsigma == 0.0 {
+                    continue;
+                }
+                let dx = self.min_image(x[2 * i], x[2 * j]);
+                let dy = self.min_image(x[2 * i + 1], x[2 * j + 1]);
+                let r = (dx * dx + dy * dy).sqrt();
+                let sigma = 0.5 * (self.diameter(i, theta) + self.diameter(j, theta));
+                if r < sigma && r > 1e-12 {
+                    // mag(σ) = (ε/σ)(1 − r/σ) = ε/σ − εr/σ²
+                    // dmag/dσ = −ε/σ² + 2εr/σ³
+                    let dmag =
+                        (-self.epsilon / (sigma * sigma) + 2.0 * self.epsilon * r / (sigma * sigma * sigma))
+                            * dsigma;
+                    let fx = dmag * dx / r * self.box_side;
+                    let fy = dmag * dy / r * self.box_side;
+                    out[2 * i] += fx;
+                    out[2 * i + 1] += fy;
+                    out[2 * j] -= fx;
+                    out[2 * j + 1] -= fy;
+                }
+            }
+        }
+    }
+
+    /// Relax the packing with FIRE from `x0`. Returns final positions.
+    pub fn relax(&self, x0: &[f64], theta: f64, cfg: &crate::solvers::fire::FireConfig) -> Vec<f64> {
+        let force = |x: &[f64], out: &mut [f64]| self.forces(x, theta, out);
+        let (x, _trace) = crate::solvers::fire::fire_minimize(force, x0, cfg);
+        x
+    }
+}
+
+/// Optimality mapping for the MD sensitivity analysis: F(x, θ) = forces
+/// (root = energy minimum); θ = [diameter].
+pub struct MdForceRoot<'a>(pub &'a SoftSphereSystem);
+
+impl RootMap for MdForceRoot<'_> {
+    fn dim_x(&self) -> usize {
+        self.0.dim()
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.0.forces(x, theta[0], out);
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        // ∂F/∂x = −H
+        self.0.hessian_vp(x, theta[0], v, out);
+        for o in out.iter_mut() {
+            *o = -*o;
+        }
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_x(x, theta, u, out); // Hessian symmetric
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.0.force_theta_jvp(x, theta[0], out);
+        for o in out.iter_mut() {
+            *o *= v[0];
+        }
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let mut jt = vec![0.0; x.len()];
+        self.0.force_theta_jvp(x, theta[0], &mut jt);
+        out[0] = crate::linalg::vecops::dot(&jt, u);
+    }
+    fn a_symmetric(&self) -> bool {
+        true // A = H symmetric (PSD at a minimum, possibly singular — BiCGSTAB/regularized CG handles it)
+    }
+}
+
+/// Random initial packing in [0,1)².
+pub fn random_packing(n: usize, rng: &mut crate::util::rng::Rng) -> Vec<f64> {
+    rng.uniform_vec(2 * n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn small_system() -> SoftSphereSystem {
+        SoftSphereSystem::new(8, 3.0)
+    }
+
+    #[test]
+    fn forces_match_energy_gradient() {
+        let sys = small_system();
+        let mut rng = Rng::new(1);
+        let x = random_packing(8, &mut rng);
+        let theta = 0.6;
+        let mut f = vec![0.0; 16];
+        sys.forces(&x, theta, &mut f);
+        let g = crate::ad::num_grad::grad_fd(|xx| sys.energy(xx, theta), &x, 1e-7);
+        for i in 0..16 {
+            assert!((f[i] + g[i]).abs() < 1e-5, "i={i}: {} vs {}", f[i], -g[i]);
+        }
+    }
+
+    #[test]
+    fn hessian_vp_matches_fd() {
+        let sys = small_system();
+        let mut rng = Rng::new(2);
+        let x = random_packing(8, &mut rng);
+        let theta = 0.7;
+        let v = rng.normal_vec(16);
+        let mut h = vec![0.0; 16];
+        sys.hessian_vp(&x, theta, &v, &mut h);
+        // H v = −∂F/∂x v
+        let fd = crate::ad::num_grad::jvp_fd(
+            |xx| {
+                let mut f = vec![0.0; 16];
+                sys.forces(xx, theta, &mut f);
+                f
+            },
+            &x,
+            &v,
+            1e-7,
+        );
+        for i in 0..16 {
+            assert!((h[i] + fd[i]).abs() < 1e-4, "i={i}: {} vs {}", h[i], -fd[i]);
+        }
+    }
+
+    #[test]
+    fn force_theta_matches_fd() {
+        let sys = small_system();
+        let mut rng = Rng::new(3);
+        let x = random_packing(8, &mut rng);
+        let theta = 0.65;
+        let mut jt = vec![0.0; 16];
+        sys.force_theta_jvp(&x, theta, &mut jt);
+        let h = 1e-7;
+        let mut fp = vec![0.0; 16];
+        sys.forces(&x, theta + h, &mut fp);
+        let mut fm = vec![0.0; 16];
+        sys.forces(&x, theta - h, &mut fm);
+        for i in 0..16 {
+            let fd = (fp[i] - fm[i]) / (2.0 * h);
+            assert!((jt[i] - fd).abs() < 1e-4, "i={i}: {} vs {fd}", jt[i]);
+        }
+    }
+
+    #[test]
+    fn relaxation_reduces_energy_and_forces() {
+        let sys = SoftSphereSystem::new(12, 2.5);
+        let mut rng = Rng::new(4);
+        let x0 = random_packing(12, &mut rng);
+        let theta = 0.6;
+        let e0 = sys.energy(&x0, theta);
+        let cfg = crate::solvers::fire::FireConfig { max_iter: 20000, force_tol: 1e-9, ..Default::default() };
+        let x = sys.relax(&x0, theta, &cfg);
+        let e1 = sys.energy(&x, theta);
+        assert!(e1 <= e0 + 1e-12);
+        let mut f = vec![0.0; 24];
+        sys.forces(&x, theta, &mut f);
+        assert!(crate::linalg::vecops::norm2(&f) < 1e-6, "residual force {}", crate::linalg::vecops::norm2(&f));
+    }
+
+    #[test]
+    fn energy_translation_invariant() {
+        let sys = small_system();
+        let mut rng = Rng::new(5);
+        let x = random_packing(8, &mut rng);
+        let shifted: Vec<f64> = x.iter().map(|v| (v + 0.37).rem_euclid(1.0)).collect();
+        let e1 = sys.energy(&x, 0.6);
+        let e2 = sys.energy(&shifted, 0.6);
+        assert!((e1 - e2).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dictionary learning (paper §4.3): elastic-net sparse coding as the inner
+//! problem, with the dictionary θ ∈ R^{k×p} differentiated through the
+//! proximal-gradient fixed point — no manual reparameterization as in
+//! Mairal et al. [60].
+//!
+//! inner:  x*(θ) = argmin_x ½‖X − xθ‖²_F + λ₁‖x‖₁ + ½λ₂‖x‖²
+//! outer:  logistic loss of (x*(θ) w + b) against labels (task-driven) or
+//!         the reconstruction loss itself (unsupervised).
+
+use crate::linalg::mat::Mat;
+use crate::mappings::objective::Objective;
+
+/// Reconstruction objective f(x, θ) = ½‖X − xθ‖²_F over codes x (m×k,
+/// flattened); θ = flattened dictionary (k×p).
+pub struct DictReconstruction {
+    pub data: Mat, // m × p
+    pub k: usize,
+}
+
+impl DictReconstruction {
+    fn m(&self) -> usize {
+        self.data.rows
+    }
+    fn p(&self) -> usize {
+        self.data.cols
+    }
+    fn codes_mat(&self, x: &[f64]) -> Mat {
+        Mat { rows: self.m(), cols: self.k, data: x.to_vec() }
+    }
+    fn dict_mat(&self, theta: &[f64]) -> Mat {
+        Mat { rows: self.k, cols: self.p(), data: theta.to_vec() }
+    }
+    /// Residual R = xθ − X (m×p).
+    fn residual(&self, x: &[f64], theta: &[f64]) -> Mat {
+        let xm = self.codes_mat(x);
+        let dm = self.dict_mat(theta);
+        let mut r = xm.matmul(&dm);
+        for i in 0..r.data.len() {
+            r.data[i] -= self.data.data[i];
+        }
+        r
+    }
+}
+
+impl Objective for DictReconstruction {
+    fn dim_x(&self) -> usize {
+        self.m() * self.k
+    }
+    fn dim_theta(&self) -> usize {
+        self.k * self.p()
+    }
+    fn value(&self, x: &[f64], theta: &[f64]) -> f64 {
+        let r = self.residual(x, theta);
+        0.5 * crate::linalg::vecops::dot(&r.data, &r.data)
+    }
+    fn grad_x(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        // ∇_x = R θᵀ (m×k)
+        let r = self.residual(x, theta);
+        let dm = self.dict_mat(theta);
+        let g = r.matmul_t(&dm);
+        out.copy_from_slice(&g.data);
+    }
+    fn hvp_xx(&self, _x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        // H v = (Vθ)θᵀ
+        let vm = Mat { rows: self.m(), cols: self.k, data: v.to_vec() };
+        let dm = self.dict_mat(theta);
+        let vd = vm.matmul(&dm);
+        let h = vd.matmul_t(&dm);
+        out.copy_from_slice(&h.data);
+    }
+    fn jvp_x_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        // d(Rθᵀ) = (x dθ)θᵀ + R dθᵀ
+        let xm = self.codes_mat(x);
+        let dm = self.dict_mat(theta);
+        let dv = Mat { rows: self.k, cols: self.p(), data: v.to_vec() };
+        let r = self.residual(x, theta);
+        let t1 = xm.matmul(&dv).matmul_t(&dm);
+        let t2 = r.matmul_t(&dv);
+        for i in 0..out.len() {
+            out[i] = t1.data[i] + t2.data[i];
+        }
+    }
+    fn vjp_x_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        // ⟨U, (x dθ)θᵀ + R dθᵀ⟩ = ⟨xᵀU θ + Rᵀ U... derive:
+        // term1: ⟨U, (x dθ)θᵀ⟩ = ⟨xᵀ U θ??⟩ — carefully:
+        //   ⟨U, A dθ B⟩ = ⟨Aᵀ U Bᵀ, dθ⟩ with A = x (m×k), B = θᵀ? Here
+        //   (x dθ)θᵀ: A = x, middle dθ (k×p), right θᵀ (p×k)?? dims: x(m×k)
+        //   dθ(k×p) θᵀ(p×k) → m×k ✓. ⟨U, x dθ θᵀ⟩ = tr(Uᵀ x dθ θᵀ)
+        //   = tr(θᵀ Uᵀ x dθ) = ⟨xᵀ U θ, dθ⟩ (k×p).
+        // term2: ⟨U, R dθᵀ⟩ = tr(Uᵀ R dθᵀ) = ⟨Rᵀ U, dθᵀ⟩ = ⟨Uᵀ R, dθ⟩ (k×p).
+        let xm = self.codes_mat(x);
+        let dm = self.dict_mat(theta);
+        let um = Mat { rows: self.m(), cols: self.k, data: u.to_vec() };
+        let r = self.residual(x, theta);
+        let xtu = xm.t_matmul(&um); // k×k
+        let t1 = {
+            // xᵀUθ: (k×k)(k×p) → k×p... wait xᵀU is k×k? x is m×k, U m×k →
+            // xᵀU k×k; times θ (k×p) → k×p ✓
+            xtu.matmul(&dm)
+        };
+        let t2 = um.t_matmul(&r); // Uᵀ R: k×p
+        for i in 0..out.len() {
+            out[i] = t1.data[i] + t2.data[i];
+        }
+    }
+}
+
+/// Logistic head over codes: L(w, b) with codes fixed (outer problem pieces).
+pub fn logistic_loss(codes: &Mat, w: &[f64], b: f64, labels: &[f64], l2: f64) -> f64 {
+    let m = codes.rows;
+    let mut total = 0.0;
+    for i in 0..m {
+        let z = crate::linalg::vecops::dot(codes.row(i), w) + b;
+        // log(1 + e^{-yz}) with y ∈ {−1, 1}
+        let y = if labels[i] > 0.5 { 1.0 } else { -1.0 };
+        let t = -y * z;
+        total += if t > 30.0 { t } else { (1.0 + t.exp()).ln() };
+    }
+    total / m as f64 + 0.5 * l2 * crate::linalg::vecops::dot(w, w)
+}
+
+/// Gradients of the logistic head: (∂L/∂codes (m×k), ∂L/∂w, ∂L/∂b).
+pub fn logistic_grads(
+    codes: &Mat,
+    w: &[f64],
+    b: f64,
+    labels: &[f64],
+    l2: f64,
+) -> (Mat, Vec<f64>, f64) {
+    let m = codes.rows;
+    let k = codes.cols;
+    let mut gc = Mat::zeros(m, k);
+    let mut gw = vec![0.0; k];
+    let mut gb = 0.0;
+    for i in 0..m {
+        let z = crate::linalg::vecops::dot(codes.row(i), w) + b;
+        let y = if labels[i] > 0.5 { 1.0 } else { -1.0 };
+        let s = 1.0 / (1.0 + (y * z).exp()); // σ(−yz)
+        let coef = -y * s / m as f64;
+        for j in 0..k {
+            *gc.at_mut(i, j) = coef * w[j];
+            gw[j] += coef * codes.at(i, j);
+        }
+        gb += coef;
+    }
+    for j in 0..k {
+        gw[j] += l2 * w[j];
+    }
+    (gc, gw, gb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruction_oracles_match_fd() {
+        let mut rng = Rng::new(1);
+        let (m, p, k) = (5, 7, 3);
+        let obj = DictReconstruction { data: Mat::randn(m, p, &mut rng), k };
+        let x = rng.normal_vec(m * k);
+        let theta = rng.normal_vec(k * p);
+        let g = obj.grad_x_vec(&x, &theta);
+        let gfd = crate::ad::num_grad::grad_fd(|xx| obj.value(xx, &theta), &x, 1e-6);
+        for i in 0..g.len() {
+            assert!((g[i] - gfd[i]).abs() < 1e-5);
+        }
+        let v = rng.normal_vec(m * k);
+        let mut h = vec![0.0; m * k];
+        obj.hvp_xx(&x, &theta, &v, &mut h);
+        let hfd = crate::ad::num_grad::jvp_fd(|xx| obj.grad_x_vec(xx, &theta), &x, &v, 1e-6);
+        for i in 0..h.len() {
+            assert!((h[i] - hfd[i]).abs() < 1e-5);
+        }
+        let dv = rng.normal_vec(k * p);
+        let mut c = vec![0.0; m * k];
+        obj.jvp_x_theta(&x, &theta, &dv, &mut c);
+        let cfd = crate::ad::num_grad::jvp_fd(|tt| obj.grad_x_vec(&x, tt), &theta, &dv, 1e-6);
+        for i in 0..c.len() {
+            assert!((c[i] - cfd[i]).abs() < 1e-5, "{} vs {}", c[i], cfd[i]);
+        }
+        // vjp adjoint identity
+        let u = rng.normal_vec(m * k);
+        let mut vj = vec![0.0; k * p];
+        obj.vjp_x_theta(&x, &theta, &u, &mut vj);
+        let lhs = crate::linalg::vecops::dot(&u, &c);
+        let rhs = crate::linalg::vecops::dot(&vj, &dv);
+        assert!((lhs - rhs).abs() < 1e-8, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn logistic_grads_match_fd() {
+        let mut rng = Rng::new(2);
+        let (m, k) = (8, 4);
+        let codes = Mat::randn(m, k, &mut rng);
+        let w = rng.normal_vec(k);
+        let b = 0.3;
+        let labels: Vec<f64> = (0..m).map(|i| (i % 2) as f64).collect();
+        let (gc, gw, gb) = logistic_grads(&codes, &w, b, &labels, 0.1);
+        let gwfd = crate::ad::num_grad::grad_fd(
+            |ww| logistic_loss(&codes, ww, b, &labels, 0.1),
+            &w,
+            1e-6,
+        );
+        for j in 0..k {
+            assert!((gw[j] - gwfd[j]).abs() < 1e-6);
+        }
+        let h = 1e-6;
+        let gbfd = (logistic_loss(&codes, &w, b + h, &labels, 0.1)
+            - logistic_loss(&codes, &w, b - h, &labels, 0.1))
+            / (2.0 * h);
+        assert!((gb - gbfd).abs() < 1e-6);
+        // codes gradient via FD on one entry
+        let mut cp = codes.clone();
+        *cp.at_mut(2, 1) += h;
+        let mut cm = codes.clone();
+        *cm.at_mut(2, 1) -= h;
+        let fd = (logistic_loss(&cp, &w, b, &labels, 0.1)
+            - logistic_loss(&cm, &w, b, &labels, 0.1))
+            / (2.0 * h);
+        assert!((gc.at(2, 1) - fd).abs() < 1e-6);
+    }
+}

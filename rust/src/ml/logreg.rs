@@ -1,0 +1,309 @@
+//! Multiclass logistic regression and the dataset-distillation inner
+//! objective (paper §4.2, Eq. 10):
+//!
+//! inner:  x*(θ) = argmin_W  (1/k)Σ_c ℓ(c, θ_c W) + ε‖W‖²
+//! outer:  min_θ  (1/m)Σ_i ℓ(y_i, X_i W*)
+//!
+//! Variables are the flattened p×k weight matrix W; θ is the flattened k×p
+//! distilled-image matrix. All four Jacobian products of ∇₁f are analytic
+//! (softmax algebra), validated against finite differences.
+
+use crate::linalg::mat::Mat;
+use crate::mappings::objective::Objective;
+use crate::proj::simplex::{softmax, softmax_jacobian_product};
+
+/// Softmax cross-entropy loss and its gradient w.r.t. scores.
+/// Returns (loss, p − e_y).
+pub fn ce_loss_grad(scores: &[f64], label: usize) -> (f64, Vec<f64>) {
+    let k = scores.len();
+    let mut p = vec![0.0; k];
+    softmax(scores, &mut p);
+    let loss = -(p[label].max(1e-300)).ln();
+    let mut g = p;
+    g[label] -= 1.0;
+    (loss, g)
+}
+
+/// Mean CE loss of W (p×k flattened) on (X, labels).
+pub fn mean_ce_loss(w: &[f64], x: &Mat, labels: &[usize], k: usize) -> f64 {
+    let p = x.cols;
+    let mut total = 0.0;
+    let mut scores = vec![0.0; k];
+    for i in 0..x.rows {
+        row_scores(w, x.row(i), p, k, &mut scores);
+        let (l, _) = ce_loss_grad(&scores, labels[i]);
+        total += l;
+    }
+    total / x.rows as f64
+}
+
+/// Gradient of mean CE loss w.r.t. W (p×k flattened).
+pub fn mean_ce_grad(w: &[f64], x: &Mat, labels: &[usize], k: usize, out: &mut [f64]) {
+    let p = x.cols;
+    out.iter_mut().for_each(|o| *o = 0.0);
+    let mut scores = vec![0.0; k];
+    let inv_m = 1.0 / x.rows as f64;
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        row_scores(w, xi, p, k, &mut scores);
+        let (_, g) = ce_loss_grad(&scores, labels[i]);
+        // out += x_i ⊗ g
+        for a in 0..p {
+            let xa = xi[a] * inv_m;
+            if xa != 0.0 {
+                let orow = &mut out[a * k..(a + 1) * k];
+                for b in 0..k {
+                    orow[b] += xa * g[b];
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn row_scores(w: &[f64], xi: &[f64], p: usize, k: usize, scores: &mut [f64]) {
+    scores.iter_mut().for_each(|s| *s = 0.0);
+    for a in 0..p {
+        let xa = xi[a];
+        if xa != 0.0 {
+            let wrow = &w[a * k..(a + 1) * k];
+            for b in 0..k {
+                scores[b] += xa * wrow[b];
+            }
+        }
+    }
+}
+
+/// Dataset-distillation inner objective over W (flattened p×k);
+/// θ = flattened k×p distilled images, one per class (labels 0..k).
+pub struct DistillInnerObjective {
+    pub p: usize,
+    pub k: usize,
+    pub l2reg: f64, // ε in the paper (1e-3)
+}
+
+impl DistillInnerObjective {
+    /// scores for distilled example c: s_c = Wᵀ θ_c ∈ R^k.
+    fn scores(&self, w: &[f64], theta: &[f64], c: usize, out: &mut [f64]) {
+        let (p, k) = (self.p, self.k);
+        row_scores(w, &theta[c * p..(c + 1) * p], p, k, out);
+    }
+}
+
+impl Objective for DistillInnerObjective {
+    fn dim_x(&self) -> usize {
+        self.p * self.k
+    }
+    fn dim_theta(&self) -> usize {
+        self.k * self.p
+    }
+    fn value(&self, w: &[f64], theta: &[f64]) -> f64 {
+        let k = self.k;
+        let mut total = 0.0;
+        let mut s = vec![0.0; k];
+        for c in 0..k {
+            self.scores(w, theta, c, &mut s);
+            let (l, _) = ce_loss_grad(&s, c);
+            total += l;
+        }
+        total / k as f64 + self.l2reg * crate::linalg::vecops::dot(w, w)
+    }
+    fn grad_x(&self, w: &[f64], theta: &[f64], out: &mut [f64]) {
+        let (p, k) = (self.p, self.k);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut s = vec![0.0; k];
+        let inv_k = 1.0 / k as f64;
+        for c in 0..k {
+            self.scores(w, theta, c, &mut s);
+            let (_, g) = ce_loss_grad(&s, c);
+            let tc = &theta[c * p..(c + 1) * p];
+            for a in 0..p {
+                let ta = tc[a] * inv_k;
+                if ta != 0.0 {
+                    let orow = &mut out[a * k..(a + 1) * k];
+                    for b in 0..k {
+                        orow[b] += ta * g[b];
+                    }
+                }
+            }
+        }
+        for i in 0..w.len() {
+            out[i] += 2.0 * self.l2reg * w[i];
+        }
+    }
+    fn hvp_xx(&self, w: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let (p, k) = (self.p, self.k);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut s = vec![0.0; k];
+        let mut pc = vec![0.0; k];
+        let mut ds = vec![0.0; k];
+        let mut dp = vec![0.0; k];
+        let inv_k = 1.0 / k as f64;
+        for c in 0..k {
+            self.scores(w, theta, c, &mut s);
+            softmax(&s, &mut pc);
+            let tc = &theta[c * p..(c + 1) * p];
+            row_scores(v, tc, p, k, &mut ds); // ds = Vᵀθ_c
+            softmax_jacobian_product(&pc, &ds, &mut dp);
+            for a in 0..p {
+                let ta = tc[a] * inv_k;
+                if ta != 0.0 {
+                    let orow = &mut out[a * k..(a + 1) * k];
+                    for b in 0..k {
+                        orow[b] += ta * dp[b];
+                    }
+                }
+            }
+        }
+        for i in 0..v.len() {
+            out[i] += 2.0 * self.l2reg * v[i];
+        }
+    }
+    fn jvp_x_theta(&self, w: &[f64], theta: &[f64], dtheta: &[f64], out: &mut [f64]) {
+        let (p, k) = (self.p, self.k);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut s = vec![0.0; k];
+        let mut pc = vec![0.0; k];
+        let mut ds = vec![0.0; k];
+        let mut dp = vec![0.0; k];
+        let inv_k = 1.0 / k as f64;
+        for c in 0..k {
+            self.scores(w, theta, c, &mut s);
+            softmax(&s, &mut pc);
+            let (_, g) = ce_loss_grad(&s, c);
+            let tc = &theta[c * p..(c + 1) * p];
+            let dtc = &dtheta[c * p..(c + 1) * p];
+            // ds = Wᵀ dθ_c
+            row_scores(w, dtc, p, k, &mut ds);
+            softmax_jacobian_product(&pc, &ds, &mut dp);
+            for a in 0..p {
+                let orow = &mut out[a * k..(a + 1) * k];
+                let ta = tc[a] * inv_k;
+                let dta = dtc[a] * inv_k;
+                for b in 0..k {
+                    orow[b] += ta * dp[b] + dta * g[b];
+                }
+            }
+        }
+    }
+    fn vjp_x_theta(&self, w: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let (p, k) = (self.p, self.k);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut s = vec![0.0; k];
+        let mut pc = vec![0.0; k];
+        let mut a_c = vec![0.0; k];
+        let mut ja = vec![0.0; k];
+        let inv_k = 1.0 / k as f64;
+        for c in 0..k {
+            self.scores(w, theta, c, &mut s);
+            softmax(&s, &mut pc);
+            let (_, g) = ce_loss_grad(&s, c);
+            let tc = &theta[c * p..(c + 1) * p];
+            // a_c = Uᵀ θ_c  (k-vector): a_c[b] = Σ_a θ_c[a] U[a,b]
+            row_scores(u, tc, p, k, &mut a_c);
+            softmax_jacobian_product(&pc, &a_c, &mut ja);
+            let orow = &mut out[c * p..(c + 1) * p];
+            for a in 0..p {
+                // term1: (W · Jₛ a_c)[a]; term2: (U g)[a]
+                let wrow = &w[a * k..(a + 1) * k];
+                let urow = &u[a * k..(a + 1) * k];
+                let mut t1 = 0.0;
+                let mut t2 = 0.0;
+                for b in 0..k {
+                    t1 += wrow[b] * ja[b];
+                    t2 += urow[b] * g[b];
+                }
+                orow[a] += inv_k * (t1 + t2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ce_loss_grad_sane() {
+        let (l, g) = ce_loss_grad(&[10.0, 0.0, 0.0], 0);
+        assert!(l < 1e-3);
+        assert!(g[0].abs() < 1e-3);
+        let s: f64 = g.iter().sum();
+        assert!(s.abs() < 1e-12); // gradient sums to zero
+    }
+
+    #[test]
+    fn distill_oracles_match_fd() {
+        let (p, k) = (6, 3);
+        let obj = DistillInnerObjective { p, k, l2reg: 1e-2 };
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(p * k);
+        let theta = rng.normal_vec(k * p);
+        // grad vs FD
+        let g = obj.grad_x_vec(&w, &theta);
+        let gfd = crate::ad::num_grad::grad_fd(|ww| obj.value(ww, &theta), &w, 1e-6);
+        for i in 0..p * k {
+            assert!((g[i] - gfd[i]).abs() < 1e-5, "grad {i}: {} vs {}", g[i], gfd[i]);
+        }
+        // hvp vs FD
+        let v = rng.normal_vec(p * k);
+        let mut h = vec![0.0; p * k];
+        obj.hvp_xx(&w, &theta, &v, &mut h);
+        let hfd = crate::ad::num_grad::jvp_fd(|ww| obj.grad_x_vec(ww, &theta), &w, &v, 1e-6);
+        for i in 0..p * k {
+            assert!((h[i] - hfd[i]).abs() < 1e-4, "hvp {i}: {} vs {}", h[i], hfd[i]);
+        }
+        // cross jvp vs FD
+        let dth = rng.normal_vec(k * p);
+        let mut cj = vec![0.0; p * k];
+        obj.jvp_x_theta(&w, &theta, &dth, &mut cj);
+        let cfd = crate::ad::num_grad::jvp_fd(|tt| obj.grad_x_vec(&w, tt), &theta, &dth, 1e-6);
+        for i in 0..p * k {
+            assert!((cj[i] - cfd[i]).abs() < 1e-4, "cross {i}: {} vs {}", cj[i], cfd[i]);
+        }
+        // cross vjp via adjoint identity
+        let u = rng.normal_vec(p * k);
+        let mut cv = vec![0.0; k * p];
+        obj.vjp_x_theta(&w, &theta, &u, &mut cv);
+        let lhs = crate::linalg::vecops::dot(&u, &cj);
+        let rhs = crate::linalg::vecops::dot(&cv, &dth);
+        assert!((lhs - rhs).abs() < 1e-8, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn training_on_prototypes_classifies_prototypes() {
+        // Inner GD on W with θ = class prototypes should classify them.
+        let (p, k) = (16, 4);
+        let mut rng = Rng::new(2);
+        let theta = rng.normal_vec(k * p);
+        let obj = DistillInnerObjective { p, k, l2reg: 1e-3 };
+        let (w, _) = crate::solvers::gd::gradient_descent(
+            &obj,
+            &vec![0.0; p * k],
+            &theta,
+            &crate::solvers::gd::GdConfig { step: 0.5, max_iter: 3000, tol: 1e-8, backtracking: true },
+        );
+        let mut s = vec![0.0; k];
+        for c in 0..k {
+            row_scores(&w, &theta[c * p..(c + 1) * p], p, k, &mut s);
+            let argmax = (0..k).max_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap()).unwrap();
+            assert_eq!(argmax, c);
+        }
+    }
+
+    #[test]
+    fn mean_ce_grad_matches_fd() {
+        let (m, p, k) = (12, 5, 3);
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(m, p, &mut rng);
+        let labels: Vec<usize> = (0..m).map(|i| i % k).collect();
+        let w = rng.normal_vec(p * k);
+        let mut g = vec![0.0; p * k];
+        mean_ce_grad(&w, &x, &labels, k, &mut g);
+        let gfd = crate::ad::num_grad::grad_fd(|ww| mean_ce_loss(ww, &x, &labels, k), &w, 1e-6);
+        for i in 0..p * k {
+            assert!((g[i] - gfd[i]).abs() < 1e-5);
+        }
+    }
+}

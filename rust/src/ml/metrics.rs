@@ -1,0 +1,103 @@
+//! Evaluation metrics: AUC (Mann–Whitney), accuracy, MSE.
+
+/// ROC AUC of scores against binary labels (1.0 positive), via the
+/// Mann–Whitney U statistic with tie correction.
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // ranks with ties averaged
+    let mut ranks = vec![0.0; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &id in idx.iter().take(j + 1).skip(i) {
+            ranks[id] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l > 0.5).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = (0..labels.len()).filter(|&i| labels[i] > 0.5).map(|i| ranks[i]).sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos * n_neg) as f64
+}
+
+/// Classification accuracy of argmax scores (m×k row-major) vs labels.
+pub fn accuracy(scores: &[f64], k: usize, labels: &[usize]) -> f64 {
+    let m = labels.len();
+    let mut correct = 0;
+    for i in 0..m {
+        let row = &scores[i * k..(i + 1) * k];
+        let argmax = (0..k).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+        if argmax == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / m as f64
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    pred.iter().zip(target).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_is_one() {
+        let s = [0.1, 0.2, 0.8, 0.9];
+        let l = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&s, &l), 1.0);
+    }
+
+    #[test]
+    fn inverted_is_zero() {
+        let s = [0.9, 0.8, 0.1, 0.2];
+        let l = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&s, &l), 0.0);
+    }
+
+    #[test]
+    fn random_is_half() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n = 4000;
+        let s = rng.uniform_vec(n);
+        let l: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+        let a = auc(&s, &l);
+        assert!((a - 0.5).abs() < 0.03, "auc = {a}");
+    }
+
+    #[test]
+    fn ties_handled() {
+        let s = [0.5, 0.5, 0.5, 0.5];
+        let l = [0.0, 1.0, 0.0, 1.0];
+        assert!((auc(&s, &l) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_invariant_to_monotone_transform() {
+        let s = [0.1, 0.4, 0.35, 0.8];
+        let l = [0.0, 1.0, 0.0, 1.0];
+        let s2: Vec<f64> = s.iter().map(|x| f64::exp(x * 10.0)).collect();
+        assert!((auc(&s, &l) - auc(&s2, &l)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_and_mse() {
+        let scores = [1.0, 0.0, 0.0, 1.0]; // 2 samples × 2 classes
+        assert_eq!(accuracy(&scores, 2, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&scores, 2, &[1, 0]), 0.0);
+        assert!((mse(&[1.0, 2.0], &[0.0, 0.0]) - 2.5).abs() < 1e-12);
+    }
+}

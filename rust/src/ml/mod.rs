@@ -1,0 +1,13 @@
+//! Model substrates for the paper's experiments.
+//!
+//! - [`ridge`]: ridge regression with closed-form solution + Jacobian (Fig. 3)
+//! - [`logreg`]: multiclass logistic regression (dataset distillation, §4.2)
+//! - [`svm`]: multiclass SVM dual, Crammer–Singer (Fig. 4, §4.1)
+//! - [`dict`]: (task-driven) dictionary learning (Table 2, §4.3)
+//! - [`metrics`]: AUC and friends
+
+pub mod dict;
+pub mod logreg;
+pub mod metrics;
+pub mod ridge;
+pub mod svm;

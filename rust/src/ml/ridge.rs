@@ -1,0 +1,224 @@
+//! Ridge regression — the paper's running example (Fig. 1) and the Fig. 3
+//! error-study problem: x*(θ) = argmin ‖Φx − y‖² + Σᵢθᵢxᵢ², which has a
+//! closed-form solution AND a closed-form Jacobian, making it the exact
+//! ground truth against which implicit/unrolled estimates are scored.
+
+use crate::diff::spec::RootMap;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::mat::Mat;
+use crate::mappings::objective::Objective;
+
+pub struct RidgeProblem {
+    pub x: Mat, // m × p design (Φ)
+    pub y: Vec<f64>,
+    /// Precomputed Gram ΦᵀΦ and Φᵀy.
+    pub gram: Mat,
+    pub xty: Vec<f64>,
+}
+
+impl RidgeProblem {
+    pub fn new(x: Mat, y: Vec<f64>) -> RidgeProblem {
+        assert_eq!(x.rows, y.len());
+        let gram = x.gram();
+        let xty = x.matvec_t(&y);
+        RidgeProblem { x, y, gram, xty }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Closed-form solution for scalar θ: (G + θI)⁻¹Φᵀy.
+    pub fn solve_closed_form(&self, theta: f64) -> Vec<f64> {
+        let a = self.gram.plus_diag(theta);
+        Cholesky::factor(&a).expect("ridge system SPD").solve(&self.xty)
+    }
+
+    /// Closed-form solution for per-coordinate θ ∈ R^p.
+    pub fn solve_closed_form_vec(&self, theta: &[f64]) -> Vec<f64> {
+        let mut a = self.gram.clone();
+        for i in 0..self.dim() {
+            *a.at_mut(i, i) += theta[i];
+        }
+        Cholesky::factor(&a).expect("ridge system SPD").solve(&self.xty)
+    }
+
+    /// Closed-form Jacobian ∂x*(θ) ∈ R^{p×p} for per-coordinate θ:
+    /// column j = −(G + diag θ)⁻¹ e_j x*_j.
+    pub fn jacobian_closed_form(&self, theta: &[f64]) -> Mat {
+        let p = self.dim();
+        let x_star = self.solve_closed_form_vec(theta);
+        let mut a = self.gram.clone();
+        for i in 0..p {
+            *a.at_mut(i, i) += theta[i];
+        }
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut jac = Mat::zeros(p, p);
+        let mut e = vec![0.0; p];
+        for j in 0..p {
+            e[j] = x_star[j];
+            let col = ch.solve(&e);
+            for i in 0..p {
+                *jac.at_mut(i, j) = -col[i];
+            }
+            e[j] = 0.0;
+        }
+        jac
+    }
+}
+
+/// Ridge as an objective f(x, θ) = ½‖Φx − y‖² + ½Σθᵢxᵢ² (θ per-coordinate).
+/// (The ½ scaling matches Fig. 1; stationarity is unaffected.)
+impl Objective for RidgeProblem {
+    fn dim_x(&self) -> usize {
+        self.dim()
+    }
+    fn dim_theta(&self) -> usize {
+        self.dim()
+    }
+    fn value(&self, x: &[f64], theta: &[f64]) -> f64 {
+        let r = self.x.matvec(x);
+        let mut v = 0.0;
+        for i in 0..r.len() {
+            let d = r[i] - self.y[i];
+            v += d * d;
+        }
+        for i in 0..x.len() {
+            v += theta[i] * x[i] * x[i];
+        }
+        0.5 * v
+    }
+    fn grad_x(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        // Gx − Φᵀy + θ⊙x
+        self.gram.matvec_into(x, out);
+        for i in 0..x.len() {
+            out[i] += theta[i] * x[i] - self.xty[i];
+        }
+    }
+    fn hvp_xx(&self, _x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.gram.matvec_into(v, out);
+        for i in 0..v.len() {
+            out[i] += theta[i] * v[i];
+        }
+    }
+    fn jvp_x_theta(&self, x: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        for i in 0..x.len() {
+            out[i] = v[i] * x[i];
+        }
+    }
+    fn vjp_x_theta(&self, x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
+        for i in 0..x.len() {
+            out[i] = u[i] * x[i];
+        }
+    }
+}
+
+/// The ridge optimality mapping F(x, θ) = ∇₁f — `@custom_root` material.
+pub struct RidgeRoot<'a>(pub &'a RidgeProblem);
+
+impl RootMap for RidgeRoot<'_> {
+    fn dim_x(&self) -> usize {
+        self.0.dim()
+    }
+    fn dim_theta(&self) -> usize {
+        self.0.dim()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.0.grad_x(x, theta, out);
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.0.hvp_xx(x, theta, v, out);
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.0.hvp_xx(x, theta, u, out);
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.0.jvp_x_theta(x, theta, v, out);
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.0.vjp_x_theta(x, theta, u, out);
+    }
+    fn a_symmetric(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::jacobian_via_root;
+
+    fn problem(seed: u64) -> RidgeProblem {
+        let (x, y) = crate::data::regression::diabetes_like(60, 8, seed);
+        RidgeProblem::new(x, y)
+    }
+
+    #[test]
+    fn closed_form_is_stationary() {
+        let rp = problem(1);
+        let theta = vec![2.0; 8];
+        let x = rp.solve_closed_form_vec(&theta);
+        let g = rp.grad_x_vec(&x, &theta);
+        assert!(crate::linalg::vecops::norm2(&g) < 1e-10);
+    }
+
+    #[test]
+    fn scalar_and_vector_theta_agree() {
+        let rp = problem(2);
+        let a = rp.solve_closed_form(3.0);
+        let b = rp.solve_closed_form_vec(&vec![3.0; 8]);
+        for i in 0..8 {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn implicit_jacobian_matches_closed_form() {
+        let rp = problem(3);
+        let theta = vec![1.5; 8];
+        let x_star = rp.solve_closed_form_vec(&theta);
+        let jac_true = rp.jacobian_closed_form(&theta);
+        let root = RidgeRoot(&rp);
+        let jac = jacobian_via_root(&root, &x_star, &theta);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!(
+                    (jac.at(i, j) - jac_true.at(i, j)).abs() < 1e-8,
+                    "({i},{j}): {} vs {}",
+                    jac.at(i, j),
+                    jac_true.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jacobian_closed_form_matches_fd() {
+        let rp = problem(4);
+        let theta = vec![0.8; 8];
+        let jac = rp.jacobian_closed_form(&theta);
+        let h = 1e-6;
+        for j in 0..8 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let xp = rp.solve_closed_form_vec(&tp);
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let xm = rp.solve_closed_form_vec(&tm);
+            for i in 0..8 {
+                let fd = (xp[i] - xm[i]) / (2.0 * h);
+                assert!((jac.at(i, j) - fd).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn larger_regularization_shrinks_solution() {
+        let rp = problem(5);
+        let small = rp.solve_closed_form(0.01);
+        let large = rp.solve_closed_form(100.0);
+        assert!(
+            crate::linalg::vecops::norm2(&large) < crate::linalg::vecops::norm2(&small)
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Projection onto an affine set {x : Ax = b} — paper Appendix C.1.
+//!
+//! proj(y, b) = y − Aᵀ(AAᵀ)⁻¹(Ay − b). The Gram factor AAᵀ is Cholesky-
+//! factored once at construction (the paper's "practical implementation can
+//! pre-compute a factorization").
+
+use super::Projection;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::mat::Mat;
+
+pub struct AffineProjection {
+    pub a: Mat,
+    chol: Cholesky,
+}
+
+impl AffineProjection {
+    /// A must be full row-rank p×d with p < d.
+    pub fn new(a: Mat) -> AffineProjection {
+        let gram = a.matmul_t(&a); // AAᵀ (p×p)
+        let chol = Cholesky::factor(&gram).expect("A must have full row rank");
+        AffineProjection { a, chol }
+    }
+
+    fn correct(&self, residual: &[f64], out_sub: &mut [f64]) {
+        // out_sub −= Aᵀ(AAᵀ)⁻¹ residual
+        let w = self.chol.solve(residual);
+        let atw = self.a.matvec_t(&w);
+        for i in 0..out_sub.len() {
+            out_sub[i] -= atw[i];
+        }
+    }
+}
+
+impl Projection for AffineProjection {
+    fn dim(&self) -> usize {
+        self.a.cols
+    }
+    fn dim_theta(&self) -> usize {
+        self.a.rows // θ = b
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let mut r = self.a.matvec(y);
+        for i in 0..r.len() {
+            r[i] -= t[i];
+        }
+        out.copy_from_slice(y);
+        self.correct(&r, out);
+    }
+    fn jvp_y(&self, _y: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+        // J = I − Aᵀ(AAᵀ)⁻¹A (constant, symmetric)
+        let r = self.a.matvec(v);
+        out.copy_from_slice(v);
+        self.correct(&r, out);
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out);
+    }
+    fn jvp_theta(&self, _y: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+        // ∂proj/∂b = Aᵀ(AAᵀ)⁻¹
+        let w = self.chol.solve(v);
+        let atw = self.a.matvec_t(&w);
+        out.copy_from_slice(&atw);
+    }
+    fn vjp_theta(&self, _y: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+        // (Aᵀ(AAᵀ)⁻¹)ᵀ u = (AAᵀ)⁻¹ A u
+        let au = self.a.matvec(u);
+        let w = self.chol.solve(&au);
+        out.copy_from_slice(&w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    fn make(seed: u64) -> (AffineProjection, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Mat::randn(2, 6, &mut rng);
+        let b = rng.normal_vec(2);
+        (AffineProjection::new(a), b)
+    }
+
+    #[test]
+    fn projection_is_feasible() {
+        let (p, b) = make(1);
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let y = rng.normal_vec(6);
+            let z = p.project_vec(&y, &b);
+            let az = p.a.matvec(&z);
+            for i in 0..2 {
+                assert!((az[i] - b[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn properties() {
+        let (p, b) = make(3);
+        proptests::check_idempotent(&p, &b, 4, 1e-9);
+        proptests::check_nonexpansive(&p, &b, 5);
+        proptests::check_jacobian_products(&p, &b, 6, 1e-5);
+    }
+
+    #[test]
+    fn theta_jacobians_match_fd() {
+        let (p, b) = make(7);
+        let mut rng = Rng::new(8);
+        let y = rng.normal_vec(6);
+        let v = rng.normal_vec(2);
+        let mut jt = vec![0.0; 6];
+        p.jvp_theta(&y, &b, &v, &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|t| p.project_vec(&y, t), &b, &v, 1e-7);
+        for i in 0..6 {
+            assert!((jt[i] - fd[i]).abs() < 1e-6);
+        }
+        // adjoint identity ⟨u, ∂θ proj v⟩ = ⟨∂θ projᵀ u, v⟩
+        let u = rng.normal_vec(6);
+        let mut vjt = vec![0.0; 2];
+        p.vjp_theta(&y, &b, &u, &mut vjt);
+        let lhs = vecops::dot(&u, &jt);
+        let rhs = vecops::dot(&vjt, &v);
+        assert!((lhs - rhs).abs() < 1e-8);
+    }
+
+    #[test]
+    fn minimal_distance_property() {
+        // The projection is the closest feasible point: any other feasible
+        // point is at least as far from y.
+        let (p, b) = make(9);
+        let mut rng = Rng::new(10);
+        let y = rng.normal_vec(6);
+        let z = p.project_vec(&y, &b);
+        for _ in 0..20 {
+            let w = rng.normal_vec(6);
+            let w_feas = p.project_vec(&w, &b);
+            let dz = vecops::norm2(&vecops::sub(&z, &y));
+            let dw = vecops::norm2(&vecops::sub(&w_feas, &y));
+            assert!(dz <= dw + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Norm-ball projections (ℓ1, ℓ2, ℓ∞) with radius parameter θ — paper
+//! Appendix C.1 "Norm balls".
+
+use super::Projection;
+use crate::linalg::vecops;
+
+/// ℓ2 ball {x : ‖x‖₂ ≤ θ}.
+pub struct L2BallProjection {
+    pub d: usize,
+}
+
+impl Projection for L2BallProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        let n = vecops::norm2(y);
+        if n <= r {
+            out.copy_from_slice(y);
+        } else {
+            let s = r / n;
+            for i in 0..y.len() {
+                out[i] = s * y[i];
+            }
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        let n = vecops::norm2(y);
+        if n <= r {
+            out.copy_from_slice(v);
+        } else {
+            // J = (r/n)(I − ŷŷᵀ)
+            let s = r / n;
+            let yv = vecops::dot(y, v) / (n * n);
+            for i in 0..y.len() {
+                out[i] = s * (v[i] - yv * y[i]);
+            }
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out); // symmetric
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let n = vecops::norm2(y);
+        if n <= t[0] {
+            out.iter_mut().for_each(|o| *o = 0.0);
+        } else {
+            for i in 0..y.len() {
+                out[i] = v[0] * y[i] / n;
+            }
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let n = vecops::norm2(y);
+        out[0] = if n <= t[0] { 0.0 } else { vecops::dot(y, u) / n };
+    }
+}
+
+/// ℓ∞ ball {x : ‖x‖∞ ≤ θ} = clip(y, −θ, θ).
+pub struct LInfBallProjection {
+    pub d: usize,
+}
+
+impl Projection for LInfBallProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        for i in 0..y.len() {
+            out[i] = y[i].clamp(-r, r);
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        for i in 0..y.len() {
+            out[i] = if y[i].abs() < r { v[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        for i in 0..y.len() {
+            out[i] = if y[i] >= r {
+                v[0]
+            } else if y[i] <= -r {
+                -v[0]
+            } else {
+                0.0
+            };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = t[0];
+        out[0] = 0.0;
+        for i in 0..y.len() {
+            if y[i] >= r {
+                out[0] += u[i];
+            } else if y[i] <= -r {
+                out[0] -= u[i];
+            }
+        }
+    }
+}
+
+/// ℓ1 ball {x : ‖x‖₁ ≤ θ}: reduces to a simplex-type thresholding of |y|
+/// (paper C.1; Duchi et al. [33]).
+pub struct L1BallProjection {
+    pub d: usize,
+}
+
+/// Project y onto the ℓ1 ball of radius r. Returns (projection, τ, support).
+pub fn project_l1_ball(y: &[f64], r: f64) -> (Vec<f64>, f64, Vec<bool>) {
+    let d = y.len();
+    if vecops::norm1(y) <= r {
+        return (y.to_vec(), 0.0, vec![true; d]);
+    }
+    // Threshold τ: Σ (|y_i| − τ)₊ = r, found by sorting |y| descending.
+    let mut a: Vec<f64> = y.iter().map(|x| x.abs()).collect();
+    a.sort_by(|p, q| q.partial_cmp(p).unwrap());
+    let mut css = 0.0;
+    let mut tau = 0.0;
+    for i in 0..d {
+        css += a[i];
+        let t = (css - r) / (i + 1) as f64;
+        if a[i] - t > 0.0 {
+            tau = t;
+        }
+    }
+    let mut out = vec![0.0; d];
+    let mut support = vec![false; d];
+    for i in 0..d {
+        let m = y[i].abs() - tau;
+        if m > 0.0 {
+            out[i] = y[i].signum() * m;
+            support[i] = true;
+        }
+    }
+    (out, tau, support)
+}
+
+impl Projection for L1BallProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let (p, _, _) = project_l1_ball(y, t[0]);
+        out.copy_from_slice(&p);
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        if vecops::norm1(y) <= t[0] {
+            out.copy_from_slice(v);
+            return;
+        }
+        let (_, _, s) = project_l1_ball(y, t[0]);
+        // J_ij = 1{i∈S}(δ_ij − sign(y_i)sign(y_j)/|S|)
+        let nnz = s.iter().filter(|&&b| b).count().max(1) as f64;
+        let mut signed_mean = 0.0;
+        for i in 0..y.len() {
+            if s[i] {
+                signed_mean += y[i].signum() * v[i];
+            }
+        }
+        signed_mean /= nnz;
+        for i in 0..y.len() {
+            out[i] = if s[i] { v[i] - y[i].signum() * signed_mean } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out); // symmetric
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        if vecops::norm1(y) <= t[0] {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        let (_, _, s) = project_l1_ball(y, t[0]);
+        let nnz = s.iter().filter(|&&b| b).count().max(1) as f64;
+        for i in 0..y.len() {
+            out[i] = if s[i] { v[0] * y[i].signum() / nnz } else { 0.0 };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        if vecops::norm1(y) <= t[0] {
+            out[0] = 0.0;
+            return;
+        }
+        let (_, _, s) = project_l1_ball(y, t[0]);
+        let nnz = s.iter().filter(|&&b| b).count().max(1) as f64;
+        out[0] = 0.0;
+        for i in 0..y.len() {
+            if s[i] {
+                out[0] += u[i] * y[i].signum() / nnz;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn l2_ball_properties() {
+        let p = L2BallProjection { d: 7 };
+        let theta = [1.5];
+        proptests::check_idempotent(&p, &theta, 1, 1e-9);
+        proptests::check_nonexpansive(&p, &theta, 2);
+        proptests::check_jacobian_products(&p, &theta, 3, 1e-6);
+    }
+
+    #[test]
+    fn l2_feasibility() {
+        let p = L2BallProjection { d: 5 };
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let y = rng.normal_vec(5);
+            let z = p.project_vec(&y, &[0.8]);
+            assert!(vecops::norm2(&z) <= 0.8 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn linf_ball_properties() {
+        let p = LInfBallProjection { d: 6 };
+        let theta = [0.7];
+        proptests::check_idempotent(&p, &theta, 5, 1e-12);
+        proptests::check_nonexpansive(&p, &theta, 6);
+        proptests::check_jacobian_products(&p, &theta, 7, 1e-6);
+    }
+
+    #[test]
+    fn l1_ball_feasibility_and_properties() {
+        let p = L1BallProjection { d: 8 };
+        let theta = [1.0];
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let y = rng.normal_vec(8);
+            let z = p.project_vec(&y, &theta);
+            assert!(vecops::norm1(&z) <= 1.0 + 1e-9);
+        }
+        proptests::check_idempotent(&p, &theta, 9, 1e-9);
+        proptests::check_nonexpansive(&p, &theta, 10);
+        proptests::check_jacobian_products(&p, &theta, 11, 1e-5);
+    }
+
+    #[test]
+    fn l1_interior_identity() {
+        let p = L1BallProjection { d: 3 };
+        let y = [0.1, -0.2, 0.05];
+        let z = p.project_vec(&y, &[1.0]);
+        assert_eq!(z, y.to_vec());
+        let mut jt = [0.0];
+        p.vjp_theta(&y, &[1.0], &[1.0, 1.0, 1.0], &mut jt);
+        assert_eq!(jt[0], 0.0);
+    }
+
+    #[test]
+    fn l2_theta_jacobians_match_fd() {
+        let p = L2BallProjection { d: 4 };
+        let mut rng = Rng::new(12);
+        let y: Vec<f64> = rng.normal_vec(4).iter().map(|x| x * 3.0).collect();
+        let theta = [1.0];
+        let mut jt = vec![0.0; 4];
+        p.jvp_theta(&y, &theta, &[1.0], &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|t| p.project_vec(&y, t), &theta, &[1.0], 1e-7);
+        for i in 0..4 {
+            assert!((jt[i] - fd[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Box-section projection — paper Appendix C.1 "Box sections".
+//!
+//! Projects onto C(θ) = {z : α ≤ z ≤ β, wᵀz = c}. This is a
+//! singly-constrained bounded QP whose solution is the dual-primal map
+//! z_i = clip(w_i x + y_i, α_i, β_i) where the scalar dual x*(y, c) is the
+//! root of F(x) = L(x)ᵀw − c, found by bisection. The gradient of x* uses
+//! the paper's 1-D formula ∇x* = Bᵀ/A, and ∂z follows by chain rule —
+//! an in-crate example of a projection that is *itself* implicitly defined.
+
+use super::Projection;
+
+/// Fixed bounds and weights; θ = c (the linear-constraint level).
+pub struct BoxSectionProjection {
+    pub alpha: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub w: Vec<f64>,
+}
+
+impl BoxSectionProjection {
+    pub fn new(alpha: Vec<f64>, beta: Vec<f64>, w: Vec<f64>) -> Self {
+        assert_eq!(alpha.len(), beta.len());
+        assert_eq!(alpha.len(), w.len());
+        assert!(alpha.iter().zip(&beta).all(|(a, b)| a <= b));
+        assert!(w.iter().all(|&wi| wi != 0.0), "weights must be nonzero");
+        BoxSectionProjection { alpha, beta, w }
+    }
+
+    fn l(&self, x: f64, y: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = (self.w[i] * x + y[i]).clamp(self.alpha[i], self.beta[i]);
+        }
+    }
+
+    /// F(x) = L(x)ᵀ w − c, monotone non-decreasing in x.
+    fn f_dual(&self, x: f64, y: &[f64], c: f64) -> f64 {
+        let mut s = 0.0;
+        for i in 0..y.len() {
+            s += (self.w[i] * x + y[i]).clamp(self.alpha[i], self.beta[i]) * self.w[i];
+        }
+        s - c
+    }
+
+    /// Solve the scalar dual by bisection.
+    fn solve_dual(&self, y: &[f64], c: f64) -> f64 {
+        let (mut lo, mut hi) = (-1.0, 1.0);
+        let mut grow = 0;
+        while self.f_dual(lo, y, c) > 0.0 && grow < 80 {
+            lo *= 2.0;
+            grow += 1;
+        }
+        grow = 0;
+        while self.f_dual(hi, y, c) < 0.0 && grow < 80 {
+            hi *= 2.0;
+            grow += 1;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.f_dual(mid, y, c) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Active-set mask: coordinates strictly inside (α_i, β_i).
+    fn interior_mask(&self, x: f64, y: &[f64]) -> Vec<bool> {
+        (0..y.len())
+            .map(|i| {
+                let z = self.w[i] * x + y[i];
+                z > self.alpha[i] && z < self.beta[i]
+            })
+            .collect()
+    }
+}
+
+impl Projection for BoxSectionProjection {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+    fn dim_theta(&self) -> usize {
+        1 // θ = c
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let x = self.solve_dual(y, t[0]);
+        self.l(x, y, out);
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let x = self.solve_dual(y, t[0]);
+        let m = self.interior_mask(x, y);
+        // A = ∂F/∂x = Σ_{i interior} w_i², ∂F/∂y_j = w_j 1{j interior}.
+        let a: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * self.w[i]).sum();
+        let dfy: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * v[i]).sum();
+        let dx = if a > 0.0 { -dfy / a } else { 0.0 };
+        for i in 0..y.len() {
+            out[i] = if m[i] { self.w[i] * dx + v[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let x = self.solve_dual(y, t[0]);
+        let m = self.interior_mask(x, y);
+        let a: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * self.w[i]).sum();
+        // Jᵀu: J = D(I + w dxᵀ) structure; by symmetry of the projection
+        // Jacobian (Euclidean projection onto a convex set evaluated a.e.),
+        // J = D − (D w)(D w)ᵀ/a where D = diag(mask). Compute directly:
+        let wu: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * u[i]).sum();
+        for i in 0..y.len() {
+            out[i] = if m[i] { u[i] - self.w[i] * wu / a } else { 0.0 };
+        }
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let x = self.solve_dual(y, t[0]);
+        let m = self.interior_mask(x, y);
+        let a: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * self.w[i]).sum();
+        let dx = if a > 0.0 { v[0] / a } else { 0.0 };
+        for i in 0..y.len() {
+            out[i] = if m[i] { self.w[i] * dx } else { 0.0 };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let x = self.solve_dual(y, t[0]);
+        let m = self.interior_mask(x, y);
+        let a: f64 = (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * self.w[i]).sum();
+        out[0] = if a > 0.0 {
+            (0..y.len()).filter(|&i| m[i]).map(|i| self.w[i] * u[i]).sum::<f64>() / a
+        } else {
+            0.0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    fn make(d: usize) -> BoxSectionProjection {
+        BoxSectionProjection::new(vec![-1.0; d], vec![1.0; d], vec![1.0; d])
+    }
+
+    #[test]
+    fn feasibility() {
+        let p = make(6);
+        let t = [0.5];
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let y = rng.normal_vec(6);
+            let z = p.project_vec(&y, &t);
+            let s: f64 = z.iter().sum();
+            assert!((s - 0.5).abs() < 1e-8, "sum={s}");
+            assert!(z.iter().all(|&zi| (-1.0 - 1e-9..=1.0 + 1e-9).contains(&zi)));
+        }
+    }
+
+    #[test]
+    fn simplex_special_case() {
+        // α=0, β=1, w=1, c=1 is exactly the probability simplex.
+        let p = BoxSectionProjection::new(vec![0.0; 5], vec![1.0; 5], vec![1.0; 5]);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let y = rng.normal_vec(5);
+            let z = p.project_vec(&y, &[1.0]);
+            let mut expected = vec![0.0; 5];
+            crate::proj::simplex::project_simplex(&y, &mut expected);
+            for i in 0..5 {
+                assert!((z[i] - expected[i]).abs() < 1e-7, "{} vs {}", z[i], expected[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn properties_and_jacobians() {
+        let p = make(5);
+        let t = [0.3];
+        proptests::check_idempotent(&p, &t, 3, 1e-7);
+        proptests::check_nonexpansive(&p, &t, 4);
+        proptests::check_jacobian_products(&p, &t, 5, 1e-5);
+    }
+
+    #[test]
+    fn theta_jacobian_matches_fd() {
+        let p = make(5);
+        let t = [0.3];
+        let mut rng = Rng::new(6);
+        let y = rng.normal_vec(5);
+        let mut jt = vec![0.0; 5];
+        p.jvp_theta(&y, &t, &[1.0], &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|tt| p.project_vec(&y, tt), &t, &[1.0], 1e-6);
+        for i in 0..5 {
+            assert!((jt[i] - fd[i]).abs() < 1e-5, "{} vs {}", jt[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn weighted_version() {
+        let p = BoxSectionProjection::new(vec![-2.0; 4], vec![2.0; 4], vec![1.0, 2.0, -1.0, 0.5]);
+        let t = [0.7];
+        let mut rng = Rng::new(7);
+        let y = rng.normal_vec(4);
+        let z = p.project_vec(&y, &t);
+        let s: f64 = z.iter().zip(&p.w).map(|(zi, wi)| zi * wi).sum();
+        assert!((s - 0.7).abs() < 1e-8);
+        proptests::check_jacobian_products(&p, &t, 8, 1e-5);
+    }
+}

@@ -1,0 +1,258 @@
+//! Box-like sets: non-negative orthant, box constraints, hyperplanes and
+//! half-spaces — paper Appendix C.1.
+
+use super::Projection;
+use crate::linalg::vecops;
+
+/// Non-negative orthant R^d₊: proj = ReLU; KL projection = exp.
+pub struct NonNegProjection {
+    pub d: usize,
+}
+
+impl Projection for NonNegProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        0
+    }
+    fn project(&self, y: &[f64], _t: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = y[i].max(0.0);
+        }
+    }
+    fn jvp_y(&self, y: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = if y[i] > 0.0 { v[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out);
+    }
+}
+
+/// KL projection onto R^d₊ is elementwise exp (paper C.1).
+pub fn kl_project_nonneg(y: &[f64], out: &mut [f64]) {
+    for i in 0..y.len() {
+        out[i] = y[i].exp();
+    }
+}
+
+/// Box [θ₁, θ₂]^d with θ ∈ R² (shared bounds; the paper's box constraint).
+pub struct BoxProjection {
+    pub d: usize,
+}
+
+impl Projection for BoxProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        2
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let (lo, hi) = (t[0], t[1]);
+        for i in 0..y.len() {
+            out[i] = y[i].clamp(lo, hi);
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let (lo, hi) = (t[0], t[1]);
+        for i in 0..y.len() {
+            out[i] = if y[i] > lo && y[i] < hi { v[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let (lo, hi) = (t[0], t[1]);
+        for i in 0..y.len() {
+            out[i] = if y[i] <= lo {
+                v[0]
+            } else if y[i] >= hi {
+                v[1]
+            } else {
+                0.0
+            };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let (lo, hi) = (t[0], t[1]);
+        out[0] = 0.0;
+        out[1] = 0.0;
+        for i in 0..y.len() {
+            if y[i] <= lo {
+                out[0] += u[i];
+            } else if y[i] >= hi {
+                out[1] += u[i];
+            }
+        }
+    }
+}
+
+/// Hyperplane {x : aᵀx = b}, θ = b (the offset; `a` is fixed per instance).
+pub struct HyperplaneProjection {
+    pub a: Vec<f64>,
+}
+
+impl Projection for HyperplaneProjection {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let b = t[0];
+        let c = (vecops::dot(&self.a, y) - b) / vecops::dot(&self.a, &self.a);
+        for i in 0..y.len() {
+            out[i] = y[i] - c * self.a[i];
+        }
+    }
+    fn jvp_y(&self, _y: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+        // J = I − aaᵀ/‖a‖² (constant)
+        let c = vecops::dot(&self.a, v) / vecops::dot(&self.a, &self.a);
+        for i in 0..v.len() {
+            out[i] = v[i] - c * self.a[i];
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out); // symmetric
+    }
+    fn jvp_theta(&self, _y: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+        let na2 = vecops::dot(&self.a, &self.a);
+        for i in 0..self.a.len() {
+            out[i] = v[0] * self.a[i] / na2;
+        }
+    }
+    fn vjp_theta(&self, _y: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+        out[0] = vecops::dot(&self.a, u) / vecops::dot(&self.a, &self.a);
+    }
+}
+
+/// Half-space {x : aᵀx ≤ b}, θ = b.
+pub struct HalfSpaceProjection {
+    pub a: Vec<f64>,
+}
+
+impl Projection for HalfSpaceProjection {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let b = t[0];
+        let viol = (vecops::dot(&self.a, y) - b).max(0.0);
+        let c = viol / vecops::dot(&self.a, &self.a);
+        for i in 0..y.len() {
+            out[i] = y[i] - c * self.a[i];
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let active = vecops::dot(&self.a, y) - t[0] > 0.0;
+        if active {
+            let c = vecops::dot(&self.a, v) / vecops::dot(&self.a, &self.a);
+            for i in 0..v.len() {
+                out[i] = v[i] - c * self.a[i];
+            }
+        } else {
+            out.copy_from_slice(v);
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let active = vecops::dot(&self.a, y) - t[0] > 0.0;
+        let na2 = vecops::dot(&self.a, &self.a);
+        for i in 0..self.a.len() {
+            out[i] = if active { v[0] * self.a[i] / na2 } else { 0.0 };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let active = vecops::dot(&self.a, y) - t[0] > 0.0;
+        out[0] = if active {
+            vecops::dot(&self.a, u) / vecops::dot(&self.a, &self.a)
+        } else {
+            0.0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nonneg_properties() {
+        let p = NonNegProjection { d: 8 };
+        proptests::check_idempotent(&p, &[], 1, 1e-12);
+        proptests::check_nonexpansive(&p, &[], 2);
+        proptests::check_jacobian_products(&p, &[], 3, 1e-6);
+    }
+
+    #[test]
+    fn box_feasible_and_jacobians() {
+        let p = BoxProjection { d: 6 };
+        let theta = [-0.5, 0.5];
+        proptests::check_idempotent(&p, &theta, 4, 1e-12);
+        proptests::check_nonexpansive(&p, &theta, 5);
+        proptests::check_jacobian_products(&p, &theta, 6, 1e-6);
+        // θ-side Jacobian vs FD
+        let mut rng = Rng::new(7);
+        let y = rng.normal_vec(6);
+        let v = [1.0, 0.0];
+        let mut jt = vec![0.0; 6];
+        p.jvp_theta(&y, &theta, &v, &mut jt);
+        let fd = crate::ad::num_grad::jvp_fd(|t| p.project_vec(&y, t), &theta, &v, 1e-7);
+        for i in 0..6 {
+            assert!((jt[i] - fd[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hyperplane_exact_and_consistent() {
+        let p = HyperplaneProjection { a: vec![1.0, 2.0, -1.0] };
+        let theta = [0.7];
+        let mut rng = Rng::new(8);
+        let y = rng.normal_vec(3);
+        let z = p.project_vec(&y, &theta);
+        assert!((vecops::dot(&p.a, &z) - 0.7).abs() < 1e-12);
+        proptests::check_idempotent(&p, &theta, 9, 1e-9);
+        proptests::check_nonexpansive(&p, &theta, 10);
+        proptests::check_jacobian_products(&p, &theta, 11, 1e-6);
+    }
+
+    #[test]
+    fn halfspace_inactive_is_identity() {
+        let p = HalfSpaceProjection { a: vec![1.0, 0.0] };
+        let theta = [5.0];
+        let y = [1.0, 2.0];
+        let z = p.project_vec(&y, &theta);
+        assert_eq!(z, y.to_vec());
+        proptests::check_nonexpansive(&p, &theta, 12);
+        proptests::check_jacobian_products(&p, &theta, 13, 1e-6);
+    }
+
+    #[test]
+    fn halfspace_active_projects_to_boundary() {
+        let p = HalfSpaceProjection { a: vec![1.0, 1.0] };
+        let theta = [0.0];
+        let y = [2.0, 2.0];
+        let z = p.project_vec(&y, &theta);
+        assert!((vecops::dot(&p.a, &z)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_nonneg_is_exp() {
+        let mut out = vec![0.0; 2];
+        kl_project_nonneg(&[0.0, 1.0], &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-12);
+        assert!((out[1] - 1.0f64.exp()).abs() < 1e-12);
+    }
+}

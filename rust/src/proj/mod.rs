@@ -1,0 +1,129 @@
+//! Projection catalog — paper Appendix C.1.
+//!
+//! Each projection provides `project` plus analytic JVP/VJPs (the paper's
+//! "Jacobian products of projections"), exercised by the projected-gradient
+//! and mirror-descent fixed points in [`crate::mappings`]. Every Jacobian
+//! product is unit-tested against finite differences, and property-tested
+//! for idempotency / feasibility / non-expansiveness.
+
+pub mod affine;
+pub mod balls;
+pub mod box_section;
+pub mod boxes;
+pub mod order_simplex;
+pub mod simplex;
+pub mod transport;
+
+use crate::ad::num_grad;
+
+/// A parametric projection y ↦ proj_C(θ)(y).
+pub trait Projection {
+    /// Ambient dimension of y.
+    fn dim(&self) -> usize;
+    /// Dimension of the set parameter θ (0 for fixed sets).
+    fn dim_theta(&self) -> usize;
+
+    /// out = proj(y, θ).
+    fn project(&self, y: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// out = ∂_y proj(y, θ) · v.
+    fn jvp_y(&self, y: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|yy| self.project_vec(yy, theta), y, v, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_θ proj(y, θ) · v.
+    fn jvp_theta(&self, y: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        if self.dim_theta() == 0 {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        let r = num_grad::jvp_fd(|tt| self.project_vec(y, tt), theta, v, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_y proj(y, θ)ᵀ · u.
+    fn vjp_y(&self, y: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|yy| self.project_vec(yy, theta), y, u, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_θ proj(y, θ)ᵀ · u.
+    fn vjp_theta(&self, y: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        if self.dim_theta() == 0 {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        let r = num_grad::vjp_fd(|tt| self.project_vec(y, tt), theta, u, 1e-6);
+        out.copy_from_slice(&r);
+    }
+
+    fn project_vec(&self, y: &[f64], theta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.project(y, theta, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod proptests {
+    //! Shared property checks every projection must satisfy.
+    use super::Projection;
+    use crate::linalg::vecops;
+    use crate::util::rng::Rng;
+
+    /// proj(proj(y)) = proj(y) (idempotency).
+    pub fn check_idempotent<P: Projection>(p: &P, theta: &[f64], seed: u64, tol: f64) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..50 {
+            let y = rng.normal_vec(p.dim());
+            let z = p.project_vec(&y, theta);
+            let zz = p.project_vec(&z, theta);
+            assert!(vecops::rel_err(&zz, &z) < tol, "not idempotent");
+        }
+    }
+
+    /// ‖proj(a) − proj(b)‖ ≤ ‖a − b‖ (1-Lipschitz / non-expansive).
+    pub fn check_nonexpansive<P: Projection>(p: &P, theta: &[f64], seed: u64) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..50 {
+            let a = rng.normal_vec(p.dim());
+            let b = rng.normal_vec(p.dim());
+            let pa = p.project_vec(&a, theta);
+            let pb = p.project_vec(&b, theta);
+            let num = vecops::norm2(&vecops::sub(&pa, &pb));
+            let den = vecops::norm2(&vecops::sub(&a, &b));
+            assert!(num <= den + 1e-9, "expansive: {num} > {den}");
+        }
+    }
+
+    /// Analytic JVP/VJP match finite differences at generic points.
+    pub fn check_jacobian_products<P: Projection>(p: &P, theta: &[f64], seed: u64, tol: f64) {
+        use crate::ad::num_grad;
+        let mut rng = Rng::new(seed);
+        for _ in 0..20 {
+            let y = rng.normal_vec(p.dim());
+            let v = rng.normal_vec(p.dim());
+            let mut jv = vec![0.0; p.dim()];
+            p.jvp_y(&y, theta, &v, &mut jv);
+            let jv_fd = num_grad::jvp_fd(|yy| p.project_vec(yy, theta), &y, &v, 1e-7);
+            for i in 0..p.dim() {
+                assert!(
+                    (jv[i] - jv_fd[i]).abs() < tol,
+                    "jvp mismatch at {i}: {} vs {}",
+                    jv[i],
+                    jv_fd[i]
+                );
+            }
+            let u = rng.normal_vec(p.dim());
+            let mut vj = vec![0.0; p.dim()];
+            p.vjp_y(&y, theta, &u, &mut vj);
+            let vj_fd = num_grad::vjp_fd(|yy| p.project_vec(yy, theta), &y, &u, 1e-7);
+            for i in 0..p.dim() {
+                assert!(
+                    (vj[i] - vj_fd[i]).abs() < tol,
+                    "vjp mismatch at {i}: {} vs {}",
+                    vj[i],
+                    vj_fd[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Order-simplex / isotonic projection — paper Appendix C.1 "Order simplex".
+//!
+//! Euclidean projection onto the monotone cone {x : x₁ ≥ x₂ ≥ … ≥ x_d}
+//! solved exactly by the Pool Adjacent Violators (PAV) algorithm in O(d);
+//! optional upper/lower caps θ = (top, bottom) clip the result into the
+//! order simplex {θ₁ ≥ x₁ ≥ … ≥ x_d ≥ θ₂}. The Jacobian averages within
+//! pooled blocks [Djolonga & Krause 31; Blondel et al. 18].
+
+use super::Projection;
+
+/// Isotonic regression (decreasing): argmin ‖x − y‖² s.t. x₁ ≥ … ≥ x_d.
+/// Returns the solution and the pooled-block partition (start indices).
+pub fn pav_decreasing(y: &[f64]) -> (Vec<f64>, Vec<usize>) {
+    let d = y.len();
+    // Blocks as (value-sum, count), maintained as a stack.
+    let mut sums: Vec<f64> = Vec::with_capacity(d);
+    let mut counts: Vec<usize> = Vec::with_capacity(d);
+    for &yi in y {
+        sums.push(yi);
+        counts.push(1);
+        // Merge while mean of last block exceeds the one before it
+        // (decreasing constraint violated if later mean > earlier mean).
+        while sums.len() > 1 {
+            let n = sums.len();
+            let mean_last = sums[n - 1] / counts[n - 1] as f64;
+            let mean_prev = sums[n - 2] / counts[n - 2] as f64;
+            if mean_last > mean_prev {
+                let s = sums.pop().unwrap();
+                let c = counts.pop().unwrap();
+                *sums.last_mut().unwrap() += s;
+                *counts.last_mut().unwrap() += c;
+            } else {
+                break;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(d);
+    let mut starts = Vec::with_capacity(sums.len());
+    let mut idx = 0;
+    for (s, c) in sums.iter().zip(&counts) {
+        starts.push(idx);
+        let mean = s / *c as f64;
+        for _ in 0..*c {
+            out.push(mean);
+        }
+        idx += c;
+    }
+    (out, starts)
+}
+
+/// Jacobian product of the isotonic projection: average v within each
+/// pooled block (symmetric projection matrix → JVP = VJP).
+pub fn pav_jacobian_product(starts: &[usize], d: usize, v: &[f64], out: &mut [f64]) {
+    let mut ends = starts[1..].to_vec();
+    ends.push(d);
+    for (s, e) in starts.iter().zip(&ends) {
+        let n = (e - s) as f64;
+        let mean: f64 = v[*s..*e].iter().sum::<f64>() / n;
+        for o in out[*s..*e].iter_mut() {
+            *o = mean;
+        }
+    }
+}
+
+/// Order-simplex projection with caps θ = (top, bottom): first isotonic,
+/// then clip (valid because clipping a monotone vector preserves order and
+/// the composition equals the exact projection for separable chains [14]).
+pub struct OrderSimplexProjection {
+    pub d: usize,
+}
+
+impl Projection for OrderSimplexProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        2
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let (top, bottom) = (t[0], t[1]);
+        let (iso, _) = pav_decreasing(y);
+        for i in 0..y.len() {
+            out[i] = iso[i].clamp(bottom, top);
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let (top, bottom) = (t[0], t[1]);
+        let (iso, starts) = pav_decreasing(y);
+        let mut block = vec![0.0; y.len()];
+        pav_jacobian_product(&starts, y.len(), v, &mut block);
+        for i in 0..y.len() {
+            out[i] = if iso[i] > bottom && iso[i] < top { block[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, u, out); // block-averaging is symmetric
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let (top, bottom) = (t[0], t[1]);
+        let (iso, _) = pav_decreasing(y);
+        for i in 0..y.len() {
+            out[i] = if iso[i] >= top {
+                v[0]
+            } else if iso[i] <= bottom {
+                v[1]
+            } else {
+                0.0
+            };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let (top, bottom) = (t[0], t[1]);
+        let (iso, _) = pav_decreasing(y);
+        out[0] = 0.0;
+        out[1] = 0.0;
+        for i in 0..y.len() {
+            if iso[i] >= top {
+                out[0] += u[i];
+            } else if iso[i] <= bottom {
+                out[1] += u[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pav_output_is_decreasing() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let y = rng.normal_vec(12);
+            let (x, _) = pav_decreasing(&y);
+            for w in x.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn pav_fixes_feasible_input() {
+        let y = [5.0, 3.0, 3.0, 1.0, -2.0];
+        let (x, starts) = pav_decreasing(&y);
+        assert_eq!(x, y.to_vec());
+        assert_eq!(starts.len(), 5);
+    }
+
+    #[test]
+    fn pav_pools_violations() {
+        let y = [1.0, 2.0]; // increasing → pooled to mean
+        let (x, starts) = pav_decreasing(&y);
+        assert_eq!(x, vec![1.5, 1.5]);
+        assert_eq!(starts, vec![0]);
+    }
+
+    #[test]
+    fn pav_preserves_mean() {
+        let mut rng = Rng::new(2);
+        let y = rng.normal_vec(20);
+        let (x, _) = pav_decreasing(&y);
+        let my: f64 = y.iter().sum();
+        let mx: f64 = x.iter().sum();
+        assert!((my - mx).abs() < 1e-10);
+    }
+
+    #[test]
+    fn projection_properties() {
+        let p = OrderSimplexProjection { d: 9 };
+        let theta = [2.0, -2.0];
+        proptests::check_idempotent(&p, &theta, 3, 1e-9);
+        proptests::check_nonexpansive(&p, &theta, 4);
+        proptests::check_jacobian_products(&p, &theta, 5, 1e-5);
+    }
+
+    #[test]
+    fn feasibility_with_caps() {
+        let p = OrderSimplexProjection { d: 7 };
+        let theta = [1.0, 0.0];
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let y = rng.normal_vec(7);
+            let z = p.project_vec(&y, &theta);
+            assert!(z[0] <= 1.0 + 1e-12);
+            assert!(z[6] >= -1e-12);
+            for w in z.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobian_block_structure() {
+        // y = [1, 2] pools into one block; J = [[.5,.5],[.5,.5]] on free block.
+        let p = OrderSimplexProjection { d: 2 };
+        let theta = [10.0, -10.0];
+        let mut jv = vec![0.0; 2];
+        p.jvp_y(&[1.0, 2.0], &theta, &[1.0, 0.0], &mut jv);
+        assert!((jv[0] - 0.5).abs() < 1e-12);
+        assert!((jv[1] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,300 @@
+//! Projections onto the probability simplex — paper Appendix C.1.
+//!
+//! - Euclidean: exact O(d log d) sort-based algorithm [Michelot 63; Duchi 33;
+//!   Condat 26]. Jacobian = diag(s) − ssᵀ/‖s‖₁ over the support indicator s
+//!   [Martins & Astudillo 62] — both JVP and VJP are the same symmetric
+//!   centering-on-support operator.
+//! - KL (Bregman): row softmax, Jacobian diag(p) − ppᵀ.
+//!
+//! Row-wise variants over m×k matrices serve the multiclass-SVM experiment
+//! (projection of each dual row onto △^k).
+
+use super::Projection;
+
+/// Euclidean projection of y onto △^d = {x ≥ 0, Σx = 1}.
+pub fn project_simplex(y: &[f64], out: &mut [f64]) {
+    let d = y.len();
+    debug_assert_eq!(out.len(), d);
+    // Sort descending, find threshold τ with Σ(yᵢ − τ)₊ = 1.
+    let mut u = y.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut tau = 0.0;
+    let mut k = 0;
+    for i in 0..d {
+        css += u[i];
+        let t = (css - 1.0) / (i + 1) as f64;
+        if u[i] - t > 0.0 {
+            tau = t;
+            k = i + 1;
+        }
+    }
+    debug_assert!(k > 0);
+    let _ = k;
+    for i in 0..d {
+        out[i] = (y[i] - tau).max(0.0);
+    }
+}
+
+/// Support indicator of the projection (1 where the output is positive).
+pub fn simplex_support(proj: &[f64]) -> Vec<bool> {
+    proj.iter().map(|&p| p > 0.0).collect()
+}
+
+/// The simplex-projection Jacobian product: Jv = s⊙(v − mean_S(v)), where S
+/// is the support of the projection. Symmetric, so JVP = VJP.
+pub fn simplex_jacobian_product(proj: &[f64], v: &[f64], out: &mut [f64]) {
+    let mut sum = 0.0;
+    let mut nnz = 0usize;
+    for i in 0..proj.len() {
+        if proj[i] > 0.0 {
+            sum += v[i];
+            nnz += 1;
+        }
+    }
+    let mean = if nnz > 0 { sum / nnz as f64 } else { 0.0 };
+    for i in 0..proj.len() {
+        out[i] = if proj[i] > 0.0 { v[i] - mean } else { 0.0 };
+    }
+}
+
+/// KL projection onto the simplex = softmax. Returns p.
+pub fn softmax(y: &[f64], out: &mut [f64]) {
+    let m = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for i in 0..y.len() {
+        out[i] = (y[i] - m).exp();
+        z += out[i];
+    }
+    for o in out.iter_mut() {
+        *o /= z;
+    }
+}
+
+/// Softmax Jacobian product: Jv = p⊙(v − ⟨p, v⟩). Symmetric.
+pub fn softmax_jacobian_product(p: &[f64], v: &[f64], out: &mut [f64]) {
+    let pv: f64 = p.iter().zip(v).map(|(&a, &b)| a * b).sum();
+    for i in 0..p.len() {
+        out[i] = p[i] * (v[i] - pv);
+    }
+}
+
+/// Euclidean simplex projection as a [`Projection`] (no parameters).
+pub struct SimplexProjection {
+    pub d: usize,
+}
+
+impl Projection for SimplexProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        0
+    }
+    fn project(&self, y: &[f64], _theta: &[f64], out: &mut [f64]) {
+        project_simplex(y, out);
+    }
+    fn jvp_y(&self, y: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut p = vec![0.0; self.d];
+        project_simplex(y, &mut p);
+        simplex_jacobian_product(&p, v, out);
+    }
+    fn vjp_y(&self, y: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, theta, u, out); // symmetric Jacobian
+    }
+}
+
+/// KL (softmax) projection as a [`Projection`].
+pub struct KlSimplexProjection {
+    pub d: usize,
+}
+
+impl Projection for KlSimplexProjection {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        0
+    }
+    fn project(&self, y: &[f64], _theta: &[f64], out: &mut [f64]) {
+        softmax(y, out);
+    }
+    fn jvp_y(&self, y: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut p = vec![0.0; self.d];
+        softmax(y, &mut p);
+        softmax_jacobian_product(&p, v, out);
+    }
+    fn vjp_y(&self, y: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, theta, u, out);
+    }
+}
+
+/// Product of m simplices △^k (row-wise projection of a flattened m×k
+/// matrix) as a [`Projection`] — the multiclass-SVM dual feasible set.
+pub struct RowsSimplexProjection {
+    pub m: usize,
+    pub k: usize,
+}
+
+impl Projection for RowsSimplexProjection {
+    fn dim(&self) -> usize {
+        self.m * self.k
+    }
+    fn dim_theta(&self) -> usize {
+        0
+    }
+    fn project(&self, y: &[f64], _theta: &[f64], out: &mut [f64]) {
+        project_rows_simplex(y, self.k, out);
+    }
+    fn jvp_y(&self, y: &[f64], _theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut p = vec![0.0; y.len()];
+        project_rows_simplex(y, self.k, &mut p);
+        rows_simplex_jacobian_product(&p, self.k, v, out);
+    }
+    fn vjp_y(&self, y: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, theta, u, out); // block-diagonal symmetric
+    }
+}
+
+/// Row-wise Euclidean simplex projection of an m×k matrix (flattened
+/// row-major) — the multiclass-SVM dual feasible set C = △^k × ... × △^k.
+pub fn project_rows_simplex(y: &[f64], k: usize, out: &mut [f64]) {
+    debug_assert_eq!(y.len() % k, 0);
+    for (yrow, orow) in y.chunks_exact(k).zip(out.chunks_exact_mut(k)) {
+        project_simplex(yrow, orow);
+    }
+}
+
+/// Row-wise simplex Jacobian product given the projected rows.
+pub fn rows_simplex_jacobian_product(proj: &[f64], k: usize, v: &[f64], out: &mut [f64]) {
+    for ((prow, vrow), orow) in proj
+        .chunks_exact(k)
+        .zip(v.chunks_exact(k))
+        .zip(out.chunks_exact_mut(k))
+    {
+        simplex_jacobian_product(prow, vrow, orow);
+    }
+}
+
+/// Row-wise softmax of an m×k matrix.
+pub fn softmax_rows(y: &[f64], k: usize, out: &mut [f64]) {
+    for (yrow, orow) in y.chunks_exact(k).zip(out.chunks_exact_mut(k)) {
+        softmax(yrow, orow);
+    }
+}
+
+/// Row-wise softmax Jacobian product given the softmax rows.
+pub fn rows_softmax_jacobian_product(p: &[f64], k: usize, v: &[f64], out: &mut [f64]) {
+    for ((prow, vrow), orow) in
+        p.chunks_exact(k).zip(v.chunks_exact(k)).zip(out.chunks_exact_mut(k))
+    {
+        softmax_jacobian_product(prow, vrow, orow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::proptests;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn projection_is_feasible() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let y = rng.normal_vec(8);
+            let mut p = vec![0.0; 8];
+            project_simplex(&y, &mut p);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-10, "sum={sum}");
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn already_feasible_is_fixed() {
+        let y = [0.2, 0.3, 0.5];
+        let mut p = vec![0.0; 3];
+        project_simplex(&y, &mut p);
+        for i in 0..3 {
+            assert!((p[i] - y[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn extreme_point() {
+        let y = [10.0, 0.0, 0.0];
+        let mut p = vec![0.0; 3];
+        project_simplex(&y, &mut p);
+        assert!((p[0] - 1.0).abs() < 1e-12);
+        assert_eq!(p[1], 0.0);
+    }
+
+    #[test]
+    fn properties_euclidean() {
+        let p = SimplexProjection { d: 10 };
+        proptests::check_idempotent(&p, &[], 11, 1e-9);
+        proptests::check_nonexpansive(&p, &[], 12);
+    }
+
+    #[test]
+    fn jacobian_product_matches_fd_interior() {
+        // At generic points the support is locally constant → FD valid.
+        let p = SimplexProjection { d: 6 };
+        proptests::check_jacobian_products(&p, &[], 13, 1e-5);
+    }
+
+    #[test]
+    fn softmax_properties() {
+        let p = KlSimplexProjection { d: 7 };
+        let mut rng = Rng::new(2);
+        let y = rng.normal_vec(7);
+        let mut s = vec![0.0; 7];
+        softmax(&y, &mut s);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(s.iter().all(|&x| x > 0.0));
+        proptests::check_jacobian_products(&p, &[], 14, 1e-6);
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let y = [1.0, 2.0, 3.0];
+        let ys = [11.0, 12.0, 13.0];
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        softmax(&y, &mut a);
+        softmax(&ys, &mut b);
+        for i in 0..3 {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rowwise_matches_per_row() {
+        let mut rng = Rng::new(3);
+        let k = 4;
+        let y = rng.normal_vec(3 * k);
+        let mut p = vec![0.0; 3 * k];
+        project_rows_simplex(&y, k, &mut p);
+        for r in 0..3 {
+            let mut expected = vec![0.0; k];
+            project_simplex(&y[r * k..(r + 1) * k], &mut expected);
+            assert_eq!(&p[r * k..(r + 1) * k], &expected[..]);
+        }
+    }
+
+    #[test]
+    fn jacobian_annihilates_ones_on_support() {
+        // J·1 = 0 since moving all coords equally keeps the projection fixed.
+        let mut rng = Rng::new(4);
+        let y = rng.normal_vec(9);
+        let mut p = vec![0.0; 9];
+        project_simplex(&y, &mut p);
+        let ones = vec![1.0; 9];
+        let mut jp = vec![0.0; 9];
+        simplex_jacobian_product(&p, &ones, &mut jp);
+        for i in 0..9 {
+            assert!(jp[i].abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! KL projection onto the transportation polytope via Sinkhorn — paper
+//! Appendix C.1 "Transportation and Birkhoff polytopes".
+//!
+//! Given a score matrix y ∈ R^{p×q} and marginals (r, c), the KL projection
+//! is P = diag(e^a) ⊙ e^y ⊙ diag(e^b) with potentials (a, b) scaled so that
+//! P1 = r and Pᵀ1 = c — computed with Sinkhorn [Cuturi 28]. The input-side
+//! Jacobian products are obtained by *implicit differentiation of the
+//! potentials* (the paper's "F may itself be implicitly defined" case):
+//! the marginal-residual system is solved with a dense symmetric factor
+//! (gauge-fixed by pinning b_q = 0).
+
+use super::Projection;
+use crate::linalg::lu::Lu;
+use crate::linalg::mat::Mat;
+
+/// Result of a Sinkhorn solve.
+pub struct SinkhornResult {
+    /// Transport plan p×q (row-major).
+    pub plan: Vec<f64>,
+    /// Row potentials a ∈ R^p (log-domain).
+    pub a: Vec<f64>,
+    /// Column potentials b ∈ R^q.
+    pub b: Vec<f64>,
+    pub iterations: usize,
+    pub marginal_err: f64,
+}
+
+/// Log-domain Sinkhorn: match marginals r (len p) and c (len q).
+pub fn sinkhorn(y: &[f64], p: usize, q: usize, r: &[f64], c: &[f64], tol: f64, max_iter: usize) -> SinkhornResult {
+    assert_eq!(y.len(), p * q);
+    let mut a = vec![0.0; p];
+    let mut b = vec![0.0; q];
+    let mut it = 0;
+    let mut err = f64::INFINITY;
+    while it < max_iter {
+        // a_i = log r_i − log Σ_j exp(y_ij + b_j)
+        for i in 0..p {
+            let row = &y[i * q..(i + 1) * q];
+            let m = (0..q).map(|j| row[j] + b[j]).fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + (0..q).map(|j| (row[j] + b[j] - m).exp()).sum::<f64>().ln();
+            a[i] = r[i].ln() - lse;
+        }
+        // b_j = log c_j − log Σ_i exp(y_ij + a_i)
+        for j in 0..q {
+            let m = (0..p).map(|i| y[i * q + j] + a[i]).fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + (0..p).map(|i| (y[i * q + j] + a[i] - m).exp()).sum::<f64>().ln();
+            b[j] = c[j].ln() - lse;
+        }
+        it += 1;
+        // Row-marginal error (columns are exact after the b update).
+        err = 0.0;
+        for i in 0..p {
+            let mut s = 0.0;
+            for j in 0..q {
+                s += (a[i] + y[i * q + j] + b[j]).exp();
+            }
+            err = err.max((s - r[i]).abs());
+        }
+        if err < tol {
+            break;
+        }
+    }
+    let mut plan = vec![0.0; p * q];
+    for i in 0..p {
+        for j in 0..q {
+            plan[i * q + j] = (a[i] + y[i * q + j] + b[j]).exp();
+        }
+    }
+    SinkhornResult { plan, a, b, iterations: it, marginal_err: err }
+}
+
+/// KL projection onto the transportation polytope as a [`Projection`].
+/// θ = (r ‖ c) marginals; y is the (flattened) score matrix.
+pub struct TransportProjection {
+    pub p: usize,
+    pub q: usize,
+    pub tol: f64,
+    pub max_iter: usize,
+}
+
+impl TransportProjection {
+    pub fn new(p: usize, q: usize) -> Self {
+        TransportProjection { p, q, tol: 1e-12, max_iter: 5000 }
+    }
+
+    /// Gauge-fixed potential system: M = [[diag(P1), P],[Pᵀ, diag(Pᵀ1)]]
+    /// with the last row/column dropped (b_q pinned). Symmetric.
+    fn potential_factor(&self, plan: &[f64]) -> Lu {
+        let (p, q) = (self.p, self.q);
+        let n = p + q - 1;
+        let mut m = Mat::zeros(n, n);
+        for i in 0..p {
+            let mut rs = 0.0;
+            for j in 0..q {
+                rs += plan[i * q + j];
+                if j < q - 1 {
+                    *m.at_mut(i, p + j) = plan[i * q + j];
+                    *m.at_mut(p + j, i) = plan[i * q + j];
+                }
+            }
+            *m.at_mut(i, i) = rs;
+        }
+        for j in 0..q - 1 {
+            let mut cs = 0.0;
+            for i in 0..p {
+                cs += plan[i * q + j];
+            }
+            *m.at_mut(p + j, p + j) = cs;
+        }
+        Lu::factor(&m).expect("potential system must be non-singular")
+    }
+
+    /// rhs entries for a direction V: (Σ_j P_ij V_ij; Σ_i P_ij V_ij) gauge-fixed.
+    fn marginal_weighted(&self, plan: &[f64], v: &[f64]) -> Vec<f64> {
+        let (p, q) = (self.p, self.q);
+        let mut out = vec![0.0; p + q - 1];
+        for i in 0..p {
+            for j in 0..q {
+                let pv = plan[i * q + j] * v[i * q + j];
+                out[i] += pv;
+                if j < q - 1 {
+                    out[p + j] += pv;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Projection for TransportProjection {
+    fn dim(&self) -> usize {
+        self.p * self.q
+    }
+    fn dim_theta(&self) -> usize {
+        self.p + self.q
+    }
+    fn project(&self, y: &[f64], t: &[f64], out: &mut [f64]) {
+        let (r, c) = t.split_at(self.p);
+        let res = sinkhorn(y, self.p, self.q, r, c, self.tol, self.max_iter);
+        out.copy_from_slice(&res.plan);
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], v: &[f64], out: &mut [f64]) {
+        let (r, c) = t.split_at(self.p);
+        let res = sinkhorn(y, self.p, self.q, r, c, self.tol, self.max_iter);
+        let lu = self.potential_factor(&res.plan);
+        // Implicit diff of marginal residuals: M (da;db) = −N V.
+        let mut rhs = self.marginal_weighted(&res.plan, v);
+        for x in rhs.iter_mut() {
+            *x = -*x;
+        }
+        let dab = lu.solve(&rhs);
+        let (p, q) = (self.p, self.q);
+        for i in 0..p {
+            for j in 0..q {
+                let db = if j < q - 1 { dab[p + j] } else { 0.0 };
+                out[i * q + j] = res.plan[i * q + j] * (v[i * q + j] + dab[i] + db);
+            }
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], u: &[f64], out: &mut [f64]) {
+        let (r, c) = t.split_at(self.p);
+        let res = sinkhorn(y, self.p, self.q, r, c, self.tol, self.max_iter);
+        let lu = self.potential_factor(&res.plan);
+        // g = N (u ⊙ P) marginals; w = M⁻¹ g (M symmetric); vjp = P⊙u − P⊙(w_i+w_j).
+        let g = self.marginal_weighted(&res.plan, u);
+        let w = lu.solve(&g);
+        let (p, q) = (self.p, self.q);
+        for i in 0..p {
+            for j in 0..q {
+                let wj = if j < q - 1 { w[p + j] } else { 0.0 };
+                out[i * q + j] = res.plan[i * q + j] * (u[i * q + j] - w[i] - wj);
+            }
+        }
+    }
+}
+
+/// Birkhoff polytope (doubly stochastic matrices): uniform marginals 1/d.
+pub fn birkhoff_marginals(d: usize) -> Vec<f64> {
+    vec![1.0 / d as f64; 2 * d]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn uniform_theta(p: usize, q: usize) -> Vec<f64> {
+        let mut t = vec![1.0 / p as f64; p];
+        t.extend(vec![1.0 / q as f64; q]);
+        t
+    }
+
+    #[test]
+    fn sinkhorn_matches_marginals() {
+        let mut rng = Rng::new(1);
+        let (p, q) = (4, 6);
+        let y = rng.normal_vec(p * q);
+        let t = uniform_theta(p, q);
+        let (r, c) = t.split_at(p);
+        let res = sinkhorn(&y, p, q, r, c, 1e-12, 5000);
+        for i in 0..p {
+            let s: f64 = (0..q).map(|j| res.plan[i * q + j]).sum();
+            assert!((s - r[i]).abs() < 1e-10, "row {i}: {s}");
+        }
+        for j in 0..q {
+            let s: f64 = (0..p).map(|i| res.plan[i * q + j]).sum();
+            assert!((s - c[j]).abs() < 1e-10, "col {j}: {s}");
+        }
+    }
+
+    #[test]
+    fn jvp_matches_fd() {
+        let mut rng = Rng::new(2);
+        let (p, q) = (3, 4);
+        let proj = TransportProjection::new(p, q);
+        let t = uniform_theta(p, q);
+        let y = rng.normal_vec(p * q);
+        let v = rng.normal_vec(p * q);
+        let mut jv = vec![0.0; p * q];
+        proj.jvp_y(&y, &t, &v, &mut jv);
+        let fd = crate::ad::num_grad::jvp_fd(|yy| proj.project_vec(yy, &t), &y, &v, 1e-6);
+        for i in 0..p * q {
+            assert!((jv[i] - fd[i]).abs() < 1e-6, "i={i}: {} vs {}", jv[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn vjp_adjoint_identity() {
+        let mut rng = Rng::new(3);
+        let (p, q) = (3, 3);
+        let proj = TransportProjection::new(p, q);
+        let t = uniform_theta(p, q);
+        let y = rng.normal_vec(p * q);
+        let v = rng.normal_vec(p * q);
+        let u = rng.normal_vec(p * q);
+        let mut jv = vec![0.0; p * q];
+        let mut vj = vec![0.0; p * q];
+        proj.jvp_y(&y, &t, &v, &mut jv);
+        proj.vjp_y(&y, &t, &u, &mut vj);
+        let lhs: f64 = u.iter().zip(&jv).map(|(a, b)| a * b).sum();
+        let rhs: f64 = vj.iter().zip(&v).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn birkhoff_is_doubly_stochastic() {
+        let mut rng = Rng::new(4);
+        let d = 5;
+        let proj = TransportProjection::new(d, d);
+        let t = birkhoff_marginals(d);
+        let y = rng.normal_vec(d * d);
+        let plan = proj.project_vec(&y, &t);
+        for i in 0..d {
+            let rs: f64 = (0..d).map(|j| plan[i * d + j]).sum();
+            assert!((rs - 1.0 / d as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn plan_is_nonnegative() {
+        let mut rng = Rng::new(5);
+        let proj = TransportProjection::new(4, 4);
+        let t = uniform_theta(4, 4);
+        let y = rng.normal_vec(16);
+        let plan = proj.project_vec(&y, &t);
+        assert!(plan.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,341 @@
+//! Proximity-operator catalog — paper Appendix C.2.
+//!
+//! Each operator provides `prox` plus analytic Jacobian products in both the
+//! input y and the regularization parameter θ, for use in the
+//! proximal-gradient fixed point (paper Eq. 7).
+
+use crate::ad::num_grad;
+
+/// A parametric proximity operator y ↦ prox_{ηg}(y, θ).
+pub trait Prox {
+    fn dim(&self) -> usize;
+    fn dim_theta(&self) -> usize;
+
+    /// out = prox_{ηg}(y, θ).
+    fn prox(&self, y: &[f64], theta: &[f64], eta: f64, out: &mut [f64]);
+
+    /// out = ∂_y prox · v.
+    fn jvp_y(&self, y: &[f64], theta: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let r = num_grad::jvp_fd(|yy| self.prox_vec(yy, theta, eta), y, v, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_θ prox · v.
+    fn jvp_theta(&self, y: &[f64], theta: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        if self.dim_theta() == 0 {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        let r = num_grad::jvp_fd(|tt| self.prox_vec(y, tt, eta), theta, v, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_y proxᵀ · u.
+    fn vjp_y(&self, y: &[f64], theta: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        let r = num_grad::vjp_fd(|yy| self.prox_vec(yy, theta, eta), y, u, 1e-6);
+        out.copy_from_slice(&r);
+    }
+    /// out = ∂_θ proxᵀ · u.
+    fn vjp_theta(&self, y: &[f64], theta: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        if self.dim_theta() == 0 {
+            return;
+        }
+        let r = num_grad::vjp_fd(|tt| self.prox_vec(y, tt, eta), theta, u, 1e-6);
+        out.copy_from_slice(&r);
+    }
+
+    fn prox_vec(&self, y: &[f64], theta: &[f64], eta: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.prox(y, theta, eta, &mut out);
+        out
+    }
+}
+
+/// Soft-thresholding ST(a, b)_i = sign(a_i)·max(|a_i| − b, 0).
+#[inline]
+pub fn soft_threshold(a: f64, b: f64) -> f64 {
+    a.signum() * (a.abs() - b).max(0.0)
+}
+
+/// Lasso prox: g(x, θ) = θ‖x‖₁ → prox_{ηg}(y) = ST(y, ηθ). θ = [λ].
+pub struct LassoProx {
+    pub d: usize,
+}
+
+impl Prox for LassoProx {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn prox(&self, y: &[f64], t: &[f64], eta: f64, out: &mut [f64]) {
+        let lam = eta * t[0];
+        for i in 0..y.len() {
+            out[i] = soft_threshold(y[i], lam);
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let lam = eta * t[0];
+        for i in 0..y.len() {
+            out[i] = if y[i].abs() > lam { v[i] } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, eta, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let lam = eta * t[0];
+        for i in 0..y.len() {
+            out[i] = if y[i].abs() > lam { -eta * y[i].signum() * v[0] } else { 0.0 };
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        let lam = eta * t[0];
+        out[0] = 0.0;
+        for i in 0..y.len() {
+            if y[i].abs() > lam {
+                out[0] -= eta * y[i].signum() * u[i];
+            }
+        }
+    }
+}
+
+/// Elastic-net prox: g(x, θ) = θ₁‖x‖₁ + θ₂‖x‖²/2 →
+/// prox(y) = ST(y, ηθ₁)/(1 + ηθ₂). θ = [λ₁, λ₂].
+pub struct ElasticNetProx {
+    pub d: usize,
+}
+
+impl Prox for ElasticNetProx {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        2
+    }
+    fn prox(&self, y: &[f64], t: &[f64], eta: f64, out: &mut [f64]) {
+        let (l1, l2) = (eta * t[0], eta * t[1]);
+        let scale = 1.0 / (1.0 + l2);
+        for i in 0..y.len() {
+            out[i] = soft_threshold(y[i], l1) * scale;
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let (l1, l2) = (eta * t[0], eta * t[1]);
+        let scale = 1.0 / (1.0 + l2);
+        for i in 0..y.len() {
+            out[i] = if y[i].abs() > l1 { v[i] * scale } else { 0.0 };
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, eta, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let (l1, l2) = (eta * t[0], eta * t[1]);
+        let scale = 1.0 / (1.0 + l2);
+        for i in 0..y.len() {
+            if y[i].abs() > l1 {
+                let st = soft_threshold(y[i], l1);
+                out[i] = -eta * y[i].signum() * scale * v[0] - st * scale * scale * eta * v[1];
+            } else {
+                out[i] = 0.0;
+            }
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        let (l1, l2) = (eta * t[0], eta * t[1]);
+        let scale = 1.0 / (1.0 + l2);
+        out[0] = 0.0;
+        out[1] = 0.0;
+        for i in 0..y.len() {
+            if y[i].abs() > l1 {
+                let st = soft_threshold(y[i], l1);
+                out[0] -= eta * y[i].signum() * scale * u[i];
+                out[1] -= st * scale * scale * eta * u[i];
+            }
+        }
+    }
+}
+
+/// Group lasso (block soft-thresholding) over contiguous equal-size groups:
+/// prox(y)_g = max(1 − ηθ/‖y_g‖, 0) y_g. θ = [λ].
+pub struct GroupLassoProx {
+    pub d: usize,
+    pub group_size: usize,
+}
+
+impl Prox for GroupLassoProx {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn prox(&self, y: &[f64], t: &[f64], eta: f64, out: &mut [f64]) {
+        let lam = eta * t[0];
+        for (yg, og) in y.chunks(self.group_size).zip(out.chunks_mut(self.group_size)) {
+            let n = crate::linalg::vecops::norm2(yg);
+            let s = if n > lam { 1.0 - lam / n } else { 0.0 };
+            for i in 0..yg.len() {
+                og[i] = s * yg[i];
+            }
+        }
+    }
+    fn jvp_y(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let lam = eta * t[0];
+        for ((yg, vg), og) in y
+            .chunks(self.group_size)
+            .zip(v.chunks(self.group_size))
+            .zip(out.chunks_mut(self.group_size))
+        {
+            let n = crate::linalg::vecops::norm2(yg);
+            if n > lam {
+                // J_g = (1 − λ/n) I + (λ/n³) y_g y_gᵀ
+                let s = 1.0 - lam / n;
+                let yv = crate::linalg::vecops::dot(yg, vg);
+                let coef = lam * yv / (n * n * n);
+                for i in 0..yg.len() {
+                    og[i] = s * vg[i] + coef * yg[i];
+                }
+            } else {
+                og.iter_mut().for_each(|o| *o = 0.0);
+            }
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, eta, u, out); // block Jacobians are symmetric
+    }
+}
+
+/// Quadratic (ridge) prox: g = θ‖x‖²/2 → prox(y) = y/(1 + ηθ).
+pub struct RidgeProx {
+    pub d: usize,
+}
+
+impl Prox for RidgeProx {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn prox(&self, y: &[f64], t: &[f64], eta: f64, out: &mut [f64]) {
+        let s = 1.0 / (1.0 + eta * t[0]);
+        for i in 0..y.len() {
+            out[i] = s * y[i];
+        }
+    }
+    fn jvp_y(&self, _y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let s = 1.0 / (1.0 + eta * t[0]);
+        for i in 0..v.len() {
+            out[i] = s * v[i];
+        }
+    }
+    fn vjp_y(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        self.jvp_y(y, t, eta, u, out);
+    }
+    fn jvp_theta(&self, y: &[f64], t: &[f64], eta: f64, v: &[f64], out: &mut [f64]) {
+        let denom = 1.0 + eta * t[0];
+        let ds = -eta / (denom * denom);
+        for i in 0..y.len() {
+            out[i] = ds * y[i] * v[0];
+        }
+    }
+    fn vjp_theta(&self, y: &[f64], t: &[f64], eta: f64, u: &[f64], out: &mut [f64]) {
+        let denom = 1.0 + eta * t[0];
+        let ds = -eta / (denom * denom);
+        out[0] = ds * crate::linalg::vecops::dot(y, u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_prox_jacobians<P: Prox>(p: &P, theta: &[f64], eta: f64, seed: u64, tol: f64) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..20 {
+            let y = rng.normal_vec(p.dim());
+            let v = rng.normal_vec(p.dim());
+            let mut jv = vec![0.0; p.dim()];
+            p.jvp_y(&y, theta, eta, &v, &mut jv);
+            let fd = crate::ad::num_grad::jvp_fd(|yy| p.prox_vec(yy, theta, eta), &y, &v, 1e-7);
+            for i in 0..p.dim() {
+                assert!((jv[i] - fd[i]).abs() < tol, "jvp_y {i}: {} vs {}", jv[i], fd[i]);
+            }
+            if p.dim_theta() > 0 {
+                let vt = rng.normal_vec(p.dim_theta());
+                let mut jt = vec![0.0; p.dim()];
+                p.jvp_theta(&y, theta, eta, &vt, &mut jt);
+                let fd =
+                    crate::ad::num_grad::jvp_fd(|tt| p.prox_vec(&y, tt, eta), theta, &vt, 1e-7);
+                for i in 0..p.dim() {
+                    assert!((jt[i] - fd[i]).abs() < tol, "jvp_θ {i}: {} vs {}", jt[i], fd[i]);
+                }
+                // adjoint identity for θ-side
+                let u = rng.normal_vec(p.dim());
+                let mut vjt = vec![0.0; p.dim_theta()];
+                p.vjp_theta(&y, theta, eta, &u, &mut vjt);
+                let lhs: f64 = u.iter().zip(&jt).map(|(a, b)| a * b).sum();
+                let rhs: f64 = vjt.iter().zip(&vt).map(|(a, b)| a * b).sum();
+                assert!((lhs - rhs).abs() < 1e-8, "adjoint: {lhs} vs {rhs}");
+            }
+        }
+    }
+
+    #[test]
+    fn soft_threshold_values() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn lasso_prox_jacobians() {
+        check_prox_jacobians(&LassoProx { d: 8 }, &[0.7], 1.0, 1, 1e-6);
+        check_prox_jacobians(&LassoProx { d: 8 }, &[0.3], 0.5, 2, 1e-6);
+    }
+
+    #[test]
+    fn elastic_net_jacobians() {
+        check_prox_jacobians(&ElasticNetProx { d: 8 }, &[0.5, 1.0], 1.0, 3, 1e-6);
+    }
+
+    #[test]
+    fn group_lasso_jacobians() {
+        check_prox_jacobians(&GroupLassoProx { d: 9, group_size: 3 }, &[0.4], 1.0, 4, 1e-6);
+    }
+
+    #[test]
+    fn ridge_prox_jacobians() {
+        check_prox_jacobians(&RidgeProx { d: 6 }, &[2.0], 1.0, 5, 1e-6);
+    }
+
+    #[test]
+    fn prox_is_argmin_certificate() {
+        // For lasso: z = prox(y) must satisfy 0 ∈ z − y + ηθ ∂‖z‖₁.
+        let p = LassoProx { d: 6 };
+        let mut rng = Rng::new(6);
+        let y = rng.normal_vec(6);
+        let theta = [0.8];
+        let z = p.prox_vec(&y, &theta, 1.0);
+        for i in 0..6 {
+            if z[i] != 0.0 {
+                assert!((z[i] - y[i] + theta[0] * z[i].signum()).abs() < 1e-12);
+            } else {
+                assert!(y[i].abs() <= theta[0] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn group_lasso_kills_small_groups() {
+        let p = GroupLassoProx { d: 4, group_size: 2 };
+        let y = [0.1, 0.1, 3.0, 4.0];
+        let z = p.prox_vec(&y, &[1.0], 1.0);
+        assert_eq!(&z[..2], &[0.0, 0.0]);
+        // surviving group shrunk toward origin, direction preserved
+        assert!(z[2] > 0.0 && z[3] > 0.0);
+        assert!((z[3] / z[2] - 4.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts (HLO text, see
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! Python never runs here; the artifacts are produced once by
+//! `make artifacts`.
+//!
+//! Artifact manifest: `artifacts/manifest.json` maps oracle names to files
+//! and shapes. `XlaOracle` adapts an executable pair (eval + jvp products)
+//! into the same [`crate::diff::spec::RootMap`] interface the native Rust
+//! oracles implement — the engine cannot tell the difference, which is the
+//! cleanest possible demonstration of the paper's modularity claim.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (row-major dims per argument).
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Output arity.
+    pub n_outputs: usize,
+}
+
+/// Parsed manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let mut entries = HashMap::new();
+        for item in doc.get("oracles").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = item.str_or("name", "").to_string();
+            let file = item.str_or("file", "").to_string();
+            let in_shapes = item
+                .get("in_shapes")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let n_outputs = item.usize_or("n_outputs", 1);
+            entries.insert(name.clone(), ArtifactEntry { name, file, in_shapes, n_outputs });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+}
+
+/// A compiled XLA executable with f32 I/O helpers.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+/// The runtime: one PJRT CPU client + an executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<XlaExecutable>>>,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(XlaRuntime { client, manifest, cache: Default::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_oracle(&self, name: &str) -> bool {
+        self.manifest.entries.contains_key(name)
+    }
+
+    /// Load (or fetch cached) an executable by oracle name.
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<XlaExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no oracle '{name}' in manifest"))?
+            .clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let wrapped = std::rc::Rc::new(XlaExecutable { exe, entry });
+        self.cache.borrow_mut().insert(name.to_string(), wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Execute an oracle on f64 slices (converted to f32 on the way in and
+    /// back on the way out — the artifacts are compiled in f32).
+    pub fn call(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let exe = self.load(name)?;
+        exe.call_f64(inputs)
+    }
+}
+
+impl XlaExecutable {
+    /// Execute with f64→f32→f64 conversion. Inputs must match the manifest
+    /// shapes elementwise (flattened row-major).
+    pub fn call_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.in_shapes.len(),
+            "oracle '{}' expects {} inputs, got {}",
+            self.entry.name,
+            self.entry.in_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.entry.in_shapes) {
+            let numel: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == numel,
+                "oracle '{}': input size {} != shape {:?}",
+                self.entry.name,
+                data.len(),
+                shape
+            );
+            let f32data: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+            let lit = xla::Literal::vec1(&f32data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{}': {e:?}", self.entry.name))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → decompose the tuple.
+        let mut out_lit = out_lit;
+        let parts = out_lit.decompose_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for part in parts {
+            let v: Vec<f32> = part.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            outs.push(v.into_iter().map(|x| x as f64).collect());
+        }
+        Ok(outs)
+    }
+}
+
+/// Ridge optimality oracle backed by XLA artifacts — implements the same
+/// `RootMap` as the native `ml::ridge::RidgeRoot`, but every product runs
+/// through the AOT-compiled JAX graph (which itself calls the Pallas matmul
+/// kernel). See python/compile/model.py.
+pub struct XlaRidgeRoot<'rt> {
+    pub rt: &'rt XlaRuntime,
+    pub d: usize,
+    /// Flattened m×d design matrix and m targets, fed to the oracles as
+    /// runtime arguments (shared via artifacts/ridge_data.json).
+    pub design: Vec<f64>,
+    pub targets: Vec<f64>,
+}
+
+impl crate::diff::spec::RootMap for XlaRidgeRoot<'_> {
+    fn dim_x(&self) -> usize {
+        self.d
+    }
+    fn dim_theta(&self) -> usize {
+        self.d
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        let r = self
+            .rt
+            .call("ridge_f", &[x, theta, &self.design, &self.targets])
+            .expect("ridge_f oracle");
+        out.copy_from_slice(&r[0]);
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = self
+            .rt
+            .call("ridge_f_jvp_x", &[x, theta, v, &self.design, &self.targets])
+            .expect("ridge_f_jvp_x oracle");
+        out.copy_from_slice(&r[0]);
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.jvp_x(x, theta, u, out); // Hessian symmetric
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        let r = self.rt.call("ridge_f_jvp_theta", &[x, theta, v]).expect("ridge_f_jvp_theta");
+        out.copy_from_slice(&r[0]);
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        // For ridge, ∂₂F = diag(x) is symmetric too.
+        self.jvp_theta(x, theta, u, out);
+    }
+    fn a_symmetric(&self) -> bool {
+        true
+    }
+}
+
+/// Default artifacts directory (env override: IDIFF_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("IDIFF_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("idiff_manifest_test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"oracles": [{"name": "f", "file": "f.hlo.txt", "in_shapes": [[4], [4]], "n_outputs": 1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = &m.entries["f"];
+        assert_eq!(e.in_shapes, vec![vec![4], vec![4]]);
+        assert_eq!(e.n_outputs, 1);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("idiff_no_such_dir_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! FIRE (Fast Inertial Relaxation Engine) [Bitzek et al. 2006, ref 15] —
+//! the domain-specific structural-relaxation optimizer the paper's molecular
+//! dynamics experiment minimizes energy with (§4.4). Deliberately
+//! discontinuous (velocity resets), which is exactly why unrolling through
+//! it diverges while implicit differentiation does not (Fig. 17).
+
+use super::SolveTrace;
+use crate::linalg::vecops;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FireConfig {
+    pub dt_start: f64,
+    pub dt_max: f64,
+    pub n_min: usize,
+    pub f_inc: f64,
+    pub f_dec: f64,
+    pub alpha_start: f64,
+    pub f_alpha: f64,
+    pub max_iter: usize,
+    pub force_tol: f64,
+}
+
+impl Default for FireConfig {
+    fn default() -> Self {
+        FireConfig {
+            dt_start: 0.1,
+            dt_max: 0.4,
+            n_min: 5,
+            f_inc: 1.1,
+            f_dec: 0.5,
+            alpha_start: 0.1,
+            f_alpha: 0.99,
+            max_iter: 4000,
+            force_tol: 1e-10,
+        }
+    }
+}
+
+/// Minimize an energy given its force oracle (−∇E). `force(x, out)`.
+pub fn fire_minimize(
+    force: impl Fn(&[f64], &mut [f64]),
+    x0: &[f64],
+    cfg: &FireConfig,
+) -> (Vec<f64>, SolveTrace) {
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut v = vec![0.0; d];
+    let mut f = vec![0.0; d];
+    let mut dt = cfg.dt_start;
+    let mut alpha = cfg.alpha_start;
+    let mut n_pos = 0usize;
+    let mut trace = SolveTrace::default();
+    force(&x, &mut f);
+    for it in 0..cfg.max_iter {
+        // Velocity-Verlet step.
+        for i in 0..d {
+            v[i] += dt * f[i];
+            x[i] += dt * v[i];
+        }
+        force(&x, &mut f);
+        let p = vecops::dot(&f, &v);
+        let fnorm = vecops::norm2(&f).max(1e-300);
+        let vnorm = vecops::norm2(&v);
+        if p > 0.0 {
+            // Mix velocity toward the force direction.
+            for i in 0..d {
+                v[i] = (1.0 - alpha) * v[i] + alpha * vnorm * f[i] / fnorm;
+            }
+            n_pos += 1;
+            if n_pos > cfg.n_min {
+                dt = (dt * cfg.f_inc).min(cfg.dt_max);
+                alpha *= cfg.f_alpha;
+            }
+        } else {
+            // Uphill: stop dead (the discontinuity).
+            v.iter_mut().for_each(|vi| *vi = 0.0);
+            dt *= cfg.f_dec;
+            alpha = cfg.alpha_start;
+            n_pos = 0;
+        }
+        trace.iterations = it + 1;
+        trace.values.push(fnorm);
+        if fnorm < cfg.force_tol {
+            trace.converged = true;
+            break;
+        }
+    }
+    (x, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_bowl() {
+        // E = ½‖x − a‖², force = a − x.
+        let a = [1.0, -2.0, 0.5];
+        let force = |x: &[f64], out: &mut [f64]| {
+            for i in 0..3 {
+                out[i] = a[i] - x[i];
+            }
+        };
+        let (x, trace) = fire_minimize(force, &[5.0, 5.0, 5.0], &FireConfig::default());
+        assert!(trace.converged, "{trace:?}");
+        for i in 0..3 {
+            assert!((x[i] - a[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn handles_nonconvex_double_well() {
+        // E = (x² − 1)², force = −4x(x² − 1); minima at ±1.
+        let force = |x: &[f64], out: &mut [f64]| {
+            out[0] = -4.0 * x[0] * (x[0] * x[0] - 1.0);
+        };
+        let (x, trace) = fire_minimize(force, &[0.3], &FireConfig::default());
+        assert!(trace.converged);
+        assert!((x[0].abs() - 1.0).abs() < 1e-7, "x = {}", x[0]);
+    }
+
+    #[test]
+    fn force_norm_decreases_overall() {
+        let force = |x: &[f64], out: &mut [f64]| {
+            for i in 0..x.len() {
+                out[i] = -x[i] * (1.0 + 0.1 * (i as f64));
+            }
+        };
+        let (_, trace) = fire_minimize(force, &[2.0, -3.0, 1.0, 0.7], &FireConfig::default());
+        assert!(trace.converged);
+        let first = trace.values[0];
+        let last = *trace.values.last().unwrap();
+        assert!(last < first * 1e-6);
+    }
+}

@@ -1,0 +1,151 @@
+//! Gradient descent with fixed step or backtracking line search.
+
+use super::SolveTrace;
+use crate::linalg::vecops;
+use crate::mappings::objective::Objective;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GdConfig {
+    pub step: f64,
+    pub max_iter: usize,
+    pub tol: f64,
+    /// Enable Armijo backtracking (halving) from `step`.
+    pub backtracking: bool,
+}
+
+impl Default for GdConfig {
+    fn default() -> Self {
+        GdConfig { step: 1e-2, max_iter: 1000, tol: 1e-10, backtracking: false }
+    }
+}
+
+/// Minimize f(·, θ) from x0. Returns (x, trace).
+pub fn gradient_descent<O: Objective>(
+    obj: &O,
+    x0: &[f64],
+    theta: &[f64],
+    cfg: &GdConfig,
+) -> (Vec<f64>, SolveTrace) {
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; d];
+    let mut trace = SolveTrace::default();
+    // Backtracking keeps the accepted step across iterations (doubling it at
+    // the start of each), so the search settles near 1/L quickly.
+    let mut eta_carry = cfg.step;
+    for it in 0..cfg.max_iter {
+        obj.grad_x(&x, theta, &mut g);
+        let gn = vecops::norm2(&g);
+        trace.iterations = it + 1;
+        if gn < cfg.tol {
+            trace.converged = true;
+            break;
+        }
+        if cfg.backtracking {
+            let f0 = obj.value(&x, theta);
+            let mut eta = (eta_carry * 2.0).min(cfg.step);
+            let gsq = gn * gn;
+            // Armijo: f(x − ηg) ≤ f(x) − ½η‖g‖²
+            for _ in 0..60 {
+                let cand: Vec<f64> = (0..d).map(|i| x[i] - eta * g[i]).collect();
+                if obj.value(&cand, theta) <= f0 - 0.5 * eta * gsq {
+                    x = cand;
+                    eta_carry = eta;
+                    break;
+                }
+                eta *= 0.5;
+            }
+        } else {
+            vecops::axpy(-cfg.step, &g, &mut x);
+        }
+    }
+    (x, trace)
+}
+
+/// Run exactly `iters` fixed-step GD iterations (no stopping) — used by the
+/// Fig. 3 error study, which needs the iterate after t steps.
+pub fn gd_fixed_iters<O: Objective>(
+    obj: &O,
+    x0: &[f64],
+    theta: &[f64],
+    step: f64,
+    iters: usize,
+) -> Vec<f64> {
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; d];
+    for _ in 0..iters {
+        obj.grad_x(&x, theta, &mut g);
+        vecops::axpy(-step, &g, &mut x);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::mappings::objective::QuadObjective;
+    use crate::util::rng::Rng;
+
+    fn quad(seed: u64, d: usize) -> QuadObjective {
+        let mut rng = Rng::new(seed);
+        QuadObjective {
+            q: Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0),
+            r: Mat::randn(d, 1, &mut rng),
+            c: rng.normal_vec(d),
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let obj = quad(1, 6);
+        let theta = [0.5];
+        let (x, trace) = gradient_descent(
+            &obj,
+            &vec![0.0; 6],
+            &theta,
+            &GdConfig { step: 0.05, max_iter: 20_000, tol: 1e-10, backtracking: false },
+        );
+        assert!(trace.converged, "{trace:?}");
+        let g = obj.grad_x_vec(&x, &theta);
+        assert!(vecops::norm2(&g) < 1e-9);
+    }
+
+    #[test]
+    fn backtracking_handles_large_initial_step() {
+        let obj = quad(2, 5);
+        let theta = [0.0];
+        let (x, trace) = gradient_descent(
+            &obj,
+            &vec![0.0; 5],
+            &theta,
+            &GdConfig { step: 100.0, max_iter: 5000, tol: 1e-6, backtracking: true },
+        );
+        let gn = vecops::norm2(&obj.grad_x_vec(&x, &theta));
+        assert!(trace.converged, "iters={} gn={gn}", trace.iterations);
+        assert!(vecops::norm2(&obj.grad_x_vec(&x, &theta)) < 1e-5);
+    }
+
+    #[test]
+    fn fixed_iters_monotone_error_decay() {
+        let obj = quad(3, 4);
+        let theta = [1.0];
+        let (x_star, _) = gradient_descent(
+            &obj,
+            &vec![0.0; 4],
+            &theta,
+            &GdConfig { step: 0.05, max_iter: 50_000, tol: 1e-12, backtracking: false },
+        );
+        let mut last = f64::INFINITY;
+        for iters in [5, 20, 80, 320] {
+            let x = gd_fixed_iters(&obj, &vec![0.0; 4], &theta, 0.05, iters);
+            let err = vecops::norm2(&vecops::sub(&x, &x_star));
+            assert!(
+                err < last || err < 1e-11,
+                "iters={iters}: {err} !< {last}"
+            );
+            last = err;
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Mirror descent under the KL geometry over products of simplices — the
+//! inner solver of Fig. 4(a) (step 1.0 for 100 steps then inverse-sqrt decay,
+//! per the paper's Appendix F.1 setup).
+
+use super::SolveTrace;
+use crate::mappings::mirror::MirrorGeometry;
+use crate::mappings::objective::Objective;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MirrorDescentConfig {
+    pub step0: f64,
+    /// Steps before inverse-sqrt decay kicks in.
+    pub warmup: usize,
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for MirrorDescentConfig {
+    fn default() -> Self {
+        MirrorDescentConfig { step0: 1.0, warmup: 100, max_iter: 2500, tol: 1e-12 }
+    }
+}
+
+/// Minimize f(·, θ) over the geometry's domain from x0.
+pub fn mirror_descent<O: Objective, G: MirrorGeometry>(
+    obj: &O,
+    geom: &G,
+    x0: &[f64],
+    theta: &[f64],
+    cfg: &MirrorDescentConfig,
+) -> (Vec<f64>, SolveTrace) {
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; d];
+    let mut xhat = vec![0.0; d];
+    let mut y = vec![0.0; d];
+    let mut x_new = vec![0.0; d];
+    let mut trace = SolveTrace::default();
+    for it in 0..cfg.max_iter {
+        let eta = if it < cfg.warmup {
+            cfg.step0
+        } else {
+            cfg.step0 / ((it - cfg.warmup + 1) as f64).sqrt()
+        };
+        obj.grad_x(&x, theta, &mut g);
+        geom.mirror_map(&x, &mut xhat);
+        for i in 0..d {
+            y[i] = xhat[i] - eta * g[i];
+        }
+        geom.bregman_project(&y, &mut x_new);
+        let mut delta = 0.0;
+        for i in 0..d {
+            delta += (x_new[i] - x[i]) * (x_new[i] - x[i]);
+        }
+        x.copy_from_slice(&x_new);
+        trace.iterations = it + 1;
+        if delta.sqrt() < cfg.tol {
+            trace.converged = true;
+            break;
+        }
+    }
+    (x, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::mappings::mirror::KlSimplexRows;
+    use crate::mappings::objective::QuadObjective;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stays_on_simplex_and_reduces_objective() {
+        let (m, k) = (4, 3);
+        let d = m * k;
+        let mut rng = Rng::new(1);
+        let obj = QuadObjective {
+            q: Mat::randn(d + 2, d, &mut rng).gram().plus_diag(0.1),
+            r: Mat::randn(d, 2, &mut rng),
+            c: rng.normal_vec(d),
+        };
+        let geom = KlSimplexRows { m, k };
+        let theta = [0.3, -0.1];
+        let x0 = vec![1.0 / k as f64; d];
+        let f0 = obj.value(&x0, &theta);
+        let (x, _) = mirror_descent(&obj, &geom, &x0, &theta, &MirrorDescentConfig::default());
+        assert!(obj.value(&x, &theta) < f0);
+        for r in 0..m {
+            let s: f64 = x[r * k..(r + 1) * k].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(x[r * k..(r + 1) * k].iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn linear_objective_concentrates_on_best_vertex() {
+        let (m, k) = (1, 5);
+        let d = k;
+        let q = Mat::zeros(d, d).plus_diag(1e-9);
+        let r = Mat::from_fn(d, 1, |i, _| if i == 2 { -5.0 } else { 1.0 });
+        let obj = QuadObjective { q, r, c: vec![0.0; d] };
+        let geom = KlSimplexRows { m, k };
+        let (x, _) = mirror_descent(
+            &obj,
+            &geom,
+            &vec![0.2; 5],
+            &[1.0],
+            &MirrorDescentConfig { max_iter: 4000, ..Default::default() },
+        );
+        assert!(x[2] > 0.99, "x = {x:?}");
+    }
+}

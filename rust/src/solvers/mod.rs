@@ -1,0 +1,26 @@
+//! Inner solvers — the black boxes that implicit differentiation is added
+//! *on top of* (the paper's whole point: these are interchangeable with any
+//! optimality mapping).
+//!
+//! - [`gd`]: gradient descent with optional backtracking line search
+//! - [`prox_gd`]: proximal gradient / FISTA (accelerated)
+//! - [`mirror`]: mirror descent under the KL geometry
+//! - [`bcd`]: block coordinate descent over simplex blocks (SVM dual)
+//! - [`fire`]: the FIRE structural-relaxation optimizer [Bitzek et al., 15]
+//! - [`frank_wolfe`]: Frank–Wolfe over the simplex (paper Appendix A)
+
+pub mod bcd;
+pub mod fire;
+pub mod frank_wolfe;
+pub mod gd;
+pub mod mirror;
+pub mod prox_gd;
+
+/// Common solver telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct SolveTrace {
+    pub iterations: usize,
+    /// Objective (or residual) value per logged step.
+    pub values: Vec<f64>,
+    pub converged: bool,
+}

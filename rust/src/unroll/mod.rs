@@ -1,0 +1,164 @@
+//! The unrolling baseline (paper §1, Figs. 3/4/13/16/17): differentiate
+//! *through* the solver iterations instead of using the implicit function
+//! theorem.
+//!
+//! Forward-mode unrolling propagates the tangent dx_{t+1} = ∂₁T dx_t + ∂₂T dθ
+//! alongside the iterate — exactly what JAX's forward-mode would do through
+//! the loop, expressed with the same JVP oracles the implicit path uses, so
+//! runtime comparisons are apples-to-apples. The reverse-mode memory model
+//! (iterations × state) drives the Fig. 13 OOM simulation.
+
+use crate::diff::spec::FixedPointMap;
+
+/// Forward-mode unrolled differentiation of x_{t+1} = T(x_t, θ).
+/// Returns (x_T, ∂x_T/∂θ · v_theta).
+pub fn unroll_jvp<T: FixedPointMap>(
+    t: &T,
+    x0: &[f64],
+    theta: &[f64],
+    v_theta: &[f64],
+    iters: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut dx = vec![0.0; d];
+    let mut x_next = vec![0.0; d];
+    let mut j1 = vec![0.0; d];
+    let mut j2 = vec![0.0; d];
+    for _ in 0..iters {
+        t.eval(&x, theta, &mut x_next);
+        t.jvp_x(&x, theta, &dx, &mut j1);
+        t.jvp_theta(&x, theta, v_theta, &mut j2);
+        for i in 0..d {
+            dx[i] = j1[i] + j2[i];
+        }
+        std::mem::swap(&mut x, &mut x_next);
+    }
+    (x, dx)
+}
+
+/// Forward-mode unrolled solve only (no tangent) — shared baseline runner.
+pub fn unroll_solve<T: FixedPointMap>(t: &T, x0: &[f64], theta: &[f64], iters: usize) -> Vec<f64> {
+    let mut x = x0.to_vec();
+    let mut x_next = vec![0.0; x.len()];
+    for _ in 0..iters {
+        t.eval(&x, theta, &mut x_next);
+        std::mem::swap(&mut x, &mut x_next);
+    }
+    x
+}
+
+/// Reverse-mode unrolling: backpropagate v through the iterations.
+/// Requires storing all iterates (the memory cost the paper highlights).
+/// Returns vᵀ ∂x_T/∂θ.
+pub fn unroll_vjp<T: FixedPointMap>(
+    t: &T,
+    x0: &[f64],
+    theta: &[f64],
+    v: &[f64],
+    iters: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let d = x0.len();
+    let n = t.dim_theta();
+    // Forward pass: store every iterate (O(iters × d) memory — Fig. 13).
+    let mut trajectory = Vec::with_capacity(iters + 1);
+    trajectory.push(x0.to_vec());
+    let mut x = x0.to_vec();
+    let mut x_next = vec![0.0; d];
+    for _ in 0..iters {
+        t.eval(&x, theta, &mut x_next);
+        x.copy_from_slice(&x_next);
+        trajectory.push(x.clone());
+    }
+    // Backward pass.
+    let mut bar = v.to_vec(); // adjoint of x_t
+    let mut grad_theta = vec![0.0; n];
+    let mut tmp_x = vec![0.0; d];
+    let mut tmp_t = vec![0.0; n];
+    for step in (0..iters).rev() {
+        let x_t = &trajectory[step];
+        t.vjp_theta(x_t, theta, &bar, &mut tmp_t);
+        for i in 0..n {
+            grad_theta[i] += tmp_t[i];
+        }
+        t.vjp_x(x_t, theta, &bar, &mut tmp_x);
+        bar.copy_from_slice(&tmp_x);
+    }
+    (trajectory.pop().unwrap(), grad_theta)
+}
+
+/// Reverse-mode unrolling memory model (bytes): storing `iters` iterates of
+/// `state_dim` f32 values on device — the quantity that hits the 16 GB GPU
+/// budget in paper Fig. 13.
+pub fn reverse_memory_bytes(iters: usize, state_dim: usize, bytes_per_scalar: usize) -> u64 {
+    (iters as u64) * (state_dim as u64) * (bytes_per_scalar as u64)
+}
+
+/// Would reverse-mode unrolling OOM on a device with `budget_bytes`?
+pub fn unroll_ooms(iters: usize, state_dim: usize, bytes_per_scalar: usize, budget_bytes: u64) -> bool {
+    reverse_memory_bytes(iters, state_dim, bytes_per_scalar) > budget_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::spec::FixedPointMap;
+
+    /// T(x, θ) = 0.5x + θ → x* = 2θ, ∂x* = 2.
+    struct Affine;
+    impl FixedPointMap for Affine {
+        fn dim_x(&self) -> usize {
+            1
+        }
+        fn dim_theta(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * x[0] + theta[0];
+        }
+        fn jvp_x(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * v[0];
+        }
+        fn vjp_x(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * u[0];
+        }
+        fn jvp_theta(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+            out[0] = v[0];
+        }
+        fn vjp_theta(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+            out[0] = u[0];
+        }
+    }
+
+    #[test]
+    fn forward_unroll_converges_to_true_derivative() {
+        let (x, dx) = unroll_jvp(&Affine, &[0.0], &[3.0], &[1.0], 100);
+        assert!((x[0] - 6.0).abs() < 1e-9);
+        assert!((dx[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncated_unroll_underestimates() {
+        // After few iterations the unrolled derivative is biased toward 0 —
+        // the effect behind Fig. 3's unrolling curve.
+        let (_, dx3) = unroll_jvp(&Affine, &[0.0], &[3.0], &[1.0], 3);
+        assert!(dx3[0] < 2.0);
+        let (_, dx10) = unroll_jvp(&Affine, &[0.0], &[3.0], &[1.0], 10);
+        assert!(dx10[0] > dx3[0]);
+    }
+
+    #[test]
+    fn reverse_unroll_matches_forward() {
+        let (_, dx) = unroll_jvp(&Affine, &[0.0], &[3.0], &[1.0], 50);
+        let (_, gt) = unroll_vjp(&Affine, &[0.0], &[3.0], &[1.0], 50);
+        assert!((dx[0] - gt[0]).abs() < 1e-10, "{} vs {}", dx[0], gt[0]);
+    }
+
+    #[test]
+    fn memory_model() {
+        // 2500 iters × 700×5 f32 state ≈ 35 MB; definitely no OOM at 16 GiB.
+        assert!(!unroll_ooms(2500, 3500, 4, 16 * (1 << 30)));
+        // but a 10⁷-dim state at 2500 iters is 100 GB → OOM.
+        assert!(unroll_ooms(2500, 10_000_000, 4, 16 * (1 << 30)));
+    }
+}

@@ -1,0 +1,147 @@
+//! Wall-clock micro-benchmark harness (criterion is not available offline).
+//!
+//! `Bench` runs warmup iterations, then measures a configurable number of
+//! samples and reports mean ± CI plus median. `Series` accumulates
+//! (x, mean, ci) rows for figure regeneration and can be dumped as CSV and
+//! JSON into `results/`.
+
+use super::stats;
+use super::timer::{fmt_duration, Timer};
+use crate::util::json::Json;
+use std::hint::black_box as bb;
+
+/// Re-export of `std::hint::black_box` so benches don't depend on nightly.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Configuration for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Inner repetitions per sample (for very fast functions).
+    pub reps_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, samples: 10, reps_per_sample: 1 }
+    }
+}
+
+/// Result of one measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-sample seconds (already divided by reps_per_sample).
+    pub samples_s: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples_s)
+    }
+    /// 90% CI half-width (matches the paper's Fig. 4 error bars).
+    pub fn ci90_s(&self) -> f64 {
+        stats::ci_half_width(&self.samples_s, 1.645)
+    }
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10} (median {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean_s()),
+            fmt_duration(self.ci90_s()),
+            fmt_duration(self.median_s()),
+            self.samples_s.len()
+        )
+    }
+}
+
+/// Run one benchmark.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        bb(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t = Timer::start();
+        for _ in 0..cfg.reps_per_sample {
+            bb(f());
+        }
+        samples.push(t.elapsed_s() / cfg.reps_per_sample.max(1) as f64);
+    }
+    let m = Measurement { name: name.to_string(), samples_s: samples };
+    println!("{}", m.report());
+    m
+}
+
+/// A labelled series of (x, value, ci) rows — one paper curve.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub label: String,
+    pub rows: Vec<(f64, f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str) -> Series {
+        Series { label: label.to_string(), rows: Vec::new() }
+    }
+    pub fn push(&mut self, x: f64, y: f64, ci: f64) {
+        self.rows.push((x, y, ci));
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("x", Json::arr_f64(&self.rows.iter().map(|r| r.0).collect::<Vec<_>>())),
+            ("y", Json::arr_f64(&self.rows.iter().map(|r| r.1).collect::<Vec<_>>())),
+            ("ci", Json::arr_f64(&self.rows.iter().map(|r| r.2).collect::<Vec<_>>())),
+        ])
+    }
+}
+
+/// Write a set of series (one figure) to `results/<name>.json` and
+/// `results/<name>.csv`, creating the directory if needed.
+pub fn write_figure(name: &str, series: &[Series]) {
+    let _ = std::fs::create_dir_all("results");
+    let json = Json::obj(vec![
+        ("figure", Json::Str(name.to_string())),
+        ("series", Json::Arr(series.iter().map(Series::to_json).collect())),
+    ]);
+    let _ = std::fs::write(format!("results/{name}.json"), json.to_string_pretty());
+    let mut csv = String::from("label,x,y,ci\n");
+    for s in series {
+        for (x, y, ci) in &s.rows {
+            csv.push_str(&format!("{},{},{},{}\n", s.label, x, y, ci));
+        }
+    }
+    let _ = std::fs::write(format!("results/{name}.csv"), csv);
+    println!("[results] wrote results/{name}.json and .csv");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig { warmup_iters: 1, samples: 3, reps_per_sample: 2 };
+        let m = bench("noop-sum", cfg, || (0..1000u64).sum::<u64>());
+        assert_eq!(m.samples_s.len(), 3);
+        assert!(m.mean_s() >= 0.0);
+        assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn series_json_shape() {
+        let mut s = Series::new("implicit");
+        s.push(100.0, 0.5, 0.01);
+        s.push(200.0, 0.7, 0.02);
+        let j = s.to_json();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("implicit"));
+        assert_eq!(j.get("x").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `program <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 100,250,500`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse_from(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a trailing non-dashed token after a bare --flag would be
+        // consumed as its value (greedy grammar), so --verbose goes last.
+        let a = parse(&["run", "--exp", "fig3", "--seed=7", "extra", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("exp"), Some("fig3"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_usize("n", 5), 5);
+        assert_eq!(a.get_f64("lr", 0.1), 0.1);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["x", "--sizes", "100,250,500"]);
+        assert_eq!(a.get_usize_list("sizes", &[1]), vec![100, 250, 500]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["x", "--lr", "-0.5"]);
+        // "-0.5" does not start with "--" so it is consumed as a value.
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment has no network access to crates.io, so substrates
+//! that a framework would normally pull in as dependencies (PRNG, JSON,
+//! CLI parsing, bench harness, property testing, thread pool) are implemented
+//! here from scratch, each with its own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;
+pub mod timer;

@@ -1,0 +1,81 @@
+//! Scoped thread-pool substrate (tokio/rayon unavailable offline).
+//!
+//! Provides `parallel_for_each` — split a work list across worker threads with
+//! captured closures — used by the coordinator to fan experiments out. On a
+//! single-core box this degrades gracefully to (nearly) serial execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every i in 0..n across `workers` threads (work-stealing via
+/// an atomic counter). Results are collected in index order.
+pub fn parallel_map<T: Send>(n: usize, workers: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let workers = workers.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker did not produce a result"))
+        .collect()
+}
+
+/// Fire-and-collect variant without results.
+pub fn parallel_for_each(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
+    let _ = parallel_map(n, workers, |i| {
+        f(i);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn covers_all_work_items() {
+        let counter = AtomicU64::new(0);
+        parallel_for_each(1000, 8, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn zero_items_ok() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_serial() {
+        let out = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+}

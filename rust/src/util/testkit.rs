@@ -1,0 +1,175 @@
+//! Mini property-based-testing kit (proptest is not available offline).
+//!
+//! `Gen<T>` generators produce random values from an `Rng`; `check` runs a
+//! property over many cases and, on failure, performs greedy shrinking (for
+//! the built-in numeric/vector generators) before panicking with the minimal
+//! counter-example found.
+
+use super::rng::Rng;
+
+/// A generator of values of type T.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    /// Produce "smaller" candidate values for shrinking (may be empty).
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + std::fmt::Debug + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Gen<T> {
+        Gen { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Gen<T> {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Map the generated value (loses shrinking).
+    pub fn map<U: Clone + std::fmt::Debug + 'static>(
+        self,
+        f: impl Fn(T) -> U + 'static,
+    ) -> Gen<U> {
+        Gen::new(move |r| f((self.gen)(r)))
+    }
+}
+
+/// f64 in [lo, hi), shrinks toward lo and 0.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |r| r.uniform_in(lo, hi)).with_shrink(move |&x| {
+        let mut c = Vec::new();
+        if x != 0.0 && lo <= 0.0 && 0.0 < hi {
+            c.push(0.0);
+        }
+        let halved = lo + (x - lo) / 2.0;
+        if (halved - x).abs() > 1e-12 {
+            c.push(halved);
+        }
+        c
+    })
+}
+
+/// usize in [lo, hi), shrinks toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo < hi);
+    Gen::new(move |r| lo + r.below(hi - lo)).with_shrink(move |&x| {
+        let mut c = Vec::new();
+        if x > lo {
+            c.push(lo);
+            c.push(lo + (x - lo) / 2);
+        }
+        c.dedup();
+        c
+    })
+}
+
+/// Vector of n iid standard normals (n drawn in [nlo, nhi)).
+/// Shrinks by halving length and zeroing entries.
+pub fn normal_vec(nlo: usize, nhi: usize) -> Gen<Vec<f64>> {
+    assert!(nlo < nhi);
+    Gen::new(move |r| {
+        let n = nlo + r.below(nhi - nlo);
+        r.normal_vec(n)
+    })
+    .with_shrink(move |v| {
+        let mut c = Vec::new();
+        if v.len() > nlo.max(1) {
+            c.push(v[..v.len() / 2].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            c.push(vec![0.0; v.len()]);
+        }
+        c
+    })
+}
+
+/// Pair generator (no shrinking across components).
+pub fn pair<A, B>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)>
+where
+    A: Clone + std::fmt::Debug + 'static,
+    B: Clone + std::fmt::Debug + 'static,
+{
+    Gen::new(move |r| (a.sample(r), b.sample(r)))
+}
+
+/// Run `prop` on `cases` random inputs; on failure shrink greedily and panic
+/// with the smallest failing input.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy shrink.
+        let mut current = input;
+        let mut improved = true;
+        let mut steps = 0;
+        while improved && steps < 200 {
+            improved = false;
+            for cand in (gen.shrink)(&current) {
+                if !prop(&cand) {
+                    current = cand;
+                    improved = true;
+                    steps += 1;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property '{name}' failed at case {case} (seed {seed}).\n\
+             minimal counter-example after {steps} shrink steps:\n{current:#?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("abs-nonneg", 1, 200, &f64_in(-10.0, 10.0), |&x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        check("always-false", 1, 10, &usize_in(0, 5), |_| false);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrinks_toward_zero() {
+        // Fails for any x > 0.5; minimal shrink halves toward lo = 0.
+        check("lt-half", 2, 500, &f64_in(0.0, 1.0), |&x| x <= 0.5);
+    }
+
+    #[test]
+    fn vec_generator_in_bounds() {
+        let g = normal_vec(1, 16);
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = g.sample(&mut r);
+            assert!((1..16).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn pair_generator() {
+        let g = pair(usize_in(0, 4), f64_in(0.0, 1.0));
+        let mut r = Rng::new(4);
+        let (a, b) = g.sample(&mut r);
+        assert!(a < 4);
+        assert!((0.0..1.0).contains(&b));
+    }
+}

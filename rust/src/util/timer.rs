@@ -1,0 +1,62 @@
+//! Wall-clock timing helpers used by the bench harness and coordinator.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    /// Elapsed milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeit_returns_value() {
+        let (v, dt) = timeit(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-6).ends_with("µs"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+}
