@@ -1,4 +1,8 @@
-//! Regenerates paper Fig. 15: SVM Jacobian error vs solution error.
+//! Regenerates paper Fig. 15: SVM Jacobian error vs solution error, through
+//! the batched implicit-diff engine. Also times the multi-cotangent block
+//! solve against the column-by-column VJP loop on the largest problem
+//! (`--cotangents k`, default 8) — the wall-time row in EXPERIMENTS.md
+//! §Perf — and checks the two paths agree.
 use idiff::coordinator::experiments::fig15;
 use idiff::util::cli::Args;
 

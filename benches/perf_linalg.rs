@@ -1,44 +1,97 @@
-//! §Perf micro-benchmarks for the L3 hot paths: gemm, gemv, CG iterations,
-//! simplex projection, softmax rows. Used to drive the optimization pass
-//! recorded in EXPERIMENTS.md §Perf.
-use idiff::linalg::{op::DenseOp, Mat};
-use idiff::util::bench::{bench, black_box, BenchConfig};
+//! §Perf micro-benchmarks for the L3 hot paths: packed parallel gemm (with
+//! GFLOP/s), gemv, CG, block-CG vs column-by-column multi-RHS solves,
+//! simplex projection, softmax rows. Results are printed AND journaled to
+//! `BENCH_linalg.json` so the perf trajectory is tracked across PRs — the
+//! numbers land in EXPERIMENTS.md §Perf.
+use idiff::linalg::{cg, op::DenseOp, Mat};
+use idiff::util::bench::{bench, black_box, BenchConfig, BenchJournal};
 use idiff::util::cli::Args;
+use idiff::util::json::Json;
 use idiff::util::rng::Rng;
 
 fn main() {
     let args = Args::parse();
     let n = args.get_usize("n", 256);
+    let k = args.get_usize("k", 8);
     let mut rng = Rng::new(1);
     let a = Mat::randn(n, n, &mut rng);
     let b = Mat::randn(n, n, &mut rng);
     let spd = a.gram().plus_diag(1.0);
     let v = rng.normal_vec(n);
     let cfg = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 1 };
+    let mut journal = BenchJournal::new();
 
-    let flops = 2.0 * (n as f64).powi(3);
+    let flops3 = 2.0 * (n as f64).powi(3);
     let m = bench(&format!("gemm {n}x{n}x{n}"), cfg, || black_box(a.matmul(&b)));
-    println!("  → {:.2} GFLOP/s", flops / m.mean_s() / 1e9);
-    bench(&format!("gemm-t {n}x{n}x{n} (AᵀB)"), cfg, || black_box(a.t_matmul(&b)));
-    bench(&format!("gram {n}x{n}"), cfg, || black_box(a.gram()));
+    println!("  → {:.2} GFLOP/s", flops3 / m.mean_s() / 1e9);
+    journal.record(&m, Some(flops3));
+    let m = bench(&format!("gemm-t {n}x{n}x{n} (AᵀB)"), cfg, || black_box(a.t_matmul(&b)));
+    println!("  → {:.2} GFLOP/s", flops3 / m.mean_s() / 1e9);
+    journal.record(&m, Some(flops3));
+    let m = bench(&format!("gram {n}x{n}"), cfg, || black_box(a.gram()));
+    journal.record(&m, Some(flops3));
+
     let cfg_fast = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 50 };
-    bench(&format!("gemv {n}x{n}"), cfg_fast, || black_box(a.matvec(&v)));
-    bench(&format!("gemv-t {n}x{n}"), cfg_fast, || black_box(a.matvec_t(&v)));
-    bench(&format!("cg solve {n} (tol 1e-10)"), cfg, || {
+    let flops2 = 2.0 * (n as f64).powi(2);
+    let m = bench(&format!("gemv {n}x{n}"), cfg_fast, || black_box(a.matvec(&v)));
+    println!("  → {:.2} GFLOP/s", flops2 / m.mean_s() / 1e9);
+    journal.record(&m, Some(flops2));
+    let m = bench(&format!("gemv-t {n}x{n}"), cfg_fast, || black_box(a.matvec_t(&v)));
+    journal.record(&m, Some(flops2));
+
+    let m = bench(&format!("cg solve {n} (tol 1e-10)"), cfg, || {
         let mut x = vec![0.0; n];
-        idiff::linalg::cg::cg(&DenseOp::symmetric(&spd), &v, &mut x, 1e-10, 4 * n);
+        cg::cg(&DenseOp::symmetric(&spd), &v, &mut x, 1e-10, 4 * n);
         black_box(x)
     });
+    journal.record(&m, None);
+
+    // Multi-RHS: k independent CG solves vs ONE block-CG sharing a single
+    // (GEMM) operator application per iteration.
+    let bmat = Mat::randn(n, k, &mut rng);
+    let op = DenseOp::symmetric(&spd);
+    let m_cols = bench(&format!("cg column loop {n}, k={k}"), cfg, || {
+        let mut xs = Mat::zeros(n, k);
+        let mut bc = vec![0.0; n];
+        let mut xc = vec![0.0; n];
+        for j in 0..k {
+            bmat.col_into(j, &mut bc);
+            xc.iter_mut().for_each(|x| *x = 0.0);
+            cg::cg(&op, &bc, &mut xc, 1e-10, 4 * n);
+            xs.set_col(j, &xc);
+        }
+        black_box(xs)
+    });
+    journal.record(&m_cols, None);
+    let m_block = bench(&format!("block-cg {n}, k={k}"), cfg, || {
+        let mut xs = Mat::zeros(n, k);
+        cg::block_cg(&op, &bmat, &mut xs, 1e-10, 4 * n);
+        black_box(xs)
+    });
+    journal.record(&m_block, None);
+    let speedup = m_cols.mean_s() / m_block.mean_s().max(1e-30);
+    println!("  → block-CG speedup over column loop: {speedup:.2}x");
+    journal.note(Json::obj(vec![
+        ("name", Json::Str(format!("block_vs_column_cg n={n} k={k}"))),
+        ("column_s", Json::Num(m_cols.mean_s())),
+        ("block_s", Json::Num(m_block.mean_s())),
+        ("speedup", Json::Num(speedup)),
+    ]));
+
     let y = rng.normal_vec(4096);
-    bench("simplex projection d=4096", cfg_fast, || {
+    let m = bench("simplex projection d=4096", cfg_fast, || {
         let mut out = vec![0.0; 4096];
         idiff::proj::simplex::project_simplex(&y, &mut out);
         black_box(out)
     });
+    journal.record(&m, None);
     let rows = rng.normal_vec(700 * 5);
-    bench("softmax rows 700x5", cfg_fast, || {
+    let m = bench("softmax rows 700x5", cfg_fast, || {
         let mut out = vec![0.0; 700 * 5];
         idiff::proj::simplex::softmax_rows(&rows, 5, &mut out);
         black_box(out)
     });
+    journal.record(&m, None);
+
+    journal.write("BENCH_linalg.json");
 }

@@ -3,8 +3,9 @@
 //! differentiation (VJP through the optimality mapping) or by unrolling, and
 //! small outer optimizers (GD, momentum, Adam).
 
-use crate::diff::root::implicit_vjp;
+use crate::diff::root::{implicit_vjp, implicit_vjp_multi};
 use crate::diff::spec::{FixedPointMap, FixedPointResidual, RootMap};
+use crate::linalg::mat::Mat;
 use crate::linalg::solve::LinearSolveConfig;
 
 /// How the hypergradient is obtained — the axis Figs. 3/4 compare.
@@ -25,9 +26,39 @@ pub fn hypergrad_implicit<M: RootMap + ?Sized>(
     grad_theta_outer: &[f64],
     cfg: &LinearSolveConfig,
 ) -> Vec<f64> {
+    assert_eq!(
+        grad_theta_outer.len(),
+        m.dim_theta(),
+        "grad_theta_outer must have length dim_theta"
+    );
     let (mut g, _rep) = implicit_vjp(m, x_star, theta, grad_x_outer, cfg);
     for (gi, &go) in g.iter_mut().zip(grad_theta_outer) {
         *gi += go;
+    }
+    g
+}
+
+/// Batched hypergradients: k outer cotangents (columns of `grad_x_outer`,
+/// d×k — e.g. several validation losses, ensemble members, or per-example
+/// outer gradients) share ONE block solve Aᵀ U = V, the multi-RHS version
+/// of the paper's VJP-reuse trick. `grad_theta_outer` (n×k) is added
+/// columnwise. Column j equals `hypergrad_implicit` on column j.
+pub fn hypergrad_implicit_multi<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    grad_x_outer: &Mat,
+    grad_theta_outer: &Mat,
+    cfg: &LinearSolveConfig,
+) -> Mat {
+    assert_eq!(
+        (grad_theta_outer.rows, grad_theta_outer.cols),
+        (m.dim_theta(), grad_x_outer.cols),
+        "grad_theta_outer must be dim_theta × k"
+    );
+    let (mut g, _rep) = implicit_vjp_multi(m, x_star, theta, grad_x_outer, cfg);
+    for (gi, go) in g.data.iter_mut().zip(grad_theta_outer.data.iter()) {
+        *gi += *go;
     }
     g
 }
@@ -121,7 +152,15 @@ pub mod outer {
 
     impl Adam {
         pub fn new(step: f64, dim: usize) -> Self {
-            Adam { step, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+            Adam {
+                step,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                m: vec![0.0; dim],
+                v: vec![0.0; dim],
+                t: 0,
+            }
         }
         pub fn step(&mut self, theta: &mut [f64], grad: &[f64]) {
             self.t += 1;
@@ -166,6 +205,40 @@ mod tests {
         assert!((g[1] + 2.5).abs() < 1e-8);
     }
 
+    #[test]
+    fn multi_cotangent_hypergrad_matches_single_columns() {
+        let f = ClosureRoot {
+            d: 2,
+            n: 2,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = x[0] - 2.0 * th[0];
+                out[1] = x[1] - 2.0 * th[1];
+            },
+            symmetric: true,
+        };
+        let theta = [1.0, -0.5];
+        let x = [2.0, -1.0];
+        let cfg = LinearSolveConfig::default();
+        let gx = Mat::from_vec(2, 3, vec![2.0, 1.0, 0.0, -1.0, 0.0, 1.0]);
+        let gt = Mat::from_vec(2, 3, vec![1.0, 0.0, 0.5, -0.5, 0.0, 0.0]);
+        let block = hypergrad_implicit_multi(&f, &x, &theta, &gx, &gt, &cfg);
+        let mut gxc = vec![0.0; 2];
+        let mut gtc = vec![0.0; 2];
+        for j in 0..3 {
+            gx.col_into(j, &mut gxc);
+            gt.col_into(j, &mut gtc);
+            let g = hypergrad_implicit(&f, &x, &theta, &gxc, &gtc, &cfg);
+            for i in 0..2 {
+                assert!(
+                    (block.at(i, j) - g[i]).abs() < 1e-9,
+                    "({i},{j}): {} vs {}",
+                    block.at(i, j),
+                    g[i]
+                );
+            }
+        }
+    }
+
     /// Unrolled reverse hypergradient approaches the implicit one as the
     /// iteration count grows.
     #[test]
@@ -197,7 +270,8 @@ mod tests {
         // x* = θ/0.3; L = x* → ∂L/∂θ = 1/0.3
         let theta = [0.6];
         let x_star = [2.0];
-        let gi = hypergrad_fixed_point(T, &x_star, &theta, &[1.0], &[0.0], &LinearSolveConfig::default());
+        let gi =
+            hypergrad_fixed_point(T, &x_star, &theta, &[1.0], &[0.0], &LinearSolveConfig::default());
         assert!((gi[0] - 1.0 / 0.3).abs() < 1e-8);
         let g30 = hypergrad_unroll_reverse(&T, &[0.0], &theta, &[1.0], &[0.0], 30);
         let g100 = hypergrad_unroll_reverse(&T, &[0.0], &theta, &[1.0], &[0.0], 100);

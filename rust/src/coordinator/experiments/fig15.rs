@@ -4,6 +4,7 @@
 
 use super::fig4::{setup, Solver};
 use crate::diff::spec::FixedPointResidual;
+use crate::linalg::mat::Mat;
 use crate::linalg::solve::{LinearSolveConfig, LinearSolverKind};
 use crate::linalg::vecops;
 use crate::mappings::prox_grad::ProjGradFixedPoint;
@@ -12,15 +13,20 @@ use crate::proj::simplex::RowsSimplexProjection;
 use crate::util::bench::{write_figure, Series};
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
 
 pub fn run(args: &Args) -> Json {
     let sizes = args.get_usize_list("sizes", &[20, 40, 80]);
     let m = args.get_usize("m", 60);
     let k = args.get_usize("k", 3);
     let seed = args.get_u64("seed", 5);
+    let cot_k = args.get_usize("cotangents", 8);
     let theta = 1.0;
 
     let mut series = Vec::new();
+    let mut block_bench = Json::Null;
+    let largest = sizes.iter().copied().max().unwrap_or(0);
     for &p in &sizes {
         let sd = setup(m, p, k, 10, seed);
         let svm = &sd.svm;
@@ -39,22 +45,86 @@ pub fn run(args: &Args) -> Json {
             max_iter: 4000,
             gmres_restart: 30,
         };
+        // PG fixed-point residual for implicit differentiation at this size
+        // (stateless across iterates — built once per p, not per grid point).
+        let eta = svm.pg_step(theta);
+        let obj = MulticlassSvm::new(svm.x_tr.clone(), svm.y_tr.clone());
+        let fp = ProjGradFixedPoint::new(obj, RowsSimplexProjection { m: svm.m(), k: svm.k }, eta);
+        let res = FixedPointResidual(fp);
         for &iters in &[2usize, 5, 10, 25, 50, 100, 200, 400] {
             let x_hat = super::fig4::inner_solve(&sd, Solver::Bcd, theta, iters);
             let sol_err = vecops::norm2(&vecops::sub(&x_hat, &x_star));
-            // implicit Jacobian estimate at x̂ via the PG fixed point
-            let eta = svm.pg_step(theta);
-            let obj = MulticlassSvm::new(svm.x_tr.clone(), svm.y_tr.clone());
-            let t = ProjGradFixedPoint::new(obj, RowsSimplexProjection { m: svm.m(), k: svm.k }, eta);
-            let res = FixedPointResidual(t);
-            let (jac_est, _) =
-                crate::diff::root::implicit_jvp(&res, &x_hat, &[theta], &[1.0], &cfg);
+            // implicit Jacobian estimate at x̂ via the PG fixed point,
+            // through the batched engine (the scalar-θ Jacobian is the
+            // 1-column block A X = B·I₁)
+            let (jac_est_m, _) =
+                crate::diff::root::implicit_jvp_multi(&res, &x_hat, &[theta], &Mat::eye(1), &cfg);
+            let jac_est = jac_est_m.data;
             let jac_err = vecops::norm2(&vecops::sub(&jac_est, &jac_true));
             s.push(sol_err, jac_err, 0.0);
             println!("p={p} iters={iters:<5} sol_err={sol_err:.3e} jac_err={jac_err:.3e}");
         }
         series.push(s);
+
+        // Block-vs-column wall-time on the largest problem (EXPERIMENTS.md
+        // §Perf): cot_k cotangents share ONE block solve vs cot_k
+        // independent VJP solves — the multi-RHS payoff on this workload.
+        if p == largest && cot_k > 0 {
+            let d = svm.m() * svm.k;
+            let mut rng = Rng::new(seed + 77);
+            let cot = Mat::randn(d, cot_k, &mut rng);
+            // Untimed warmup so first-call costs (allocator growth, thread
+            // spawn, cold caches) don't land on whichever path runs first.
+            let _ = crate::diff::root::implicit_vjp_multi(&res, &x_star, &[theta], &cot, &cfg);
+            let t0 = Timer::start();
+            let (vj_block, _) =
+                crate::diff::root::implicit_vjp_multi(&res, &x_star, &[theta], &cot, &cfg);
+            let s_block = t0.elapsed_s();
+            let t0 = Timer::start();
+            let mut vj_cols = Mat::zeros(1, cot_k);
+            let mut cc = vec![0.0; d];
+            for j in 0..cot_k {
+                cot.col_into(j, &mut cc);
+                let (vj, _) = crate::diff::root::implicit_vjp(&res, &x_star, &[theta], &cc, &cfg);
+                vj_cols.set_col(j, &vj);
+            }
+            let s_cols = t0.elapsed_s();
+            let mut max_diff = 0.0f64;
+            let mut max_val = 1.0f64;
+            for i in 0..vj_block.data.len() {
+                max_diff = max_diff.max((vj_block.data[i] - vj_cols.data[i]).abs());
+                max_val = max_val.max(vj_cols.data[i].abs());
+            }
+            // Path agreement is asserted at 1e-8 on well-conditioned systems
+            // by the root.rs/integration tests; here (NormalCg squares the
+            // conditioning) record it and warn instead of aborting the
+            // whole figure run on an ill-conditioned size.
+            let agrees = max_diff <= 1e-8 * max_val;
+            if !agrees {
+                eprintln!(
+                    "fig15 WARNING: block vs column VJP max |Δ| = {max_diff:.3e} \
+                     exceeds 1e-8 (κ²-amplified solver tolerance?)"
+                );
+            }
+            let speedup = s_cols / s_block.max(1e-12);
+            println!(
+                "fig15 p={p}: {cot_k}-cotangent VJP block {s_block:.4}s vs column loop \
+                 {s_cols:.4}s ({speedup:.2}x), max |Δ| = {max_diff:.2e}"
+            );
+            block_bench = Json::obj(vec![
+                ("p", Json::Num(p as f64)),
+                ("cotangents", Json::Num(cot_k as f64)),
+                ("block_s", Json::Num(s_block)),
+                ("column_s", Json::Num(s_cols)),
+                ("speedup", Json::Num(speedup)),
+                ("max_abs_diff", Json::Num(max_diff)),
+                ("agrees_1e8", Json::Bool(agrees)),
+            ]);
+        }
     }
     write_figure("fig15", &series);
-    Json::obj(vec![("series", Json::Arr(series.iter().map(Series::to_json).collect()))])
+    Json::obj(vec![
+        ("series", Json::Arr(series.iter().map(Series::to_json).collect())),
+        ("vjp_block_bench", block_bench),
+    ])
 }

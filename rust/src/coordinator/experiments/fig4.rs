@@ -8,7 +8,6 @@
 //! `--sizes 100,250,...,10000 --m 700 --val 200` for the paper's scale.
 
 use crate::data::classification::make_classification;
-use crate::diff::spec::FixedPointResidual;
 use crate::linalg::solve::{LinearSolveConfig, LinearSolverKind};
 use crate::linalg::vecops;
 use crate::mappings::mirror::{KlMirrorDescentFixedPoint, KlSimplexRows};
@@ -86,7 +85,10 @@ pub fn inner_solve(setup: &SvmSetup, solver: Solver, theta: f64, iters: usize) -
     }
 }
 
-/// Hypergradient dL/dλ (λ = log θ) via implicit diff through a fixed point.
+/// Hypergradient dL/dλ (λ = log θ) via implicit diff through a fixed point,
+/// routed through the batched bilevel engine (`hypergrad_fixed_point` → one
+/// block solve with k = 1; callers with several outer losses can pass the
+/// cotangent block to `bilevel::hypergrad_implicit_multi` and share it).
 pub fn hypergrad_implicit(setup: &SvmSetup, fp: DiffFp, x_star: &[f64], theta: f64) -> f64 {
     let svm = &setup.svm;
     let (grad_x, dl_dtheta_direct) = svm.outer_grads(&setup.x_val, &setup.y_val, x_star, theta);
@@ -99,21 +101,21 @@ pub fn hypergrad_implicit(setup: &SvmSetup, fp: DiffFp, x_star: &[f64], theta: f
         gmres_restart: 30,
     };
     let obj = MulticlassSvm::new(svm.x_tr.clone(), svm.y_tr.clone());
-    let dl_dtheta_inner = match fp {
+    let direct = [dl_dtheta_direct];
+    // dL/dθ = (∂x*)ᵀ∇ₓL + ∂L/∂θ(direct); λ-space only after the chain rule.
+    let dl_dtheta = match fp {
         DiffFp::Mirror => {
             let t = KlMirrorDescentFixedPoint::new(obj, KlSimplexRows { m: svm.m(), k: svm.k }, 1.0);
-            let res = FixedPointResidual(t);
-            crate::diff::root::implicit_vjp(&res, x_star, &[theta], &grad_x, &cfg).0[0]
+            crate::bilevel::hypergrad_fixed_point(t, x_star, &[theta], &grad_x, &direct, &cfg)[0]
         }
         DiffFp::ProjGrad => {
             let eta = svm.pg_step(theta);
             let t = ProjGradFixedPoint::new(obj, RowsSimplexProjection { m: svm.m(), k: svm.k }, eta);
-            let res = FixedPointResidual(t);
-            crate::diff::root::implicit_vjp(&res, x_star, &[theta], &grad_x, &cfg).0[0]
+            crate::bilevel::hypergrad_fixed_point(t, x_star, &[theta], &grad_x, &direct, &cfg)[0]
         }
     };
-    // chain rule through θ = exp(λ)
-    (dl_dtheta_inner + dl_dtheta_direct) * theta
+    // chain rule through θ = exp(λ): dL/dλ = dL/dθ · θ
+    dl_dtheta * theta
 }
 
 /// Hypergradient via forward-mode unrolling of the fixed-point iteration

@@ -181,8 +181,16 @@ fn fit_task_driven(
             max_iter: 400,
             gmres_restart: 30,
         };
-        let (hg_full, _) =
-            crate::diff::root::implicit_vjp(&res, &codes.data, &theta_full, &gc.data, &cfg);
+        // One-column cotangent block through the batched engine (a future
+        // multi-head outer loss shares this single block solve).
+        let (hg_full_m, _) = crate::diff::root::implicit_vjp_multi(
+            &res,
+            &codes.data,
+            &theta_full,
+            &Mat::from_col(&gc.data),
+            &cfg,
+        );
+        let hg_full = hg_full_m.data;
         // assemble the parameter gradient (dict block + head block)
         let mut grad = vec![0.0; n_dict + k + 1];
         grad[..n_dict].copy_from_slice(&hg_full[..n_dict]);

@@ -21,7 +21,11 @@ where
     S: Fn(&[f64], &[f64]) -> Vec<f64>,
 {
     pub fn new(t: T, solver: S) -> Self {
-        CustomFixedPoint { residual: FixedPointResidual(t), solver, cfg: LinearSolveConfig::default() }
+        CustomFixedPoint {
+            residual: FixedPointResidual(t),
+            solver,
+            cfg: LinearSolveConfig::default(),
+        }
     }
 
     pub fn with_cfg(mut self, cfg: LinearSolveConfig) -> Self {
@@ -43,6 +47,19 @@ where
         super::root::implicit_vjp(&self.residual, x_star, theta, v_x, &self.cfg).0
     }
 
+    /// Block of forward-mode derivatives (columns of `v_thetas`, n×k) via
+    /// one block solve through the residual.
+    pub fn jvp_multi(&self, x_star: &[f64], theta: &[f64], v_thetas: &Mat) -> Mat {
+        super::root::implicit_jvp_multi(&self.residual, x_star, theta, v_thetas, &self.cfg).0
+    }
+
+    /// Block of reverse-mode derivatives (columns of `v_xs`, d×k) via one
+    /// block solve through the residual.
+    pub fn vjp_multi(&self, x_star: &[f64], theta: &[f64], v_xs: &Mat) -> Mat {
+        super::root::implicit_vjp_multi(&self.residual, x_star, theta, v_xs, &self.cfg).0
+    }
+
+    /// Dense Jacobian (one block solve through the residual).
     pub fn jacobian(&self, x_star: &[f64], theta: &[f64]) -> Mat {
         super::root::jacobian_via_root(&self.residual, x_star, theta)
     }

@@ -13,6 +13,11 @@
 //!
 //! All solves are matrix-free through [`crate::linalg::LinOp`]; only JVPs and
 //! VJPs of `F` are ever required.
+//!
+//! Multi-RHS: `implicit_jvp_multi` / `implicit_vjp_multi` batch k directions
+//! or cotangents into ONE block solve (dense Jacobians are the n-basis
+//! special case), amortizing the Krylov work the way Margossian & Betancourt
+//! (2021) prescribe.
 
 pub mod fixed_point;
 pub mod precision;
@@ -20,5 +25,8 @@ pub mod root;
 pub mod spec;
 
 pub use fixed_point::CustomFixedPoint;
-pub use root::{implicit_jvp, implicit_vjp, jacobian_via_root, CustomRoot};
+pub use root::{
+    implicit_jvp, implicit_jvp_multi, implicit_vjp, implicit_vjp_multi, jacobian_via_root,
+    jacobian_via_root_columns, CustomRoot,
+};
 pub use spec::{FixedPointMap, FixedPointResidual, RootMap};

@@ -1,31 +1,53 @@
-//! Differentiating a root (paper §2.1): implicit JVP / VJP / dense Jacobian,
-//! and the `CustomRoot` decorator-equivalent that attaches them to a solver.
+//! Differentiating a root (paper §2.1): implicit JVP / VJP (single and
+//! multi-RHS block variants), dense Jacobian via ONE block solve, and the
+//! `CustomRoot` decorator-equivalent that attaches them to a solver.
 
 use super::spec::RootMap;
 use crate::linalg::mat::Mat;
-use crate::linalg::op::FnOp;
-use crate::linalg::solve::{self, LinearSolveConfig, SolveReport};
+use crate::linalg::op::LinOp;
+use crate::linalg::solve::{self, BlockSolveReport, LinearSolveConfig, SolveReport};
 
-/// The A = −∂₁F operator at (x, θ), matrix-free.
-fn a_op<'a, M: RootMap + ?Sized>(
+/// The A = −∂₁F operator at (x, θ), matrix-free, with native block products
+/// via the mapping's batched JVP/VJP — a block-CG iteration costs one
+/// batched Jacobian product (one GEMM for catalog mappings) instead of k
+/// scalar products.
+struct AOp<'a, M: RootMap + ?Sized> {
     m: &'a M,
     x: &'a [f64],
     theta: &'a [f64],
-) -> impl crate::linalg::op::LinOp + 'a {
-    let d = m.dim_x();
-    let fwd = move |v: &[f64], y: &mut [f64]| {
-        m.jvp_x(x, theta, v, y);
+}
+
+impl<M: RootMap + ?Sized> LinOp for AOp<'_, M> {
+    fn dim(&self) -> usize {
+        self.m.dim_x()
+    }
+    fn apply(&self, v: &[f64], y: &mut [f64]) {
+        self.m.jvp_x(self.x, self.theta, v, y);
         for yi in y.iter_mut() {
             *yi = -*yi;
         }
-    };
-    let tr = move |u: &[f64], y: &mut [f64]| {
-        m.vjp_x(x, theta, u, y);
+    }
+    fn apply_t(&self, u: &[f64], y: &mut [f64]) {
+        self.m.vjp_x(self.x, self.theta, u, y);
         for yi in y.iter_mut() {
             *yi = -*yi;
         }
-    };
-    FnOp { d, fwd, tr, symmetric: m.a_symmetric() }
+    }
+    fn apply_block(&self, v: &Mat, y: &mut Mat) {
+        self.m.jvp_x_batch(self.x, self.theta, v, y);
+        for yi in y.data.iter_mut() {
+            *yi = -*yi;
+        }
+    }
+    fn apply_t_block(&self, u: &Mat, y: &mut Mat) {
+        self.m.vjp_x_batch(self.x, self.theta, u, y);
+        for yi in y.data.iter_mut() {
+            *yi = -*yi;
+        }
+    }
+    fn is_symmetric(&self) -> bool {
+        self.m.a_symmetric()
+    }
 }
 
 /// Forward-mode implicit differentiation: J v where A J = B (Eq. 2), i.e.
@@ -40,9 +62,31 @@ pub fn implicit_jvp<M: RootMap + ?Sized>(
     let d = m.dim_x();
     let mut bv = vec![0.0; d];
     m.jvp_theta(x_star, theta, v_theta, &mut bv);
-    let a = a_op(m, x_star, theta);
+    let a = AOp { m, x: x_star, theta };
     let mut jv = vec![0.0; d];
     let rep = solve::solve(&a, &bv, &mut jv, cfg);
+    (jv, rep)
+}
+
+/// Forward-mode implicit differentiation for a BLOCK of directions: with
+/// V ∈ R^{n×k} (one direction per column), assemble B·V in one batched
+/// product and solve A X = B V as a single block solve sharing one operator
+/// application per iteration. Column j equals `implicit_jvp` on column j.
+pub fn implicit_jvp_multi<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    v_thetas: &Mat,
+    cfg: &LinearSolveConfig,
+) -> (Mat, BlockSolveReport) {
+    let d = m.dim_x();
+    assert_eq!(v_thetas.rows, m.dim_theta(), "direction block rows must be dim_theta");
+    let k = v_thetas.cols;
+    let mut bv = Mat::zeros(d, k);
+    m.jvp_theta_batch(x_star, theta, v_thetas, &mut bv);
+    let a = AOp { m, x: x_star, theta };
+    let mut jv = Mat::zeros(d, k);
+    let rep = solve::solve_block(&a, &bv, &mut jv, cfg);
     (jv, rep)
 }
 
@@ -57,11 +101,34 @@ pub fn implicit_vjp<M: RootMap + ?Sized>(
 ) -> (Vec<f64>, SolveReport) {
     let d = m.dim_x();
     let n = m.dim_theta();
-    let a = a_op(m, x_star, theta);
+    let a = AOp { m, x: x_star, theta };
     let mut u = vec![0.0; d];
     let rep = solve::solve_t(&a, v_x, &mut u, cfg);
     let mut out = vec![0.0; n];
     m.vjp_theta(x_star, theta, &u, &mut out);
+    (out, rep)
+}
+
+/// Reverse-mode implicit differentiation for a BLOCK of cotangents: with
+/// V ∈ R^{d×k} (one cotangent per column), solve Aᵀ U = V once as a block,
+/// then apply ∂₂Fᵀ to the whole block — the multi-cotangent version of the
+/// paper's VJP-reuse trick. Returns the n×k block of vᵀJ rows-as-columns.
+pub fn implicit_vjp_multi<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    v_xs: &Mat,
+    cfg: &LinearSolveConfig,
+) -> (Mat, BlockSolveReport) {
+    let d = m.dim_x();
+    let n = m.dim_theta();
+    assert_eq!(v_xs.rows, d, "cotangent block rows must be dim_x");
+    let k = v_xs.cols;
+    let a = AOp { m, x: x_star, theta };
+    let mut u = Mat::zeros(d, k);
+    let rep = solve::solve_t_block(&a, v_xs, &mut u, cfg);
+    let mut out = Mat::zeros(n, k);
+    m.vjp_theta_batch(x_star, theta, &u, &mut out);
     (out, rep)
 }
 
@@ -74,20 +141,19 @@ pub fn implicit_vjp_u<M: RootMap + ?Sized>(
     v_x: &[f64],
     cfg: &LinearSolveConfig,
 ) -> (Vec<f64>, SolveReport) {
-    let a = a_op(m, x_star, theta);
+    let a = AOp { m, x: x_star, theta };
     let mut u = vec![0.0; m.dim_x()];
     let rep = solve::solve_t(&a, v_x, &mut u, cfg);
     (u, rep)
 }
 
-/// Dense Jacobian ∂x*(θ) ∈ R^{d×n}, assembled column-by-column with JVPs
-/// (used for Fig. 3 / Fig. 15 error studies; hot paths use jvp/vjp).
-pub fn jacobian_via_root<M: RootMap + ?Sized>(m: &M, x_star: &[f64], theta: &[f64]) -> Mat {
-    // Full-restart GMRES is exact within d iterations even on the indefinite
-    // saddle systems KKT mappings produce (where BiCGSTAB can break down);
-    // CG still kicks in automatically for symmetric mappings.
+/// Solver configuration for dense Jacobians: full-restart GMRES is exact
+/// within d iterations even on the indefinite saddle systems KKT mappings
+/// produce (where BiCGSTAB can break down); CG kicks in automatically for
+/// symmetric mappings.
+fn jacobian_cfg<M: RootMap + ?Sized>(m: &M) -> LinearSolveConfig {
     let d_full = m.dim_x().max(1);
-    let cfg = if m.a_symmetric() {
+    if m.a_symmetric() {
         LinearSolveConfig::default()
     } else {
         LinearSolveConfig {
@@ -96,7 +162,29 @@ pub fn jacobian_via_root<M: RootMap + ?Sized>(m: &M, x_star: &[f64], theta: &[f6
             max_iter: 6 * d_full,
             gmres_restart: d_full.min(400),
         }
-    };
+    }
+}
+
+/// Dense Jacobian ∂x*(θ) ∈ R^{d×n} via ONE block solve: A X = B·I_n with
+/// all n basis directions as a single multi-RHS block (used for Fig. 3 /
+/// Fig. 15 error studies; hot paths use jvp/vjp). The former column-by-
+/// column assembly survives as [`jacobian_via_root_columns`] for validation
+/// and speedup benches.
+pub fn jacobian_via_root<M: RootMap + ?Sized>(m: &M, x_star: &[f64], theta: &[f64]) -> Mat {
+    let cfg = jacobian_cfg(m);
+    let (jac, _rep) = implicit_jvp_multi(m, x_star, theta, &Mat::eye(m.dim_theta()), &cfg);
+    jac
+}
+
+/// Reference dense-Jacobian path: n independent column solves (the
+/// pre-batching behavior). Kept to validate the block path bit-for-bit at
+/// solver tolerance and to measure the column-vs-block speedup.
+pub fn jacobian_via_root_columns<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+) -> Mat {
+    let cfg = jacobian_cfg(m);
     let (d, n) = (m.dim_x(), m.dim_theta());
     let mut jac = Mat::zeros(d, n);
     let mut e = vec![0.0; n];
@@ -153,7 +241,19 @@ where
         implicit_vjp(&self.mapping, x_star, theta, v_x, &self.cfg).0
     }
 
-    /// Dense Jacobian of the solution.
+    /// Forward-mode derivatives for a block of directions (columns of
+    /// `v_thetas`, n×k) sharing one block solve.
+    pub fn jvp_multi(&self, x_star: &[f64], theta: &[f64], v_thetas: &Mat) -> Mat {
+        implicit_jvp_multi(&self.mapping, x_star, theta, v_thetas, &self.cfg).0
+    }
+
+    /// Reverse-mode derivatives for a block of cotangents (columns of
+    /// `v_xs`, d×k) sharing one block solve.
+    pub fn vjp_multi(&self, x_star: &[f64], theta: &[f64], v_xs: &Mat) -> Mat {
+        implicit_vjp_multi(&self.mapping, x_star, theta, v_xs, &self.cfg).0
+    }
+
+    /// Dense Jacobian of the solution (one block solve).
     pub fn jacobian(&self, x_star: &[f64], theta: &[f64]) -> Mat {
         jacobian_via_root(&self.mapping, x_star, theta)
     }
@@ -232,6 +332,84 @@ mod tests {
             for k in 0..3 {
                 assert!((j.at(i, k) - expected[i][k]).abs() < 1e-8);
             }
+        }
+    }
+
+    /// The acceptance property of the batching PR: a dense Jacobian is ONE
+    /// block solve, where the column path issues dim_theta independent
+    /// solves — and the two agree to solver tolerance.
+    #[test]
+    fn dense_jacobian_is_one_block_solve() {
+        use crate::linalg::solve::counter;
+        let f = linear_root();
+        let th = [1.0, 1.0, 1.0];
+        let x = [3.5, 2.0];
+        counter::reset();
+        let j_block = jacobian_via_root(&f, &x, &th);
+        assert_eq!(counter::count(), 1, "batched dense Jacobian must issue one block solve");
+        let j_cols = jacobian_via_root_columns(&f, &x, &th);
+        assert_eq!(counter::count(), 1 + 3, "column path is dim_theta independent solves");
+        for i in 0..j_block.data.len() {
+            assert!(
+                (j_block.data[i] - j_cols.data[i]).abs() < 1e-8,
+                "element {i}: {} vs {}",
+                j_block.data[i],
+                j_cols.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn multi_jvp_vjp_match_single_columns() {
+        let f = linear_root();
+        let th = [0.5, -1.5, 2.0];
+        let x = [0.5 - 3.0 + 1.0, -0.5 + 6.0];
+        let cfg = LinearSolveConfig::default();
+        // three θ-directions at once
+        let v = Mat::from_vec(3, 3, vec![1.0, 0.0, 0.3, 0.0, 1.0, -0.7, 0.0, 0.0, 2.0]);
+        let (jv_block, rep) = implicit_jvp_multi(&f, &x, &th, &v, &cfg);
+        assert!(rep.converged);
+        assert_eq!(rep.rhs, 3);
+        let mut vc = vec![0.0; 3];
+        for j in 0..3 {
+            v.col_into(j, &mut vc);
+            let (jv, _) = implicit_jvp(&f, &x, &th, &vc, &cfg);
+            for i in 0..2 {
+                assert!((jv_block.at(i, j) - jv[i]).abs() < 1e-9);
+            }
+        }
+        // two x-cotangents at once
+        let u = Mat::from_vec(2, 2, vec![1.0, 0.25, 0.0, -1.0]);
+        let (vj_block, rep) = implicit_vjp_multi(&f, &x, &th, &u, &cfg);
+        assert!(rep.converged);
+        let mut uc = vec![0.0; 2];
+        for j in 0..2 {
+            u.col_into(j, &mut uc);
+            let (vj, _) = implicit_vjp(&f, &x, &th, &uc, &cfg);
+            for i in 0..3 {
+                assert!((vj_block.at(i, j) - vj[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_jacobian_matches_columns_on_nonsymmetric_map() {
+        // Non-symmetric A exercises the blocked GMRES dispatch.
+        let f = ClosureRoot {
+            d: 2,
+            n: 2,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = 2.0 * x[0] + x[1] - th[0];
+                out[1] = x[0] * x[1] - th[1] + x[1];
+            },
+            symmetric: false,
+        };
+        let th = [3.0, 2.0];
+        let x = [1.0, 1.0];
+        let jb = jacobian_via_root(&f, &x, &th);
+        let jc = jacobian_via_root_columns(&f, &x, &th);
+        for i in 0..jb.data.len() {
+            assert!((jb.data[i] - jc.data[i]).abs() < 1e-8);
         }
     }
 

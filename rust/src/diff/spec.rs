@@ -8,6 +8,10 @@
 //! box (at FD accuracy).
 
 use crate::ad::num_grad;
+use crate::linalg::mat::Mat;
+// The shared column-loop fallback for batched Jacobian products lives with
+// the operator layer; re-exported here for the mapping catalog.
+pub use crate::linalg::op::batch_cols;
 
 /// An optimality mapping F : R^d × R^n → R^d with root x*(θ).
 pub trait RootMap {
@@ -47,6 +51,33 @@ pub trait RootMap {
     /// mappings of twice-differentiable objectives, where A is the Hessian).
     fn a_symmetric(&self) -> bool {
         false
+    }
+
+    /// out = ∂₁F(x, θ) · V for a block of directions (columns of V ∈ R^{d×k}).
+    /// Default loops [`RootMap::jvp_x`] per column; catalog mappings override
+    /// with one GEMM so a block-CG iteration costs one batched product.
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_x(), v, out, |vc, oc| self.jvp_x(x, theta, vc, oc));
+    }
+
+    /// out = ∂₁F(x, θ)ᵀ · U for a block of cotangents (U ∈ R^{d×k}).
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_x(), u, out, |uc, oc| self.vjp_x(x, theta, uc, oc));
+    }
+
+    /// out = ∂₂F(x, θ) · V, V ∈ R^{n×k} → out ∈ R^{d×k} (assembles B·V for
+    /// the block system A X = B V in one shot).
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_theta(), self.dim_x(), v, out, |vc, oc| {
+            self.jvp_theta(x, theta, vc, oc)
+        });
+    }
+
+    /// out = ∂₂F(x, θ)ᵀ · U, U ∈ R^{d×k} → out ∈ R^{n×k}.
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_theta(), u, out, |uc, oc| {
+            self.vjp_theta(x, theta, uc, oc)
+        });
     }
 
     /// Convenience allocating eval.
@@ -99,6 +130,30 @@ pub trait FixedPointMap {
         false
     }
 
+    /// Batched ∂₁T·V (columns of V); see [`RootMap::jvp_x_batch`].
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_x(), v, out, |vc, oc| self.jvp_x(x, theta, vc, oc));
+    }
+
+    /// Batched ∂₁Tᵀ·U.
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_x(), u, out, |uc, oc| self.vjp_x(x, theta, uc, oc));
+    }
+
+    /// Batched ∂₂T·V (V ∈ R^{n×k} → out ∈ R^{d×k}).
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_theta(), self.dim_x(), v, out, |vc, oc| {
+            self.jvp_theta(x, theta, vc, oc)
+        });
+    }
+
+    /// Batched ∂₂Tᵀ·U (U ∈ R^{d×k} → out ∈ R^{n×k}).
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_theta(), u, out, |uc, oc| {
+            self.vjp_theta(x, theta, uc, oc)
+        });
+    }
+
     fn eval_vec(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.dim_x()];
         self.eval(x, theta, &mut out);
@@ -140,6 +195,24 @@ impl<T: FixedPointMap> RootMap for FixedPointResidual<T> {
     }
     fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
         self.0.vjp_theta(x, theta, u, out);
+    }
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.0.jvp_x_batch(x, theta, v, out);
+        for (o, vi) in out.data.iter_mut().zip(v.data.iter()) {
+            *o -= *vi;
+        }
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.0.vjp_x_batch(x, theta, u, out);
+        for (o, ui) in out.data.iter_mut().zip(u.data.iter()) {
+            *o -= *ui;
+        }
+    }
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.0.jvp_theta_batch(x, theta, v, out);
+    }
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.0.vjp_theta_batch(x, theta, u, out);
     }
     fn a_symmetric(&self) -> bool {
         self.0.a_symmetric()
@@ -223,6 +296,45 @@ mod tests {
         fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
             out[0] = 0.5 * x[0] + theta[0];
         }
+    }
+
+    #[test]
+    fn batch_defaults_match_column_loop() {
+        let m = Quad;
+        let x = [1.0, 2.0];
+        let th = [1.0, 2.0];
+        let v = Mat::from_vec(2, 3, vec![1.0, 0.0, 0.5, 0.0, 1.0, -2.0]);
+        let mut out = Mat::zeros(2, 3);
+        m.jvp_x_batch(&x, &th, &v, &mut out);
+        let mut vc = vec![0.0; 2];
+        let mut oc = [0.0; 2];
+        for j in 0..3 {
+            v.col_into(j, &mut vc);
+            m.jvp_x(&x, &th, &vc, &mut oc);
+            for i in 0..2 {
+                assert!((out.at(i, j) - oc[i]).abs() < 1e-12);
+            }
+        }
+        let mut out_t = Mat::zeros(2, 3);
+        m.vjp_theta_batch(&x, &th, &v, &mut out_t);
+        for j in 0..3 {
+            v.col_into(j, &mut vc);
+            m.vjp_theta(&x, &th, &vc, &mut oc);
+            for i in 0..2 {
+                assert!((out_t.at(i, j) - oc[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_batch_subtracts_identity() {
+        let r = FixedPointResidual(Contraction);
+        // ∂₁F·V = (∂₁T − I)·V = −0.5·V for the contraction.
+        let v = Mat::from_vec(1, 2, vec![1.0, -3.0]);
+        let mut out = Mat::zeros(1, 2);
+        r.jvp_x_batch(&[2.0], &[1.0], &v, &mut out);
+        assert!((out.at(0, 0) + 0.5).abs() < 1e-6);
+        assert!((out.at(0, 1) - 1.5).abs() < 1e-6);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Conjugate gradient [Hestenes & Stiefel, 51] for symmetric positive
 //! (semi-)definite systems — the paper's default when A is SPD.
 
+use super::mat::Mat;
 use super::op::LinOp;
-use super::solve::SolveReport;
+use super::solve::{BlockSolveReport, SolveReport};
 use super::vecops::{axpby, axpy, dot, norm2};
 
 /// Solve A x = b with CG. `x` holds the initial guess on entry and the
@@ -26,7 +27,7 @@ pub fn cg(a: &dyn LinOp, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) ->
     let mut rs = dot(&r, &r);
 
     for it in 0..max_iter {
-        let res = rs.sqrt() / bnorm;
+        let res = residual_norm(rs, &r) / bnorm;
         if res <= tol {
             return SolveReport { iterations: it, residual: res, converged: true };
         }
@@ -44,7 +45,212 @@ pub fn cg(a: &dyn LinOp, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) ->
         // p = r + beta p
         axpby(1.0, &r, beta, &mut p);
     }
-    SolveReport { iterations: max_iter, residual: rs.sqrt() / bnorm, converged: rs.sqrt() / bnorm <= tol }
+    let res = residual_norm(rs, &r) / bnorm;
+    SolveReport { iterations: max_iter, residual: res, converged: res <= tol }
+}
+
+/// Residual norm from a squared sum, falling back to the dnrm2-safe
+/// [`norm2`] when the square has under/overflowed — so a tiny
+/// (1e-200-scale) residual never reads as 0 and silently "converges" at the
+/// initial guess, and a huge one never turns the relative check into NaN.
+#[inline]
+fn residual_norm(rs: f64, r: &[f64]) -> f64 {
+    if super::vecops::sq_norm_reliable(rs) {
+        rs.sqrt()
+    } else {
+        norm2(r)
+    }
+}
+
+/// Multi-RHS conjugate gradient: solve A X = B for all k columns of B
+/// simultaneously. The per-column arithmetic is identical to running [`cg`]
+/// on that column alone (same α/β recurrences, so solutions match the
+/// column-by-column path), but every iteration issues ONE block operator
+/// application — a single packed GEMM for dense A, a single batched JVP for
+/// implicit-diff operators — instead of k matvecs. Columns freeze as they
+/// converge; a column whose pᵀAp collapses is frozen and reported
+/// unconverged, exactly like the scalar breakdown path.
+pub fn block_cg(
+    a: &dyn LinOp,
+    b: &Mat,
+    x: &mut Mat,
+    tol: f64,
+    max_iter: usize,
+) -> BlockSolveReport {
+    let d = a.dim();
+    let k = b.cols;
+    assert_eq!(b.rows, d);
+    assert_eq!(x.rows, d);
+    assert_eq!(x.cols, k);
+    if k == 0 {
+        return BlockSolveReport { iterations: 0, max_residual: 0.0, converged: true, rhs: 0 };
+    }
+    // Overflow-safe per-column ‖b‖ (same dnrm2-backed norm2 the scalar cg
+    // uses): a huge RHS must yield a finite bnorm so the residual ratio
+    // stays inf (loud failure), never inf/inf = NaN (silent "converged").
+    let bnorm: Vec<f64> = {
+        let mut bc = vec![0.0; d];
+        (0..k)
+            .map(|j| {
+                b.col_into(j, &mut bc);
+                norm2(&bc).max(1e-30)
+            })
+            .collect()
+    };
+
+    let mut r = Mat::zeros(d, k);
+    let mut p = Mat::zeros(d, k);
+    let mut ap = Mat::zeros(d, k);
+
+    a.apply_block(x, &mut ap);
+    for i in 0..d * k {
+        r.data[i] = b.data[i] - ap.data[i];
+    }
+    p.data.copy_from_slice(&r.data);
+    let mut rs = col_sq_norms(&r);
+    let mut colbuf = vec![0.0; d];
+    let mut active: Vec<bool> =
+        (0..k).map(|j| col_residual_norm(rs[j], &r, j, &mut colbuf) / bnorm[j] > tol).collect();
+    let mut iterations = 0;
+    // Hot-loop work buffers, allocated once up front (like scalar cg).
+    let mut live: Vec<usize> = Vec::with_capacity(k);
+    let mut alpha = vec![0.0; k];
+    let mut beta = vec![0.0; k];
+    let mut p_sub = Mat::zeros(d, 0);
+    let mut ap_sub = Mat::zeros(d, 0);
+
+    for _ in 0..max_iter {
+        live.clear();
+        live.extend((0..k).filter(|&j| active[j]));
+        if live.is_empty() {
+            break;
+        }
+        iterations += 1;
+        // Apply the operator to the LIVE columns only: once some columns
+        // have converged/stalled, gather the survivors into a narrower
+        // block so total cost tracks Σ_j iters_j, not k × max_j iters_j.
+        // (Gather/scatter is O(d·live), negligible next to the apply.)
+        if live.len() == k {
+            a.apply_block(&p, &mut ap);
+        } else {
+            let m_live = live.len();
+            p_sub.cols = m_live;
+            p_sub.data.resize(d * m_live, 0.0);
+            ap_sub.cols = m_live;
+            ap_sub.data.resize(d * m_live, 0.0);
+            for i in 0..d {
+                let off = i * k;
+                let soff = i * m_live;
+                for (jj, &j) in live.iter().enumerate() {
+                    p_sub.data[soff + jj] = p.data[off + j];
+                }
+            }
+            a.apply_block(&p_sub, &mut ap_sub);
+            for i in 0..d {
+                let off = i * k;
+                let soff = i * m_live;
+                for (jj, &j) in live.iter().enumerate() {
+                    ap.data[off + j] = ap_sub.data[soff + jj];
+                }
+            }
+        }
+        let pap = col_dots(&p, &ap);
+        alpha.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..k {
+            if active[j] {
+                if pap[j].abs() < 1e-300 {
+                    // Breakdown: freeze the column. Its residual is still
+                    // above tol (it was active), so the final sweep reports
+                    // it unconverged — same as scalar cg's breakdown path.
+                    active[j] = false;
+                } else {
+                    alpha[j] = rs[j] / pap[j];
+                }
+            }
+        }
+        // X += P·diag(α); R −= AP·diag(α). Row-major streaming: the k
+        // columns interleave, so this is one pass over each block.
+        for i in 0..d {
+            let off = i * k;
+            for j in 0..k {
+                let al = alpha[j];
+                if al != 0.0 {
+                    x.data[off + j] += al * p.data[off + j];
+                    r.data[off + j] -= al * ap.data[off + j];
+                }
+            }
+        }
+        let rs_new = col_sq_norms(&r);
+        beta.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..k {
+            if active[j] {
+                beta[j] = rs_new[j] / rs[j];
+                rs[j] = rs_new[j];
+                if col_residual_norm(rs[j], &r, j, &mut colbuf) / bnorm[j] <= tol {
+                    active[j] = false;
+                }
+            }
+        }
+        // P = R + P·diag(β) on still-active columns only.
+        for i in 0..d {
+            let off = i * k;
+            for j in 0..k {
+                if active[j] {
+                    p.data[off + j] = r.data[off + j] + beta[j] * p.data[off + j];
+                }
+            }
+        }
+    }
+    let mut max_res = 0.0f64;
+    let mut all = true;
+    for j in 0..k {
+        let res = col_residual_norm(rs[j], &r, j, &mut colbuf) / bnorm[j];
+        max_res = max_res.max(res);
+        if res > tol {
+            all = false;
+        }
+    }
+    BlockSolveReport { iterations, max_residual: max_res, converged: all, rhs: k }
+}
+
+/// Per-column version of [`residual_norm`]: trust the squared sum while it
+/// is safely representable, otherwise re-measure the column with the
+/// dnrm2-safe [`norm2`].
+#[inline]
+fn col_residual_norm(rs_j: f64, r: &Mat, j: usize, buf: &mut [f64]) -> f64 {
+    if super::vecops::sq_norm_reliable(rs_j) {
+        rs_j.sqrt()
+    } else {
+        r.col_into(j, buf);
+        norm2(buf)
+    }
+}
+
+/// Column-wise ‖·‖² in one streaming pass over the block.
+fn col_sq_norms(m: &Mat) -> Vec<f64> {
+    let mut s = vec![0.0; m.cols];
+    for i in 0..m.rows {
+        let row = m.row(i);
+        for j in 0..m.cols {
+            s[j] += row[j] * row[j];
+        }
+    }
+    s
+}
+
+/// Column-wise dot products ⟨a_j, b_j⟩ in one streaming pass.
+fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
+    debug_assert_eq!(a.rows, b.rows);
+    debug_assert_eq!(a.cols, b.cols);
+    let mut s = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let ra = a.row(i);
+        let rb = b.row(i);
+        for j in 0..a.cols {
+            s[j] += ra[j] * rb[j];
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -104,5 +310,73 @@ mod tests {
         let mut x = vec![0.0; 15];
         let rep = cg(&DenseOp::symmetric(&a), &b, &mut x, 1e-10, 15 + 2);
         assert!(rep.converged, "CG must converge within d iterations: {rep:?}");
+    }
+
+    /// Property test (random SPD A, k ∈ {1, 3, 8}): block-CG on A X = B must
+    /// match k independent column-by-column `cg` solves.
+    #[test]
+    fn block_cg_matches_independent_column_solves() {
+        for (&k, seed) in [1usize, 3, 8].iter().zip(11u64..) {
+            let n = 30;
+            let a = spd(n, seed);
+            let mut rng = Rng::new(seed + 50);
+            let b = Mat::randn(n, k, &mut rng);
+            let op = DenseOp::symmetric(&a);
+
+            let mut x_block = Mat::zeros(n, k);
+            let rep = block_cg(&op, &b, &mut x_block, 1e-11, 400);
+            assert!(rep.converged, "k={k}: {rep:?}");
+            assert_eq!(rep.rhs, k);
+
+            let mut bc = vec![0.0; n];
+            for j in 0..k {
+                b.col_into(j, &mut bc);
+                let mut xc = vec![0.0; n];
+                let rep_j = cg(&op, &bc, &mut xc, 1e-11, 400);
+                assert!(rep_j.converged);
+                for i in 0..n {
+                    assert!(
+                        (x_block.at(i, j) - xc[i]).abs() < 1e-8,
+                        "k={k} col {j} row {i}: {} vs {}",
+                        x_block.at(i, j),
+                        xc[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_cg_zero_and_converged_columns_freeze() {
+        let n = 12;
+        let a = spd(n, 21);
+        let mut rng = Rng::new(22);
+        // Column 0 is all zeros (immediately converged), column 1 is random.
+        let mut b = Mat::zeros(n, 2);
+        let rhs = rng.normal_vec(n);
+        b.set_col(1, &rhs);
+        let op = DenseOp::symmetric(&a);
+        let mut x = Mat::zeros(n, 2);
+        let rep = block_cg(&op, &b, &mut x, 1e-11, 200);
+        assert!(rep.converged, "{rep:?}");
+        for i in 0..n {
+            assert_eq!(x.at(i, 0), 0.0, "zero RHS column must stay zero");
+        }
+        let mut xc = vec![0.0; n];
+        let _ = cg(&op, &rhs, &mut xc, 1e-11, 200);
+        for i in 0..n {
+            assert!((x.at(i, 1) - xc[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn block_cg_handles_empty_block() {
+        let a = spd(5, 30);
+        let op = DenseOp::symmetric(&a);
+        let b = Mat::zeros(5, 0);
+        let mut x = Mat::zeros(5, 0);
+        let rep = block_cg(&op, &b, &mut x, 1e-10, 10);
+        assert!(rep.converged);
+        assert_eq!(rep.iterations, 0);
     }
 }

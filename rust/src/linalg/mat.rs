@@ -1,11 +1,16 @@
 //! Dense row-major matrix with BLAS-like kernels (gemm/gemv/syrk).
 //!
-//! The gemm uses i-k-j loop order with a blocked variant for larger sizes —
-//! cache-friendly without unsafe code. This is the crate's single biggest
-//! hot spot (SVM objective, logistic regression, Gram matrices), so it gets
+//! The gemm is a packed, register-blocked microkernel: B is repacked once
+//! into NR-wide column panels, A row panels are packed into contiguous
+//! MR×KC scratch, and an MR×NR micro-tile of C is accumulated in registers.
+//! Large products are parallelized over row panels of C via
+//! [`crate::util::parallel::parallel_chunks_mut`] (disjoint chunks, no
+//! locking, no unsafe). This is the crate's single biggest hot spot (SVM
+//! objective, logistic regression, Gram matrices, block solves), so it gets
 //! perf attention in EXPERIMENTS.md §Perf.
 
 use super::vecops;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
 /// Row-major dense matrix of f64.
@@ -71,6 +76,29 @@ impl Mat {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// Copy column j into a caller buffer (multi-RHS blocks store one
+    /// right-hand side per column).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = self.data[i * self.cols + j];
+        }
+    }
+
+    /// Overwrite column j with `vals`.
+    pub fn set_col(&mut self, j: usize, vals: &[f64]) {
+        assert_eq!(vals.len(), self.rows);
+        let c = self.cols;
+        for i in 0..self.rows {
+            self.data[i * c + j] = vals[i];
+        }
+    }
+
+    /// A single vector as a d×1 block (one-column multi-RHS).
+    pub fn from_col(v: &[f64]) -> Mat {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -88,13 +116,28 @@ impl Mat {
         y
     }
 
-    /// y = A x into caller buffer.
+    /// y = A x into caller buffer. Parallelized over row chunks when the
+    /// matrix is large enough to amortize thread spawn.
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            y[i] = vecops::dot(self.row(i), x);
+        let n = self.cols;
+        let workers = gemv_workers(self.rows, n);
+        if workers <= 1 {
+            for i in 0..self.rows {
+                y[i] = vecops::dot(self.row(i), x);
+            }
+            return;
         }
+        let rows_per = ((self.rows + workers * 2 - 1) / (workers * 2)).max(1);
+        let data = &self.data;
+        parallel::parallel_chunks_mut(y, rows_per, workers, |ci, ychunk| {
+            let r0 = ci * rows_per;
+            for (off, yi) in ychunk.iter_mut().enumerate() {
+                let i = r0 + off;
+                *yi = vecops::dot(&data[i * n..(i + 1) * n], x);
+            }
+        });
     }
 
     /// y = Aᵀ x (allocating).
@@ -105,16 +148,36 @@ impl Mat {
     }
 
     /// y = Aᵀ x into caller buffer — row-major friendly (axpy over rows).
+    /// Parallelized over disjoint output-column stripes for large matrices.
     pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        for i in 0..self.rows {
-            vecops::axpy(x[i], self.row(i), y);
+        let n = self.cols;
+        let workers = gemv_workers(self.rows, n);
+        if workers <= 1 {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..self.rows {
+                vecops::axpy(x[i], self.row(i), y);
+            }
+            return;
         }
+        let cols_per = ((n + workers * 2 - 1) / (workers * 2)).max(1);
+        let data = &self.data;
+        let rows = self.rows;
+        parallel::parallel_chunks_mut(y, cols_per, workers, |ci, ychunk| {
+            let c0 = ci * cols_per;
+            let w = ychunk.len();
+            ychunk.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..rows {
+                let xi = x[i];
+                if xi != 0.0 {
+                    vecops::axpy(xi, &data[i * n + c0..i * n + c0 + w], ychunk);
+                }
+            }
+        });
     }
 
-    /// C = A · B. Blocked i-k-j gemm.
+    /// C = A · B via the packed parallel gemm.
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "gemm shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
@@ -122,33 +185,90 @@ impl Mat {
         c
     }
 
+    /// C = A · B into a caller-provided C (overwritten). The allocation-free
+    /// entry point used by block solves and `LinOp::apply_block`.
+    pub fn matmul_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(self.cols, b.rows, "gemm shape mismatch");
+        assert_eq!(c.rows, self.rows, "gemm output rows mismatch");
+        assert_eq!(c.cols, b.cols, "gemm output cols mismatch");
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        gemm_acc(self, b, c);
+    }
+
     /// C = Aᵀ · B without materializing Aᵀ.
     pub fn t_matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.rows, b.rows, "tgemm shape mismatch");
-        let (m, n, p) = (self.cols, b.cols, self.rows);
-        let mut c = Mat::zeros(m, n);
-        for k in 0..p {
-            let arow = self.row(k);
-            let brow = b.row(k);
-            for i in 0..m {
-                let aki = arow[i];
-                if aki != 0.0 {
-                    vecops::axpy(aki, brow, c.row_mut(i));
-                }
-            }
-        }
+        let mut c = Mat::zeros(self.cols, b.cols);
+        self.t_matmul_into(b, &mut c);
         c
     }
 
-    /// C = A · Bᵀ without materializing Bᵀ.
+    /// C = Aᵀ · B into a caller-provided C (overwritten). Parallelized over
+    /// disjoint row panels of C (columns of A) for large products.
+    pub fn t_matmul_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(self.rows, b.rows, "tgemm shape mismatch");
+        let (m, n, p) = (self.cols, b.cols, self.rows);
+        assert_eq!(c.rows, m, "tgemm output rows mismatch");
+        assert_eq!(c.cols, n, "tgemm output cols mismatch");
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        let workers = gemm_workers(m, n, p);
+        if workers <= 1 {
+            for k in 0..p {
+                let arow = self.row(k);
+                let brow = b.row(k);
+                for i in 0..m {
+                    let aki = arow[i];
+                    if aki != 0.0 {
+                        vecops::axpy(aki, brow, c.row_mut(i));
+                    }
+                }
+            }
+            return;
+        }
+        let rows_per = ((m + workers * 2 - 1) / (workers * 2)).max(1);
+        let adata = &self.data;
+        let bdata = &b.data;
+        parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
+            let i0 = ci * rows_per;
+            let rows = cchunk.len() / n;
+            for k in 0..p {
+                let arow = &adata[k * m..(k + 1) * m];
+                let brow = &bdata[k * n..(k + 1) * n];
+                for i in 0..rows {
+                    let aki = arow[i0 + i];
+                    if aki != 0.0 {
+                        vecops::axpy(aki, brow, &mut cchunk[i * n..(i + 1) * n]);
+                    }
+                }
+            }
+        });
+    }
+
+    /// C = A · Bᵀ without materializing Bᵀ. Parallelized over row panels.
     pub fn matmul_t(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "gemm_t shape mismatch");
-        let mut c = Mat::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            for j in 0..b.rows {
-                c.data[i * b.rows + j] = vecops::dot(self.row(i), b.row(j));
+        let (m, n, p) = (self.rows, b.rows, self.cols);
+        let mut c = Mat::zeros(m, n);
+        let workers = gemm_workers(m, n, p);
+        if workers <= 1 {
+            for i in 0..m {
+                for j in 0..n {
+                    c.data[i * n + j] = vecops::dot(self.row(i), b.row(j));
+                }
             }
+            return c;
         }
+        let rows_per = ((m + workers * 2 - 1) / (workers * 2)).max(1);
+        let adata = &self.data;
+        parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
+            let i0 = ci * rows_per;
+            let rows = cchunk.len() / n;
+            for i in 0..rows {
+                let arow = &adata[(i0 + i) * p..(i0 + i + 1) * p];
+                for j in 0..n {
+                    cchunk[i * n + j] = vecops::dot(arow, b.row(j));
+                }
+            }
+        });
         c
     }
 
@@ -185,25 +305,157 @@ impl Mat {
     }
 }
 
-/// C += A · B, blocked over k then i for cache locality (i-k-j order: the
-/// inner loop is a unit-stride axpy over a row of B and a row of C).
-fn gemm_acc(a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, p, n) = (a.rows, a.cols, b.cols);
-    const KB: usize = 64;
-    for k0 in (0..p).step_by(KB) {
-        let kend = (k0 + KB).min(p);
-        for i in 0..m {
-            let arow = a.row(i);
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for k in k0..kend {
-                let aik = arow[k];
-                if aik != 0.0 {
-                    let brow = &b.data[k * n..(k + 1) * n];
-                    vecops::axpy(aik, brow, crow);
-                }
+/// Micro-tile rows (register-blocked rows of C held in accumulators).
+const MR: usize = 4;
+/// Micro-tile columns.
+const NR: usize = 4;
+/// k-blocking depth: one packed A panel is MR×KC ≈ 8 KiB, L1-resident.
+const KC: usize = 256;
+/// Parallelize a gemm only when it has enough flops to amortize spawning
+/// scoped threads (~2·100³).
+const GEMM_PAR_FLOPS: f64 = 2e6;
+/// Below this flop count (~2·25³) the packed kernel's scratch allocation and
+/// pack passes cost more than they save — use the allocation-free fallback.
+const GEMM_PACK_FLOPS: f64 = 32768.0;
+/// Parallelize a gemv only past ~1M matrix elements.
+const GEMV_PAR_ELEMS: usize = 1 << 20;
+
+fn gemm_workers(m: usize, n: usize, p: usize) -> usize {
+    if 2.0 * m as f64 * n as f64 * p as f64 >= GEMM_PAR_FLOPS {
+        parallel::default_workers()
+    } else {
+        1
+    }
+}
+
+fn gemv_workers(rows: usize, cols: usize) -> usize {
+    if rows.saturating_mul(cols) >= GEMV_PAR_ELEMS {
+        parallel::default_workers()
+    } else {
+        1
+    }
+}
+
+/// Pack B (p×n) into NR-wide column panels, k-major within a panel:
+/// `bpack[(jb·p + k)·NR + c] = B[k][jb·NR + c]`, zero-padded in the last
+/// panel. One pass over B (O(pn), negligible next to the O(mpn) flops) buys
+/// unit-stride loads in the microkernel for every row panel of C.
+fn pack_b(b: &Mat, bpack: &mut Vec<f64>) {
+    let (p, n) = (b.rows, b.cols);
+    let nb = (n + NR - 1) / NR;
+    bpack.clear();
+    bpack.resize(nb * p * NR, 0.0);
+    for jb in 0..nb {
+        let j0 = jb * NR;
+        let w = NR.min(n - j0);
+        let base = jb * p * NR;
+        for k in 0..p {
+            let dst = base + k * NR;
+            bpack[dst..dst + w].copy_from_slice(&b.data[k * n + j0..k * n + j0 + w]);
+        }
+    }
+}
+
+/// MR×NR register-blocked microkernel: acc += apanel·bpanel over kc steps.
+/// apanel is k-major MR-wide, bpanel is k-major NR-wide; the constant-bound
+/// inner loops unroll into MR·NR independent accumulators.
+#[inline(always)]
+fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (ak, bk) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for r in 0..MR {
+            let a = ak[r];
+            for c in 0..NR {
+                acc[r][c] += a * bk[c];
             }
         }
     }
+}
+
+/// Accumulate one row panel of C (rows i0..i0+rows, given as the mutable
+/// slice `cchunk`) against all of packed B.
+fn gemm_chunk(a: &Mat, bpack: &[f64], n: usize, i0: usize, cchunk: &mut [f64]) {
+    let p = a.cols;
+    let rows = cchunk.len() / n;
+    let nb = (n + NR - 1) / NR;
+    let mut apack = vec![0.0; MR * KC];
+    for k0 in (0..p).step_by(KC) {
+        let kc = KC.min(p - k0);
+        let mut ib = 0;
+        while ib < rows {
+            let mr = MR.min(rows - ib);
+            // Pack A rows i0+ib..+mr over columns k0..k0+kc (k-major,
+            // zero-padding the missing micro-tile rows).
+            for r in 0..MR {
+                if r < mr {
+                    let arow = &a.data[(i0 + ib + r) * p + k0..(i0 + ib + r) * p + k0 + kc];
+                    for (k, &v) in arow.iter().enumerate() {
+                        apack[k * MR + r] = v;
+                    }
+                } else {
+                    for k in 0..kc {
+                        apack[k * MR + r] = 0.0;
+                    }
+                }
+            }
+            for jb in 0..nb {
+                let j0 = jb * NR;
+                let w = NR.min(n - j0);
+                let bpanel = &bpack[(jb * p + k0) * NR..(jb * p + k0 + kc) * NR];
+                let mut acc = [[0.0f64; NR]; MR];
+                micro_kernel(&apack[..kc * MR], bpanel, &mut acc);
+                for r in 0..mr {
+                    let crow = &mut cchunk[(ib + r) * n + j0..(ib + r) * n + j0 + w];
+                    for (cv, av) in crow.iter_mut().zip(acc[r].iter()) {
+                        *cv += *av;
+                    }
+                }
+            }
+            ib += mr;
+        }
+    }
+}
+
+/// C += A · B — packed, register-blocked gemm, parallelized over disjoint
+/// row panels of C when the product is large enough to amortize thread
+/// spawn. Exact same contraction order per element as the naive triple loop
+/// up to floating-point reassociation within a micro-tile.
+pub fn gemm_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, p, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(p, b.rows, "gemm shape mismatch");
+    assert_eq!(c.rows, m, "gemm output rows mismatch");
+    assert_eq!(c.cols, n, "gemm output cols mismatch");
+    if m == 0 || n == 0 || p == 0 {
+        return;
+    }
+    // Tiny products (e.g. the p×p ridge blocks inside per-iteration block-CG
+    // operator applications) skip packing entirely: the allocation + pack
+    // pass costs more than it saves below this size. This is the seed's
+    // allocation-free i-k-j axpy kernel.
+    if 2.0 * m as f64 * n as f64 * p as f64 < GEMM_PACK_FLOPS {
+        for i in 0..m {
+            let (arow, crow) = (i * p, i * n);
+            for k in 0..p {
+                let aik = a.data[arow + k];
+                if aik != 0.0 {
+                    vecops::axpy(aik, &b.data[k * n..(k + 1) * n], &mut c.data[crow..crow + n]);
+                }
+            }
+        }
+        return;
+    }
+    let mut bpack = Vec::new();
+    pack_b(b, &mut bpack);
+    let workers = gemm_workers(m, n, p);
+    if workers <= 1 {
+        gemm_chunk(a, &bpack, n, 0, &mut c.data);
+        return;
+    }
+    // MR-aligned row panels, ≥2 per worker for load balance.
+    let target = (m + workers * 2 - 1) / (workers * 2);
+    let rows_per = ((target + MR - 1) / MR * MR).max(MR);
+    parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
+        gemm_chunk(a, &bpack, n, ci * rows_per, cchunk);
+    });
 }
 
 #[cfg(test)]
@@ -236,6 +488,90 @@ mod tests {
                 assert!((c.data[i] - c0.data[i]).abs() < 1e-9);
             }
         }
+    }
+
+    /// Packed parallel gemm property test: every non-multiple-of-tile shape,
+    /// degenerate 1×n / n×1 products, KC-straddling depths, and shapes big
+    /// enough to cross the parallel threshold must all match the naive
+    /// triple loop.
+    #[test]
+    fn packed_gemm_matches_naive_on_awkward_shapes() {
+        let mut rng = Rng::new(7);
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 300, 1),   // single row × single col (allocation-free fallback)
+            (300, 1, 5),   // rank-1 outer product (fallback)
+            (1, 1, 1),
+            (5, 3, 1),     // single output column (fallback)
+            (1, 9, 13),    // single output row (fallback)
+            (13, 11, 17),  // nothing divides MR/NR (fallback)
+            (1, 2000, 9),  // packed: single-row micro-tile, KC straddles, partial NR
+            (601, 28, 1),  // packed: single output column, MR-remainder panel
+            (7, 515, 9),   // packed: depth straddles two KC blocks
+            (130, 120, 110), // crosses GEMM_PAR_FLOPS → parallel row panels
+            (257, 64, 66), // parallel with MR-remainder last panel
+        ];
+        for &(m, p, n) in shapes {
+            let a = Mat::randn(m, p, &mut rng);
+            let b = Mat::randn(p, n, &mut rng);
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            let scale = (p as f64).sqrt();
+            for i in 0..c.data.len() {
+                assert!(
+                    (c.data[i] - c0.data[i]).abs() < 1e-10 * scale.max(1.0) * 10.0,
+                    "shape ({m},{p},{n}) element {i}: {} vs {}",
+                    c.data[i],
+                    c0.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_overwrites_stale_output() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(9, 6, &mut rng);
+        let b = Mat::randn(6, 4, &mut rng);
+        let mut c = Mat::from_fn(9, 4, |i, j| (i + j) as f64); // stale garbage
+        a.matmul_into(&b, &mut c);
+        let c0 = naive_matmul(&a, &b);
+        for i in 0..c.data.len() {
+            assert!((c.data[i] - c0.data[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parallel_transpose_products_match_serial() {
+        // Shapes past the parallel threshold for t_matmul / matmul_t.
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(120, 115, &mut rng);
+        let b = Mat::randn(120, 105, &mut rng);
+        let c1 = a.t_matmul(&b);
+        let c2 = naive_matmul(&a.transpose(), &b);
+        for i in 0..c1.data.len() {
+            assert!((c1.data[i] - c2.data[i]).abs() < 1e-9);
+        }
+        let d = Mat::randn(110, 115, &mut rng);
+        let e1 = a.matmul_t(&d);
+        let e2 = naive_matmul(&a, &d.transpose());
+        for i in 0..e1.data.len() {
+            assert!((e1.data[i] - e2.data[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn col_helpers_roundtrip() {
+        let mut rng = Rng::new(10);
+        let mut m = Mat::randn(7, 3, &mut rng);
+        let mut buf = vec![0.0; 7];
+        m.col_into(1, &mut buf);
+        assert_eq!(buf, m.col(1));
+        let vals: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        m.set_col(2, &vals);
+        assert_eq!(m.col(2), vals);
+        let c = Mat::from_col(&vals);
+        assert_eq!((c.rows, c.cols), (7, 1));
+        assert_eq!(c.col(0), vals);
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! its JVPs or VJPs"), and the iterative solvers the paper names — conjugate
 //! gradient [51], GMRES [75], BiCGSTAB [81] — plus normal-equation CG and
 //! dense LU/Cholesky factorizations for small systems.
+//!
+//! Multi-RHS surface: [`op::LinOp::apply_block`], [`cg::block_cg`] and
+//! [`solve::solve_block`] solve A X = B for k right-hand sides with one
+//! (batched) operator application per iteration — the engine's dense
+//! Jacobians and multi-cotangent VJPs ride on it.
 
 pub mod bicgstab;
 pub mod cg;
@@ -19,4 +24,4 @@ pub mod vecops;
 
 pub use mat::Mat;
 pub use op::LinOp;
-pub use solve::{LinearSolveConfig, LinearSolverKind, SolveReport};
+pub use solve::{BlockSolveReport, LinearSolveConfig, LinearSolverKind, SolveReport};

@@ -23,6 +23,20 @@ pub trait LinOp {
         false
     }
 
+    /// Y = A X for a block of k right-hand sides stored as the columns of X
+    /// (d×k). The default loops columns through [`LinOp::apply`]; operators
+    /// with a native block product — dense matrices (one GEMM), batched
+    /// implicit-diff JVPs — override it so a block-CG iteration costs ONE
+    /// operator application instead of k.
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        batch_cols(self.dim(), self.dim(), x, y, |xc, yc| self.apply(xc, yc));
+    }
+
+    /// Y = Aᵀ X columnwise; see [`LinOp::apply_block`].
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        batch_cols(self.dim(), self.dim(), x, y, |xc, yc| self.apply_t(xc, yc));
+    }
+
     /// Materialize as a dense matrix (d columns of basis products). For tests
     /// and small systems only.
     fn to_dense(&self) -> Mat {
@@ -39,6 +53,30 @@ pub trait LinOp {
             e[j] = 0.0;
         }
         m
+    }
+}
+
+/// Column-loop fallback shared by every batched product in the crate
+/// (LinOp block defaults here, the `jvp/vjp_*_batch` defaults in
+/// `diff::spec` and `mappings::objective`): extract each column of `v`
+/// (din-dimensional), apply `f`, write the dout-dimensional result column
+/// of `out`. Native block implementations override with one GEMM instead.
+pub fn batch_cols(
+    din: usize,
+    dout: usize,
+    v: &Mat,
+    out: &mut Mat,
+    mut f: impl FnMut(&[f64], &mut [f64]),
+) {
+    assert_eq!(v.rows, din, "batch input rows mismatch");
+    assert_eq!(out.rows, dout, "batch output rows mismatch");
+    assert_eq!(v.cols, out.cols, "batch column count mismatch");
+    let mut vc = vec![0.0; din];
+    let mut oc = vec![0.0; dout];
+    for j in 0..v.cols {
+        v.col_into(j, &mut vc);
+        f(&vc, &mut oc);
+        out.set_col(j, &oc);
     }
 }
 
@@ -68,6 +106,12 @@ impl LinOp for DenseOp<'_> {
     }
     fn apply_t(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_t_into(x, y);
+    }
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        self.a.matmul_into(x, y); // one GEMM for the whole block
+    }
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        self.a.t_matmul_into(x, y);
     }
     fn is_symmetric(&self) -> bool {
         self.symmetric
@@ -131,6 +175,12 @@ impl<A: LinOp + ?Sized> LinOp for TransposedOp<'_, A> {
     fn apply_t(&self, x: &[f64], y: &mut [f64]) {
         self.0.apply(x, y);
     }
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        self.0.apply_t_block(x, y);
+    }
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        self.0.apply_block(x, y);
+    }
     fn is_symmetric(&self) -> bool {
         self.0.is_symmetric()
     }
@@ -157,6 +207,14 @@ impl<A: LinOp + ?Sized> LinOp for AAtOp<'_, A> {
         let mut t = self.buf.borrow_mut();
         self.a.apply_t(x, &mut t);
         self.a.apply(&t, y);
+    }
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        let mut t = Mat::zeros(self.a.dim(), x.cols);
+        self.a.apply_t_block(x, &mut t);
+        self.a.apply_block(&t, y);
+    }
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        self.apply_block(x, y); // A Aᵀ is symmetric
     }
     fn is_symmetric(&self) -> bool {
         true
@@ -197,6 +255,47 @@ mod tests {
                 assert!((m.at(i, j) - m.at(j, i)).abs() < 1e-10);
             }
             assert!(m.at(i, i) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn block_products_match_column_loop() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(7, 7, &mut rng);
+        let x = Mat::randn(7, 3, &mut rng);
+        let op = DenseOp::new(&a);
+        // DenseOp overrides with one GEMM; FnOp uses the column fallback.
+        let fallback = FnOp::new(
+            7,
+            |v: &[f64], y: &mut [f64]| a.matvec_into(v, y),
+            |u: &[f64], y: &mut [f64]| a.matvec_t_into(u, y),
+        );
+        let mut y_gemm = Mat::zeros(7, 3);
+        op.apply_block(&x, &mut y_gemm);
+        let mut y_cols = Mat::zeros(7, 3);
+        fallback.apply_block(&x, &mut y_cols);
+        for i in 0..y_gemm.data.len() {
+            assert!((y_gemm.data[i] - y_cols.data[i]).abs() < 1e-12);
+        }
+        let mut yt_gemm = Mat::zeros(7, 3);
+        op.apply_t_block(&x, &mut yt_gemm);
+        let mut yt_cols = Mat::zeros(7, 3);
+        fallback.apply_t_block(&x, &mut yt_cols);
+        for i in 0..yt_gemm.data.len() {
+            assert!((yt_gemm.data[i] - yt_cols.data[i]).abs() < 1e-12);
+        }
+        // AAtOp block product vs its own scalar apply.
+        let aat = AAtOp::new(&op);
+        let mut yb = Mat::zeros(7, 3);
+        aat.apply_block(&x, &mut yb);
+        let mut xc = vec![0.0; 7];
+        let mut yc = vec![0.0; 7];
+        for j in 0..3 {
+            x.col_into(j, &mut xc);
+            aat.apply(&xc, &mut yc);
+            for i in 0..7 {
+                assert!((yb.at(i, j) - yc[i]).abs() < 1e-12);
+            }
         }
     }
 

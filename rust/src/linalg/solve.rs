@@ -4,8 +4,9 @@
 //! and a least-squares fallback for (near-)singular systems.
 
 use super::bicgstab::bicgstab;
-use super::cg::cg;
+use super::cg::{block_cg, cg};
 use super::gmres::gmres;
+use super::mat::Mat;
 use super::op::{AAtOp, LinOp, TransposedOp};
 
 /// Which iterative method to use for the implicit-diff linear system.
@@ -34,7 +35,12 @@ pub struct LinearSolveConfig {
 
 impl Default for LinearSolveConfig {
     fn default() -> Self {
-        LinearSolveConfig { kind: LinearSolverKind::Auto, tol: 1e-10, max_iter: 2500, gmres_restart: 30 }
+        LinearSolveConfig {
+            kind: LinearSolverKind::Auto,
+            tol: 1e-10,
+            max_iter: 2500,
+            gmres_restart: 30,
+        }
     }
 }
 
@@ -52,9 +58,43 @@ pub struct SolveReport {
     pub converged: bool,
 }
 
-/// Solve A x = b in-place in `x` (initial guess on entry).
-pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
-    let kind = match cfg.kind {
+/// Outcome of a multi-RHS block solve.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSolveReport {
+    pub iterations: usize,
+    /// Worst relative residual across the block's columns.
+    pub max_residual: f64,
+    pub converged: bool,
+    /// Number of right-hand sides solved together.
+    pub rhs: usize,
+}
+
+/// Thread-local counter of `solve`/`solve_block` entries on this thread. A
+/// block solve over k right-hand sides counts ONCE — this is what lets tests
+/// assert that dense Jacobian assembly issues a single block solve instead
+/// of d column solves. Note: solves a mapping performs internally (e.g. the
+/// Newton fixed point's inner Jacobian solves inside its JVP/VJP) also pass
+/// through `solve` and are counted, so count-based assertions only hold for
+/// mappings whose Jacobian products are solve-free.
+pub mod counter {
+    use std::cell::Cell;
+    thread_local! {
+        static SOLVES: Cell<usize> = Cell::new(0);
+    }
+    pub(super) fn bump() {
+        SOLVES.with(|c| c.set(c.get() + 1));
+    }
+    /// `solve`/`solve_block` calls on this thread since the last [`reset`].
+    pub fn count() -> usize {
+        SOLVES.with(|c| c.get())
+    }
+    pub fn reset() {
+        SOLVES.with(|c| c.set(0));
+    }
+}
+
+fn resolve(kind: LinearSolverKind, a: &dyn LinOp) -> LinearSolverKind {
+    match kind {
         LinearSolverKind::Auto => {
             if a.is_symmetric() {
                 LinearSolverKind::Cg
@@ -63,8 +103,13 @@ pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -
             }
         }
         k => k,
-    };
-    match kind {
+    }
+}
+
+/// Solve A x = b in-place in `x` (initial guess on entry).
+pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
+    counter::bump();
+    match resolve(cfg.kind, a) {
         LinearSolverKind::Cg => cg(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::BiCgStab => bicgstab(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::Gmres => gmres(a, b, x, cfg.tol, cfg.max_iter, cfg.gmres_restart),
@@ -84,6 +129,70 @@ pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -
 pub fn solve_t(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
     let at = TransposedOp(a);
     solve(&at, b, x, cfg)
+}
+
+/// Solve A X = B for a block of right-hand sides (columns of B), sharing
+/// work across the block wherever the method allows: CG runs the batched
+/// [`block_cg`] (one block operator application per iteration), NormalCg
+/// runs block-CG on A Aᵀ followed by one block transpose product, and
+/// GMRES/BiCGSTAB fall back to a blocked per-column dispatch behind the same
+/// entry point (each column needs its own Krylov basis). Counts as ONE solve
+/// in [`counter`].
+pub fn solve_block(
+    a: &dyn LinOp,
+    b: &Mat,
+    x: &mut Mat,
+    cfg: &LinearSolveConfig,
+) -> BlockSolveReport {
+    counter::bump();
+    let kind = resolve(cfg.kind, a);
+    match kind {
+        LinearSolverKind::Cg => block_cg(a, b, x, cfg.tol, cfg.max_iter),
+        LinearSolverKind::NormalCg => {
+            let aat = AAtOp::new(a);
+            let mut u = Mat::zeros(b.rows, b.cols);
+            let rep = block_cg(&aat, b, &mut u, cfg.tol, cfg.max_iter);
+            a.apply_t_block(&u, x);
+            rep
+        }
+        LinearSolverKind::Gmres | LinearSolverKind::BiCgStab => {
+            let d = a.dim();
+            let k = b.cols;
+            let mut bc = vec![0.0; d];
+            let mut xc = vec![0.0; d];
+            let mut iterations = 0;
+            let mut max_res = 0.0f64;
+            let mut all = true;
+            for j in 0..k {
+                b.col_into(j, &mut bc);
+                x.col_into(j, &mut xc);
+                let rep = match kind {
+                    LinearSolverKind::Gmres => {
+                        gmres(a, &bc, &mut xc, cfg.tol, cfg.max_iter, cfg.gmres_restart)
+                    }
+                    _ => bicgstab(a, &bc, &mut xc, cfg.tol, cfg.max_iter),
+                };
+                x.set_col(j, &xc);
+                iterations = iterations.max(rep.iterations);
+                max_res = max_res.max(rep.residual);
+                all &= rep.converged;
+            }
+            BlockSolveReport { iterations, max_residual: max_res, converged: all, rhs: k }
+        }
+        LinearSolverKind::Auto => unreachable!(),
+    }
+}
+
+/// Solve Aᵀ X = B for a block of right-hand sides — the multi-cotangent
+/// VJP-side system.
+pub fn solve_t_block(
+    a: &dyn LinOp,
+    b: &Mat,
+    x: &mut Mat,
+    cfg: &LinearSolveConfig,
+) -> BlockSolveReport {
+    let at = TransposedOp(a);
+    solve_block(&at, b, x, cfg)
 }
 
 #[cfg(test)]
@@ -128,6 +237,84 @@ mod tests {
             assert!(rep.converged, "{kind:?} failed: {rep:?}");
             check_solution(&a, &b, &x, 1e-5);
         }
+    }
+
+    #[test]
+    fn block_solve_all_kinds_match_column_solves() {
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let k = 4;
+        let a = Mat::randn(n, n, &mut rng).gram().plus_diag(2.0);
+        let b = Mat::randn(n, k, &mut rng);
+        for kind in [
+            LinearSolverKind::Cg,
+            LinearSolverKind::BiCgStab,
+            LinearSolverKind::Gmres,
+            LinearSolverKind::NormalCg,
+        ] {
+            let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: n };
+            let op = DenseOp::symmetric(&a);
+            let mut x_block = Mat::zeros(n, k);
+            let rep = solve_block(&op, &b, &mut x_block, &cfg);
+            assert!(rep.converged, "{kind:?}: {rep:?}");
+            let mut bc = vec![0.0; n];
+            for j in 0..k {
+                b.col_into(j, &mut bc);
+                let mut xc = vec![0.0; n];
+                let rep_j = solve(&op, &bc, &mut xc, &cfg);
+                assert!(rep_j.converged, "{kind:?} col {j}");
+                for i in 0..n {
+                    assert!(
+                        (x_block.at(i, j) - xc[i]).abs() < 1e-6,
+                        "{kind:?} ({i},{j}): {} vs {}",
+                        x_block.at(i, j),
+                        xc[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_transpose_solve_matches_scalar() {
+        let mut rng = Rng::new(5);
+        let n = 10;
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += 6.0;
+        }
+        let b = Mat::randn(n, 3, &mut rng);
+        let cfg = LinearSolveConfig::default();
+        let op = DenseOp::new(&a);
+        let mut x_block = Mat::zeros(n, 3);
+        let rep = solve_t_block(&op, &b, &mut x_block, &cfg);
+        assert!(rep.converged, "{rep:?}");
+        let mut bc = vec![0.0; n];
+        for j in 0..3 {
+            b.col_into(j, &mut bc);
+            let mut xc = vec![0.0; n];
+            solve_t(&op, &bc, &mut xc, &cfg);
+            for i in 0..n {
+                assert!((x_block.at(i, j) - xc[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn counter_counts_block_solves_once() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(6, 6, &mut rng).gram().plus_diag(1.0);
+        let b = Mat::randn(6, 5, &mut rng);
+        let op = DenseOp::symmetric(&a);
+        counter::reset();
+        let mut x = Mat::zeros(6, 5);
+        solve_block(&op, &b, &mut x, &LinearSolveConfig::default());
+        assert_eq!(counter::count(), 1, "block solve must count once");
+        let mut xc = vec![0.0; 6];
+        let bc = b.col(0);
+        solve(&op, &bc, &mut xc, &LinearSolveConfig::default());
+        solve_t(&op, &bc, &mut xc, &LinearSolveConfig::default());
+        assert_eq!(counter::count(), 3);
     }
 
     #[test]

@@ -23,10 +23,58 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// Euclidean norm.
+/// Euclidean norm — overflow/underflow safe.
+///
+/// Fast path: `dot(a, a).sqrt()` whenever the squared sum stays comfortably
+/// inside the normal f64 range. For extreme vectors (entries near 1e±200,
+/// where squaring overflows to inf or underflows to 0 — which would silently
+/// break CG/GMRES relative-residual checks) fall back to a LAPACK
+/// `dnrm2`-style scale-then-sum accumulation.
 #[inline]
 pub fn norm2(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
+    let s = dot(a, a);
+    if sq_norm_reliable(s) {
+        return s.sqrt();
+    }
+    norm2_scaled(a)
+}
+
+/// Whether a squared sum is inside the range where `sqrt` is safe (no
+/// under/overflow happened while squaring). Outside it, callers holding the
+/// original vector should re-measure with [`norm2`] — this is the single
+/// guard window shared by `norm2` and the CG residual checks.
+#[inline]
+pub fn sq_norm_reliable(sq: f64) -> bool {
+    sq > 1e-280 && sq < 1e280
+}
+
+/// dnrm2-style accumulation: track `scale = max |a_i|` and the sum of
+/// squares of entries divided by `scale`, so the result is `scale·√ssq`
+/// without ever forming an over/underflowing square.
+fn norm2_scaled(a: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 0.0f64;
+    for &x in a {
+        if x.is_nan() {
+            return f64::NAN;
+        }
+        let ax = x.abs();
+        if ax == f64::INFINITY {
+            return f64::INFINITY;
+        }
+        if ax == 0.0 {
+            continue;
+        }
+        if scale < ax {
+            let r = scale / ax;
+            ssq = 1.0 + ssq * r * r;
+            scale = ax;
+        } else {
+            let r = ax / scale;
+            ssq += r * r;
+        }
+    }
+    scale * ssq.sqrt()
 }
 
 /// L1 norm.
@@ -133,6 +181,27 @@ mod tests {
         assert!((norm2(&v) - 5.0).abs() < 1e-15);
         assert!((norm1(&v) - 7.0).abs() < 1e-15);
         assert!((norm_inf(&v) - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn norm2_survives_extreme_magnitudes() {
+        // Huge entries: dot(a, a) overflows to inf; dnrm2 path must not.
+        let big = [1e200, -1e200];
+        let expected = 1e200 * 2.0f64.sqrt();
+        assert!((norm2(&big) - expected).abs() / expected < 1e-14, "{}", norm2(&big));
+        // Tiny entries: dot(a, a) underflows toward 0.
+        let small = [1e-200, 1e-200, 1e-200, 1e-200];
+        let expected = 2e-200;
+        assert!((norm2(&small) - expected).abs() / expected < 1e-14, "{}", norm2(&small));
+        // Mixed magnitudes dominated by the large entry.
+        let mixed = [1e200, 1.0, -3.0];
+        assert!((norm2(&mixed) - 1e200).abs() / 1e200 < 1e-14);
+        // Zero vector and empty slice are exactly 0.
+        assert_eq!(norm2(&[0.0, 0.0]), 0.0);
+        assert_eq!(norm2(&[]), 0.0);
+        // Infinities and NaNs propagate.
+        assert_eq!(norm2(&[f64::INFINITY, 1.0]), f64::INFINITY);
+        assert!(norm2(&[f64::NAN, 1.0]).is_nan());
     }
 
     #[test]

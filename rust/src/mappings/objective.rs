@@ -5,6 +5,8 @@
 //! tests cross-check the two.
 
 use crate::ad::num_grad;
+use crate::diff::spec::batch_cols;
+use crate::linalg::mat::Mat;
 
 /// Twice-differentiable objective f : R^d × R^n → R.
 pub trait Objective {
@@ -36,6 +38,27 @@ pub trait Objective {
     fn vjp_x_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
         let r = num_grad::vjp_fd(|tt| self.grad_x_vec(x, tt), theta, u, 1e-5);
         out.copy_from_slice(&r);
+    }
+
+    /// out = ∇₁²f(x, θ) · V columnwise (V, out ∈ R^{d×k}). Default loops
+    /// [`Objective::hvp_xx`]; models with a materialized Hessian/Gram matrix
+    /// override with a single GEMM.
+    fn hvp_xx_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_x(), v, out, |vc, oc| self.hvp_xx(x, theta, vc, oc));
+    }
+
+    /// out = ∂₂∇₁f(x, θ) · V (V ∈ R^{n×k} → out ∈ R^{d×k}).
+    fn jvp_x_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_theta(), self.dim_x(), v, out, |vc, oc| {
+            self.jvp_x_theta(x, theta, vc, oc)
+        });
+    }
+
+    /// out = (∂₂∇₁f(x, θ))ᵀ · U (U ∈ R^{d×k} → out ∈ R^{n×k}).
+    fn vjp_x_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        batch_cols(self.dim_x(), self.dim_theta(), u, out, |uc, oc| {
+            self.vjp_x_theta(x, theta, uc, oc)
+        });
     }
 
     fn grad_x_vec(&self, x: &[f64], theta: &[f64]) -> Vec<f64> {
@@ -102,6 +125,16 @@ impl Objective for QuadObjective {
     fn vjp_x_theta(&self, _x: &[f64], _theta: &[f64], u: &[f64], out: &mut [f64]) {
         self.r.matvec_t_into(u, out);
     }
+    // Batched oracles: one packed GEMM per block instead of k matvecs.
+    fn hvp_xx_batch(&self, _x: &[f64], _theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.q.matmul_into(v, out);
+    }
+    fn jvp_x_theta_batch(&self, _x: &[f64], _theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.r.matmul_into(v, out);
+    }
+    fn vjp_x_theta_batch(&self, _x: &[f64], _theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.r.t_matmul_into(u, out);
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +189,51 @@ mod tests {
         fnobj.vjp_x_theta(&x, &th, &u, &mut vf);
         for i in 0..3 {
             assert!((va[i] - vf[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn quad_batched_oracles_match_column_loop() {
+        let quad = random_quad(6, 4, 9);
+        let mut rng = Rng::new(10);
+        let x = rng.normal_vec(6);
+        let th = rng.normal_vec(4);
+        let v = Mat::randn(6, 3, &mut rng);
+        // GEMM override vs the FnObjective default (column loop over FD-free
+        // analytic hvp via a wrapper with no batch override).
+        let mut fast = Mat::zeros(6, 3);
+        quad.hvp_xx_batch(&x, &th, &v, &mut fast);
+        let mut vc = vec![0.0; 6];
+        let mut oc = vec![0.0; 6];
+        for j in 0..3 {
+            v.col_into(j, &mut vc);
+            quad.hvp_xx(&x, &th, &vc, &mut oc);
+            for i in 0..6 {
+                assert!((fast.at(i, j) - oc[i]).abs() < 1e-10);
+            }
+        }
+        let vt = Mat::randn(4, 3, &mut rng);
+        let mut cross = Mat::zeros(6, 3);
+        quad.jvp_x_theta_batch(&x, &th, &vt, &mut cross);
+        let mut vtc = vec![0.0; 4];
+        for j in 0..3 {
+            vt.col_into(j, &mut vtc);
+            quad.jvp_x_theta(&x, &th, &vtc, &mut oc);
+            for i in 0..6 {
+                assert!((cross.at(i, j) - oc[i]).abs() < 1e-10);
+            }
+        }
+        let u = Mat::randn(6, 3, &mut rng);
+        let mut back = Mat::zeros(4, 3);
+        quad.vjp_x_theta_batch(&x, &th, &u, &mut back);
+        let mut uc = vec![0.0; 6];
+        let mut bc = vec![0.0; 4];
+        for j in 0..3 {
+            u.col_into(j, &mut uc);
+            quad.vjp_x_theta(&x, &th, &uc, &mut bc);
+            for i in 0..4 {
+                assert!((back.at(i, j) - bc[i]).abs() < 1e-10);
+            }
         }
     }
 

@@ -7,8 +7,52 @@
 
 use super::objective::Objective;
 use crate::diff::spec::FixedPointMap;
+use crate::linalg::mat::Mat;
 use crate::proj::Projection;
 use crate::prox::Prox;
+
+/// Shared structure of the batched ∂₁T·V products for the prox-/proj-grad
+/// fixed points: ONE batched HVP for the expensive Hessian block, then a
+/// per-column elementwise prox/projection Jacobian (`map_col`, O(d) each).
+fn batched_pre_jvp<O: Objective>(
+    obj: &O,
+    eta: f64,
+    x: &[f64],
+    tf: &[f64],
+    v: &Mat,
+    map_col: impl FnMut(&[f64], &mut [f64]),
+    out: &mut Mat,
+) {
+    let d = x.len();
+    let mut hv = Mat::zeros(v.rows, v.cols);
+    obj.hvp_xx_batch(x, tf, v, &mut hv);
+    for (h, vi) in hv.data.iter_mut().zip(v.data.iter()) {
+        *h = *vi - eta * *h; // dy = v − η·Hv
+    }
+    crate::linalg::op::batch_cols(d, d, &hv, out, map_col);
+}
+
+/// Transposed counterpart: per-column prox/projection VJP first (`map_col`),
+/// then one batched HVP over the whole block, out = W − η·H·W.
+fn batched_post_vjp<O: Objective>(
+    obj: &O,
+    eta: f64,
+    x: &[f64],
+    tf: &[f64],
+    u: &Mat,
+    map_col: impl FnMut(&[f64], &mut [f64]),
+    out: &mut Mat,
+) {
+    let d = x.len();
+    assert_eq!((out.rows, out.cols), (d, u.cols), "batched vjp output must be d × k");
+    let mut w = Mat::zeros(d, u.cols);
+    crate::linalg::op::batch_cols(d, d, u, &mut w, map_col);
+    let mut hw = Mat::zeros(d, u.cols);
+    obj.hvp_xx_batch(x, tf, &w, &mut hw);
+    for i in 0..out.data.len() {
+        out.data[i] = w.data[i] - eta * hw.data[i];
+    }
+}
 
 /// T(x, θ) = prox_{ηg}(x − η∇₁f(x, θ_f), θ_g).
 pub struct ProxGradFixedPoint<O: Objective, P: Prox> {
@@ -65,6 +109,22 @@ impl<O: Objective, P: Prox> FixedPointMap for ProxGradFixedPoint<O, P> {
         for i in 0..x.len() {
             out[i] = w[i] - self.eta * hw[i];
         }
+    }
+    // Batched ∂₁T products: one batched HVP for the Hessian block, the
+    // separable prox Jacobians stay per-column (elementwise, O(d) each).
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        let (tf, tg) = self.split(theta);
+        let y = self.pre_step(x, tf);
+        batched_pre_jvp(&self.obj, self.eta, x, tf, v, |dy, o| {
+            self.prox.jvp_y(&y, tg, self.eta, dy, o)
+        }, out);
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        let (tf, tg) = self.split(theta);
+        let y = self.pre_step(x, tf);
+        batched_post_vjp(&self.obj, self.eta, x, tf, u, |uc, o| {
+            self.prox.vjp_y(&y, tg, self.eta, uc, o)
+        }, out);
     }
     fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
         let (tf, tg) = self.split(theta);
@@ -156,6 +216,18 @@ impl<O: Objective, P: Projection> FixedPointMap for ProjGradFixedPoint<O, P> {
         for i in 0..x.len() {
             out[i] = w[i] - self.eta * hw[i];
         }
+    }
+    // Batched ∂₁T products — same shared structure as ProxGradFixedPoint,
+    // with the projection Jacobian as the per-column map.
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        let (tf, tp) = self.split(theta);
+        let y = self.pre_step(x, tf);
+        batched_pre_jvp(&self.obj, self.eta, x, tf, v, |dy, o| self.proj.jvp_y(&y, tp, dy, o), out);
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        let (tf, tp) = self.split(theta);
+        let y = self.pre_step(x, tf);
+        batched_post_vjp(&self.obj, self.eta, x, tf, u, |uc, o| self.proj.vjp_y(&y, tp, uc, o), out);
     }
     fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
         let (tf, tp) = self.split(theta);
@@ -363,6 +435,50 @@ mod tests {
         let t = ProjGradFixedPoint::new(random_quad(5, 2, 3), SimplexProjection { d: 5 }, 0.1);
         let theta = [0.3, 0.8];
         check_fp_jacobians(&t, &theta, 4, 1e-5);
+    }
+
+    #[test]
+    fn batched_fixed_point_products_match_column_loop() {
+        let t = ProxGradFixedPoint::new(random_quad(6, 2, 9), LassoProx { d: 6 }, 0.1);
+        let theta = [0.4, -0.2, 0.5];
+        let mut rng = Rng::new(10);
+        let x = rng.normal_vec(6);
+        let v = Mat::randn(6, 4, &mut rng);
+        let mut fast = Mat::zeros(6, 4);
+        t.jvp_x_batch(&x, &theta, &v, &mut fast);
+        let mut vc = vec![0.0; 6];
+        let mut oc = vec![0.0; 6];
+        for j in 0..4 {
+            v.col_into(j, &mut vc);
+            t.jvp_x(&x, &theta, &vc, &mut oc);
+            for i in 0..6 {
+                assert!((fast.at(i, j) - oc[i]).abs() < 1e-10);
+            }
+        }
+        let mut fast_t = Mat::zeros(6, 4);
+        t.vjp_x_batch(&x, &theta, &v, &mut fast_t);
+        for j in 0..4 {
+            v.col_into(j, &mut vc);
+            t.vjp_x(&x, &theta, &vc, &mut oc);
+            for i in 0..6 {
+                assert!((fast_t.at(i, j) - oc[i]).abs() < 1e-10);
+            }
+        }
+        let pg = ProjGradFixedPoint::new(random_quad(5, 2, 11), SimplexProjection { d: 5 }, 0.1);
+        let theta = [0.3, 0.8];
+        let x = rng.normal_vec(5);
+        let v = Mat::randn(5, 3, &mut rng);
+        let mut fast = Mat::zeros(5, 3);
+        pg.jvp_x_batch(&x, &theta, &v, &mut fast);
+        let mut vc = vec![0.0; 5];
+        let mut oc = vec![0.0; 5];
+        for j in 0..3 {
+            v.col_into(j, &mut vc);
+            pg.jvp_x(&x, &theta, &vc, &mut oc);
+            for i in 0..5 {
+                assert!((fast.at(i, j) - oc[i]).abs() < 1e-10);
+            }
+        }
     }
 
     #[test]

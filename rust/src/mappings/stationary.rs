@@ -5,6 +5,7 @@
 
 use super::objective::Objective;
 use crate::diff::spec::{FixedPointMap, RootMap};
+use crate::linalg::mat::Mat;
 
 /// F(x, θ) = ∇₁f(x, θ).
 pub struct StationaryMapping<O: Objective> {
@@ -38,6 +39,20 @@ impl<O: Objective> RootMap for StationaryMapping<O> {
     }
     fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
         self.obj.vjp_x_theta(x, theta, u, out);
+    }
+    // Batched products delegate to the objective's batched oracles (a single
+    // GEMM for models that materialize their Hessian).
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.obj.hvp_xx_batch(x, theta, v, out);
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.obj.hvp_xx_batch(x, theta, u, out); // Hessian symmetric
+    }
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.obj.jvp_x_theta_batch(x, theta, v, out);
+    }
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.obj.vjp_x_theta_batch(x, theta, u, out);
     }
     fn a_symmetric(&self) -> bool {
         true
@@ -81,6 +96,28 @@ impl<O: Objective> FixedPointMap for GradientDescentFixedPoint<O> {
     fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
         self.obj.vjp_x_theta(x, theta, u, out);
         for o in out.iter_mut() {
+            *o *= -self.eta;
+        }
+    }
+    // Batched ∂₁T·V = V − η·(∇²f)·V: one batched HVP for the whole block.
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.obj.hvp_xx_batch(x, theta, v, out);
+        for (o, vi) in out.data.iter_mut().zip(v.data.iter()) {
+            *o = *vi - self.eta * *o;
+        }
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.jvp_x_batch(x, theta, u, out); // symmetric
+    }
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.obj.jvp_x_theta_batch(x, theta, v, out);
+        for o in out.data.iter_mut() {
+            *o *= -self.eta;
+        }
+    }
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.obj.vjp_x_theta_batch(x, theta, u, out);
+        for o in out.data.iter_mut() {
             *o *= -self.eta;
         }
     }

@@ -111,6 +111,39 @@ impl Objective for RidgeProblem {
             out[i] = u[i] * x[i];
         }
     }
+    // Batched oracles: the Hessian is G + diag(θ), so a block HVP is one
+    // packed GEMM plus a row-scaled add; the cross products are diagonal
+    // (row-scaling by x*), so batches are a single streaming pass.
+    fn hvp_xx_batch(&self, _x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.gram.matmul_into(v, out); // asserts the block shapes
+        let k = v.cols;
+        for i in 0..v.rows {
+            let ti = theta[i];
+            for j in 0..k {
+                out.data[i * k + j] += ti * v.data[i * k + j];
+            }
+        }
+    }
+    fn jvp_x_theta_batch(&self, x: &[f64], _theta: &[f64], v: &Mat, out: &mut Mat) {
+        assert_eq!(v.rows, x.len(), "batched cross-product input rows must be dim");
+        assert_eq!((out.rows, out.cols), (v.rows, v.cols), "batched cross-product shape");
+        let k = v.cols;
+        for i in 0..v.rows {
+            for j in 0..k {
+                out.data[i * k + j] = v.data[i * k + j] * x[i];
+            }
+        }
+    }
+    fn vjp_x_theta_batch(&self, x: &[f64], _theta: &[f64], u: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, x.len(), "batched cross-product input rows must be dim");
+        assert_eq!((out.rows, out.cols), (u.rows, u.cols), "batched cross-product shape");
+        let k = u.cols;
+        for i in 0..u.rows {
+            for j in 0..k {
+                out.data[i * k + j] = u.data[i * k + j] * x[i];
+            }
+        }
+    }
 }
 
 /// The ridge optimality mapping F(x, θ) = ∇₁f — `@custom_root` material.
@@ -137,6 +170,20 @@ impl RootMap for RidgeRoot<'_> {
     }
     fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
         self.0.vjp_x_theta(x, theta, u, out);
+    }
+    // Batched products route to the objective's one-GEMM overrides, so the
+    // dense-Jacobian block solve costs one GEMM per CG iteration.
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.0.hvp_xx_batch(x, theta, v, out);
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.0.hvp_xx_batch(x, theta, u, out);
+    }
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.0.jvp_x_theta_batch(x, theta, v, out);
+    }
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.0.vjp_x_theta_batch(x, theta, u, out);
     }
     fn a_symmetric(&self) -> bool {
         true

@@ -196,6 +196,36 @@ impl Objective for MulticlassSvm {
             out[i] = xxtv.data[i] / th;
         }
     }
+    /// Batched HVP: reshape each of the c columns (an m×k dual block) and
+    /// stack them side by side into one m×(k·c) matrix, so the whole block
+    /// costs TWO packed GEMMs instead of 2c small ones.
+    fn hvp_xx_batch(&self, _x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        let th = theta[0];
+        let (m, k) = (self.m(), self.k);
+        let c = v.cols;
+        assert_eq!(v.rows, m * k, "batched HVP input rows must be m·k");
+        assert_eq!((out.rows, out.cols), (m * k, c), "batched HVP output must be m·k × c");
+        let kc = k * c;
+        let mut stacked = Mat::zeros(m, kc);
+        for i in 0..m {
+            for b in 0..k {
+                let row = i * k + b;
+                for j in 0..c {
+                    stacked.data[i * kc + j * k + b] = v.data[row * c + j];
+                }
+            }
+        }
+        let xtv = self.x_tr.t_matmul(&stacked); // p×(k·c)
+        let xxtv = self.x_tr.matmul(&xtv); // m×(k·c)
+        for i in 0..m {
+            for b in 0..k {
+                let row = i * k + b;
+                for j in 0..c {
+                    out.data[row * c + j] = xxtv.data[i * kc + j * k + b] / th;
+                }
+            }
+        }
+    }
     fn jvp_x_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
         // ∂θ∇₁f = X Xᵀ(Y−x)/θ² = (XW)/θ
         let th = theta[0];
@@ -250,6 +280,32 @@ mod tests {
         let cfd = crate::ad::num_grad::jvp_fd(|tt| svm.grad_x_vec(&x, tt), &theta, &[1.0], 1e-6);
         for i in 0..d {
             assert!((c[i] - cfd[i]).abs() < 1e-3, "cross {i}: {} vs {}", c[i], cfd[i]);
+        }
+    }
+
+    #[test]
+    fn batched_hvp_matches_column_loop() {
+        let svm = small_svm(7);
+        let mut rng = Rng::new(8);
+        let d = svm.dim_x();
+        let x = rng.uniform_vec(d);
+        let theta = [0.8];
+        let v = Mat::randn(d, 5, &mut rng);
+        let mut fast = Mat::zeros(d, 5);
+        svm.hvp_xx_batch(&x, &theta, &v, &mut fast);
+        let mut vc = vec![0.0; d];
+        let mut oc = vec![0.0; d];
+        for j in 0..5 {
+            v.col_into(j, &mut vc);
+            svm.hvp_xx(&x, &theta, &vc, &mut oc);
+            for i in 0..d {
+                assert!(
+                    (fast.at(i, j) - oc[i]).abs() < 1e-10,
+                    "({i},{j}): {} vs {}",
+                    fast.at(i, j),
+                    oc[i]
+                );
+            }
         }
     }
 

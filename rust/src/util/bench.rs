@@ -79,6 +79,49 @@ pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> Measu
     m
 }
 
+/// Machine-readable benchmark journal — one row per measurement (name,
+/// mean_s, median_s, ci90_s, and GFLOP/s when the caller supplies a flop
+/// count), written as JSON so the perf trajectory is tracked across PRs
+/// (`BENCH_linalg.json`, see EXPERIMENTS.md §Perf) instead of only printed.
+#[derive(Default)]
+pub struct BenchJournal {
+    rows: Vec<Json>,
+}
+
+impl BenchJournal {
+    pub fn new() -> BenchJournal {
+        BenchJournal::default()
+    }
+
+    /// Record a measurement; pass the operation's flop count to get GFLOP/s.
+    pub fn record(&mut self, m: &Measurement, flops: Option<f64>) {
+        let mut pairs = vec![
+            ("name", Json::Str(m.name.clone())),
+            ("mean_s", Json::Num(m.mean_s())),
+            ("median_s", Json::Num(m.median_s())),
+            ("ci90_s", Json::Num(m.ci90_s())),
+        ];
+        if let Some(fl) = flops {
+            pairs.push(("gflops", Json::Num(fl / m.mean_s().max(1e-30) / 1e9)));
+        }
+        self.rows.push(Json::obj(pairs));
+    }
+
+    /// Append a free-form row (e.g. a speedup summary).
+    pub fn note(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Write the journal to `path` (e.g. `BENCH_linalg.json`).
+    pub fn write(&self, path: &str) {
+        let json = Json::obj(vec![("results", Json::Arr(self.rows.clone()))]);
+        match std::fs::write(path, json.to_string_pretty()) {
+            Ok(()) => println!("[bench] wrote {path}"),
+            Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+        }
+    }
+}
+
 /// A labelled series of (x, value, ci) rows — one paper curve.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
@@ -133,6 +176,30 @@ mod tests {
         assert_eq!(m.samples_s.len(), 3);
         assert!(m.mean_s() >= 0.0);
         assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn journal_writes_parseable_json() {
+        let cfg = BenchConfig { warmup_iters: 0, samples: 2, reps_per_sample: 1 };
+        let m = bench("journal-probe", cfg, || (0..100u64).sum::<u64>());
+        let mut j = BenchJournal::new();
+        j.record(&m, Some(200.0));
+        j.record(&m, None);
+        j.note(Json::obj(vec![("name", Json::Str("note".into())), ("speedup", Json::Num(2.0))]));
+        let dir = std::env::temp_dir().join("idiff_bench_journal_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_test.json");
+        let path_str = path.to_str().unwrap();
+        j.write(path_str);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].str_or("name", ""), "journal-probe");
+        assert!(rows[0].get("gflops").is_some());
+        assert!(rows[1].get("gflops").is_none());
+        assert!(rows[0].f64_or("mean_s", -1.0) >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

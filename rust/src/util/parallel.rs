@@ -45,6 +45,43 @@ pub fn parallel_for_each(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
     });
 }
 
+/// Split `data` into `chunk_len`-sized mutable chunks and run
+/// `f(chunk_index, chunk)` across `workers` threads. Chunks are distributed
+/// round-robin, so equal-sized chunks give balanced work without locking:
+/// the mutable borrow is split up-front by `chunks_mut`, each thread owns its
+/// disjoint set of chunks. This is the substrate under the parallel GEMM /
+/// GEMV kernels in `linalg::mat` (row panels of the output are disjoint).
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    workers: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let workers = workers.max(1).min(n_chunks.max(1));
+    if workers <= 1 {
+        for (i, ch) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, ch);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, ch) in data.chunks_mut(chunk_len).enumerate() {
+        buckets[i % workers].push((i, ch));
+    }
+    let fref = &f;
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (i, ch) in bucket {
+                    fref(i, ch);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +114,22 @@ mod tests {
     fn single_worker_serial() {
         let out = parallel_map(10, 1, |i| i + 1);
         assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_mut_covers_all_elements_once() {
+        for &(len, chunk, workers) in
+            &[(100usize, 7usize, 4usize), (64, 64, 3), (5, 100, 8), (0, 4, 2), (33, 1, 2)]
+        {
+            let mut data = vec![0u64; len];
+            parallel_chunks_mut(&mut data, chunk, workers, |ci, ch| {
+                for (off, v) in ch.iter_mut().enumerate() {
+                    *v += (ci * chunk + off) as u64 + 1;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u64 + 1, "element {i} written wrong/twice");
+            }
+        }
     }
 }

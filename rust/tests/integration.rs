@@ -34,6 +34,35 @@ fn custom_root_end_to_end_matches_closed_form() {
 }
 
 #[test]
+fn batched_jacobian_is_one_block_solve_and_matches_columns() {
+    // The batching PR's acceptance property, end to end on ridge: dense
+    // Jacobian assembly issues ONE block solve (not p column solves) and
+    // matches the column-by-column reference path to 1e-8.
+    use idiff::diff::root::jacobian_via_root_columns;
+    use idiff::linalg::solve::counter;
+    let rp = ridge();
+    let p = rp.dim();
+    let theta = vec![1.5; p];
+    let x_star = rp.solve_closed_form_vec(&theta);
+    let root = RidgeRoot(&rp);
+    counter::reset();
+    let j_block = jacobian_via_root(&root, &x_star, &theta);
+    assert_eq!(counter::count(), 1, "dense Jacobian must be a single block solve");
+    let j_cols = jacobian_via_root_columns(&root, &x_star, &theta);
+    assert_eq!(counter::count(), 1 + p, "column path issues p independent solves");
+    for i in 0..p {
+        for j in 0..p {
+            assert!(
+                (j_block.at(i, j) - j_cols.at(i, j)).abs() < 1e-8,
+                "({i},{j}): {} vs {}",
+                j_block.at(i, j),
+                j_cols.at(i, j)
+            );
+        }
+    }
+}
+
+#[test]
 fn hypergradient_matches_finite_differences() {
     // outer L(θ) = ½‖x*(θ)‖² through the ridge root.
     let rp = ridge();
@@ -129,7 +158,12 @@ fn xla_runtime_parity_if_artifacts_present() {
     let rp = idiff::coordinator::experiments::xla_parity::load_shared_problem(&dir).unwrap();
     let d = rp.dim();
     let native = RidgeRoot(&rp);
-    let oracle = idiff::runtime::XlaRidgeRoot { rt: &rt, d, design: rp.x.data.clone(), targets: rp.y.clone() };
+    let oracle = idiff::runtime::XlaRidgeRoot {
+        rt: &rt,
+        d,
+        design: rp.x.data.clone(),
+        targets: rp.y.clone(),
+    };
     let mut rng = Rng::new(9);
     let x = rng.normal_vec(d);
     let theta: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.5, 2.0)).collect();
