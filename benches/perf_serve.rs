@@ -1,0 +1,167 @@
+//! §Serving load-generator bench: throughput and latency of the catalog
+//! server at k ∈ {1, 8, 32} concurrent clients over loopback TCP, in three
+//! traffic shapes:
+//!
+//! - `shared-theta`: every client hammers ONE (problem, θ) — micro-batching
+//!   coalesces concurrent solves, then the factorization cache absorbs the
+//!   rest (steady state: zero iterative solves).
+//! - `theta-pool`: clients draw from 8 θ's — the LRU cache's regime.
+//! - `unique-theta`: every request is a fresh θ — worst case, every request
+//!   pays an inner solve + block solve (batching can still coalesce nothing).
+//!
+//! Journals mean/median/p95 latency and requests/s to `BENCH_serve.json`
+//! (uploaded by CI next to `BENCH_linalg.json`).
+//!
+//! Run: cargo bench --bench perf_serve [-- --requests 80]
+
+use idiff::coordinator::serve::{ServeConfig, Server};
+use idiff::util::cli::Args;
+use idiff::util::json::Json;
+use idiff::util::timer::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Traffic {
+    SharedTheta,
+    ThetaPool,
+    UniqueTheta,
+}
+
+/// `cell` salts the unique-theta stream so no bench cell replays a θ an
+/// earlier cell left in the server's persistent factorization cache — the
+/// "every request pays a solve" claim must actually hold.
+fn theta_for(traffic: Traffic, cell: usize, client: usize, i: usize, dim: usize) -> Vec<f64> {
+    let base = match traffic {
+        Traffic::SharedTheta => 1.0,
+        Traffic::ThetaPool => 1.0 + 0.1 * ((client * 7 + i) % 8) as f64,
+        // Base 2.0 keeps the stream disjoint from the shared/pool θ's.
+        Traffic::UniqueTheta => {
+            2.0 + 1e-9 * (cell * 100_000_000 + client * 1_000_000 + i) as f64
+        }
+    };
+    vec![base; dim]
+}
+
+fn run_load(
+    addr: std::net::SocketAddr,
+    cell: usize,
+    clients: usize,
+    requests_per_client: usize,
+    traffic: Traffic,
+) -> (f64, Vec<f64>) {
+    let t = Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(requests_per_client);
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                for i in 0..requests_per_client {
+                    let theta = theta_for(traffic, cell, c, i, 8);
+                    let v = vec![1.0; 8];
+                    let req = Json::obj(vec![
+                        ("op", Json::Str("hypergrad".into())),
+                        ("problem", Json::Str("ridge".into())),
+                        ("theta", Json::arr_f64(&theta)),
+                        ("v", Json::arr_f64(&v)),
+                    ]);
+                    let rt = Timer::start();
+                    writer.write_all(req.to_string_compact().as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    lat.push(rt.elapsed_s());
+                    assert!(line.contains("\"grad\""), "bad reply: {line}");
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap());
+    }
+    (t.elapsed_s(), latencies)
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let args = Args::parse();
+    let requests = args.get_usize("requests", 60);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = Arc::new(Server::new(ServeConfig {
+        batch_window: Duration::from_millis(1),
+        // Persistent connections hold a worker each; give the pool enough
+        // slots that k=32 clients actually run concurrently (the pool is
+        // still bounded — that's the point).
+        workers: 40,
+        ..ServeConfig::default()
+    }));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
+    // Let the listener thread come up.
+    std::thread::sleep(Duration::from_millis(50));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut cell = 0usize;
+    for (tname, traffic) in [
+        ("shared-theta", Traffic::SharedTheta),
+        ("theta-pool", Traffic::ThetaPool),
+        ("unique-theta", Traffic::UniqueTheta),
+    ] {
+        for &k in &[1usize, 8, 32] {
+            cell += 1;
+            let (wall, mut lat) = run_load(addr, cell, k, requests, traffic);
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = lat.len();
+            let rps = n as f64 / wall;
+            let mean = lat.iter().sum::<f64>() / n as f64;
+            println!(
+                "serve {tname:<13} k={k:<2}: {rps:>9.0} req/s  mean {:.3} ms  p50 {:.3} ms  p95 {:.3} ms",
+                mean * 1e3,
+                pct(&lat, 0.5) * 1e3,
+                pct(&lat, 0.95) * 1e3
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::Str(format!("serve {tname} k={k}"))),
+                ("traffic", Json::Str(tname.into())),
+                ("clients", Json::Num(k as f64)),
+                ("requests", Json::Num(n as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("rps", Json::Num(rps)),
+                ("mean_s", Json::Num(mean)),
+                ("p50_s", Json::Num(pct(&lat, 0.5))),
+                ("p95_s", Json::Num(pct(&lat, 0.95))),
+            ]));
+        }
+    }
+    // Final engine counters: how much the batcher and cache absorbed.
+    let stats = server.handle(r#"{"op":"stats"}"#);
+    println!("engine stats: {}", stats.to_string_compact());
+    rows.push(Json::obj(vec![
+        ("name", Json::Str("engine-stats".into())),
+        ("stats", stats),
+    ]));
+    let journal = Json::obj(vec![("results", Json::Arr(rows))]);
+    match std::fs::write("BENCH_serve.json", journal.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote BENCH_serve.json"),
+        Err(e) => eprintln!("[bench] FAILED to write BENCH_serve.json: {e}"),
+    }
+}

@@ -1,34 +1,51 @@
-//! Hypergradient request server + self-test client: the Rust binary on the
-//! request path (Python was build-time only). Starts the TCP server, fires
-//! a few JSON requests at it, prints the responses.
+//! Serving-engine self-test client: starts the catalog server on a loopback
+//! port, then walks the protocol — problem discovery, a batched hypergrad, a
+//! cache-hit repeat, the legacy ridge ops, and error handling.
 //!
 //! Run: cargo run --release --example hypergrad_server
-use idiff::coordinator::serve::HypergradServer;
+
+use idiff::coordinator::serve::{ServeConfig, Server};
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 
 fn main() {
-    let addr = "127.0.0.1:7979";
-    std::thread::spawn(move || {
-        let _ = HypergradServer::new_default().serve(addr);
-    });
-    std::thread::sleep(std::time::Duration::from_millis(300));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = Arc::new(Server::new(ServeConfig::default()));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
 
     let mut stream = TcpStream::connect(addr).expect("connect");
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let theta: Vec<String> = (0..8).map(|_| "1.0".to_string()).collect();
+    let t = theta.join(",");
     let reqs = vec![
         r#"{"op": "ping"}"#.to_string(),
-        format!(r#"{{"op": "ridge_hypergrad", "theta": [{t}], "v": [{t}]}}"#, t = theta.join(",")),
-        format!(r#"{{"op": "ridge_jacobian", "theta": [{t}]}}"#, t = theta.join(",")),
+        r#"{"op": "problems"}"#.to_string(),
+        format!(r#"{{"op": "hypergrad", "problem": "ridge", "theta": [{t}], "v": [{t}]}}"#),
+        // repeat θ → served from the factorization cache ("cached": true)
+        format!(r#"{{"op": "hypergrad", "problem": "ridge", "theta": [{t}], "v": [{t}]}}"#),
+        r#"{"op": "jvp", "problem": "svm", "theta": [1.0], "v": [1.0]}"#.to_string(),
+        r#"{"op": "solve", "problem": "lasso", "theta": [0.4]}"#.to_string(),
+        format!(r#"{{"op": "ridge_jacobian", "theta": [{t}]}}"#),
         r#"{"op": "bogus"}"#.to_string(),
+        r#"{"op": "stats"}"#.to_string(),
     ];
     for req in reqs {
         stream.write_all(req.as_bytes()).unwrap();
         stream.write_all(b"\n").unwrap();
         let mut resp = String::new();
         reader.read_line(&mut resp).unwrap();
-        let shown = if resp.len() > 140 { format!("{}…", &resp[..140]) } else { resp.clone() };
+        let shown = if resp.len() > 140 {
+            format!("{}…", resp.chars().take(140).collect::<String>())
+        } else {
+            resp.clone()
+        };
         println!("→ {req}\n← {shown}");
     }
     println!("hypergrad_server example OK");

@@ -1,0 +1,293 @@
+//! Request micro-batching: coalesce concurrent derivative requests on the
+//! same (problem, θ, op) into ONE multi-RHS block solve.
+//!
+//! The first request to open a batch becomes its *leader*: it waits up to
+//! the batching window (or until the batch is full — whichever comes first)
+//! for followers to join, closes the batch, runs the supplied block compute
+//! (e.g. `implicit_vjp_multi`, one solve for all k columns), and publishes
+//! the n×k result. Followers block on the batch condvar and each read their
+//! own column. A panicking compute is caught and surfaced as a per-request
+//! error instead of hanging the followers.
+
+use crate::linalg::mat::Mat;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which derivative op a batch coalesces (column dimensions differ).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BatchOp {
+    /// Reverse-mode: cotangents of length dim_x → outputs of length dim_theta.
+    Vjp,
+    /// Forward-mode: directions of length dim_theta → outputs of length dim_x.
+    Jvp,
+}
+
+/// Coalescing key: requests batch together iff problem, θ bits and op all
+/// match.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct BatchKey {
+    pub problem: String,
+    pub op: BatchOp,
+    bits: Vec<u64>,
+}
+
+impl BatchKey {
+    pub fn new(problem: &str, op: BatchOp, theta: &[f64]) -> BatchKey {
+        BatchKey {
+            problem: problem.to_string(),
+            op,
+            bits: theta.iter().map(|t| t.to_bits()).collect(),
+        }
+    }
+}
+
+type BatchResult = Result<Mat, String>;
+
+struct BatchState {
+    inputs: Vec<Vec<f64>>,
+    /// Set once the leader has taken the inputs; late arrivals must retry
+    /// into a fresh batch.
+    closed: bool,
+    result: Option<Arc<BatchResult>>,
+    /// Final batch size, set at close (so followers can report it).
+    size: usize,
+}
+
+struct Batch {
+    state: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+impl Batch {
+    fn new() -> Batch {
+        Batch {
+            state: Mutex::new(BatchState {
+                inputs: Vec::new(),
+                closed: false,
+                result: None,
+                size: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// The coalescing front of the serve engine.
+pub struct Batcher {
+    window: Duration,
+    max_batch: usize,
+    open: Mutex<HashMap<BatchKey, Arc<Batch>>>,
+    batches: AtomicU64,
+    coalesced_requests: AtomicU64,
+}
+
+impl Batcher {
+    /// `window`: how long a leader waits for followers; `max_batch`: close
+    /// early once this many requests joined. `window = 0` degenerates to
+    /// serial per-request solves.
+    pub fn new(window: Duration, max_batch: usize) -> Batcher {
+        Batcher {
+            window,
+            max_batch: max_batch.max(1),
+            open: Mutex::new(HashMap::new()),
+            batches: AtomicU64::new(0),
+            coalesced_requests: AtomicU64::new(0),
+        }
+    }
+
+    /// (batches executed, requests that shared a batch with at least one
+    /// other request).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.batches.load(Ordering::Relaxed), self.coalesced_requests.load(Ordering::Relaxed))
+    }
+
+    /// Join (or open) the batch for `key`, contributing the column `v`
+    /// (length `rows`). Exactly one caller per batch runs `compute` over the
+    /// assembled rows×k input block; every caller gets back its own output
+    /// column and the batch size. Lock order is `open` before `state`,
+    /// never the reverse.
+    pub fn submit(
+        &self,
+        key: BatchKey,
+        v: Vec<f64>,
+        rows: usize,
+        compute: impl FnOnce(&Mat) -> BatchResult,
+    ) -> (Result<Vec<f64>, String>, usize) {
+        assert_eq!(v.len(), rows, "batch column length mismatch");
+        loop {
+            let batch = {
+                let mut open = self.open.lock().unwrap();
+                open.entry(key.clone()).or_insert_with(|| Arc::new(Batch::new())).clone()
+            };
+            let my_idx = {
+                let mut st = batch.state.lock().unwrap();
+                if st.closed {
+                    // Raced with the leader closing this batch; retry into a
+                    // fresh one.
+                    continue;
+                }
+                st.inputs.push(v.clone());
+                let idx = st.inputs.len() - 1;
+                if st.inputs.len() >= self.max_batch {
+                    // Wake a leader waiting out its window.
+                    batch.cv.notify_all();
+                }
+                idx
+            };
+
+            let result = if my_idx == 0 {
+                self.lead(&key, &batch, compute)
+            } else {
+                let mut st = batch.state.lock().unwrap();
+                while st.result.is_none() {
+                    st = batch.cv.wait(st).unwrap();
+                }
+                st.result.clone().unwrap()
+            };
+
+            let size = batch.state.lock().unwrap().size;
+            let col = match result.as_ref() {
+                Ok(out) => {
+                    debug_assert_eq!(out.cols, size);
+                    Ok(out.col(my_idx))
+                }
+                Err(e) => Err(e.clone()),
+            };
+            return (col, size);
+        }
+    }
+
+    /// Leader path: wait for followers, close the batch, compute, publish.
+    fn lead(
+        &self,
+        key: &BatchKey,
+        batch: &Arc<Batch>,
+        compute: impl FnOnce(&Mat) -> BatchResult,
+    ) -> Arc<BatchResult> {
+        // Phase 1: wait for the window to elapse or the batch to fill.
+        let deadline = Instant::now() + self.window;
+        {
+            let mut st = batch.state.lock().unwrap();
+            while st.inputs.len() < self.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = batch.cv.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        // Phase 2: unlist the batch so new arrivals open a fresh one
+        // (open-lock before state-lock, hence the dance).
+        {
+            let mut open = self.open.lock().unwrap();
+            if let Some(cur) = open.get(key) {
+                if Arc::ptr_eq(cur, batch) {
+                    open.remove(key);
+                }
+            }
+        }
+        // Phase 3: close and take the inputs. Anything pushed before this
+        // point is in; pushes after see `closed` and retry.
+        let inputs = {
+            let mut st = batch.state.lock().unwrap();
+            st.closed = true;
+            st.size = st.inputs.len();
+            std::mem::take(&mut st.inputs)
+        };
+        let k = inputs.len();
+        let rows = inputs[0].len();
+        let mut block = Mat::zeros(rows, k);
+        for (j, col) in inputs.iter().enumerate() {
+            block.set_col(j, col);
+        }
+        // Phase 4: one block compute for the whole batch; a panic becomes a
+        // shared error rather than a hang.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute(&block)))
+            .unwrap_or_else(|_| Err("internal: batch compute panicked".to_string()));
+        let result = Arc::new(result);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if k > 1 {
+            self.coalesced_requests.fetch_add(k as u64, Ordering::Relaxed);
+        }
+        let mut st = batch.state.lock().unwrap();
+        st.result = Some(result.clone());
+        batch.cv.notify_all();
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// N threads on one key with `max_batch = N`: exactly one compute over
+    /// an N-column block, each thread gets its own column back.
+    #[test]
+    fn coalesces_concurrent_requests_into_one_compute() {
+        let n = 6;
+        let batcher = Arc::new(Batcher::new(Duration::from_secs(5), n));
+        let computes = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = batcher.clone();
+                let c = computes.clone();
+                std::thread::spawn(move || {
+                    let key = BatchKey::new("p", BatchOp::Vjp, &[1.0]);
+                    let v = vec![i as f64; 3];
+                    let (res, size) = b.submit(key, v, 3, |block| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        // compute: 2× each column
+                        let mut out = Mat::zeros(block.rows, block.cols);
+                        for idx in 0..block.data.len() {
+                            out.data[idx] = 2.0 * block.data[idx];
+                        }
+                        Ok(out)
+                    });
+                    (i, res.unwrap(), size)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (i, col, size) = h.join().unwrap();
+            assert_eq!(size, n);
+            assert_eq!(col, vec![2.0 * i as f64; 3]);
+        }
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "batch must run ONE compute");
+        let (batches, coalesced) = batcher.stats();
+        assert_eq!(batches, 1);
+        assert_eq!(coalesced, n as u64);
+    }
+
+    #[test]
+    fn different_keys_do_not_coalesce() {
+        let batcher = Batcher::new(Duration::from_millis(0), 8);
+        let (a, sa) =
+            batcher.submit(BatchKey::new("p", BatchOp::Vjp, &[1.0]), vec![1.0], 1, |b| {
+                Ok(b.clone())
+            });
+        let (c, sc) =
+            batcher.submit(BatchKey::new("p", BatchOp::Jvp, &[1.0]), vec![2.0], 1, |b| {
+                Ok(b.clone())
+            });
+        assert_eq!((a.unwrap(), sa), (vec![1.0], 1));
+        assert_eq!((c.unwrap(), sc), (vec![2.0], 1));
+        assert_eq!(batcher.stats().0, 2);
+    }
+
+    #[test]
+    fn compute_error_reaches_every_member_and_panic_is_caught() {
+        let batcher = Batcher::new(Duration::from_millis(0), 4);
+        let key = BatchKey::new("p", BatchOp::Vjp, &[2.0]);
+        let (res, _) = batcher.submit(key.clone(), vec![0.0], 1, |_| Err("boom".into()));
+        assert_eq!(res.unwrap_err(), "boom");
+        let (res, _) = batcher.submit(key, vec![0.0], 1, |_| panic!("kaput"));
+        assert!(res.unwrap_err().contains("panicked"));
+    }
+}

@@ -1,0 +1,154 @@
+//! θ-keyed LRU cache of (x*(θ), factorization of A) per problem.
+//!
+//! A repeat-θ request skips BOTH the inner solve (x* is stored) and the
+//! Krylov iteration (A's Cholesky/LU factor is stored; JVP/VJP become O(d²)
+//! substitutions that never touch the solve counter). Keys hash the exact
+//! f64 bit patterns of θ — serving is a memoization problem, not a nearest-
+//! neighbor one.
+
+use crate::linalg::solve::Factorization;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Exact-θ cache key: problem name + θ bit patterns.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct ThetaKey {
+    pub problem: String,
+    bits: Vec<u64>,
+}
+
+impl ThetaKey {
+    pub fn new(problem: &str, theta: &[f64]) -> ThetaKey {
+        ThetaKey {
+            problem: problem.to_string(),
+            bits: theta.iter().map(|t| t.to_bits()).collect(),
+        }
+    }
+}
+
+/// One cached (x*, factorization) pair, shared by reference so readers never
+/// copy the factor.
+#[derive(Clone)]
+pub struct CacheEntry {
+    pub x_star: Arc<Vec<f64>>,
+    pub fact: Arc<Factorization>,
+}
+
+struct CacheInner {
+    map: HashMap<ThetaKey, CacheEntry>,
+    /// Recency order, most recent last. Capacity is small (tens of θ's), so
+    /// the O(len) reshuffle on hit is noise next to an O(d²) substitution.
+    order: Vec<ThetaKey>,
+}
+
+/// Thread-safe LRU of factorized problems.
+pub struct FactorCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl FactorCache {
+    pub fn new(capacity: usize) -> FactorCache {
+        FactorCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), order: Vec::new() }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up θ; refreshes recency on hit.
+    pub fn get(&self, key: &ThetaKey) -> Option<CacheEntry> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(key).cloned() {
+            Some(entry) => {
+                inner.order.retain(|k| k != key);
+                inner.order.push(key.clone());
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used θ
+    /// beyond capacity.
+    pub fn insert(&self, key: ThetaKey, entry: CacheEntry) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.order.retain(|k| k != &key);
+        inner.order.push(key.clone());
+        inner.map.insert(key, entry);
+        while inner.map.len() > self.capacity {
+            let victim = inner.order.remove(0);
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses, evictions).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+
+    fn entry(v: f64) -> CacheEntry {
+        let fact = Factorization::of_mat(&Mat::eye(2), true).unwrap();
+        CacheEntry { x_star: Arc::new(vec![v; 2]), fact: Arc::new(fact) }
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_counts() {
+        let c = FactorCache::new(2);
+        let k1 = ThetaKey::new("ridge", &[1.0]);
+        let k2 = ThetaKey::new("ridge", &[2.0]);
+        let k3 = ThetaKey::new("ridge", &[3.0]);
+        c.insert(k1.clone(), entry(1.0));
+        c.insert(k2.clone(), entry(2.0));
+        assert!(c.get(&k1).is_some()); // k1 now most recent
+        c.insert(k3.clone(), entry(3.0)); // evicts k2
+        assert!(c.get(&k2).is_none());
+        assert!(c.get(&k1).is_some());
+        assert!(c.get(&k3).is_some());
+        assert_eq!(c.len(), 2);
+        let (h, m, e) = c.stats();
+        assert_eq!((h, m, e), (4, 1, 1));
+    }
+
+    #[test]
+    fn distinct_problems_and_bit_exact_thetas_are_distinct_keys() {
+        let c = FactorCache::new(8);
+        c.insert(ThetaKey::new("ridge", &[1.0]), entry(1.0));
+        assert!(c.get(&ThetaKey::new("svm", &[1.0])).is_none());
+        // 1.0 + 1e-16 rounds back to exactly 1.0 in f64 — same bits, a hit.
+        assert!(c.get(&ThetaKey::new("ridge", &[1.0 + 1e-16])).is_some());
+        // A genuinely different bit pattern misses.
+        assert!(c.get(&ThetaKey::new("ridge", &[1.0000000001])).is_none());
+        let x = c.get(&ThetaKey::new("ridge", &[1.0])).unwrap();
+        assert_eq!(x.x_star[0], 1.0);
+    }
+}

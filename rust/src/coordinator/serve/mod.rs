@@ -1,0 +1,712 @@
+//! Hypergradient serving subsystem: the whole optimality-mapping catalog
+//! behind one line-delimited JSON TCP protocol, with request micro-batching
+//! onto block solves, a θ-keyed factorization cache, and a bounded worker
+//! pool (no thread-per-connection).
+//!
+//! # Protocol reference (one JSON object per line, one reply line each)
+//!
+//! | request                                                        | reply |
+//! |----------------------------------------------------------------|-------|
+//! | `{"op":"ping"}`                                                | `{"ok":true}` |
+//! | `{"op":"problems"}`                                            | `{"problems":[{"name","desc","dim_x","dim_theta"},…]}` |
+//! | `{"op":"stats"}`                                               | serve counters (solves, batches, cache hits, …) |
+//! | `{"op":"solve","problem":P,"theta":[…]}`                       | `{"x":[…],"cached":bool}` |
+//! | `{"op":"hypergrad","problem":P,"theta":[…],"v":[… dim_x]}`     | `{"grad":[… dim_theta],"batched":k,"cached":bool}` |
+//! | `{"op":"jvp","problem":P,"theta":[…],"v":[… dim_theta]}`       | `{"jv":[… dim_x],"batched":k,"cached":bool}` |
+//! | `{"op":"jacobian","problem":P,"theta":[…]}`                    | `{"jacobian":[[…]…],"cached":bool}` |
+//!
+//! `"vjp"` is accepted as an alias of `"hypergrad"`; the pre-registry ops
+//! `"ridge_hypergrad"`/`"ridge_jacobian"` are kept as aliases onto
+//! `problem = "ridge"`. Every failure — malformed JSON, unknown op or
+//! problem, wrong-length or non-finite vectors, oversized lines — is a
+//! `{"error": "…"}` reply; the connection stays open.
+//!
+//! # Request path
+//!
+//! Derivative requests are keyed by (problem, θ, op):
+//!
+//! 1. **Cache hit** — the θ-keyed LRU holds x*(θ) and a dense Cholesky/LU
+//!    factorization of A = −∂₁F: the reply costs an O(d²) substitution and
+//!    ZERO iterative solves (asserted by tests via the solve counter).
+//! 2. **Miss** — the request joins the micro-batch for its key; the batch
+//!    leader waits out the batching window (or until `batch_max`), solves
+//!    the inner problem once, answers all k members with ONE
+//!    `implicit_vjp_multi`/`implicit_jvp_multi` block solve, and populates
+//!    the cache so subsequent repeats of θ take path 1.
+//!
+//! Connections are dispatched onto a bounded [`WorkerPool`]: at most
+//! `workers` connections are serviced concurrently, excess connections
+//! queue, and a connection idle past `idle_timeout` is closed so it cannot
+//! pin a worker (size `workers` to the expected number of concurrently
+//! ACTIVE clients).
+
+pub mod batcher;
+pub mod cache;
+pub mod registry;
+
+use crate::linalg::mat::Mat;
+use crate::linalg::solve::counter;
+use crate::util::json::{self, Json};
+use crate::util::parallel::WorkerPool;
+use batcher::{BatchKey, BatchOp, Batcher};
+use cache::{CacheEntry, FactorCache, ThetaKey};
+use registry::{Problem, Registry};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve-side knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads handling connections (bounded pool).
+    pub workers: usize,
+    /// Micro-batching window: how long a batch leader waits for followers.
+    pub batch_window: Duration,
+    /// Close a batch early once this many requests joined.
+    pub batch_max: usize,
+    /// θ-keyed factorization cache capacity (entries across all problems).
+    pub cache_capacity: usize,
+    /// Reject request lines longer than this many bytes.
+    pub max_line_bytes: usize,
+    /// Close a connection after this long with no request. A connection
+    /// holds a pool worker while open, so idle clients must not be allowed
+    /// to starve queued connections forever.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: crate::util::parallel::default_workers(),
+            batch_window: Duration::from_millis(2),
+            batch_max: 32,
+            cache_capacity: 64,
+            max_line_bytes: 1 << 20,
+            idle_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Engine counters (all monotonic).
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    /// Iterative solves issued (block solve of any width counts ONCE),
+    /// measured around each compute via the thread-local solve counter.
+    pub block_solves: AtomicU64,
+    /// Inner problem solves (x*(θ) computations).
+    pub inner_solves: AtomicU64,
+    /// Requests answered from the θ-keyed factorization cache.
+    pub cache_hits: AtomicU64,
+}
+
+/// The serving engine. `handle` is the transport-free core (tests and
+/// benches call it directly); [`Server::serve`] is the TCP front.
+pub struct Server {
+    registry: Registry,
+    batcher: Batcher,
+    cache: FactorCache,
+    pub stats: ServeStats,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Server {
+        Server {
+            registry: Registry::standard(),
+            batcher: Batcher::new(cfg.batch_window, cfg.batch_max),
+            cache: FactorCache::new(cfg.cache_capacity),
+            stats: ServeStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn with_defaults() -> Server {
+        Server::new(ServeConfig::default())
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Handle one request line, producing one reply value. Never panics:
+    /// internal panics are caught and reported as `{"error": …}`.
+    pub fn handle(&self, line: &str) -> Json {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.handle_inner(line)
+        }))
+        .unwrap_or_else(|_| err_json("internal: request handler panicked"));
+        if reply.get("error").is_some() {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        reply
+    }
+
+    fn handle_inner(&self, line: &str) -> Json {
+        if line.len() > self.cfg.max_line_bytes {
+            return err_json(&format!(
+                "request too large ({} bytes > {} max)",
+                line.len(),
+                self.cfg.max_line_bytes
+            ));
+        }
+        let req = match json::parse(line) {
+            Ok(r) => r,
+            Err(e) => return err_json(&format!("bad json: {e}")),
+        };
+        match req.str_or("op", "") {
+            "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+            "problems" => self.op_problems(),
+            "stats" => self.op_stats(),
+            "solve" => self.with_problem(&req, |p, theta| self.op_solve(p, theta)),
+            "hypergrad" | "vjp" => {
+                self.with_problem(&req, |p, theta| self.op_derivative(p, theta, &req, BatchOp::Vjp))
+            }
+            "jvp" => {
+                self.with_problem(&req, |p, theta| self.op_derivative(p, theta, &req, BatchOp::Jvp))
+            }
+            "jacobian" => self.with_problem(&req, |p, theta| self.op_jacobian(p, theta)),
+            // Pre-registry aliases (PR 0 protocol).
+            "ridge_hypergrad" => match self.problem_and_theta_named(&req, "ridge") {
+                Ok((p, theta)) => self.op_derivative(p, &theta, &req, BatchOp::Vjp),
+                Err(e) => e,
+            },
+            "ridge_jacobian" => match self.problem_and_theta_named(&req, "ridge") {
+                Ok((p, theta)) => self.op_jacobian(p, &theta),
+                Err(e) => e,
+            },
+            "" => err_json("missing 'op'"),
+            other => err_json(&format!("unknown op '{other}'")),
+        }
+    }
+
+    fn op_problems(&self) -> Json {
+        let rows: Vec<Json> = self
+            .registry
+            .problems()
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::Str(p.name.to_string())),
+                    ("desc", Json::Str(p.describe.to_string())),
+                    ("dim_x", Json::Num(p.dim_x() as f64)),
+                    ("dim_theta", Json::Num(p.dim_theta() as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("problems", Json::Arr(rows))])
+    }
+
+    fn op_stats(&self) -> Json {
+        let (batches, coalesced) = self.batcher.stats();
+        let (hits, misses, evictions) = self.cache.stats();
+        Json::obj(vec![
+            ("requests", Json::Num(self.stats.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
+            ("block_solves", Json::Num(self.stats.block_solves.load(Ordering::Relaxed) as f64)),
+            ("inner_solves", Json::Num(self.stats.inner_solves.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(batches as f64)),
+            ("coalesced_requests", Json::Num(coalesced as f64)),
+            ("cache_hits", Json::Num(hits as f64)),
+            ("cache_misses", Json::Num(misses as f64)),
+            ("cache_evictions", Json::Num(evictions as f64)),
+            ("cache_len", Json::Num(self.cache.len() as f64)),
+            ("workers", Json::Num(self.cfg.workers as f64)),
+        ])
+    }
+
+    fn with_problem(&self, req: &Json, f: impl FnOnce(&Problem, &[f64]) -> Json) -> Json {
+        let name = req.str_or("problem", "");
+        if name.is_empty() {
+            return err_json("missing 'problem'");
+        }
+        match self.problem_and_theta_named(req, name) {
+            Ok((p, theta)) => f(p, &theta),
+            Err(e) => e,
+        }
+    }
+
+    fn problem_and_theta_named(&self, req: &Json, name: &str) -> Result<(&Problem, Vec<f64>), Json> {
+        let p = self.registry.get(name).ok_or_else(|| {
+            let names: Vec<&str> = self.registry.problems().iter().map(|p| p.name).collect();
+            err_json(&format!("unknown problem '{name}' (have: {})", names.join(", ")))
+        })?;
+        let theta = parse_vec(req, "theta", p.dim_theta())?;
+        p.validate_theta(&theta).map_err(|e| err_json(&e))?;
+        Ok((p, theta))
+    }
+
+    /// x*(θ) through the cache; the bool reports whether this was a hit
+    /// (hits skip the inner solve and the factorization entirely).
+    fn cached_solution(&self, p: &Problem, theta: &[f64]) -> Result<(CacheEntry, bool), String> {
+        let key = ThetaKey::new(p.name, theta);
+        if let Some(entry) = self.cache.get(&key) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((entry, true));
+        }
+        let x_star = p.solve(theta);
+        self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
+        let fact = p
+            .factorize(&x_star, theta)
+            .ok_or_else(|| format!("problem '{}' is singular at this θ", p.name))?;
+        let entry = CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) };
+        self.cache.insert(key, entry.clone());
+        Ok((entry, false))
+    }
+
+    fn op_solve(&self, p: &Problem, theta: &[f64]) -> Json {
+        match self.cached_solution(p, theta) {
+            Ok((entry, was_hit)) => Json::obj(vec![
+                ("x", Json::arr_f64(&entry.x_star)),
+                ("cached", Json::Bool(was_hit)),
+            ]),
+            Err(e) => err_json(&e),
+        }
+    }
+
+    /// The batched derivative path: cache hit → factored substitution
+    /// (zero iterative solves); miss → micro-batch onto ONE block solve.
+    fn op_derivative(&self, p: &Problem, theta: &[f64], req: &Json, op: BatchOp) -> Json {
+        let (in_dim, out_key) = match op {
+            BatchOp::Vjp => (p.dim_x(), "grad"),
+            BatchOp::Jvp => (p.dim_theta(), "jv"),
+        };
+        let v = match parse_vec(req, "v", in_dim) {
+            Ok(v) => v,
+            Err(e) => return e,
+        };
+
+        // Fast path: prefactored θ.
+        if let Some(entry) = self.cache.get(&ThetaKey::new(p.name, theta)) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let vmat = Mat::from_col(&v);
+            let before = counter::count();
+            let out = match op {
+                BatchOp::Vjp => p.vjp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
+                BatchOp::Jvp => p.jvp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
+            };
+            self.stats
+                .block_solves
+                .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
+            return Json::obj(vec![
+                (out_key, Json::arr_f64(&out.col(0))),
+                ("batched", Json::Num(1.0)),
+                ("cached", Json::Bool(true)),
+            ]);
+        }
+
+        // Batched path: coalesce same-(problem, θ, op) requests into one
+        // block solve, then prefactor for future repeats of this θ.
+        let key = BatchKey::new(p.name, op, theta);
+        let (col, size) = self.batcher.submit(key, v, in_dim, |block| {
+            let x_star = p.solve(theta);
+            self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
+            let before = counter::count();
+            let (out, rep) = match op {
+                BatchOp::Vjp => p.vjp_multi(&x_star, theta, block),
+                BatchOp::Jvp => p.jvp_multi(&x_star, theta, block),
+            };
+            self.stats
+                .block_solves
+                .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
+            if !rep.converged {
+                return Err(format!(
+                    "linear solve did not converge (residual {:.2e} after {} iterations)",
+                    rep.max_residual, rep.iterations
+                ));
+            }
+            if let Some(fact) = p.factorize(&x_star, theta) {
+                self.cache.insert(
+                    ThetaKey::new(p.name, theta),
+                    CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) },
+                );
+            }
+            Ok(out)
+        });
+        match col {
+            Ok(col) => Json::obj(vec![
+                (out_key, Json::arr_f64(&col)),
+                ("batched", Json::Num(size as f64)),
+                ("cached", Json::Bool(false)),
+            ]),
+            Err(e) => err_json(&e),
+        }
+    }
+
+    fn op_jacobian(&self, p: &Problem, theta: &[f64]) -> Json {
+        let key = ThetaKey::new(p.name, theta);
+        let (jac, was_hit) = if let Some(entry) = self.cache.get(&key) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            (p.jacobian_factored(&entry.fact, &entry.x_star, theta), true)
+        } else {
+            // One inner solve either way; the factorization decides between
+            // the direct and the iterative Jacobian path.
+            let x_star = p.solve(theta);
+            self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
+            match p.factorize(&x_star, theta) {
+                Some(fact) => {
+                    let entry =
+                        CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) };
+                    self.cache.insert(key, entry.clone());
+                    (p.jacobian_factored(&entry.fact, &entry.x_star, theta), false)
+                }
+                // Singular A: nothing to cache, but the iterative (GMRES)
+                // Jacobian still produces the best least-squares iterate
+                // instead of refusing the request.
+                None => {
+                    let before = counter::count();
+                    let jac = p.jacobian(&x_star, theta);
+                    self.stats
+                        .block_solves
+                        .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
+                    (jac, false)
+                }
+            }
+        };
+        let rows: Vec<Json> = (0..jac.rows).map(|i| Json::arr_f64(jac.row(i))).collect();
+        Json::obj(vec![("jacobian", Json::Arr(rows)), ("cached", Json::Bool(was_hit))])
+    }
+
+    /// Serve connections from an already-bound listener, dispatching each
+    /// onto the bounded worker pool. Blocks forever (until process exit).
+    pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
+        let pool = WorkerPool::new(self.cfg.workers);
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let me = self.clone();
+            pool.submit(move || {
+                let _ = handle_conn(&me, stream);
+            });
+        }
+        Ok(())
+    }
+
+    /// Bind `addr` and serve (see [`Server::serve_on`]).
+    pub fn serve(self: Arc<Self>, addr: &str) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        println!("idiff serve: listening on {addr} ({} workers)", self.cfg.workers);
+        self.serve_on(listener)
+    }
+}
+
+fn handle_conn(server: &Server, stream: TcpStream) -> std::io::Result<()> {
+    // An open connection holds a pool worker; an idle one must hand it back.
+    let _ = stream.set_read_timeout(Some(server.cfg.idle_timeout));
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(()); // idle timeout: close, release the worker
+            }
+            Err(e) => return Err(e),
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = server.handle(&line);
+        writer.write_all(resp.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+fn parse_vec(req: &Json, key: &str, expected: usize) -> Result<Vec<f64>, Json> {
+    let arr = req
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err_json(&format!("missing '{key}'")))?;
+    if arr.len() != expected {
+        return Err(err_json(&format!(
+            "'{key}' must have length {expected}, got {}",
+            arr.len()
+        )));
+    }
+    let mut v = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        match x.as_f64() {
+            Some(f) if f.is_finite() => v.push(f),
+            _ => return Err(err_json(&format!("'{key}[{i}]' is not a finite number"))),
+        }
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::implicit_vjp;
+    use crate::linalg::solve::LinearSolveConfig;
+    use crate::ml::ridge::{RidgeProblem, RidgeRoot};
+
+    fn quiet_cfg() -> ServeConfig {
+        // window 0: no deliberate waiting in single-threaded tests
+        ServeConfig { batch_window: Duration::from_millis(0), ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn ping_problems_stats() {
+        let s = Server::new(quiet_cfg());
+        assert_eq!(s.handle(r#"{"op":"ping"}"#).get("ok"), Some(&Json::Bool(true)));
+        let probs = s.handle(r#"{"op":"problems"}"#);
+        let arr = probs.get("problems").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 6);
+        assert!(arr.iter().any(|p| p.str_or("name", "") == "svm"));
+        let stats = s.handle(r#"{"op":"stats"}"#);
+        assert!(stats.f64_or("requests", -1.0) >= 2.0);
+    }
+
+    #[test]
+    fn errors_are_clean_json() {
+        let s = Server::new(quiet_cfg());
+        for (req, needle) in [
+            ("not json", "bad json"),
+            (r#"{"op":"zap"}"#, "unknown op"),
+            (r#"{"theta":[1]}"#, "missing 'op'"),
+            (r#"{"op":"solve"}"#, "missing 'problem'"),
+            (r#"{"op":"solve","problem":"nope","theta":[1]}"#, "unknown problem"),
+            (r#"{"op":"solve","problem":"svm","theta":[1,2]}"#, "length 1"),
+            (r#"{"op":"solve","problem":"svm","theta":[-1]}"#, "θ > 0"),
+            (r#"{"op":"hypergrad","problem":"quad","theta":[1,1,1,1]}"#, "missing 'v'"),
+            (r#"{"op":"hypergrad","problem":"quad","theta":[1,1,1,1],"v":[1,2]}"#, "length 6"),
+            (r#"{"op":"solve","problem":"lasso","theta":["x"]}"#, "not a finite number"),
+        ] {
+            let r = s.handle(req);
+            let msg = r.get("error").and_then(Json::as_str).unwrap_or_else(|| {
+                panic!("expected error for {req}, got {}", r.to_string_compact())
+            });
+            assert!(msg.contains(needle), "{req}: '{msg}' should contain '{needle}'");
+        }
+        // oversized line
+        let s2 = Server::new(ServeConfig { max_line_bytes: 64, ..quiet_cfg() });
+        let big = format!(r#"{{"op":"solve","problem":"ridge","theta":[{}]}}"#, "1.0,".repeat(100));
+        assert!(s2.handle(&big).str_or("error", "").contains("too large"));
+        let errs = s2.stats.errors.load(Ordering::Relaxed);
+        assert_eq!(errs, 1);
+    }
+
+    #[test]
+    fn hypergrad_matches_direct_implicit_vjp_and_legacy_alias() {
+        let s = Server::new(quiet_cfg());
+        let theta = vec![1.0; 8];
+        let v = vec![1.0; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&v)),
+        ]);
+        let r = s.handle(&req.to_string_compact());
+        let g: Vec<f64> = r
+            .get("grad")
+            .and_then(Json::as_arr)
+            .expect("grad")
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        // ground truth through the library path on the same data
+        let (x, y) = crate::data::regression::diabetes_like(64, 8, 7);
+        let rp = RidgeProblem::new(x, y);
+        let x_star = rp.solve_closed_form_vec(&theta);
+        let (truth, _) = implicit_vjp(
+            &RidgeRoot(&rp),
+            &x_star,
+            &theta,
+            &v,
+            &LinearSolveConfig::default(),
+        );
+        for i in 0..8 {
+            assert!((g[i] - truth[i]).abs() < 1e-7, "{}: {} vs {}", i, g[i], truth[i]);
+        }
+        // legacy alias answers the same
+        let legacy = Json::obj(vec![
+            ("op", Json::Str("ridge_hypergrad".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&v)),
+        ]);
+        // (the alias hits the now-populated factorization cache, so this
+        // also cross-checks the factored path against the iterative one)
+        let r2 = s.handle(&legacy.to_string_compact());
+        let g2 = r2.get("grad").and_then(Json::as_arr).expect("legacy grad");
+        for i in 0..8 {
+            assert!((g2[i].as_f64().unwrap() - g[i]).abs() < 1e-7);
+        }
+        // jacobian (legacy alias too) matches the closed form
+        let jreq = Json::obj(vec![
+            ("op", Json::Str("ridge_jacobian".into())),
+            ("theta", Json::arr_f64(&theta)),
+        ]);
+        let jr = s.handle(&jreq.to_string_compact());
+        let jac = jr.get("jacobian").and_then(Json::as_arr).expect("jacobian");
+        let truth = rp.jacobian_closed_form(&theta);
+        for i in 0..8 {
+            let row = jac[i].as_arr().unwrap();
+            for j in 0..8 {
+                assert!((row[j].as_f64().unwrap() - truth.at(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_theta_is_served_from_cache_with_zero_new_solves() {
+        let s = Server::new(quiet_cfg());
+        let theta = vec![0.9; 8];
+        let v = vec![0.5; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&v)),
+        ])
+        .to_string_compact();
+        let first = s.handle(&req);
+        assert_eq!(first.get("cached"), Some(&Json::Bool(false)));
+        let solves_after_first = s.stats.block_solves.load(Ordering::Relaxed);
+        let inner_after_first = s.stats.inner_solves.load(Ordering::Relaxed);
+        assert_eq!(solves_after_first, 1);
+        assert_eq!(inner_after_first, 1);
+        let second = s.handle(&req);
+        assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(
+            s.stats.block_solves.load(Ordering::Relaxed),
+            solves_after_first,
+            "repeat-θ must not issue new iterative solves"
+        );
+        assert_eq!(
+            s.stats.inner_solves.load(Ordering::Relaxed),
+            inner_after_first,
+            "repeat-θ must not re-solve the inner problem"
+        );
+        // identical answers on both paths
+        let a = first.get("grad").and_then(Json::as_arr).unwrap();
+        let b = second.get("grad").and_then(Json::as_arr).unwrap();
+        for i in 0..8 {
+            assert!((a[i].as_f64().unwrap() - b[i].as_f64().unwrap()).abs() < 1e-7);
+        }
+        assert_eq!(s.stats.cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// The tentpole acceptance property: N concurrent hypergrad requests on
+    /// one (problem, θ) → exactly ONE block solve, answers identical to the
+    /// serial path.
+    #[test]
+    fn concurrent_hypergrads_coalesce_into_one_block_solve() {
+        let n = 6;
+        let s = Arc::new(Server::new(ServeConfig {
+            batch_window: Duration::from_secs(10), // full batch closes it
+            batch_max: n,
+            ..ServeConfig::default()
+        }));
+        let theta = vec![1.1; 8];
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let s = s.clone();
+                let theta = theta.clone();
+                std::thread::spawn(move || {
+                    let mut v = vec![0.0; 8];
+                    v[i % 8] = 1.0 + i as f64;
+                    let req = Json::obj(vec![
+                        ("op", Json::Str("hypergrad".into())),
+                        ("problem", Json::Str("ridge".into())),
+                        ("theta", Json::arr_f64(&theta)),
+                        ("v", Json::arr_f64(&v)),
+                    ]);
+                    let r = s.handle(&req.to_string_compact());
+                    let g: Vec<f64> = r
+                        .get("grad")
+                        .and_then(Json::as_arr)
+                        .unwrap_or_else(|| panic!("no grad: {}", r.to_string_compact()))
+                        .iter()
+                        .filter_map(Json::as_f64)
+                        .collect();
+                    let k = r.f64_or("batched", 0.0) as usize;
+                    (v, g, k)
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(
+            s.stats.block_solves.load(Ordering::Relaxed),
+            1,
+            "k concurrent hypergrads on one θ must be ONE block solve"
+        );
+        assert_eq!(s.stats.inner_solves.load(Ordering::Relaxed), 1);
+        for (_, _, k) in &results {
+            assert_eq!(*k, n, "every member sees the full batch");
+        }
+        // serial ground truth per member
+        let serial = Server::new(quiet_cfg());
+        for (v, g, _) in &results {
+            let req = Json::obj(vec![
+                ("op", Json::Str("hypergrad".into())),
+                ("problem", Json::Str("ridge".into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(v)),
+            ]);
+            let r = serial.handle(&req.to_string_compact());
+            let gs = r.get("grad").and_then(Json::as_arr).unwrap();
+            for i in 0..8 {
+                assert!(
+                    (g[i] - gs[i].as_f64().unwrap()).abs() < 1e-7,
+                    "batched vs serial mismatch at {i}"
+                );
+            }
+        }
+        // …and the batch populated the cache: one more request, zero solves.
+        let before = s.stats.block_solves.load(Ordering::Relaxed);
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&vec![1.0; 8])),
+        ]);
+        let r = s.handle(&req.to_string_compact());
+        assert_eq!(r.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), before);
+    }
+
+    #[test]
+    fn jvp_and_solve_round_trip_on_every_problem() {
+        let s = Server::new(quiet_cfg());
+        for p in s.registry.problems() {
+            let theta: Vec<f64> = (0..p.dim_theta()).map(|i| 0.6 + 0.1 * i as f64).collect();
+            let sreq = Json::obj(vec![
+                ("op", Json::Str("solve".into())),
+                ("problem", Json::Str(p.name.into())),
+                ("theta", Json::arr_f64(&theta)),
+            ]);
+            let sr = s.handle(&sreq.to_string_compact());
+            let x = sr.get("x").and_then(Json::as_arr).unwrap_or_else(|| {
+                panic!("{}: no x in {}", p.name, sr.to_string_compact())
+            });
+            assert_eq!(x.len(), p.dim_x(), "{}", p.name);
+            let v = vec![0.3; p.dim_theta()];
+            let jreq = Json::obj(vec![
+                ("op", Json::Str("jvp".into())),
+                ("problem", Json::Str(p.name.into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(&v)),
+            ]);
+            let jr = s.handle(&jreq.to_string_compact());
+            let jv = jr.get("jv").and_then(Json::as_arr).unwrap_or_else(|| {
+                panic!("{}: no jv in {}", p.name, jr.to_string_compact())
+            });
+            assert_eq!(jv.len(), p.dim_x(), "{}", p.name);
+            assert!(jv.iter().all(|x| x.as_f64().unwrap().is_finite()), "{}", p.name);
+        }
+    }
+}

@@ -1,0 +1,608 @@
+//! Problem registry: the whole optimality-mapping catalog exposed as named
+//! [`Problem`]s the server can solve and differentiate uniformly.
+//!
+//! Each entry packages (1) an inner solver for x*(θ), (2) a `RootMap` view
+//! of its optimality/fixed-point mapping (built per request — mappings like
+//! projected-gradient embed a θ-dependent step size), and (3) a linear-solve
+//! configuration. Derivative products all route through the batched
+//! implicit-diff engine, so k coalesced requests cost ONE block solve, and
+//! through the factored paths when the θ-keyed cache holds A's
+//! Cholesky/LU factorization.
+
+use crate::diff::root::{
+    factorize_root, implicit_jvp_multi, implicit_jvp_multi_factored, implicit_vjp_multi,
+    implicit_vjp_multi_factored, jacobian_via_root,
+};
+use crate::diff::spec::{FixedPointResidual, RootMap};
+use crate::linalg::mat::Mat;
+use crate::linalg::solve::{BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind};
+use crate::mappings::objective::{Objective, QuadObjective};
+use crate::mappings::prox_grad::{ProjGradFixedPoint, ProxGradFixedPoint};
+use crate::mappings::stationary::StationaryMapping;
+use crate::ml::logreg::LogRegProblem;
+use crate::ml::ridge::{RidgeProblem, RidgeRoot};
+use crate::ml::svm::MulticlassSvm;
+use crate::proj::simplex::{RowsSimplexProjection, SimplexProjection};
+use crate::prox::LassoProx;
+use crate::util::rng::Rng;
+
+/// The solver + mapping core a catalog problem must provide. `with_root`
+/// hands the caller a `RootMap` view valid for the given θ; everything else
+/// (block VJP/JVP, factorization, Jacobian) is derived generically.
+pub trait ProblemCore: Send + Sync {
+    fn dim_x(&self) -> usize;
+    fn dim_theta(&self) -> usize;
+    /// Reject θ the problem cannot serve (wrong sign, NaN, …) with a
+    /// client-facing message.
+    fn validate_theta(&self, theta: &[f64]) -> Result<(), String>;
+    /// Inner solve: x*(θ).
+    fn solve(&self, theta: &[f64]) -> Vec<f64>;
+    /// Linear-solve configuration for the implicit systems.
+    fn cfg(&self) -> LinearSolveConfig {
+        LinearSolveConfig::default()
+    }
+    /// Build the optimality mapping for θ and pass it to `f`.
+    fn with_root(&self, theta: &[f64], f: &mut dyn FnMut(&dyn RootMap));
+}
+
+/// A named, served catalog problem.
+pub struct Problem {
+    pub name: &'static str,
+    pub describe: &'static str,
+    core: Box<dyn ProblemCore>,
+}
+
+impl Problem {
+    pub fn dim_x(&self) -> usize {
+        self.core.dim_x()
+    }
+    pub fn dim_theta(&self) -> usize {
+        self.core.dim_theta()
+    }
+
+    pub fn validate_theta(&self, theta: &[f64]) -> Result<(), String> {
+        if theta.len() != self.dim_theta() {
+            return Err(format!(
+                "'theta' must have length {} for problem '{}'",
+                self.dim_theta(),
+                self.name
+            ));
+        }
+        if let Some(bad) = theta.iter().find(|t| !t.is_finite()) {
+            return Err(format!("'theta' contains non-finite entry {bad}"));
+        }
+        self.core.validate_theta(theta)
+    }
+
+    pub fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        self.core.solve(theta)
+    }
+
+    /// k cotangents (columns of `v`, d×k) → n×k hypergradient block via ONE
+    /// block solve Aᵀ U = V.
+    pub fn vjp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> (Mat, BlockSolveReport) {
+        let cfg = self.core.cfg();
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = Some(implicit_vjp_multi(m, x_star, theta, v, &cfg));
+        });
+        out.expect("with_root must invoke its callback")
+    }
+
+    /// k θ-directions (columns of `v`, n×k) → d×k JVP block via one block
+    /// solve A X = B V.
+    pub fn jvp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> (Mat, BlockSolveReport) {
+        let cfg = self.core.cfg();
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = Some(implicit_jvp_multi(m, x_star, theta, v, &cfg));
+        });
+        out.expect("with_root must invoke its callback")
+    }
+
+    /// Dense Jacobian ∂x*(θ) (one block solve).
+    pub fn jacobian(&self, x_star: &[f64], theta: &[f64]) -> Mat {
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = Some(jacobian_via_root(m, x_star, theta));
+        });
+        out.expect("with_root must invoke its callback")
+    }
+
+    /// Materialize and factor A at (x*, θ) for the repeat-θ cache.
+    pub fn factorize(&self, x_star: &[f64], theta: &[f64]) -> Option<Factorization> {
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = factorize_root(m, x_star, theta);
+        });
+        out
+    }
+
+    /// Factored (cache-hit) hypergradient block: substitutions only, zero
+    /// iterative solves.
+    pub fn vjp_multi_factored(
+        &self,
+        fact: &Factorization,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+    ) -> Mat {
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = Some(implicit_vjp_multi_factored(m, fact, x_star, theta, v));
+        });
+        out.expect("with_root must invoke its callback")
+    }
+
+    /// Factored (cache-hit) JVP block.
+    pub fn jvp_multi_factored(
+        &self,
+        fact: &Factorization,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+    ) -> Mat {
+        let mut out = None;
+        self.core.with_root(theta, &mut |m| {
+            out = Some(implicit_jvp_multi_factored(m, fact, x_star, theta, v));
+        });
+        out.expect("with_root must invoke its callback")
+    }
+
+    /// Factored dense Jacobian: A⁻¹(B·I_n) by substitutions.
+    pub fn jacobian_factored(&self, fact: &Factorization, x_star: &[f64], theta: &[f64]) -> Mat {
+        let eye = Mat::eye(self.dim_theta());
+        self.jvp_multi_factored(fact, x_star, theta, &eye)
+    }
+}
+
+/// The registry itself: a name → [`Problem`] catalog.
+pub struct Registry {
+    problems: Vec<Problem>,
+}
+
+impl Registry {
+    /// The standard catalog: ridge, logreg, SVM, lasso (prox-grad),
+    /// projected-GD (simplex) and an unconstrained stationary quadratic —
+    /// one entry per optimality-mapping family the paper's Table 1 serves.
+    pub fn standard() -> Registry {
+        let mut problems = Vec::new();
+
+        // ridge — closed-form solver + stationary root (Fig. 1 / Fig. 3).
+        let (x, y) = crate::data::regression::diabetes_like(64, 8, 7);
+        problems.push(Problem {
+            name: "ridge",
+            describe: "ridge regression, per-coordinate θ, closed-form inner solve",
+            core: Box::new(RidgeCore { rp: RidgeProblem::new(x, y) }),
+        });
+
+        // logreg — L2-regularized multiclass logistic regression, GD solver.
+        let mut rng = Rng::new(21);
+        let ds = crate::data::classification::make_classification(40, 6, 3, 0.3, 2.0, &mut rng);
+        problems.push(Problem {
+            name: "logreg",
+            describe: "multiclass logistic regression, θ = [λ] L2 strength, GD inner solve",
+            core: Box::new(LogRegCore {
+                m: StationaryMapping::new(LogRegProblem::new(ds.x, ds.labels, 3)),
+            }),
+        });
+
+        // svm — Crammer–Singer dual, BCD solver + projected-gradient
+        // fixed point (Fig. 4's pairing).
+        let mut rng = Rng::new(22);
+        let ds = crate::data::classification::make_classification(24, 10, 3, 0.3, 2.0, &mut rng);
+        let y_oh = ds.one_hot();
+        problems.push(Problem {
+            name: "svm",
+            describe: "multiclass SVM dual, θ = [θ] > 0, BCD solver + PG fixed point",
+            core: Box::new(SvmCore { x_tr: ds.x, y_tr: y_oh, k: 3 }),
+        });
+
+        // lasso — least squares + L1, FISTA solver + prox-grad fixed point.
+        let mut rng = Rng::new(23);
+        let xd = Mat::randn(40, 10, &mut rng);
+        let w_true: Vec<f64> = (0..10).map(|i| if i % 3 == 0 { 1.5 } else { 0.0 }).collect();
+        let mut yv = xd.matvec(&w_true);
+        for v in yv.iter_mut() {
+            *v += 0.01 * rng.normal();
+        }
+        problems.push(Problem {
+            name: "lasso",
+            describe: "lasso (½‖Xw−y‖² + λ‖w‖₁), θ = [λ] ≥ 0, FISTA + prox-grad fixed point",
+            core: Box::new(LassoCore::new(xd, yv)),
+        });
+
+        // projgd — quadratic over the simplex, projected-gradient fixed
+        // point; θ is the linear term (a "returns" vector).
+        let mut rng = Rng::new(24);
+        let q = Mat::randn(8, 5, &mut rng).gram().plus_diag(1.0);
+        problems.push(Problem {
+            name: "projgd",
+            describe: "min ½xᵀQx − θᵀx over the simplex, projected-GD fixed point",
+            core: Box::new(ProjGdCore::new(q)),
+        });
+
+        // quad — unconstrained stationary point with analytic everything;
+        // the catalog's pure `StationaryMapping` entry.
+        let mut rng = Rng::new(25);
+        let q = Mat::randn(8, 6, &mut rng).gram().plus_diag(1.0);
+        let r = Mat::randn(6, 4, &mut rng);
+        let c = rng.normal_vec(6);
+        problems.push(Problem {
+            name: "quad",
+            describe: "unconstrained quadratic stationary point, Cholesky inner solve",
+            core: Box::new(QuadCore { m: StationaryMapping::new(QuadObjective { q, r, c }) }),
+        });
+
+        Registry { problems }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Problem> {
+        self.problems.iter().find(|p| p.name == name)
+    }
+
+    pub fn problems(&self) -> &[Problem] {
+        &self.problems
+    }
+}
+
+// ---------------------------------------------------------------- cores --
+
+struct RidgeCore {
+    rp: RidgeProblem,
+}
+
+impl ProblemCore for RidgeCore {
+    fn dim_x(&self) -> usize {
+        self.rp.dim()
+    }
+    fn dim_theta(&self) -> usize {
+        self.rp.dim()
+    }
+    fn validate_theta(&self, theta: &[f64]) -> Result<(), String> {
+        if theta.iter().any(|&t| t < 0.0) {
+            return Err("ridge needs θ_i ≥ 0 (SPD system)".into());
+        }
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        self.rp.solve_closed_form_vec(theta)
+    }
+    fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        f(&RidgeRoot(&self.rp));
+    }
+}
+
+struct LogRegCore {
+    /// The mapping is θ-independent, so it is built ONCE and handed out by
+    /// reference (contrast SvmCore, whose step size forces per-θ builds).
+    m: StationaryMapping<LogRegProblem>,
+}
+
+impl ProblemCore for LogRegCore {
+    fn dim_x(&self) -> usize {
+        self.m.obj.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn validate_theta(&self, theta: &[f64]) -> Result<(), String> {
+        if theta[0] <= 0.0 {
+            return Err("logreg needs λ > 0 (strong convexity)".into());
+        }
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        self.m.obj.fit(theta)
+    }
+    fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        f(&self.m);
+    }
+}
+
+struct SvmCore {
+    x_tr: Mat,
+    y_tr: Mat,
+    k: usize,
+}
+
+impl SvmCore {
+    /// MulticlassSvm caches its spectral norm in a `Cell` (not `Sync`), and
+    /// the PG fixed point owns its objective with a θ-dependent step size —
+    /// so the core stores the raw training data and builds the (small)
+    /// problem per call instead of sharing one instance.
+    fn svm(&self) -> MulticlassSvm {
+        MulticlassSvm::new(self.x_tr.clone(), self.y_tr.clone())
+    }
+}
+
+impl ProblemCore for SvmCore {
+    fn dim_x(&self) -> usize {
+        self.x_tr.rows * self.k
+    }
+    fn dim_theta(&self) -> usize {
+        1
+    }
+    fn validate_theta(&self, theta: &[f64]) -> Result<(), String> {
+        if theta[0] <= 0.0 {
+            return Err("svm needs θ > 0".into());
+        }
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        self.svm().solve_bcd(theta[0], 800)
+    }
+    fn cfg(&self) -> LinearSolveConfig {
+        // PG fixed-point residual is non-symmetric; NormalCg as in Fig. 4
+        // (tight tolerance: the κ²-amplified normal equations must still
+        // land within 1e-5 of the factored direct path).
+        LinearSolveConfig {
+            kind: LinearSolverKind::NormalCg,
+            tol: 1e-11,
+            max_iter: 4000,
+            gmres_restart: 30,
+        }
+    }
+    fn with_root(&self, theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        let svm = self.svm();
+        let eta = svm.pg_step(theta[0]);
+        let proj = RowsSimplexProjection { m: self.x_tr.rows, k: self.k };
+        let res = FixedPointResidual(ProjGradFixedPoint::new(svm, proj, eta));
+        f(&res);
+    }
+}
+
+struct LassoCore {
+    /// Smooth part ½‖Xw−y‖² as a θ-free quadratic (R is d×0).
+    obj: QuadObjective,
+    /// 0.9 / λ_max(XᵀX): a safe prox-grad step.
+    eta: f64,
+}
+
+impl LassoCore {
+    fn new(x: Mat, y: Vec<f64>) -> LassoCore {
+        let gram = x.gram();
+        let xty = x.matvec_t(&y);
+        // power iteration for λ_max(G)
+        let d = gram.rows;
+        let mut v = vec![1.0; d];
+        let mut lam = 1.0;
+        for _ in 0..80 {
+            let mut w = gram.matvec(&v);
+            lam = crate::linalg::vecops::norm2(&w).max(1e-30);
+            for wi in w.iter_mut() {
+                *wi /= lam;
+            }
+            v = w;
+        }
+        let c: Vec<f64> = xty.iter().map(|t| -t).collect();
+        LassoCore {
+            obj: QuadObjective { q: gram, r: Mat::zeros(d, 0), c },
+            eta: 0.9 / lam,
+        }
+    }
+
+    fn fixed_point(&self) -> ProxGradFixedPoint<QuadObjective, LassoProx> {
+        let d = self.obj.q.rows;
+        let obj = QuadObjective {
+            q: self.obj.q.clone(),
+            r: Mat::zeros(d, 0),
+            c: self.obj.c.clone(),
+        };
+        ProxGradFixedPoint::new(obj, LassoProx { d }, self.eta)
+    }
+}
+
+impl ProblemCore for LassoCore {
+    fn dim_x(&self) -> usize {
+        self.obj.q.rows
+    }
+    fn dim_theta(&self) -> usize {
+        1 // θ = [λ], the prox parameter (the smooth part has none)
+    }
+    fn validate_theta(&self, theta: &[f64]) -> Result<(), String> {
+        if theta[0] < 0.0 {
+            return Err("lasso needs λ ≥ 0".into());
+        }
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        let d = self.dim_x();
+        let cfg = crate::solvers::prox_gd::ProxGdConfig {
+            step: self.eta,
+            max_iter: 20_000,
+            tol: 1e-12,
+            accelerated: true,
+        };
+        crate::solvers::prox_gd::prox_gradient_descent(
+            &self.obj,
+            &LassoProx { d },
+            &vec![0.0; d],
+            theta,
+            &cfg,
+        )
+        .0
+    }
+    fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        let res = FixedPointResidual(self.fixed_point());
+        f(&res);
+    }
+}
+
+struct ProjGdCore {
+    q: Mat,
+    eta: f64,
+}
+
+impl ProjGdCore {
+    fn new(q: Mat) -> ProjGdCore {
+        let d = q.rows;
+        let mut v = vec![1.0; d];
+        let mut lam = 1.0;
+        for _ in 0..80 {
+            let mut w = q.matvec(&v);
+            lam = crate::linalg::vecops::norm2(&w).max(1e-30);
+            for wi in w.iter_mut() {
+                *wi /= lam;
+            }
+            v = w;
+        }
+        ProjGdCore { q, eta: 0.9 / lam }
+    }
+
+    fn fixed_point(&self) -> ProjGradFixedPoint<QuadObjective, SimplexProjection> {
+        let d = self.q.rows;
+        // f = ½xᵀQx − θᵀx: R = −I so ∂θ∇₁f = −I.
+        let mut r = Mat::zeros(d, d);
+        for i in 0..d {
+            *r.at_mut(i, i) = -1.0;
+        }
+        let obj = QuadObjective { q: self.q.clone(), r, c: vec![0.0; d] };
+        ProjGradFixedPoint::new(obj, SimplexProjection { d }, self.eta)
+    }
+}
+
+impl ProblemCore for ProjGdCore {
+    fn dim_x(&self) -> usize {
+        self.q.rows
+    }
+    fn dim_theta(&self) -> usize {
+        self.q.rows
+    }
+    fn validate_theta(&self, _theta: &[f64]) -> Result<(), String> {
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        use crate::diff::spec::FixedPointMap;
+        let t = self.fixed_point();
+        let d = self.dim_x();
+        let mut x = vec![1.0 / d as f64; d];
+        let mut nx = vec![0.0; d];
+        for _ in 0..20_000 {
+            t.eval(&x, theta, &mut nx);
+            let delta: f64 =
+                x.iter().zip(&nx).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            std::mem::swap(&mut x, &mut nx);
+            if delta < 1e-13 {
+                break;
+            }
+        }
+        x
+    }
+    fn cfg(&self) -> LinearSolveConfig {
+        LinearSolveConfig {
+            kind: LinearSolverKind::NormalCg,
+            tol: 1e-10,
+            max_iter: 2000,
+            gmres_restart: 30,
+        }
+    }
+    fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        let res = FixedPointResidual(self.fixed_point());
+        f(&res);
+    }
+}
+
+struct QuadCore {
+    m: StationaryMapping<QuadObjective>,
+}
+
+impl ProblemCore for QuadCore {
+    fn dim_x(&self) -> usize {
+        self.m.obj.q.rows
+    }
+    fn dim_theta(&self) -> usize {
+        self.m.obj.r.cols
+    }
+    fn validate_theta(&self, _theta: &[f64]) -> Result<(), String> {
+        Ok(())
+    }
+    fn solve(&self, theta: &[f64]) -> Vec<f64> {
+        // x* = −Q⁻¹(Rθ + c)
+        let ch = crate::linalg::chol::Cholesky::factor(&self.m.obj.q).expect("Q SPD");
+        let rt = self.m.obj.r.matvec(theta);
+        let rhs: Vec<f64> = rt.iter().zip(&self.m.obj.c).map(|(a, b)| -(a + b)).collect();
+        ch.solve(&rhs)
+    }
+    fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
+        f(&self.m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve::counter;
+    use crate::linalg::vecops;
+
+    /// Every catalog entry: the inner solution is a fixed point / root of
+    /// its mapping, the factored derivative paths match the iterative block
+    /// paths, and the factored paths issue zero iterative solves.
+    #[test]
+    fn catalog_roots_and_factored_paths_agree() {
+        let reg = Registry::standard();
+        assert!(reg.get("nope").is_none());
+        let mut rng = Rng::new(31);
+        for p in reg.problems() {
+            let n = p.dim_theta();
+            let d = p.dim_x();
+            let theta: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.4, 1.2)).collect();
+            p.validate_theta(&theta).expect("standard θ must validate");
+            let x_star = p.solve(&theta);
+            // x* is a root of the mapping
+            let mut res = vec![0.0; d];
+            let mut resn = f64::NAN;
+            p.core.with_root(&theta, &mut |m| {
+                m.eval(&x_star, &theta, &mut res);
+                resn = vecops::norm2(&res);
+            });
+            assert!(resn < 1e-5, "{}: residual {resn}", p.name);
+            // iterative block VJP vs factored VJP
+            let k = 3;
+            let v = Mat::randn(d, k, &mut rng);
+            counter::reset();
+            let (g_iter, rep) = p.vjp_multi(&x_star, &theta, &v);
+            assert!(rep.converged, "{}: {rep:?}", p.name);
+            assert_eq!(counter::count(), 1, "{}: block VJP must be one solve", p.name);
+            let fact = p.factorize(&x_star, &theta).expect("regular root");
+            let g_fact = p.vjp_multi_factored(&fact, &x_star, &theta, &v);
+            assert_eq!(counter::count(), 1, "{}: factored path must add zero solves", p.name);
+            let scale = g_iter.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..g_iter.data.len() {
+                assert!(
+                    (g_iter.data[i] - g_fact.data[i]).abs() < 1e-5 * scale,
+                    "{}: vjp[{i}] {} vs {}",
+                    p.name,
+                    g_iter.data[i],
+                    g_fact.data[i]
+                );
+            }
+            // iterative block JVP vs factored JVP
+            let vt = Mat::randn(n, 2, &mut rng);
+            let (j_iter, rep) = p.jvp_multi(&x_star, &theta, &vt);
+            assert!(rep.converged, "{}: {rep:?}", p.name);
+            let j_fact = p.jvp_multi_factored(&fact, &x_star, &theta, &vt);
+            let scale = j_iter.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..j_iter.data.len() {
+                assert!(
+                    (j_iter.data[i] - j_fact.data[i]).abs() < 1e-5 * scale,
+                    "{}: jvp[{i}] {} vs {}",
+                    p.name,
+                    j_iter.data[i],
+                    j_fact.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn theta_validation_rejects_bad_inputs() {
+        let reg = Registry::standard();
+        assert!(reg.get("ridge").unwrap().validate_theta(&[1.0; 3]).is_err()); // wrong len
+        assert!(reg.get("ridge").unwrap().validate_theta(&[-1.0; 8]).is_err()); // negative
+        assert!(reg.get("svm").unwrap().validate_theta(&[0.0]).is_err()); // nonpositive
+        assert!(reg.get("logreg").unwrap().validate_theta(&[f64::NAN]).is_err());
+        assert!(reg.get("lasso").unwrap().validate_theta(&[0.2]).is_ok());
+        assert!(reg.get("quad").unwrap().validate_theta(&[0.1, 0.2, 0.3, 0.4]).is_ok());
+    }
+}

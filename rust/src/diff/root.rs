@@ -5,7 +5,7 @@
 use super::spec::RootMap;
 use crate::linalg::mat::Mat;
 use crate::linalg::op::LinOp;
-use crate::linalg::solve::{self, BlockSolveReport, LinearSolveConfig, SolveReport};
+use crate::linalg::solve::{self, BlockSolveReport, Factorization, LinearSolveConfig, SolveReport};
 
 /// The A = −∂₁F operator at (x, θ), matrix-free, with native block products
 /// via the mapping's batched JVP/VJP — a block-CG iteration costs one
@@ -130,6 +130,81 @@ pub fn implicit_vjp_multi<M: RootMap + ?Sized>(
     let mut out = Mat::zeros(n, k);
     m.vjp_theta_batch(x_star, theta, &u, &mut out);
     (out, rep)
+}
+
+/// Materialize A = −∂₁F at (x*, θ) with ONE batched Jacobian product
+/// (A·I_d) and factor it — Cholesky when the mapping is symmetric, pivoted
+/// LU otherwise. The factorization amortizes every subsequent JVP/VJP at
+/// this (x*, θ) down to an O(d²) substitution with NO iterative solve —
+/// the serve subsystem's θ-keyed cache stores exactly this object. Returns
+/// None if A is numerically singular (x* not a regular root).
+pub fn factorize_root<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+) -> Option<Factorization> {
+    let a = AOp { m, x: x_star, theta };
+    Factorization::of_op(&a)
+}
+
+/// Forward-mode implicit JVP through a prefactored A (see
+/// [`factorize_root`]): J v = A⁻¹ (B v). Substitution only — issues no
+/// iterative solve and does not touch the solve counter.
+pub fn implicit_jvp_factored<M: RootMap + ?Sized>(
+    m: &M,
+    fact: &Factorization,
+    x_star: &[f64],
+    theta: &[f64],
+    v_theta: &[f64],
+) -> Vec<f64> {
+    let mut bv = vec![0.0; m.dim_x()];
+    m.jvp_theta(x_star, theta, v_theta, &mut bv);
+    fact.solve(&bv)
+}
+
+/// Reverse-mode implicit VJP through a prefactored A: vᵀJ = (A⁻ᵀ v)ᵀ B.
+pub fn implicit_vjp_factored<M: RootMap + ?Sized>(
+    m: &M,
+    fact: &Factorization,
+    x_star: &[f64],
+    theta: &[f64],
+    v_x: &[f64],
+) -> Vec<f64> {
+    let u = fact.solve_t(v_x);
+    let mut out = vec![0.0; m.dim_theta()];
+    m.vjp_theta(x_star, theta, &u, &mut out);
+    out
+}
+
+/// Block of forward-mode JVPs through a prefactored A (columns of
+/// `v_thetas`, n×k): X = A⁻¹ (B V) by k substitutions.
+pub fn implicit_jvp_multi_factored<M: RootMap + ?Sized>(
+    m: &M,
+    fact: &Factorization,
+    x_star: &[f64],
+    theta: &[f64],
+    v_thetas: &Mat,
+) -> Mat {
+    assert_eq!(v_thetas.rows, m.dim_theta(), "direction block rows must be dim_theta");
+    let mut bv = Mat::zeros(m.dim_x(), v_thetas.cols);
+    m.jvp_theta_batch(x_star, theta, v_thetas, &mut bv);
+    fact.solve_mat(&bv)
+}
+
+/// Block of reverse-mode VJPs through a prefactored A (columns of `v_xs`,
+/// d×k): out = Bᵀ (A⁻ᵀ V), n×k.
+pub fn implicit_vjp_multi_factored<M: RootMap + ?Sized>(
+    m: &M,
+    fact: &Factorization,
+    x_star: &[f64],
+    theta: &[f64],
+    v_xs: &Mat,
+) -> Mat {
+    assert_eq!(v_xs.rows, m.dim_x(), "cotangent block rows must be dim_x");
+    let u = fact.solve_t_mat(v_xs);
+    let mut out = Mat::zeros(m.dim_theta(), v_xs.cols);
+    m.vjp_theta_batch(x_star, theta, &u, &mut out);
+    out
 }
 
 /// The paper's VJP-reuse trick: factor the Aᵀu = v solve out so several
@@ -410,6 +485,52 @@ mod tests {
         let jc = jacobian_via_root_columns(&f, &x, &th);
         for i in 0..jb.data.len() {
             assert!((jb.data[i] - jc.data[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn factored_paths_match_iterative_with_zero_solves() {
+        use crate::linalg::solve::counter;
+        let f = ClosureRoot {
+            d: 2,
+            n: 2,
+            f: |x: &[f64], th: &[f64], out: &mut [f64]| {
+                out[0] = 2.0 * x[0] + x[1] - th[0];
+                out[1] = x[0] * x[1] - th[1] + x[1];
+            },
+            symmetric: false,
+        };
+        let th = [3.0, 2.0];
+        let x = [1.0, 1.0];
+        let cfg = LinearSolveConfig::default();
+        let v_theta = [0.3, -1.2];
+        let v_x = [0.7, 0.4];
+        let (jv, _) = implicit_jvp(&f, &x, &th, &v_theta, &cfg);
+        let (vj, _) = implicit_vjp(&f, &x, &th, &v_x, &cfg);
+        counter::reset();
+        let fact = factorize_root(&f, &x, &th).expect("regular root");
+        let jv_f = implicit_jvp_factored(&f, &fact, &x, &th, &v_theta);
+        let vj_f = implicit_vjp_factored(&f, &fact, &x, &th, &v_x);
+        assert_eq!(counter::count(), 0, "factored paths must issue no iterative solve");
+        for i in 0..2 {
+            assert!((jv[i] - jv_f[i]).abs() < 1e-8, "jvp {i}: {} vs {}", jv[i], jv_f[i]);
+            assert!((vj[i] - vj_f[i]).abs() < 1e-8, "vjp {i}: {} vs {}", vj[i], vj_f[i]);
+        }
+        // block variants column-match the scalar factored paths
+        let vt = Mat::from_vec(2, 2, vec![0.3, 1.0, -1.2, 0.5]);
+        let jb = implicit_jvp_multi_factored(&f, &fact, &x, &th, &vt);
+        let vvx = Mat::from_vec(2, 2, vec![0.7, -0.2, 0.4, 1.1]);
+        let vb = implicit_vjp_multi_factored(&f, &fact, &x, &th, &vvx);
+        let mut c = vec![0.0; 2];
+        for j in 0..2 {
+            vt.col_into(j, &mut c);
+            let jc = implicit_jvp_factored(&f, &fact, &x, &th, &c);
+            vvx.col_into(j, &mut c);
+            let vc = implicit_vjp_factored(&f, &fact, &x, &th, &c);
+            for i in 0..2 {
+                assert!((jb.at(i, j) - jc[i]).abs() < 1e-12);
+                assert!((vb.at(i, j) - vc[i]).abs() < 1e-12);
+            }
         }
     }
 

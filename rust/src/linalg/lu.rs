@@ -60,6 +60,11 @@ impl Lu {
         Some(Lu { lu, piv, sign })
     }
 
+    /// Dimension of the factored (square) matrix.
+    pub fn dim(&self) -> usize {
+        self.lu.rows
+    }
+
     /// Solve A x = b.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let n = self.lu.rows;
@@ -124,6 +129,19 @@ impl Lu {
         x
     }
 
+    /// Solve Aᵀ X = B column-wise (the block version of [`Lu::solve_t`],
+    /// used by the factored multi-cotangent VJP path).
+    pub fn solve_t_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col = self.solve_t(&b.col(j));
+            for i in 0..b.rows {
+                *out.at_mut(i, j) = col[i];
+            }
+        }
+        out
+    }
+
     /// Determinant.
     pub fn det(&self) -> f64 {
         let mut d = self.sign;
@@ -164,6 +182,21 @@ mod tests {
         let x = lu.solve_t(&b);
         for i in 0..n {
             assert!((x[i] - x_true[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn transposed_multi_rhs() {
+        let mut rng = Rng::new(4);
+        let n = 8;
+        let a = Mat::randn(n, n, &mut rng);
+        let lu = Lu::factor(&a).unwrap();
+        let b = Mat::randn(n, 3, &mut rng);
+        let x = lu.solve_t_mat(&b);
+        // AᵀX = B
+        let atx = a.transpose().matmul(&x);
+        for i in 0..b.data.len() {
+            assert!((atx.data[i] - b.data[i]).abs() < 1e-8);
         }
     }
 

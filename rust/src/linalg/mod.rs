@@ -24,4 +24,4 @@ pub mod vecops;
 
 pub use mat::Mat;
 pub use op::LinOp;
-pub use solve::{BlockSolveReport, LinearSolveConfig, LinearSolverKind, SolveReport};
+pub use solve::{BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind, SolveReport};

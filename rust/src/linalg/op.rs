@@ -37,21 +37,14 @@ pub trait LinOp {
         batch_cols(self.dim(), self.dim(), x, y, |xc, yc| self.apply_t(xc, yc));
     }
 
-    /// Materialize as a dense matrix (d columns of basis products). For tests
-    /// and small systems only.
+    /// Materialize as a dense matrix, A·I through [`LinOp::apply_block`] —
+    /// ONE native block product for operators that have one (dense GEMM,
+    /// batched implicit-diff Jacobians), the column loop otherwise. Used by
+    /// tests, small systems, and the direct-solve factorization path.
     fn to_dense(&self) -> Mat {
         let d = self.dim();
         let mut m = Mat::zeros(d, d);
-        let mut e = vec![0.0; d];
-        let mut col = vec![0.0; d];
-        for j in 0..d {
-            e[j] = 1.0;
-            self.apply(&e, &mut col);
-            for i in 0..d {
-                *m.at_mut(i, j) = col[i];
-            }
-            e[j] = 0.0;
-        }
+        self.apply_block(&Mat::eye(d), &mut m);
         m
     }
 }

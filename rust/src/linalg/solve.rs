@@ -1,11 +1,17 @@
 //! Linear-solver dispatch — the paper's solver-choice policy in §2.1:
 //! CG when A is symmetric PSD; GMRES or BiCGSTAB otherwise; optionally the
 //! normal equation A Aᵀ u = A v via CG (the `jax.linear_transpose` trick);
-//! and a least-squares fallback for (near-)singular systems.
+//! a least-squares fallback for (near-)singular systems; and a dense
+//! direct path ([`Factorization`]: Cholesky for symmetric A, pivoted LU
+//! otherwise) that materializes A with one block product and amortizes the
+//! O(d³) factor across any number of right-hand sides — the substrate of
+//! the serve subsystem's θ-keyed factorization cache.
 
 use super::bicgstab::bicgstab;
 use super::cg::{block_cg, cg};
+use super::chol::Cholesky;
 use super::gmres::gmres;
+use super::lu::Lu;
 use super::mat::Mat;
 use super::op::{AAtOp, LinOp, TransposedOp};
 
@@ -20,8 +26,84 @@ pub enum LinearSolverKind {
     Gmres,
     /// CG on the normal equations A Aᵀ u = b (general A; least-squares-like).
     NormalCg,
+    /// Dense direct solve: materialize A (one block product), factor
+    /// (Cholesky if symmetric, else pivoted LU), substitute. Falls back to
+    /// GMRES when the factorization fails. O(d³) — small/repeat systems.
+    Direct,
     /// Pick automatically: CG if `op.is_symmetric()`, BiCGSTAB otherwise.
     Auto,
+}
+
+/// A dense factorization of a (square) operator: the direct-solve
+/// counterpart of the matrix-free iterative paths. Solves through a
+/// `Factorization` do NOT pass through [`solve`]/[`solve_block`] and are
+/// not counted by [`counter`] — which is exactly what lets the serve
+/// cache assert "repeat-θ requests issue zero new solves".
+#[derive(Clone, Debug)]
+pub enum Factorization {
+    /// A = L Lᵀ (symmetric positive definite A).
+    Chol(Cholesky),
+    /// P A = L U (general A).
+    Lu(Lu),
+}
+
+impl Factorization {
+    /// Factor a dense matrix. Tries Cholesky when `symmetric`, falling back
+    /// to LU if A is indefinite; None only if A is numerically singular.
+    pub fn of_mat(a: &Mat, symmetric: bool) -> Option<Factorization> {
+        if symmetric {
+            if let Some(ch) = Cholesky::factor(a) {
+                return Some(Factorization::Chol(ch));
+            }
+        }
+        Lu::factor(a).map(Factorization::Lu)
+    }
+
+    /// Materialize `a` (one block product via [`LinOp::to_dense`]) and
+    /// factor it.
+    pub fn of_op(a: &dyn LinOp) -> Option<Factorization> {
+        Factorization::of_mat(&a.to_dense(), a.is_symmetric())
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Factorization::Chol(ch) => ch.l.rows,
+            Factorization::Lu(lu) => lu.dim(),
+        }
+    }
+
+    /// Solve A x = b by substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            Factorization::Chol(ch) => ch.solve(b),
+            Factorization::Lu(lu) => lu.solve(b),
+        }
+    }
+
+    /// Solve Aᵀ x = b (the VJP-side system; Cholesky is symmetric so this
+    /// is the same substitution).
+    pub fn solve_t(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            Factorization::Chol(ch) => ch.solve(b),
+            Factorization::Lu(lu) => lu.solve_t(b),
+        }
+    }
+
+    /// Solve A X = B for a block of right-hand sides.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        match self {
+            Factorization::Chol(ch) => ch.solve_mat(b),
+            Factorization::Lu(lu) => lu.solve_mat(b),
+        }
+    }
+
+    /// Solve Aᵀ X = B for a block of right-hand sides.
+    pub fn solve_t_mat(&self, b: &Mat) -> Mat {
+        match self {
+            Factorization::Chol(ch) => ch.solve_mat(b),
+            Factorization::Lu(lu) => lu.solve_t_mat(b),
+        }
+    }
 }
 
 /// Solver configuration shared by all methods.
@@ -121,8 +203,39 @@ pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -
             a.apply_t(&u, x);
             rep
         }
+        LinearSolverKind::Direct => match Factorization::of_op(a) {
+            Some(f) => {
+                x.copy_from_slice(&f.solve(b));
+                direct_report(a, b, x, cfg.tol)
+            }
+            // Singular factorization: GMRES still produces a least-squares-
+            // flavored iterate instead of aborting the request.
+            None => gmres(a, b, x, cfg.tol, cfg.max_iter, cfg.gmres_restart),
+        },
         LinearSolverKind::Auto => unreachable!(),
     }
+}
+
+/// Tolerance a direct solve is judged against: honor a looser requested
+/// tolerance, but never flag a roundoff-level residual as divergence when
+/// the caller asked for tighter than substitution can deliver.
+fn direct_tol(cfg_tol: f64) -> f64 {
+    cfg_tol.max(1e-8)
+}
+
+/// Report for a direct solve: one "iteration", true relative residual.
+fn direct_report(a: &dyn LinOp, b: &[f64], x: &[f64], cfg_tol: f64) -> SolveReport {
+    let mut ax = vec![0.0; b.len()];
+    a.apply(x, &mut ax);
+    let mut rsq = 0.0;
+    let mut bsq = 0.0;
+    for i in 0..b.len() {
+        let d = ax[i] - b[i];
+        rsq += d * d;
+        bsq += b[i] * b[i];
+    }
+    let residual = (rsq / bsq.max(1e-300)).sqrt();
+    SolveReport { iterations: 1, residual, converged: residual <= direct_tol(cfg_tol) }
 }
 
 /// Solve Aᵀ x = b (the VJP-side system of §2.1: first solve Aᵀ u = v).
@@ -155,6 +268,50 @@ pub fn solve_block(
             a.apply_t_block(&u, x);
             rep
         }
+        LinearSolverKind::Direct => match Factorization::of_op(a) {
+            Some(f) => {
+                // Factor once, substitute k times — the whole point of the
+                // direct block path.
+                let sol = f.solve_mat(b);
+                x.data.copy_from_slice(&sol.data);
+                let mut ax = Mat::zeros(b.rows, b.cols);
+                a.apply_block(x, &mut ax);
+                let mut max_res = 0.0f64;
+                for j in 0..b.cols {
+                    let mut rsq = 0.0;
+                    let mut bsq = 0.0;
+                    for i in 0..b.rows {
+                        let d = ax.at(i, j) - b.at(i, j);
+                        rsq += d * d;
+                        bsq += b.at(i, j) * b.at(i, j);
+                    }
+                    max_res = max_res.max((rsq / bsq.max(1e-300)).sqrt());
+                }
+                BlockSolveReport {
+                    iterations: 1,
+                    max_residual: max_res,
+                    converged: max_res <= direct_tol(cfg.tol),
+                    rhs: b.cols,
+                }
+            }
+            None => {
+                let mut iterations = 0;
+                let mut max_res = 0.0f64;
+                let mut all = true;
+                let mut bc = vec![0.0; a.dim()];
+                let mut xc = vec![0.0; a.dim()];
+                for j in 0..b.cols {
+                    b.col_into(j, &mut bc);
+                    x.col_into(j, &mut xc);
+                    let rep = gmres(a, &bc, &mut xc, cfg.tol, cfg.max_iter, cfg.gmres_restart);
+                    x.set_col(j, &xc);
+                    iterations = iterations.max(rep.iterations);
+                    max_res = max_res.max(rep.residual);
+                    all &= rep.converged;
+                }
+                BlockSolveReport { iterations, max_residual: max_res, converged: all, rhs: b.cols }
+            }
+        },
         LinearSolverKind::Gmres | LinearSolverKind::BiCgStab => {
             let d = a.dim();
             let k = b.cols;
@@ -230,6 +387,7 @@ mod tests {
             LinearSolverKind::BiCgStab,
             LinearSolverKind::Gmres,
             LinearSolverKind::NormalCg,
+            LinearSolverKind::Direct,
         ] {
             let mut x = vec![0.0; 14];
             let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: 14 };
@@ -251,6 +409,7 @@ mod tests {
             LinearSolverKind::BiCgStab,
             LinearSolverKind::Gmres,
             LinearSolverKind::NormalCg,
+            LinearSolverKind::Direct,
         ] {
             let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: n };
             let op = DenseOp::symmetric(&a);
@@ -315,6 +474,66 @@ mod tests {
         solve(&op, &bc, &mut xc, &LinearSolveConfig::default());
         solve_t(&op, &bc, &mut xc, &LinearSolveConfig::default());
         assert_eq!(counter::count(), 3);
+    }
+
+    #[test]
+    fn factorization_solves_without_counting() {
+        // Cholesky branch on an SPD matrix, LU branch on a general one; and
+        // crucially, Factorization substitutions never bump the solve
+        // counter — the property the serve cache's "zero new solves on
+        // repeat θ" assertion rests on.
+        let mut rng = Rng::new(7);
+        let n = 9;
+        let spd = Mat::randn(n + 2, n, &mut rng).gram().plus_diag(0.5);
+        let gen = {
+            let mut g = Mat::randn(n, n, &mut rng);
+            for i in 0..n {
+                *g.at_mut(i, i) += 4.0;
+            }
+            g
+        };
+        counter::reset();
+        let fs = Factorization::of_mat(&spd, true).unwrap();
+        assert!(matches!(fs, Factorization::Chol(_)));
+        let fg = Factorization::of_mat(&gen, false).unwrap();
+        assert!(matches!(fg, Factorization::Lu(_)));
+        assert_eq!(fs.dim(), n);
+        let b = rng.normal_vec(n);
+        for (a, f) in [(&spd, &fs), (&gen, &fg)] {
+            let x = f.solve(&b);
+            check_solution(a, &b, &x, 1e-8);
+            // Aᵀ x = b
+            let xt = f.solve_t(&b);
+            let atx = a.matvec_t(&xt);
+            for i in 0..n {
+                assert!((atx[i] - b[i]).abs() < 1e-8);
+            }
+        }
+        let bm = Mat::randn(n, 3, &mut rng);
+        let xm = fg.solve_mat(&bm);
+        let axm = gen.matmul(&xm);
+        let xtm = fg.solve_t_mat(&bm);
+        let atxm = gen.transpose().matmul(&xtm);
+        for i in 0..bm.data.len() {
+            assert!((axm.data[i] - bm.data[i]).abs() < 1e-8);
+            assert!((atxm.data[i] - bm.data[i]).abs() < 1e-8);
+        }
+        assert_eq!(counter::count(), 0, "factored substitutions must not count as solves");
+        // of_op materializes through the block product and factors the same
+        // matrix.
+        let f2 = Factorization::of_op(&DenseOp::symmetric(&spd)).unwrap();
+        let x2 = f2.solve(&b);
+        check_solution(&spd, &b, &x2, 1e-8);
+        // Direct kind goes through `solve` and therefore DOES count.
+        let mut xd = vec![0.0; n];
+        let cfg = LinearSolveConfig::with_kind(LinearSolverKind::Direct);
+        let rep = solve(&DenseOp::new(&gen), &b, &mut xd, &cfg);
+        assert!(rep.converged, "{rep:?}");
+        check_solution(&gen, &b, &xd, 1e-7);
+        assert_eq!(counter::count(), 1);
+        // Singular matrix: factorization refuses…
+        let sing = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Factorization::of_mat(&sing, false).is_none());
     }
 
     #[test]

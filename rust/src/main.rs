@@ -4,7 +4,8 @@
 //! idiff list                      # list experiments (one per paper figure/table)
 //! idiff run --exp fig3 [opts]     # run one experiment, write results/<id>.json
 //! idiff run --exp all             # run everything at default (CI) scale
-//! idiff serve [--addr 127.0.0.1:7878]   # hypergradient request server
+//! idiff serve [--addr 127.0.0.1:7878] [--workers N] [--window-ms 2]
+//!             [--batch-max 32] [--cache 64]          # catalog request server
 //! ```
 
 use idiff::coordinator;
@@ -27,7 +28,15 @@ fn main() {
         }
         Some("serve") => {
             let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
-            let server = coordinator::serve::HypergradServer::new_default();
+            let defaults = coordinator::serve::ServeConfig::default();
+            let cfg = coordinator::serve::ServeConfig {
+                workers: args.get_usize("workers", defaults.workers),
+                batch_window: std::time::Duration::from_millis(args.get_u64("window-ms", 2)),
+                batch_max: args.get_usize("batch-max", defaults.batch_max),
+                cache_capacity: args.get_usize("cache", defaults.cache_capacity),
+                ..defaults
+            };
+            let server = std::sync::Arc::new(coordinator::serve::Server::new(cfg));
             if let Err(e) = server.serve(&addr) {
                 eprintln!("server error: {e}");
                 std::process::exit(1);

@@ -1,11 +1,14 @@
 //! Scoped thread-pool substrate (tokio/rayon unavailable offline).
 //!
 //! Provides `parallel_for_each` — split a work list across worker threads with
-//! captured closures — used by the coordinator to fan experiments out. On a
-//! single-core box this degrades gracefully to (nearly) serial execution.
+//! captured closures — used by the coordinator to fan experiments out — and
+//! [`WorkerPool`], a bounded long-lived pool the serve subsystem dispatches
+//! connections onto (replacing unbounded thread-per-connection). On a
+//! single-core box both degrade gracefully to (nearly) serial execution.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use by default.
 pub fn default_workers() -> usize {
@@ -82,10 +85,178 @@ pub fn parallel_chunks_mut<T: Send>(
     });
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    /// Jobs queued or currently executing (for `wait_idle`).
+    in_flight: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes workers when a job arrives or shutdown is requested.
+    work_cv: Condvar,
+    /// Wakes `wait_idle` when `in_flight` reaches zero.
+    idle_cv: Condvar,
+}
+
+/// A bounded pool of long-lived worker threads with a FIFO job queue — the
+/// substrate under the serve subsystem's connection handling (at most
+/// `workers` requests execute concurrently; excess connections queue instead
+/// of spawning unbounded threads). Dropping the pool drains the queue, then
+/// joins the workers.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if let Some(job) = st.jobs.pop_front() {
+                                break job;
+                            }
+                            if st.shutdown {
+                                return;
+                            }
+                            st = shared.work_cv.wait(st).unwrap();
+                        }
+                    };
+                    // A panicking job must not kill the worker or leak the
+                    // in_flight count (that would strand queued jobs and
+                    // deadlock wait_idle).
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    let mut st = shared.state.lock().unwrap();
+                    st.in_flight -= 1;
+                    if st.in_flight == 0 {
+                        shared.idle_cv.notify_all();
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue a job. Returns false (dropping the job) after shutdown began.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return false;
+        }
+        st.jobs.push_back(Box::new(job));
+        st.in_flight += 1;
+        self.shared.work_cv.notify_one();
+        true
+    }
+
+    /// Jobs queued or executing right now.
+    pub fn in_flight(&self) -> usize {
+        self.shared.state.lock().unwrap().in_flight
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.in_flight > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs_bounded() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let (c, p, l) = (counter.clone(), peak.clone(), live.clone());
+            assert!(pool.submit(move || {
+                let now = l.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                l.fetch_sub(1, Ordering::SeqCst);
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert!(peak.load(Ordering::SeqCst) <= 3, "pool exceeded its bound");
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = WorkerPool::new(1);
+        let done = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("job panic must not kill the worker"));
+        let d = done.clone();
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_drop_drains_queue_then_joins() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..20 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop drains the queue before joining.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
 
     #[test]
     fn maps_in_order() {

@@ -1,0 +1,414 @@
+//! Catalog-wide derivative sweep (the "trust every oracle" test):
+//!
+//! 1. For every catalog mapping — ridge, logreg, SVM, prox-grad/lasso,
+//!    projected-GD, stationary quadratic — the analytic `jvp_x`/`jvp_theta`
+//!    are checked against `ad::num_grad` central differences on randomized
+//!    (x, θ) drawn through `util::testkit`, `vjp_*` are checked through the
+//!    adjoint identity, and every batch override (`jvp_x_batch` etc.) is
+//!    checked against its column loop.
+//! 2. Projection property tests: idempotence, feasibility and
+//!    non-expansiveness on random inputs for the simplex, ℓ1/ℓ2/ℓ∞ balls,
+//!    boxes and affine sets.
+//! 3. Unroll↔implicit consistency (the Fig. 3 claim as a regression test):
+//!    forward-mode unrolling of a contraction at a large iteration count
+//!    agrees with `implicit_jvp`.
+//!
+//! Piecewise-smooth mappings (prox/projection fixed points) are sampled
+//! away from their kinks: a draw where forward and backward one-sided
+//! differences disagree is skipped rather than compared against a
+//! meaningless central difference.
+
+use idiff::diff::root::{implicit_jvp, jacobian_via_root, jacobian_via_root_columns};
+use idiff::diff::spec::{FixedPointResidual, RootMap};
+use idiff::linalg::solve::LinearSolveConfig;
+use idiff::linalg::{vecops, Mat};
+use idiff::mappings::objective::QuadObjective;
+use idiff::mappings::prox_grad::{ProjGradFixedPoint, ProxGradFixedPoint};
+use idiff::mappings::stationary::{GradientDescentFixedPoint, StationaryMapping};
+use idiff::ml::logreg::LogRegProblem;
+use idiff::ml::ridge::{RidgeProblem, RidgeRoot};
+use idiff::ml::svm::MulticlassSvm;
+use idiff::proj::affine::AffineProjection;
+use idiff::proj::balls::{L1BallProjection, L2BallProjection, LInfBallProjection};
+use idiff::proj::boxes::{BoxProjection, NonNegProjection};
+use idiff::proj::simplex::SimplexProjection;
+use idiff::proj::Projection;
+use idiff::prox::LassoProx;
+use idiff::util::rng::Rng;
+use idiff::util::testkit::{check, Gen};
+
+// ------------------------------------------------------------- helpers --
+
+/// Central-difference JVP that refuses to answer at kinks: if the forward
+/// and backward one-sided differences disagree, the segment [x−hv, x+hv]
+/// straddles a non-smooth point and the draw is skipped.
+fn trusted_fd_jvp(
+    f: impl Fn(&[f64]) -> Vec<f64>,
+    x: &[f64],
+    v: &[f64],
+    h: f64,
+    kink_tol: f64,
+) -> Option<Vec<f64>> {
+    let f0 = f(x);
+    let xp: Vec<f64> = x.iter().zip(v).map(|(a, b)| a + h * b).collect();
+    let xm: Vec<f64> = x.iter().zip(v).map(|(a, b)| a - h * b).collect();
+    let fp = f(&xp);
+    let fm = f(&xm);
+    let mut scale = 1.0f64;
+    let mut max_gap = 0.0f64;
+    let mut central = vec![0.0; f0.len()];
+    for i in 0..f0.len() {
+        let fwd = (fp[i] - f0[i]) / h;
+        let bwd = (f0[i] - fm[i]) / h;
+        central[i] = (fp[i] - fm[i]) / (2.0 * h);
+        scale = scale.max(fwd.abs()).max(bwd.abs());
+        max_gap = max_gap.max((fwd - bwd).abs());
+    }
+    if max_gap > kink_tol * scale {
+        return None; // kink between x−hv and x+hv
+    }
+    Some(central)
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+    let scale = a.iter().chain(b).fold(1.0f64, |m, v| m.max(v.abs()));
+    a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol * scale)
+}
+
+/// The full oracle sweep for one RootMap at one randomized draw:
+/// jvp_x/jvp_theta vs trusted FD, vjp_x/vjp_theta via the adjoint identity,
+/// and all four batch overrides vs their column loops. Returns false on a
+/// genuine mismatch, true when the draw passes (or straddles a kink).
+fn sweep_draw(m: &dyn RootMap, x: &[f64], theta: &[f64], dir_seed: u64, fd_tol: f64) -> bool {
+    let (d, n) = (m.dim_x(), m.dim_theta());
+    let mut rng = Rng::new(dir_seed);
+    let v_x = rng.normal_vec(d);
+    let v_t = rng.normal_vec(n);
+    let u = rng.normal_vec(d);
+
+    // A derivative jump smaller than half the comparison tolerance cannot
+    // fail the check (central differencing averages the two sides), and a
+    // larger one flags the draw as a kink — so the two thresholds couple.
+    let kink_tol = 0.5 * fd_tol;
+
+    // jvp_x vs FD in x
+    let mut jx = vec![0.0; d];
+    m.jvp_x(x, theta, &v_x, &mut jx);
+    match trusted_fd_jvp(|xx| m.eval_vec(xx, theta), x, &v_x, 1e-6, kink_tol) {
+        Some(fd) => {
+            if !close(&jx, &fd, fd_tol) {
+                eprintln!("jvp_x mismatch:\n  analytic {jx:?}\n  fd       {fd:?}");
+                return false;
+            }
+        }
+        None => return true, // kink draw: skip the whole case
+    }
+
+    // jvp_theta vs FD in θ
+    let mut jt = vec![0.0; d];
+    m.jvp_theta(x, theta, &v_t, &mut jt);
+    match trusted_fd_jvp(|tt| m.eval_vec(x, tt), theta, &v_t, 1e-6, kink_tol) {
+        Some(fd) => {
+            if !close(&jt, &fd, fd_tol) {
+                eprintln!("jvp_theta mismatch:\n  analytic {jt:?}\n  fd       {fd:?}");
+                return false;
+            }
+        }
+        None => return true,
+    }
+
+    // vjp_x / vjp_theta via adjoint identities (analytic ↔ analytic, tight)
+    let mut vx = vec![0.0; d];
+    m.vjp_x(x, theta, &u, &mut vx);
+    let lhs = vecops::dot(&u, &jx);
+    let rhs = vecops::dot(&vx, &v_x);
+    let s = lhs.abs().max(rhs.abs()).max(1.0);
+    if (lhs - rhs).abs() > 1e-8 * s {
+        eprintln!("vjp_x adjoint identity broken: {lhs} vs {rhs}");
+        return false;
+    }
+    let mut vt = vec![0.0; n];
+    m.vjp_theta(x, theta, &u, &mut vt);
+    let lhs = vecops::dot(&u, &jt);
+    let rhs = vecops::dot(&vt, &v_t);
+    let s = lhs.abs().max(rhs.abs()).max(1.0);
+    if (lhs - rhs).abs() > 1e-8 * s {
+        eprintln!("vjp_theta adjoint identity broken: {lhs} vs {rhs}");
+        return false;
+    }
+
+    // batch overrides vs their column loops (exact analytic paths)
+    let k = 3;
+    let vxb = Mat::randn(d, k, &mut rng);
+    let vtb = Mat::randn(n, k, &mut rng);
+    let mut col_in = vec![0.0; d.max(n)];
+    let mut col_out = vec![0.0; d.max(n)];
+    let mut out = Mat::zeros(d, k);
+    m.jvp_x_batch(x, theta, &vxb, &mut out);
+    for j in 0..k {
+        vxb.col_into(j, &mut col_in[..d]);
+        m.jvp_x(x, theta, &col_in[..d], &mut col_out[..d]);
+        for i in 0..d {
+            if (out.at(i, j) - col_out[i]).abs() > 1e-8 * (1.0 + col_out[i].abs()) {
+                eprintln!("jvp_x_batch ({i},{j}): {} vs {}", out.at(i, j), col_out[i]);
+                return false;
+            }
+        }
+    }
+    let mut out = Mat::zeros(d, k);
+    m.vjp_x_batch(x, theta, &vxb, &mut out);
+    for j in 0..k {
+        vxb.col_into(j, &mut col_in[..d]);
+        m.vjp_x(x, theta, &col_in[..d], &mut col_out[..d]);
+        for i in 0..d {
+            if (out.at(i, j) - col_out[i]).abs() > 1e-8 * (1.0 + col_out[i].abs()) {
+                eprintln!("vjp_x_batch ({i},{j}): {} vs {}", out.at(i, j), col_out[i]);
+                return false;
+            }
+        }
+    }
+    let mut out = Mat::zeros(d, k);
+    m.jvp_theta_batch(x, theta, &vtb, &mut out);
+    for j in 0..k {
+        vtb.col_into(j, &mut col_in[..n]);
+        m.jvp_theta(x, theta, &col_in[..n], &mut col_out[..d]);
+        for i in 0..d {
+            if (out.at(i, j) - col_out[i]).abs() > 1e-8 * (1.0 + col_out[i].abs()) {
+                eprintln!("jvp_theta_batch ({i},{j}): {} vs {}", out.at(i, j), col_out[i]);
+                return false;
+            }
+        }
+    }
+    let mut out = Mat::zeros(n, k);
+    m.vjp_theta_batch(x, theta, &vxb, &mut out);
+    for j in 0..k {
+        vxb.col_into(j, &mut col_in[..d]);
+        m.vjp_theta(x, theta, &col_in[..d], &mut col_out[..n]);
+        for i in 0..n {
+            if (out.at(i, j) - col_out[i]).abs() > 1e-8 * (1.0 + col_out[i].abs()) {
+                eprintln!("vjp_theta_batch ({i},{j}): {} vs {}", out.at(i, j), col_out[i]);
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Run the sweep over `cases` randomized (x, θ) draws via testkit.
+fn sweep_mapping<F>(name: &str, m: &dyn RootMap, seed: u64, cases: usize, fd_tol: f64, theta_gen: F)
+where
+    F: Fn(&mut Rng) -> Vec<f64> + 'static,
+{
+    let d = m.dim_x();
+    let gen: Gen<(Vec<f64>, Vec<f64>)> =
+        Gen::new(move |rng: &mut Rng| (rng.normal_vec(d), theta_gen(rng)));
+    check(name, seed, cases, &gen, |(x, theta)| {
+        // direction seed derived from the draw itself (prop must be Fn)
+        let dir = seed ^ x[0].to_bits().rotate_left(13) ^ theta[0].to_bits();
+        sweep_draw(m, x, theta, dir, fd_tol)
+    });
+}
+
+fn random_quad(d: usize, n: usize, seed: u64) -> QuadObjective {
+    let mut rng = Rng::new(seed);
+    QuadObjective {
+        q: Mat::randn(d + 2, d, &mut rng).gram().plus_diag(1.0),
+        r: Mat::randn(d, n, &mut rng),
+        c: rng.normal_vec(d),
+    }
+}
+
+// --------------------------------------------- 1. the derivative sweep --
+
+#[test]
+fn sweep_ridge_root() {
+    let (x, y) = idiff::data::regression::diabetes_like(40, 6, 5);
+    let rp = RidgeProblem::new(x, y);
+    let root = RidgeRoot(&rp);
+    sweep_mapping("ridge-root", &root, 101, 12, 2e-4, |rng| {
+        (0..6).map(|_| rng.uniform_in(0.2, 2.0)).collect()
+    });
+}
+
+#[test]
+fn sweep_logreg_stationary() {
+    let mut rng = Rng::new(6);
+    let ds = idiff::data::classification::make_classification(16, 4, 3, 0.3, 2.0, &mut rng);
+    let m = StationaryMapping::new(LogRegProblem::new(ds.x, ds.labels, 3));
+    sweep_mapping("logreg-stationary", &m, 102, 10, 2e-4, |rng| {
+        vec![rng.uniform_in(0.2, 1.5)]
+    });
+}
+
+#[test]
+fn sweep_svm_stationary() {
+    let mut rng = Rng::new(7);
+    let ds = idiff::data::classification::make_classification(10, 5, 3, 0.3, 2.0, &mut rng);
+    let y = ds.one_hot();
+    let m = StationaryMapping::new(MulticlassSvm::new(ds.x, y));
+    sweep_mapping("svm-stationary", &m, 103, 8, 5e-4, |rng| {
+        vec![rng.uniform_in(0.6, 1.8)]
+    });
+}
+
+#[test]
+fn sweep_prox_grad_lasso() {
+    let t = ProxGradFixedPoint::new(random_quad(6, 2, 8), LassoProx { d: 6 }, 0.08);
+    let res = FixedPointResidual(t);
+    sweep_mapping("prox-grad-lasso", &res, 104, 20, 5e-4, |rng| {
+        vec![rng.normal(), rng.normal(), rng.uniform_in(0.1, 0.8)]
+    });
+}
+
+#[test]
+fn sweep_proj_grad_simplex() {
+    let t = ProjGradFixedPoint::new(random_quad(5, 2, 9), SimplexProjection { d: 5 }, 0.08);
+    let res = FixedPointResidual(t);
+    sweep_mapping("proj-grad-simplex", &res, 105, 20, 5e-4, |rng| {
+        vec![rng.normal(), rng.normal()]
+    });
+}
+
+#[test]
+fn sweep_stationary_quad() {
+    let m = StationaryMapping::new(random_quad(6, 3, 10));
+    sweep_mapping("stationary-quad", &m, 106, 12, 2e-4, |rng| rng.normal_vec(3));
+}
+
+#[test]
+fn sweep_gd_fixed_point_residual() {
+    // Eq. 5: the GD fixed point's residual must carry the same derivative
+    // structure for any η.
+    let fp = GradientDescentFixedPoint { obj: random_quad(5, 2, 11), eta: 0.07 };
+    let res = FixedPointResidual(fp);
+    sweep_mapping("gd-fixed-point", &res, 107, 10, 2e-4, |rng| rng.normal_vec(2));
+}
+
+// ------------------------------------------ 2. projection properties --
+
+/// Idempotence + non-expansiveness for any projection, via testkit pairs.
+fn proj_properties<P: Projection>(
+    name: &str,
+    p: &P,
+    theta: Vec<f64>,
+    seed: u64,
+    feasible: impl Fn(&[f64], &[f64]) -> bool,
+) {
+    let d = p.dim();
+    let gen: Gen<(Vec<f64>, Vec<f64>)> =
+        Gen::new(move |rng: &mut Rng| (rng.normal_vec(d), rng.normal_vec(d)));
+    let theta2 = theta.clone();
+    check(&format!("{name}-idempotent-feasible"), seed, 60, &gen, |(a, _)| {
+        let z = p.project_vec(&scale3(a), &theta2);
+        if !feasible(&z, &theta2) {
+            eprintln!("{name}: infeasible output {z:?}");
+            return false;
+        }
+        let zz = p.project_vec(&z, &theta2);
+        vecops::rel_err(&zz, &z) < 1e-9
+    });
+    let theta2 = theta.clone();
+    check(&format!("{name}-nonexpansive"), seed + 1, 60, &gen, |(a, b)| {
+        let (a, b) = (scale3(a), scale3(b));
+        let pa = p.project_vec(&a, &theta2);
+        let pb = p.project_vec(&b, &theta2);
+        let num = vecops::norm2(&vecops::sub(&pa, &pb));
+        let den = vecops::norm2(&vecops::sub(&a, &b));
+        num <= den + 1e-9
+    });
+}
+
+/// Stretch draws so they land both inside and (mostly) outside small sets.
+fn scale3(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| 3.0 * x).collect()
+}
+
+#[test]
+fn projection_properties_hold() {
+    proj_properties(
+        "simplex",
+        &SimplexProjection { d: 6 },
+        vec![],
+        201,
+        |z, _| (z.iter().sum::<f64>() - 1.0).abs() < 1e-9 && z.iter().all(|&v| v >= -1e-12),
+    );
+    proj_properties("l2-ball", &L2BallProjection { d: 6 }, vec![1.4], 202, |z, t| {
+        vecops::norm2(z) <= t[0] + 1e-9
+    });
+    proj_properties("l1-ball", &L1BallProjection { d: 6 }, vec![1.2], 203, |z, t| {
+        vecops::norm1(z) <= t[0] + 1e-9
+    });
+    proj_properties("linf-ball", &LInfBallProjection { d: 6 }, vec![0.9], 204, |z, t| {
+        vecops::norm_inf(z) <= t[0] + 1e-12
+    });
+    proj_properties("box", &BoxProjection { d: 6 }, vec![-0.5, 1.25], 205, |z, t| {
+        z.iter().all(|&v| v >= t[0] - 1e-12 && v <= t[1] + 1e-12)
+    });
+    proj_properties("nonneg", &NonNegProjection { d: 6 }, vec![], 206, |z, _| {
+        z.iter().all(|&v| v >= 0.0)
+    });
+    let mut rng = Rng::new(207);
+    let a = Mat::randn(2, 6, &mut rng);
+    let b = rng.normal_vec(2);
+    let amat = a.clone();
+    proj_properties("affine", &AffineProjection::new(a), b, 208, move |z, t| {
+        let r = amat.matvec(z);
+        r.iter().zip(t).all(|(ri, ti)| (ri - ti).abs() < 1e-8)
+    });
+}
+
+// ------------------------------ 3. unroll ↔ implicit consistency --
+
+#[test]
+fn unroll_jvp_converges_to_implicit_jvp() {
+    // Contraction: GD fixed point on a strongly convex quadratic with
+    // η < 1/λ_max. Unrolling the tangent recursion to stationarity must
+    // reproduce the implicit-function-theorem derivative (Fig. 3).
+    let quad = random_quad(6, 3, 12);
+    // power iteration for λ_max(Q)
+    let mut v = vec![1.0; 6];
+    let mut lam = 1.0;
+    for _ in 0..100 {
+        let mut w = quad.q.matvec(&v);
+        lam = vecops::norm2(&w).max(1e-30);
+        for wi in w.iter_mut() {
+            *wi /= lam;
+        }
+        v = w;
+    }
+    let eta = 0.9 / lam;
+    let theta = vec![0.4, -0.8, 1.1];
+    let v_theta = vec![1.0, -0.5, 0.25];
+    let fp = GradientDescentFixedPoint { obj: random_quad(6, 3, 12), eta };
+    let (x_unroll, dx_unroll) =
+        idiff::unroll::unroll_jvp(&fp, &vec![0.0; 6], &theta, &v_theta, 6000);
+    let res = FixedPointResidual(GradientDescentFixedPoint { obj: random_quad(6, 3, 12), eta });
+    let (dx_impl, rep) =
+        implicit_jvp(&res, &x_unroll, &theta, &v_theta, &LinearSolveConfig::default());
+    assert!(rep.converged);
+    assert!(
+        close(&dx_unroll, &dx_impl, 1e-6),
+        "unrolled {dx_unroll:?} vs implicit {dx_impl:?}"
+    );
+    // …and a short horizon is measurably further away (the Fig. 3 shape).
+    let (_, dx_short) = idiff::unroll::unroll_jvp(&fp, &vec![0.0; 6], &theta, &v_theta, 5);
+    let err_long = vecops::norm2(&vecops::sub(&dx_unroll, &dx_impl));
+    let err_short = vecops::norm2(&vecops::sub(&dx_short, &dx_impl));
+    assert!(err_short > 10.0 * err_long.max(1e-12), "short {err_short} vs long {err_long}");
+}
+
+#[test]
+fn dense_jacobian_block_path_matches_columns_on_fixed_point_residual() {
+    // The PR-1 batching property, re-checked through a fixed-point residual
+    // (non-trivial ∂₁T): block dense Jacobian == column-by-column Jacobian.
+    let t = ProxGradFixedPoint::new(random_quad(5, 2, 13), LassoProx { d: 5 }, 0.06);
+    let res = FixedPointResidual(t);
+    let theta = vec![0.3, -0.2, 0.4];
+    let mut rng = Rng::new(14);
+    let x = rng.normal_vec(5);
+    let jb = jacobian_via_root(&res, &x, &theta);
+    let jc = jacobian_via_root_columns(&res, &x, &theta);
+    for i in 0..jb.data.len() {
+        assert!((jb.data[i] - jc.data[i]).abs() < 1e-7, "elt {i}");
+    }
+}

@@ -217,16 +217,109 @@ fn md_implicit_sensitivity_stable_unroll_not() {
 
 #[test]
 fn server_roundtrip_over_tcp() {
+    use idiff::coordinator::serve::{ServeConfig, Server};
     use std::io::{BufRead, BufReader, Write};
-    let addr = "127.0.0.1:7997";
-    std::thread::spawn(move || {
-        let _ = idiff::coordinator::serve::HypergradServer::new_default().serve(addr);
-    });
-    std::thread::sleep(std::time::Duration::from_millis(200));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = std::sync::Arc::new(Server::new(ServeConfig::default()));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
     let mut stream = std::net::TcpStream::connect(addr).expect("connect");
-    stream.write_all(b"{\"op\": \"ping\"}\n").unwrap();
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut line = String::new();
+    stream.write_all(b"{\"op\": \"ping\"}\n").unwrap();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\""), "{line}");
+    // a catalog request end-to-end, twice: second reply must be cache-served
+    let req = b"{\"op\":\"hypergrad\",\"problem\":\"quad\",\"theta\":[0.4,0.1,-0.2,0.9],\"v\":[1,0,0,0,0,0]}\n";
+    for expect_cached in [false, true] {
+        stream.write_all(req).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"grad\""), "{line}");
+        assert!(
+            line.contains(&format!("\"cached\":{expect_cached}")),
+            "expected cached={expect_cached}: {line}"
+        );
+    }
+    // malformed line keeps the connection usable
+    stream.write_all(b"not json\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"error\""), "{line}");
+    stream.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\""), "{line}");
+}
+
+#[test]
+fn concurrent_tcp_clients_share_one_block_solve() {
+    // The serve tentpole end-to-end over TCP: k clients firing hypergrads
+    // at one (problem, θ) produce exactly one iterative block solve; a
+    // repeat-θ client afterwards is served from the factorization cache
+    // with zero new solves.
+    use idiff::coordinator::serve::{ServeConfig, Server};
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+    let n = 4;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = std::sync::Arc::new(Server::new(ServeConfig {
+        batch_window: std::time::Duration::from_secs(10),
+        batch_max: n,
+        workers: n + 1,
+        ..ServeConfig::default()
+    }));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
+    let theta = "[1.0,1.0,1.0,1.0,1.0,1.0,1.0,1.0]";
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let v: Vec<String> =
+                    (0..8).map(|j| if j == i { "1.0".into() } else { "0.0".into() }).collect();
+                let req = format!(
+                    "{{\"op\":\"hypergrad\",\"problem\":\"ridge\",\"theta\":{theta},\"v\":[{}]}}\n",
+                    v.join(",")
+                );
+                stream.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.contains("\"grad\""), "{line}");
+                assert!(line.contains(&format!("\"batched\":{n}")), "{line}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        server.stats.block_solves.load(Ordering::Relaxed),
+        1,
+        "k concurrent TCP hypergrads on one θ must coalesce into ONE block solve"
+    );
+    assert_eq!(server.stats.inner_solves.load(Ordering::Relaxed), 1);
+    // repeat θ: factorization-cache hit, zero new solves
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let req = format!(
+        "{{\"op\":\"hypergrad\",\"problem\":\"ridge\",\"theta\":{theta},\"v\":[1,1,1,1,1,1,1,1]}}\n"
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"cached\":true"), "{line}");
+    assert_eq!(server.stats.block_solves.load(Ordering::Relaxed), 1, "repeat θ: no new solves");
+    assert_eq!(server.stats.inner_solves.load(Ordering::Relaxed), 1);
 }
