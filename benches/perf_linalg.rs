@@ -3,7 +3,12 @@
 //! simplex projection, softmax rows. Results are printed AND journaled to
 //! `BENCH_linalg.json` so the perf trajectory is tracked across PRs — the
 //! numbers land in EXPERIMENTS.md §Perf.
-use idiff::linalg::{cg, op::DenseOp, Mat};
+use idiff::diff::root::implicit_vjp;
+use idiff::linalg::op::densify;
+use idiff::linalg::solve::LinearSolveConfig;
+use idiff::linalg::{cg, gemm_config, op::DenseOp, simd_tier, CsrMat, GemmConfig, Mat};
+use idiff::mappings::stationary::StationaryMapping;
+use idiff::ml::logreg::LogRegProblem;
 use idiff::util::bench::{bench, black_box, BenchConfig, BenchJournal};
 use idiff::util::cli::Args;
 use idiff::util::json::Json;
@@ -21,6 +26,13 @@ fn main() {
     let cfg = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 1 };
     let mut journal = BenchJournal::new();
 
+    println!("cpu: simd tier {}, autotuned gemm {}", simd_tier(), gemm_config());
+    journal.note(Json::obj(vec![
+        ("name", Json::Str("cpu_features".into())),
+        ("simd_tier", Json::Str(simd_tier().to_string())),
+        ("gemm_config", Json::Str(gemm_config().to_string())),
+    ]));
+
     let flops3 = 2.0 * (n as f64).powi(3);
     let m = bench(&format!("gemm {n}x{n}x{n}"), cfg, || black_box(a.matmul(&b)));
     println!("  → {:.2} GFLOP/s", flops3 / m.mean_s() / 1e9);
@@ -30,6 +42,26 @@ fn main() {
     journal.record(&m, Some(flops3));
     let m = bench(&format!("gram {n}x{n}"), cfg, || black_box(a.gram()));
     journal.record(&m, Some(flops3));
+
+    // SIMD microkernel vs the portable scalar kernel, same blocking machinery.
+    let m_scalar = bench(&format!("gemm scalar-kernel {n}x{n}x{n}"), cfg, || {
+        black_box(a.matmul_cfg(&b, GemmConfig::scalar()))
+    });
+    println!("  → {:.2} GFLOP/s", flops3 / m_scalar.mean_s() / 1e9);
+    journal.record(&m_scalar, Some(flops3));
+    let m_simd = bench(&format!("gemm autotuned {n}x{n}x{n} [{}]", gemm_config()), cfg, || {
+        black_box(a.matmul_cfg(&b, gemm_config()))
+    });
+    println!("  → {:.2} GFLOP/s", flops3 / m_simd.mean_s() / 1e9);
+    journal.record(&m_simd, Some(flops3));
+    let kernel_speedup = m_scalar.mean_s() / m_simd.mean_s().max(1e-30);
+    println!("  → autotuned kernel speedup over scalar: {kernel_speedup:.2}x");
+    journal.note(Json::obj(vec![
+        ("name", Json::Str(format!("simd_vs_scalar_gemm n={n}"))),
+        ("scalar_s", Json::Num(m_scalar.mean_s())),
+        ("simd_s", Json::Num(m_simd.mean_s())),
+        ("speedup", Json::Num(kernel_speedup)),
+    ]));
 
     let cfg_fast = BenchConfig { warmup_iters: 2, samples: 8, reps_per_sample: 50 };
     let flops2 = 2.0 * (n as f64).powi(2);
@@ -92,6 +124,50 @@ fn main() {
         black_box(out)
     });
     journal.record(&m, None);
+
+    // Sparse CSR design vs the same logreg with a dense design: one
+    // hypergradient (implicit VJP, matrix-free CG on the Hessian operator)
+    // at d = 12000 — past FACTORIZE_DENSE_LIMIT, so both sides are
+    // iterative and the densify counter proves no d×d was materialised.
+    let (sm, sp, sk, nnz_row) = (30usize, 4000usize, 3usize, 25usize);
+    let scale = 1.0 / (nnz_row as f64).sqrt();
+    let mut trips = Vec::with_capacity(sm * nnz_row);
+    let mut labels = Vec::with_capacity(sm);
+    for i in 0..sm {
+        labels.push(i % sk);
+        for _ in 0..nnz_row {
+            let j = (rng.uniform() * sp as f64) as usize % sp;
+            trips.push((i, j, scale * rng.normal()));
+        }
+    }
+    let csr = CsrMat::from_triplets(sm, sp, &trips);
+    let dense = csr.to_dense_mat();
+    let sparse_prob = StationaryMapping::new(LogRegProblem::new(csr, labels.clone(), sk));
+    let dense_prob = StationaryMapping::new(LogRegProblem::new(dense, labels, sk));
+    let d = sp * sk;
+    let x = rng.normal_vec(d);
+    let u = rng.normal_vec(d);
+    let theta = [0.5];
+    let scfg = LinearSolveConfig::default();
+    densify::reset();
+    let m_densed = bench(&format!("logreg hypergrad dense design d={d}"), cfg, || {
+        black_box(implicit_vjp(&dense_prob, &x, &theta, &u, &scfg))
+    });
+    journal.record(&m_densed, None);
+    let m_sparse = bench(&format!("logreg hypergrad csr design d={d}"), cfg, || {
+        black_box(implicit_vjp(&sparse_prob, &x, &theta, &u, &scfg))
+    });
+    journal.record(&m_sparse, None);
+    assert_eq!(densify::count(), 0, "large-d hypergrad must stay matrix-free");
+    let sparse_speedup = m_densed.mean_s() / m_sparse.mean_s().max(1e-30);
+    println!("  → CSR-design hypergrad speedup over dense design: {sparse_speedup:.2}x (densified: 0)");
+    journal.note(Json::obj(vec![
+        ("name", Json::Str(format!("sparse_vs_dense_logreg_hypergrad d={d}"))),
+        ("dense_s", Json::Num(m_densed.mean_s())),
+        ("sparse_s", Json::Num(m_sparse.mean_s())),
+        ("speedup", Json::Num(sparse_speedup)),
+        ("densified", Json::Num(densify::count() as f64)),
+    ]));
 
     journal.write("BENCH_linalg.json");
 }

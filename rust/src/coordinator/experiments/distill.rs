@@ -45,7 +45,13 @@ pub fn outer_step_implicit(
     let mut grad_w = vec![0.0; s.p * s.k];
     mean_ce_grad(&w_star, &s.train.x, &s.train.labels, s.k, &mut grad_w);
     let mapping = StationaryMapping::new(DistillInnerObjective { p: s.p, k: s.k, l2reg: s.obj.l2reg });
-    let cfg = LinearSolveConfig { kind: LinearSolverKind::Cg, tol: 1e-7, max_iter: 300, gmres_restart: 30 };
+    let cfg = LinearSolveConfig {
+        kind: LinearSolverKind::Cg,
+        tol: 1e-7,
+        max_iter: 300,
+        gmres_restart: 30,
+        ..Default::default()
+    };
     let (hg, _) = crate::diff::root::implicit_vjp(&mapping, &w_star, theta, &grad_w, &cfg);
     (loss, hg, w_star)
 }

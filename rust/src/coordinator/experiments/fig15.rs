@@ -44,6 +44,7 @@ pub fn run(args: &Args) -> Json {
             tol: 1e-10,
             max_iter: 4000,
             gmres_restart: 30,
+            ..Default::default()
         };
         // PG fixed-point residual for implicit differentiation at this size
         // (stateless across iterates — built once per p, not per grid point).

@@ -99,6 +99,7 @@ pub fn hypergrad_implicit(setup: &SvmSetup, fp: DiffFp, x_star: &[f64], theta: f
         tol: 1e-6,
         max_iter: 400,
         gmres_restart: 30,
+        ..Default::default()
     };
     let obj = MulticlassSvm::new(svm.x_tr.clone(), svm.y_tr.clone());
     let direct = [dl_dtheta_direct];

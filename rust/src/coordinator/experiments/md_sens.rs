@@ -42,6 +42,7 @@ pub fn implicit_sensitivity(sys: &SoftSphereSystem, x_star: &[f64], theta: f64) 
         tol: 1e-9,
         max_iter: 4000,
         gmres_restart: 50,
+        ..Default::default()
     };
     solve::solve(&op, &b, &mut dx, &cfg);
     dx

@@ -180,6 +180,7 @@ fn fit_task_driven(
             tol: 1e-6,
             max_iter: 400,
             gmres_restart: 30,
+            ..Default::default()
         };
         // One-column cotangent block through the batched engine (a future
         // multi-head outer loss shares this single block solve).

@@ -10,6 +10,7 @@
 //! error instead of hanging the followers.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::solve::SolvePrecision;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -24,20 +25,28 @@ pub enum BatchOp {
     Jvp,
 }
 
-/// Coalescing key: requests batch together iff problem, θ bits and op all
-/// match.
+/// Coalescing key: requests batch together iff problem, θ bits, op AND
+/// arithmetic policy all match (an f64 and a mixed-precision request must
+/// not share one block solve).
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 pub struct BatchKey {
     pub problem: String,
     pub op: BatchOp,
+    pub precision: SolvePrecision,
     bits: Vec<u64>,
 }
 
 impl BatchKey {
-    pub fn new(problem: &str, op: BatchOp, theta: &[f64]) -> BatchKey {
+    pub fn new(
+        problem: &str,
+        op: BatchOp,
+        theta: &[f64],
+        precision: SolvePrecision,
+    ) -> BatchKey {
         BatchKey {
             problem: problem.to_string(),
             op,
+            precision,
             bits: theta.iter().map(|t| t.to_bits()).collect(),
         }
     }
@@ -239,7 +248,7 @@ mod tests {
                 let b = batcher.clone();
                 let c = computes.clone();
                 std::thread::spawn(move || {
-                    let key = BatchKey::new("p", BatchOp::Vjp, &[1.0]);
+                    let key = BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64);
                     let v = vec![i as f64; 3];
                     let (res, size) = b.submit(key, v, 3, |block| {
                         c.fetch_add(1, Ordering::SeqCst);
@@ -269,11 +278,11 @@ mod tests {
     fn different_keys_do_not_coalesce() {
         let batcher = Batcher::new(Duration::from_millis(0), 8);
         let (a, sa) =
-            batcher.submit(BatchKey::new("p", BatchOp::Vjp, &[1.0]), vec![1.0], 1, |b| {
+            batcher.submit(BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64), vec![1.0], 1, |b| {
                 Ok(b.clone())
             });
         let (c, sc) =
-            batcher.submit(BatchKey::new("p", BatchOp::Jvp, &[1.0]), vec![2.0], 1, |b| {
+            batcher.submit(BatchKey::new("p", BatchOp::Jvp, &[1.0], SolvePrecision::F64), vec![2.0], 1, |b| {
                 Ok(b.clone())
             });
         assert_eq!((a.unwrap(), sa), (vec![1.0], 1));
@@ -284,7 +293,7 @@ mod tests {
     #[test]
     fn compute_error_reaches_every_member_and_panic_is_caught() {
         let batcher = Batcher::new(Duration::from_millis(0), 4);
-        let key = BatchKey::new("p", BatchOp::Vjp, &[2.0]);
+        let key = BatchKey::new("p", BatchOp::Vjp, &[2.0], SolvePrecision::F64);
         let (res, _) = batcher.submit(key.clone(), vec![0.0], 1, |_| Err("boom".into()));
         assert_eq!(res.unwrap_err(), "boom");
         let (res, _) = batcher.submit(key, vec![0.0], 1, |_| panic!("kaput"));

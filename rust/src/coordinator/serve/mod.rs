@@ -21,6 +21,13 @@
 //! problem, wrong-length or non-finite vectors, oversized lines — is a
 //! `{"error": "…"}` reply; the connection stays open.
 //!
+//! Derivative requests accept an optional `"precision"` field
+//! (`"f64"` default, or `"mixed"` for f32-inner/f64-refined solves on the
+//! cache-miss iterative path). Requests with different precisions never
+//! share a batch, and the θ-keyed cache always stores full-precision
+//! factorizations, so a cache hit serves f64 quality regardless of the
+//! requested policy.
+//!
 //! # Request path
 //!
 //! Derivative requests are keyed by (problem, θ, op):
@@ -45,7 +52,7 @@ pub mod cache;
 pub mod registry;
 
 use crate::linalg::mat::Mat;
-use crate::linalg::solve::counter;
+use crate::linalg::solve::{counter, SolvePrecision};
 use crate::util::json::{self, Json};
 use crate::util::parallel::WorkerPool;
 use batcher::{BatchKey, BatchOp, Batcher};
@@ -241,35 +248,32 @@ impl Server {
     }
 
     /// x*(θ) through the cache; the bool reports whether this was a hit
-    /// (hits skip the inner solve and the factorization entirely).
-    fn cached_solution(&self, p: &Problem, theta: &[f64]) -> Result<(CacheEntry, bool), String> {
+    /// (hits skip the inner solve and the factorization entirely). Problems
+    /// past the dense-factorization limit (or singular at this θ) still get
+    /// their solution — they just never populate the cache.
+    fn cached_solution(&self, p: &Problem, theta: &[f64]) -> (Arc<Vec<f64>>, bool) {
         let key = ThetaKey::new(p.name, theta);
         if let Some(entry) = self.cache.get(&key) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((entry, true));
+            return (entry.x_star, true);
         }
-        let x_star = p.solve(theta);
+        let x_star = Arc::new(p.solve(theta));
         self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
-        let fact = p
-            .factorize(&x_star, theta)
-            .ok_or_else(|| format!("problem '{}' is singular at this θ", p.name))?;
-        let entry = CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) };
-        self.cache.insert(key, entry.clone());
-        Ok((entry, false))
+        if let Some(fact) = p.factorize(&x_star, theta) {
+            let entry = CacheEntry { x_star: x_star.clone(), fact: Arc::new(fact) };
+            self.cache.insert(key, entry);
+        }
+        (x_star, false)
     }
 
     fn op_solve(&self, p: &Problem, theta: &[f64]) -> Json {
-        match self.cached_solution(p, theta) {
-            Ok((entry, was_hit)) => Json::obj(vec![
-                ("x", Json::arr_f64(&entry.x_star)),
-                ("cached", Json::Bool(was_hit)),
-            ]),
-            Err(e) => err_json(&e),
-        }
+        let (x_star, was_hit) = self.cached_solution(p, theta);
+        Json::obj(vec![("x", Json::arr_f64(&x_star)), ("cached", Json::Bool(was_hit))])
     }
 
     /// The batched derivative path: cache hit → factored substitution
-    /// (zero iterative solves); miss → micro-batch onto ONE block solve.
+    /// (zero iterative solves); miss → micro-batch onto ONE block solve
+    /// under the requested arithmetic policy.
     fn op_derivative(&self, p: &Problem, theta: &[f64], req: &Json, op: BatchOp) -> Json {
         let (in_dim, out_key) = match op {
             BatchOp::Vjp => (p.dim_x(), "grad"),
@@ -278,6 +282,15 @@ impl Server {
         let v = match parse_vec(req, "v", in_dim) {
             Ok(v) => v,
             Err(e) => return e,
+        };
+        let precision = match req.get("precision") {
+            None => SolvePrecision::F64,
+            Some(j) => match j.as_str().and_then(SolvePrecision::parse) {
+                Some(pr) => pr,
+                None => {
+                    return err_json("'precision' must be \"f64\" or \"mixed\"");
+                }
+            },
         };
 
         // Fast path: prefactored θ.
@@ -299,16 +312,16 @@ impl Server {
             ]);
         }
 
-        // Batched path: coalesce same-(problem, θ, op) requests into one
-        // block solve, then prefactor for future repeats of this θ.
-        let key = BatchKey::new(p.name, op, theta);
+        // Batched path: coalesce same-(problem, θ, op, precision) requests
+        // into one block solve, then prefactor for future repeats of this θ.
+        let key = BatchKey::new(p.name, op, theta, precision);
         let (col, size) = self.batcher.submit(key, v, in_dim, |block| {
             let x_star = p.solve(theta);
             self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
             let before = counter::count();
             let (out, rep) = match op {
-                BatchOp::Vjp => p.vjp_multi(&x_star, theta, block),
-                BatchOp::Jvp => p.jvp_multi(&x_star, theta, block),
+                BatchOp::Vjp => p.vjp_multi_prec(&x_star, theta, block, precision),
+                BatchOp::Jvp => p.jvp_multi_prec(&x_star, theta, block, precision),
             };
             self.stats
                 .block_solves
@@ -464,8 +477,9 @@ mod tests {
         assert_eq!(s.handle(r#"{"op":"ping"}"#).get("ok"), Some(&Json::Bool(true)));
         let probs = s.handle(r#"{"op":"problems"}"#);
         let arr = probs.get("problems").and_then(Json::as_arr).unwrap();
-        assert_eq!(arr.len(), 6);
+        assert_eq!(arr.len(), 7);
         assert!(arr.iter().any(|p| p.str_or("name", "") == "svm"));
+        assert!(arr.iter().any(|p| p.str_or("name", "") == "sparse_logreg"));
         let stats = s.handle(r#"{"op":"stats"}"#);
         assert!(stats.f64_or("requests", -1.0) >= 2.0);
     }
@@ -677,6 +691,61 @@ mod tests {
         let r = s.handle(&req.to_string_compact());
         assert_eq!(r.get("cached"), Some(&Json::Bool(true)));
         assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), before);
+    }
+
+    /// Mixed-precision requests take their own batch, land within refinement
+    /// tolerance of the f64 answer, and an invalid policy is a clean error.
+    #[test]
+    fn precision_field_mixed_matches_f64_and_validates() {
+        let s = Server::new(quiet_cfg());
+        let bad = s.handle(
+            r#"{"op":"hypergrad","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1],"precision":"f16"}"#,
+        );
+        assert!(bad.str_or("error", "").contains("precision"));
+        let theta = vec![0.8; 8];
+        let v = vec![0.7; 8];
+        let mk = |prec: &str| {
+            let mut fields = vec![
+                ("op", Json::Str("hypergrad".into())),
+                ("problem", Json::Str("ridge".into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(&v)),
+            ];
+            if !prec.is_empty() {
+                fields.push(("precision", Json::Str(prec.into())));
+            }
+            Json::obj(fields).to_string_compact()
+        };
+        // mixed first: forces the f32-inner/f64-refined iterative block
+        // solve (the cache is still empty), then prefactors in full f64.
+        let rm = s.handle(&mk("mixed"));
+        assert_eq!(rm.get("cached"), Some(&Json::Bool(false)));
+        let gm: Vec<f64> = rm
+            .get("grad")
+            .and_then(Json::as_arr)
+            .expect("mixed grad")
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        // f64 repeat hits the (precision-independent) factorization cache.
+        let rf = s.handle(&mk("f64"));
+        assert_eq!(rf.get("cached"), Some(&Json::Bool(true)));
+        let gf: Vec<f64> = rf
+            .get("grad")
+            .and_then(Json::as_arr)
+            .expect("f64 grad")
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let scale = gf.iter().fold(1.0f64, |m, g| m.max(g.abs()));
+        for i in 0..8 {
+            assert!(
+                (gm[i] - gf[i]).abs() < 1e-6 * scale,
+                "{i}: mixed {} vs f64 {}",
+                gm[i],
+                gf[i]
+            );
+        }
     }
 
     #[test]

@@ -15,7 +15,10 @@ use crate::diff::root::{
 };
 use crate::diff::spec::{FixedPointResidual, RootMap};
 use crate::linalg::mat::Mat;
-use crate::linalg::solve::{BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind};
+use crate::linalg::solve::{
+    BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind, SolvePrecision,
+};
+use crate::linalg::sparse::CsrMat;
 use crate::mappings::objective::{Objective, QuadObjective};
 use crate::mappings::prox_grad::{ProjGradFixedPoint, ProxGradFixedPoint};
 use crate::mappings::stationary::StationaryMapping;
@@ -82,9 +85,32 @@ impl Problem {
     /// block solve Aᵀ U = V.
     pub fn vjp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> (Mat, BlockSolveReport) {
         let cfg = self.core.cfg();
+        self.vjp_multi_cfg(x_star, theta, v, &cfg)
+    }
+
+    /// [`Problem::vjp_multi`] under an explicit arithmetic policy (the serve
+    /// protocol's per-request `"precision"` field).
+    pub fn vjp_multi_prec(
+        &self,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+        precision: SolvePrecision,
+    ) -> (Mat, BlockSolveReport) {
+        let cfg = self.core.cfg().with_precision(precision);
+        self.vjp_multi_cfg(x_star, theta, v, &cfg)
+    }
+
+    fn vjp_multi_cfg(
+        &self,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+        cfg: &LinearSolveConfig,
+    ) -> (Mat, BlockSolveReport) {
         let mut out = None;
         self.core.with_root(theta, &mut |m| {
-            out = Some(implicit_vjp_multi(m, x_star, theta, v, &cfg));
+            out = Some(implicit_vjp_multi(m, x_star, theta, v, cfg));
         });
         out.expect("with_root must invoke its callback")
     }
@@ -93,9 +119,31 @@ impl Problem {
     /// solve A X = B V.
     pub fn jvp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> (Mat, BlockSolveReport) {
         let cfg = self.core.cfg();
+        self.jvp_multi_cfg(x_star, theta, v, &cfg)
+    }
+
+    /// [`Problem::jvp_multi`] under an explicit arithmetic policy.
+    pub fn jvp_multi_prec(
+        &self,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+        precision: SolvePrecision,
+    ) -> (Mat, BlockSolveReport) {
+        let cfg = self.core.cfg().with_precision(precision);
+        self.jvp_multi_cfg(x_star, theta, v, &cfg)
+    }
+
+    fn jvp_multi_cfg(
+        &self,
+        x_star: &[f64],
+        theta: &[f64],
+        v: &Mat,
+        cfg: &LinearSolveConfig,
+    ) -> (Mat, BlockSolveReport) {
         let mut out = None;
         self.core.with_root(theta, &mut |m| {
-            out = Some(implicit_jvp_multi(m, x_star, theta, v, &cfg));
+            out = Some(implicit_jvp_multi(m, x_star, theta, v, cfg));
         });
         out.expect("with_root must invoke its callback")
     }
@@ -184,6 +232,31 @@ impl Registry {
             describe: "multiclass logistic regression, θ = [λ] L2 strength, GD inner solve",
             core: Box::new(LogRegCore {
                 m: StationaryMapping::new(LogRegProblem::new(ds.x, ds.labels, 3)),
+            }),
+        });
+
+        // sparse_logreg — the same logreg family in the large-d regime:
+        // d = p·k > FACTORIZE_DENSE_LIMIT over a CSR design, so the server
+        // must stay matrix-free (CG on A = H_CE + λI, rank(H_CE) ≤ m·k;
+        // factorization/densification are structurally impossible).
+        let mut rng = Rng::new(26);
+        let (sm, sp, sk, nnz_row) = (40usize, 6000usize, 3usize, 40usize);
+        let mut trips = Vec::with_capacity(sm * nnz_row);
+        let mut slabels = Vec::with_capacity(sm);
+        let scale = 1.0 / (nnz_row as f64).sqrt();
+        for i in 0..sm {
+            slabels.push(i % sk);
+            for _ in 0..nnz_row {
+                let j = (rng.uniform() * sp as f64) as usize % sp;
+                trips.push((i, j, scale * rng.normal()));
+            }
+        }
+        let sx = CsrMat::from_triplets(sm, sp, &trips);
+        problems.push(Problem {
+            name: "sparse_logreg",
+            describe: "multiclass logreg over a CSR design, d = 18000 — iterative-only serving",
+            core: Box::new(LogRegCore {
+                m: StationaryMapping::new(LogRegProblem::new(sx, slabels, sk)),
             }),
         });
 
@@ -341,6 +414,7 @@ impl ProblemCore for SvmCore {
             tol: 1e-11,
             max_iter: 4000,
             gmres_restart: 30,
+            ..Default::default()
         }
     }
     fn with_root(&self, theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
@@ -495,6 +569,7 @@ impl ProblemCore for ProjGdCore {
             tol: 1e-10,
             max_iter: 2000,
             gmres_restart: 30,
+            ..Default::default()
         }
     }
     fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
@@ -532,12 +607,16 @@ impl ProblemCore for QuadCore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::op::densify;
     use crate::linalg::solve::counter;
     use crate::linalg::vecops;
 
     /// Every catalog entry: the inner solution is a fixed point / root of
     /// its mapping, the factored derivative paths match the iterative block
-    /// paths, and the factored paths issue zero iterative solves.
+    /// paths, and the factored paths issue zero iterative solves. Entries
+    /// past `FACTORIZE_DENSE_LIMIT` (sparse_logreg) must instead refuse to
+    /// factorize and serve iteratively without EVER materializing a dense
+    /// d×d operator (densify counter stays at zero).
     #[test]
     fn catalog_roots_and_factored_paths_agree() {
         let reg = Registry::standard();
@@ -561,10 +640,22 @@ mod tests {
             let k = 3;
             let v = Mat::randn(d, k, &mut rng);
             counter::reset();
+            densify::reset();
             let (g_iter, rep) = p.vjp_multi(&x_star, &theta, &v);
             assert!(rep.converged, "{}: {rep:?}", p.name);
             assert_eq!(counter::count(), 1, "{}: block VJP must be one solve", p.name);
-            let fact = p.factorize(&x_star, &theta).expect("regular root");
+            let fact = p.factorize(&x_star, &theta);
+            if d > crate::diff::root::FACTORIZE_DENSE_LIMIT {
+                // Large-d entries never materialize or factor a dense d×d.
+                assert!(fact.is_none(), "{}: must refuse dense factorization", p.name);
+                assert_eq!(densify::count(), 0, "{}: densified a d×d operator", p.name);
+                let vt = Mat::randn(n, 2, &mut rng);
+                let (_, rep) = p.jvp_multi(&x_star, &theta, &vt);
+                assert!(rep.converged, "{}: {rep:?}", p.name);
+                assert_eq!(densify::count(), 0, "{}: JVP densified", p.name);
+                continue;
+            }
+            let fact = fact.expect("regular root");
             let g_fact = p.vjp_multi_factored(&fact, &x_star, &theta, &v);
             assert_eq!(counter::count(), 1, "{}: factored path must add zero solves", p.name);
             let scale = g_iter.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));

@@ -6,6 +6,7 @@
 //! for a given quadratic/regularized problem and the bound line.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::solve::SolvePrecision;
 
 /// Constants of Theorem 1 (for problems where they can be computed).
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +31,35 @@ impl PrecisionConstants {
     /// Theorem 1's bound on the Jacobian error for a given iterate error.
     pub fn bound(&self, iterate_err: f64) -> f64 {
         self.bound_slope() * iterate_err
+    }
+
+    /// Largest iterate error ‖x̂ − x*‖ for which Theorem 1 still certifies
+    /// a Jacobian error below `target`: ε ≤ target / C.
+    pub fn max_iterate_err(&self, target: f64) -> f64 {
+        target / self.bound_slope().max(1e-300)
+    }
+
+    /// Theorem-1 gate for arithmetic policies: a solve stopping at absolute
+    /// residual ‖A x̂ − b‖ ≤ `resid` certifies an iterate error ≤ resid/α
+    /// and hence a Jacobian error ≤ C·resid/α. The policy is admissible for
+    /// `target` iff that certified error fits.
+    pub fn admits_residual(&self, resid: f64, target: f64) -> bool {
+        self.bound(resid / self.alpha) <= target
+    }
+}
+
+/// Pick the cheapest arithmetic policy whose certified Jacobian error meets
+/// `target`: mixed (f32 inner, f64-refined) solves stop at `mixed_resid`;
+/// fall back to full f64 when only it certifies the target.
+pub fn select_precision(
+    consts: &PrecisionConstants,
+    mixed_resid: f64,
+    target: f64,
+) -> SolvePrecision {
+    if consts.admits_residual(mixed_resid, target) {
+        SolvePrecision::MixedF32
+    } else {
+        SolvePrecision::F64
     }
 }
 
@@ -105,6 +135,17 @@ mod tests {
         let c = PrecisionConstants { alpha: 2.0, beta: 1.0, gamma: 0.5, r: 4.0 };
         assert!((c.bound_slope() - (0.5 + 0.5)).abs() < 1e-12);
         assert!((c.bound(0.1) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precision_gate_orders_policies() {
+        let c = PrecisionConstants { alpha: 2.0, beta: 1.0, gamma: 0.0, r: 1.0 };
+        // C = 0.5, certified jac err = 0.5·resid/2 = resid/4.
+        assert!(c.admits_residual(1e-10, 1e-8));
+        assert!(!c.admits_residual(1e-4, 1e-8));
+        assert!((c.max_iterate_err(1e-6) - 2e-6).abs() < 1e-18);
+        assert_eq!(select_precision(&c, 1e-9, 1e-6), SolvePrecision::MixedF32);
+        assert_eq!(select_precision(&c, 1e-3, 1e-6), SolvePrecision::F64);
     }
 
     #[test]

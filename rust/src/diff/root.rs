@@ -143,8 +143,32 @@ pub fn factorize_root<M: RootMap + ?Sized>(
     x_star: &[f64],
     theta: &[f64],
 ) -> Option<Factorization> {
+    factorize_root_prec(m, x_star, theta, crate::linalg::solve::SolvePrecision::F64)
+}
+
+/// Largest d the direct path will densify: above this, a d×d materialization
+/// (d²·8 bytes) plus an O(d³) factorization stops being an optimization over
+/// the matrix-free iterative solvers, so [`factorize_root`] declines and
+/// callers (the serve cache in particular) stay on the sparse/iterative
+/// path. gene_expr-scale problems (d ≳ 10⁴) sit far above this line.
+pub const FACTORIZE_DENSE_LIMIT: usize = 4096;
+
+/// Precision-aware [`factorize_root`]: `MixedF32` factors A in f32 and
+/// wraps every substitution in f64 iterative refinement (see
+/// `linalg::solve::Factorization`). Returns None when d exceeds
+/// [`FACTORIZE_DENSE_LIMIT`] — never densify a large-d operator — or when
+/// A is numerically singular.
+pub fn factorize_root_prec<M: RootMap + ?Sized>(
+    m: &M,
+    x_star: &[f64],
+    theta: &[f64],
+    precision: crate::linalg::solve::SolvePrecision,
+) -> Option<Factorization> {
+    if m.dim_x() > FACTORIZE_DENSE_LIMIT {
+        return None;
+    }
     let a = AOp { m, x: x_star, theta };
-    Factorization::of_op(&a)
+    Factorization::of_op_prec(&a, precision)
 }
 
 /// Forward-mode implicit JVP through a prefactored A (see
@@ -236,6 +260,7 @@ fn jacobian_cfg<M: RootMap + ?Sized>(m: &M) -> LinearSolveConfig {
             tol: 1e-11,
             max_iter: 6 * d_full,
             gmres_restart: d_full.min(400),
+            ..Default::default()
         }
     }
 }

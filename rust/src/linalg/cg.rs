@@ -213,6 +213,299 @@ pub fn block_cg(
     BlockSolveReport { iterations, max_residual: max_res, converged: all, rhs: k }
 }
 
+/// Mixed-precision CG: f32-state inner solves wrapped in f64 iterative
+/// refinement, finished by a plain-f64 [`cg`] polish from the refined
+/// iterate. The inner Krylov state (x, r, p) lives in f32 — half the memory
+/// traffic of the f64 loop — while every operator application crosses the
+/// f64 boundary (the `LinOp` contract stays f64) and every dot product
+/// accumulates in f64. Refinement: solve A e ≈ r = b − A x loosely in f32,
+/// x ← x + e, re-measure r in f64; each round shrinks the error by roughly
+/// the inner tolerance until f32 conditioning stalls, at which point the f64
+/// polish takes over — so the result is never worse than running [`cg`]
+/// alone with the same budget, and the well-conditioned bulk of the work ran
+/// at single precision.
+pub fn cg_mixed(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+) -> SolveReport {
+    let d = a.dim();
+    assert_eq!(b.len(), d);
+    assert_eq!(x.len(), d);
+    let bnorm = norm2(b).max(1e-30);
+    // f32 CG bottoms out near ε_f32 ≈ 1e-7; aim each inner solve comfortably
+    // above that so rounds converge instead of thrashing.
+    let inner_tol = 1e-5f64.max(tol);
+    let mut used = 0usize;
+    let mut r = vec![0.0; d];
+    let mut ax = vec![0.0; d];
+    let mut prev_res = f64::INFINITY;
+    const ROUNDS: usize = 4;
+    for _ in 0..ROUNDS {
+        if used >= max_iter {
+            break;
+        }
+        a.apply(x, &mut ax);
+        for i in 0..d {
+            r[i] = b[i] - ax[i];
+        }
+        let res = norm2(&r) / bnorm;
+        if res <= tol {
+            return SolveReport { iterations: used, residual: res, converged: true };
+        }
+        if res >= 0.5 * prev_res {
+            // Refinement stalled (κ beyond what f32 can bite into): hand the
+            // remaining budget to the f64 polish.
+            break;
+        }
+        prev_res = res;
+        let (e, its) = cg_f32_inner(a, &r, inner_tol, (max_iter - used).min(d.max(50)));
+        used += its;
+        if its == 0 {
+            break;
+        }
+        for i in 0..d {
+            x[i] += e[i];
+        }
+    }
+    // f64 polish from the refined iterate: a no-op (0 iterations) when
+    // refinement already hit tol, a correctness guarantee when it did not.
+    let rep = cg(a, b, x, tol, max_iter.saturating_sub(used).max(1));
+    SolveReport { iterations: used + rep.iterations, ..rep }
+}
+
+/// Inner f32-state CG on A e = r from e = 0. Returns (e as f64, iterations).
+/// Dot products accumulate in f64; operator applications convert at the
+/// boundary. Breaks on breakdown or two consecutive non-improving steps
+/// (f32 plateau) — the caller's refinement/polish handles the rest.
+fn cg_f32_inner(a: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> (Vec<f64>, usize) {
+    let d = a.dim();
+    let mut x32 = vec![0.0f32; d];
+    let mut r32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let mut p32 = r32.clone();
+    let mut p64 = vec![0.0f64; d];
+    let mut ap64 = vec![0.0f64; d];
+    let mut rs = dot_f32(&r32, &r32);
+    let bnorm = rs.sqrt().max(1e-30);
+    let mut stall = 0usize;
+    let mut its = 0usize;
+    for _ in 0..max_iter {
+        if rs.sqrt() / bnorm <= tol {
+            break;
+        }
+        for i in 0..d {
+            p64[i] = p32[i] as f64;
+        }
+        a.apply(&p64, &mut ap64);
+        let mut pap = 0.0f64;
+        for i in 0..d {
+            pap += p64[i] * ap64[i];
+        }
+        if pap.abs() < 1e-30 {
+            break;
+        }
+        let alpha = rs / pap;
+        let alpha32 = alpha as f32;
+        for i in 0..d {
+            x32[i] += alpha32 * p32[i];
+            r32[i] -= (alpha * ap64[i]) as f32;
+        }
+        its += 1;
+        let rs_new = dot_f32(&r32, &r32);
+        if rs_new >= rs {
+            stall += 1;
+            if stall >= 2 {
+                rs = rs_new;
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+        let beta = (rs_new / rs.max(1e-300)) as f32;
+        rs = rs_new;
+        for i in 0..d {
+            p32[i] = r32[i] + beta * p32[i];
+        }
+    }
+    (x32.iter().map(|&v| v as f64).collect(), its)
+}
+
+/// ⟨a, b⟩ over f32 slices, accumulated in f64.
+fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// Mixed-precision block CG: the multi-RHS counterpart of [`cg_mixed`].
+/// Inner block iterations keep the whole Krylov block state (X, R, P) in
+/// flat f32 buffers and issue ONE f64 `apply_block` per iteration (the same
+/// batching contract as [`block_cg`], so implicit-diff operators still see
+/// batched JVPs); outer f64 refinement re-measures residuals per column, and
+/// a final [`block_cg`] polish guarantees the result is never worse than the
+/// pure-f64 path with the same budget.
+pub fn block_cg_mixed(
+    a: &dyn LinOp,
+    b: &Mat,
+    x: &mut Mat,
+    tol: f64,
+    max_iter: usize,
+) -> BlockSolveReport {
+    let d = a.dim();
+    let k = b.cols;
+    assert_eq!(b.rows, d);
+    assert_eq!(x.rows, d);
+    assert_eq!(x.cols, k);
+    if k == 0 {
+        return BlockSolveReport { iterations: 0, max_residual: 0.0, converged: true, rhs: 0 };
+    }
+    let bnorm: Vec<f64> = {
+        let mut bc = vec![0.0; d];
+        (0..k)
+            .map(|j| {
+                b.col_into(j, &mut bc);
+                norm2(&bc).max(1e-30)
+            })
+            .collect()
+    };
+    let inner_tol = 1e-5f64.max(tol);
+    let mut used = 0usize;
+    let mut r = Mat::zeros(d, k);
+    let mut ax = Mat::zeros(d, k);
+    let mut prev_worst = f64::INFINITY;
+    const ROUNDS: usize = 4;
+    for _ in 0..ROUNDS {
+        if used >= max_iter {
+            break;
+        }
+        a.apply_block(x, &mut ax);
+        for i in 0..d * k {
+            r.data[i] = b.data[i] - ax.data[i];
+        }
+        let rs = col_sq_norms(&r);
+        let mut colbuf = vec![0.0; d];
+        let worst = (0..k)
+            .map(|j| col_residual_norm(rs[j], &r, j, &mut colbuf) / bnorm[j])
+            .fold(0.0f64, f64::max);
+        if worst <= tol {
+            return BlockSolveReport {
+                iterations: used,
+                max_residual: worst,
+                converged: true,
+                rhs: k,
+            };
+        }
+        if worst >= 0.5 * prev_worst {
+            break;
+        }
+        prev_worst = worst;
+        let (e, its) = block_cg_f32_inner(a, &r, inner_tol, (max_iter - used).min(d.max(50)));
+        used += its;
+        if its == 0 {
+            break;
+        }
+        for i in 0..d * k {
+            x.data[i] += e[i];
+        }
+    }
+    let rep = block_cg(a, b, x, tol, max_iter.saturating_sub(used).max(1));
+    BlockSolveReport { iterations: used + rep.iterations, ..rep }
+}
+
+/// Inner f32-state block CG on A E = R from E = 0: flat f32 block buffers,
+/// one batched f64 `apply_block` per iteration, per-column α/β in f64.
+/// Columns freeze on convergence/breakdown (α_j = 0); no live-column gather
+/// — the inner loop is short and loose, so the narrower-block optimization
+/// of [`block_cg`] is not worth the shuffling here.
+fn block_cg_f32_inner(a: &dyn LinOp, b: &Mat, tol: f64, max_iter: usize) -> (Vec<f64>, usize) {
+    let d = b.rows;
+    let k = b.cols;
+    let n = d * k;
+    let mut x32 = vec![0.0f32; n];
+    let mut r32: Vec<f32> = b.data.iter().map(|&v| v as f32).collect();
+    let mut p32 = r32.clone();
+    let mut p64 = Mat::zeros(d, k);
+    let mut ap64 = Mat::zeros(d, k);
+    let mut rs = col_sq_f32(&r32, k);
+    let bnorm: Vec<f64> = rs.iter().map(|&v| v.sqrt().max(1e-30)).collect();
+    let mut active: Vec<bool> = (0..k).map(|j| rs[j].sqrt() / bnorm[j] > tol).collect();
+    let mut alpha = vec![0.0f64; k];
+    let mut its = 0usize;
+    for _ in 0..max_iter {
+        if !active.iter().any(|&v| v) {
+            break;
+        }
+        for i in 0..n {
+            p64.data[i] = p32[i] as f64;
+        }
+        a.apply_block(&p64, &mut ap64);
+        let mut pap = vec![0.0f64; k];
+        for i in 0..d {
+            let off = i * k;
+            for j in 0..k {
+                pap[j] += p64.data[off + j] * ap64.data[off + j];
+            }
+        }
+        for j in 0..k {
+            alpha[j] = 0.0;
+            if active[j] {
+                if pap[j].abs() < 1e-30 {
+                    active[j] = false;
+                } else {
+                    alpha[j] = rs[j] / pap[j];
+                }
+            }
+        }
+        for i in 0..d {
+            let off = i * k;
+            for j in 0..k {
+                let al = alpha[j];
+                if al != 0.0 {
+                    x32[off + j] += (al as f32) * p32[off + j];
+                    r32[off + j] -= (al * ap64.data[off + j]) as f32;
+                }
+            }
+        }
+        its += 1;
+        let rs_new = col_sq_f32(&r32, k);
+        let mut beta = vec![0.0f32; k];
+        for j in 0..k {
+            if active[j] {
+                // Non-improving column = f32 plateau: freeze it.
+                if rs_new[j] >= rs[j] || rs_new[j].sqrt() / bnorm[j] <= tol {
+                    active[j] = false;
+                } else {
+                    beta[j] = (rs_new[j] / rs[j].max(1e-300)) as f32;
+                }
+                rs[j] = rs_new[j];
+            }
+        }
+        for i in 0..d {
+            let off = i * k;
+            for j in 0..k {
+                if active[j] {
+                    p32[off + j] = r32[off + j] + beta[j] * p32[off + j];
+                }
+            }
+        }
+    }
+    (x32.iter().map(|&v| v as f64).collect(), its)
+}
+
+/// Per-column ‖·‖² of a flat row-major d×k f32 block, accumulated in f64.
+fn col_sq_f32(data: &[f32], k: usize) -> Vec<f64> {
+    let mut s = vec![0.0f64; k];
+    for (i, &v) in data.iter().enumerate() {
+        let v = v as f64;
+        s[i % k] += v * v;
+    }
+    s
+}
+
 /// Per-column version of [`residual_norm`]: trust the squared sum while it
 /// is safely representable, otherwise re-measure the column with the
 /// dnrm2-safe [`norm2`].
@@ -366,6 +659,58 @@ mod tests {
         let _ = cg(&op, &rhs, &mut xc, 1e-11, 200);
         for i in 0..n {
             assert!((x.at(i, 1) - xc[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cg_mixed_matches_f64_solution() {
+        let n = 30;
+        let a = spd(n, 41);
+        let mut rng = Rng::new(42);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let op = DenseOp::symmetric(&a);
+        let mut x = vec![0.0; n];
+        let rep = cg_mixed(&op, &b, &mut x, 1e-11, 500);
+        assert!(rep.converged, "{rep:?}");
+        assert!(rep.residual <= 1e-11);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-7, "i={i}: {} vs {}", x[i], x_true[i]);
+        }
+        // Warm start at the solution: refinement measures the residual in
+        // f64 and returns without touching the iterate.
+        let mut x2 = x_true.clone();
+        let rep2 = cg_mixed(&op, &b, &mut x2, 1e-9, 500);
+        assert!(rep2.converged);
+        assert_eq!(rep2.iterations, 0);
+    }
+
+    #[test]
+    fn block_cg_mixed_matches_column_solves() {
+        let n = 24;
+        let k = 5;
+        let a = spd(n, 51);
+        let mut rng = Rng::new(52);
+        let b = Mat::randn(n, k, &mut rng);
+        let op = DenseOp::symmetric(&a);
+        let mut x_block = Mat::zeros(n, k);
+        let rep = block_cg_mixed(&op, &b, &mut x_block, 1e-11, 600);
+        assert!(rep.converged, "{rep:?}");
+        assert_eq!(rep.rhs, k);
+        let mut bc = vec![0.0; n];
+        for j in 0..k {
+            b.col_into(j, &mut bc);
+            let mut xc = vec![0.0; n];
+            let rep_j = cg(&op, &bc, &mut xc, 1e-11, 600);
+            assert!(rep_j.converged);
+            for i in 0..n {
+                assert!(
+                    (x_block.at(i, j) - xc[i]).abs() < 1e-7,
+                    "col {j} row {i}: {} vs {}",
+                    x_block.at(i, j),
+                    xc[i]
+                );
+            }
         }
     }
 

@@ -78,10 +78,100 @@ impl Cholesky {
     }
 }
 
+/// Single-precision Cholesky factor: the inner engine of the mixed-precision
+/// direct path. The factorization and both substitutions run entirely in
+/// f32 (half the memory traffic of [`Cholesky`], and the part an iterative
+/// refinement loop amortizes), while the API stays f64-in/f64-out so the
+/// f64 refinement driver in `linalg::solve` can wrap it transparently.
+#[derive(Clone, Debug)]
+pub struct CholeskyF32 {
+    /// Lower-triangular factor, n×n row-major, f32 storage.
+    l: Vec<f32>,
+    n: usize,
+}
+
+impl CholeskyF32 {
+    /// Factor A = L Lᵀ in f32. Returns None if A (rounded to f32) is not
+    /// numerically positive definite — which the caller treats as "mixed
+    /// precision unavailable, use f64".
+    pub fn factor(a: &Mat) -> Option<CholeskyF32> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.at(i, j) as f32;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if !(s > 0.0) || !s.is_finite() {
+                        return None;
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Some(CholeskyF32 { l, n })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Solve A x ≈ b with f32 substitution (forward L y = b, back Lᵀ x = y).
+    /// The result carries O(ε_f32·κ) error — callers refine in f64.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let mut s = b[i] as f32;
+            for k in 0..i {
+                s -= self.l[i * n + k] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        let mut x = vec![0.0f32; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x.iter().map(|&v| v as f64).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn f32_factor_solves_to_single_precision() {
+        let mut rng = Rng::new(11);
+        let n = 20;
+        let a = Mat::randn(n + 5, n, &mut rng).gram().plus_diag(1.0);
+        let ch = CholeskyF32::factor(&a).unwrap();
+        assert_eq!(ch.dim(), n);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        // f32 accuracy only — the refinement loop upstream tightens this.
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "i={i}: {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn f32_factor_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(CholeskyF32::factor(&a).is_none());
+    }
 
     #[test]
     fn factor_and_solve() {

@@ -152,10 +152,145 @@ impl Lu {
     }
 }
 
+/// Single-precision LU with partial pivoting: the general-matrix engine of
+/// the mixed-precision direct path (see [`super::chol::CholeskyF32`] for the
+/// SPD counterpart). Factors and substitutes in f32; f64-in/f64-out API so
+/// the refinement driver in `linalg::solve` wraps it transparently.
+#[derive(Clone, Debug)]
+pub struct LuF32 {
+    /// Packed LU factors (unit lower + upper), n×n row-major, f32 storage.
+    lu: Vec<f32>,
+    piv: Vec<usize>,
+    n: usize,
+}
+
+impl LuF32 {
+    /// Factor A (rounded to f32). Returns None when a pivot underflows in
+    /// f32 — the caller treats that as "mixed precision unavailable".
+    pub fn factor(a: &Mat) -> Option<LuF32> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut lu: Vec<f32> = a.data.iter().map(|&v| v as f32).collect();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            let mut pmax = lu[k * n + k].abs();
+            let mut prow = k;
+            for i in k + 1..n {
+                let v = lu[i * n + k].abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = i;
+                }
+            }
+            if !(pmax > 1e-30) || !pmax.is_finite() {
+                return None;
+            }
+            if prow != k {
+                for j in 0..n {
+                    lu.swap(k * n + j, prow * n + j);
+                }
+                piv.swap(k, prow);
+            }
+            let pivot = lu[k * n + k];
+            for i in k + 1..n {
+                let m = lu[i * n + k] / pivot;
+                lu[i * n + k] = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        lu[i * n + j] -= m * lu[k * n + j];
+                    }
+                }
+            }
+        }
+        Some(LuF32 { lu, piv, n })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Solve A x ≈ b (f32 substitution; refine in f64 upstream).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y: Vec<f32> = (0..n).map(|i| b[self.piv[i]] as f32).collect();
+        for i in 1..n {
+            let mut s = y[i];
+            for k in 0..i {
+                s -= self.lu[i * n + k] * y[k];
+            }
+            y[i] = s;
+        }
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.lu[i * n + k] * y[k];
+            }
+            y[i] = s / self.lu[i * n + i];
+        }
+        y.iter().map(|&v| v as f64).collect()
+    }
+
+    /// Solve Aᵀ x ≈ b (f32 substitution, mirroring [`Lu::solve_t`]).
+    pub fn solve_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let mut s = b[i] as f32;
+            for k in 0..i {
+                s -= self.lu[k * n + i] * y[k];
+            }
+            y[i] = s / self.lu[i * n + i];
+        }
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.lu[k * n + i] * y[k];
+            }
+            y[i] = s;
+        }
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            x[self.piv[i]] = y[i] as f64;
+        }
+        x
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn f32_lu_solves_to_single_precision() {
+        let mut rng = Rng::new(21);
+        let n = 16;
+        let mut a = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += 4.0;
+        }
+        let lu = LuF32::factor(&a).unwrap();
+        assert_eq!(lu.dim(), n);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let x = lu.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "i={i}");
+        }
+        let bt = a.matvec_t(&x_true);
+        let xt = lu.solve_t(&bt);
+        for i in 0..n {
+            assert!((xt[i] - x_true[i]).abs() < 1e-2, "t i={i}");
+        }
+    }
+
+    #[test]
+    fn f32_lu_rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(LuF32::factor(&a).is_none());
+    }
 
     #[test]
     fn solve_general_system() {

@@ -3,15 +3,23 @@
 //! The gemm is a packed, register-blocked microkernel: B is repacked once
 //! into NR-wide column panels, A row panels are packed into contiguous
 //! MR×KC scratch, and an MR×NR micro-tile of C is accumulated in registers.
-//! Large products are parallelized over row panels of C via
+//! The microkernel is selected at runtime: on x86-64 with AVX2+FMA the
+//! 8×4 / 4×8 vector kernels (`unsafe` intrinsics behind
+//! `is_x86_feature_detected!`) compete with the portable 4×4 scalar kernel
+//! in a one-time autotune pass over a small (kernel × KC) candidate grid;
+//! the winner is cached process-wide ([`gemm_config`]). Large products are
+//! parallelized over row panels of C via
 //! [`crate::util::parallel::parallel_chunks_mut`] (disjoint chunks, no
-//! locking, no unsafe). This is the crate's single biggest hot spot (SVM
-//! objective, logistic regression, Gram matrices, block solves), so it gets
-//! perf attention in EXPERIMENTS.md §Perf.
+//! locking). `t_matmul`/`gram` route through the same packed kernels by
+//! packing Aᵀ panels in place (no transpose materialization). This is the
+//! crate's single biggest hot spot (SVM objective, logistic regression,
+//! Gram matrices, block solves), so it gets perf attention in
+//! EXPERIMENTS.md §Perf and §Kernels.
 
 use super::vecops;
 use crate::util::parallel;
 use crate::util::rng::Rng;
+use std::sync::OnceLock;
 
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
@@ -117,7 +125,8 @@ impl Mat {
     }
 
     /// y = A x into caller buffer. Parallelized over row chunks when the
-    /// matrix is large enough to amortize thread spawn.
+    /// matrix is large enough to amortize thread spawn. Worker rows use the
+    /// serial dot (no nested thread spawn inside a parallel region).
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
@@ -135,7 +144,7 @@ impl Mat {
             let r0 = ci * rows_per;
             for (off, yi) in ychunk.iter_mut().enumerate() {
                 let i = r0 + off;
-                *yi = vecops::dot(&data[i * n..(i + 1) * n], x);
+                *yi = vecops::dot_serial(&data[i * n..(i + 1) * n], x);
             }
         });
     }
@@ -171,7 +180,7 @@ impl Mat {
             for i in 0..rows {
                 let xi = x[i];
                 if xi != 0.0 {
-                    vecops::axpy(xi, &data[i * n + c0..i * n + c0 + w], ychunk);
+                    vecops::axpy_serial(xi, &data[i * n + c0..i * n + c0 + w], ychunk);
                 }
             }
         });
@@ -195,6 +204,19 @@ impl Mat {
         gemm_acc(self, b, c);
     }
 
+    /// C = A · B with a forced kernel configuration (bench/test hook: lets
+    /// the perf harness pit the autotuned SIMD kernel against the scalar
+    /// one on the same shapes). Always takes the packed path.
+    pub fn matmul_cfg(&self, b: &Mat, cfg: GemmConfig) -> Mat {
+        assert_eq!(self.cols, b.rows, "gemm shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        if self.rows == 0 || b.cols == 0 || self.cols == 0 {
+            return c;
+        }
+        gemm_packed(self, b, &mut c, false, cfg);
+        c
+    }
+
     /// C = Aᵀ · B without materializing Aᵀ.
     pub fn t_matmul(&self, b: &Mat) -> Mat {
         let mut c = Mat::zeros(self.cols, b.cols);
@@ -202,45 +224,33 @@ impl Mat {
         c
     }
 
-    /// C = Aᵀ · B into a caller-provided C (overwritten). Parallelized over
-    /// disjoint row panels of C (columns of A) for large products.
+    /// C = Aᵀ · B into a caller-provided C (overwritten). Routed through the
+    /// packed (SIMD) gemm for non-tiny products — the A panels are packed
+    /// straight from the transposed access pattern, so Aᵀ is never
+    /// materialized. Tiny products keep the allocation-free axpy loop.
     pub fn t_matmul_into(&self, b: &Mat, c: &mut Mat) {
         assert_eq!(self.rows, b.rows, "tgemm shape mismatch");
         let (m, n, p) = (self.cols, b.cols, self.rows);
         assert_eq!(c.rows, m, "tgemm output rows mismatch");
         assert_eq!(c.cols, n, "tgemm output cols mismatch");
         c.data.iter_mut().for_each(|v| *v = 0.0);
-        let workers = gemm_workers(m, n, p);
-        if workers <= 1 {
-            for k in 0..p {
-                let arow = self.row(k);
-                let brow = b.row(k);
-                for i in 0..m {
-                    let aki = arow[i];
-                    if aki != 0.0 {
-                        vecops::axpy(aki, brow, c.row_mut(i));
-                    }
-                }
-            }
+        if m == 0 || n == 0 || p == 0 {
             return;
         }
-        let rows_per = ((m + workers * 2 - 1) / (workers * 2)).max(1);
-        let adata = &self.data;
-        let bdata = &b.data;
-        parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
-            let i0 = ci * rows_per;
-            let rows = cchunk.len() / n;
-            for k in 0..p {
-                let arow = &adata[k * m..(k + 1) * m];
-                let brow = &bdata[k * n..(k + 1) * n];
-                for i in 0..rows {
-                    let aki = arow[i0 + i];
-                    if aki != 0.0 {
-                        vecops::axpy(aki, brow, &mut cchunk[i * n..(i + 1) * n]);
-                    }
+        if 2.0 * m as f64 * n as f64 * p as f64 >= GEMM_PACK_FLOPS {
+            gemm_packed(self, b, c, true, gemm_config());
+            return;
+        }
+        for k in 0..p {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for i in 0..m {
+                let aki = arow[i];
+                if aki != 0.0 {
+                    vecops::axpy(aki, brow, c.row_mut(i));
                 }
             }
-        });
+        }
     }
 
     /// C = A · Bᵀ without materializing Bᵀ. Parallelized over row panels.
@@ -265,7 +275,7 @@ impl Mat {
             for i in 0..rows {
                 let arow = &adata[(i0 + i) * p..(i0 + i + 1) * p];
                 for j in 0..n {
-                    cchunk[i * n + j] = vecops::dot(arow, b.row(j));
+                    cchunk[i * n + j] = vecops::dot_serial(arow, b.row(j));
                 }
             }
         });
@@ -305,12 +315,6 @@ impl Mat {
     }
 }
 
-/// Micro-tile rows (register-blocked rows of C held in accumulators).
-const MR: usize = 4;
-/// Micro-tile columns.
-const NR: usize = 4;
-/// k-blocking depth: one packed A panel is MR×KC ≈ 8 KiB, L1-resident.
-const KC: usize = 256;
 /// Parallelize a gemm only when it has enough flops to amortize spawning
 /// scoped threads (~2·100³).
 const GEMM_PAR_FLOPS: f64 = 2e6;
@@ -336,89 +340,373 @@ fn gemv_workers(rows: usize, cols: usize) -> usize {
     }
 }
 
-/// Pack B (p×n) into NR-wide column panels, k-major within a panel:
-/// `bpack[(jb·p + k)·NR + c] = B[k][jb·NR + c]`, zero-padded in the last
+// ---------------------------------------------------------------------------
+// Runtime-selected microkernel + autotuner
+// ---------------------------------------------------------------------------
+
+/// Which register-blocked microkernel the packed gemm runs. The AVX2
+/// variants only exist on x86-64 and are only ever *selected* when
+/// `is_x86_feature_detected!` confirms avx2+fma at runtime, which is what
+/// makes the `unsafe` `#[target_feature]` calls sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable 4×4 scalar kernel (the pre-SIMD kernel; compiler-vectorized).
+    Scalar4x4,
+    /// AVX2+FMA 8×4: eight ymm accumulators, broadcast-A · load-B fmadd.
+    #[cfg(target_arch = "x86_64")]
+    Avx2_8x4,
+    /// AVX2+FMA 4×8: 4 rows × two ymm column halves (wider B reuse).
+    #[cfg(target_arch = "x86_64")]
+    Avx2_4x8,
+}
+
+impl KernelKind {
+    pub fn mr(self) -> usize {
+        match self {
+            KernelKind::Scalar4x4 => 4,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_8x4 => 8,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_4x8 => 4,
+        }
+    }
+
+    pub fn nr(self) -> usize {
+        match self {
+            KernelKind::Scalar4x4 => 4,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_8x4 => 4,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_4x8 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar4x4 => "scalar-4x4",
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_8x4 => "avx2-8x4",
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_4x8 => "avx2-4x8",
+        }
+    }
+
+    /// acc (mr·nr row-major) = apanel · bpanel over kc depth steps. apanel is
+    /// k-major mr-wide, bpanel k-major nr-wide; acc is overwritten.
+    #[inline]
+    fn run(self, apanel: &[f64], bpanel: &[f64], kc: usize, acc: &mut [f64]) {
+        match self {
+            KernelKind::Scalar4x4 => mk_scalar_4x4(apanel, bpanel, kc, acc),
+            // SAFETY: these variants are only constructed after
+            // `is_x86_feature_detected!("avx2")` && `("fma")` returned true
+            // (see `kernel_candidates` / `parse_kernel_name`).
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_8x4 => unsafe { mk_avx2_8x4(apanel, bpanel, kc, acc) },
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2_4x8 => unsafe { mk_avx2_4x8(apanel, bpanel, kc, acc) },
+        }
+    }
+}
+
+/// The (kernel, MR, NR, KC) tuple the packed gemm runs with. MR/NR are
+/// redundant with the kernel but kept explicit so callers (benches, CI logs)
+/// can report the tile without matching on the kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmConfig {
+    pub kernel: KernelKind,
+    pub mr: usize,
+    pub nr: usize,
+    pub kc: usize,
+}
+
+impl GemmConfig {
+    pub fn of(kernel: KernelKind, kc: usize) -> GemmConfig {
+        GemmConfig { kernel, mr: kernel.mr(), nr: kernel.nr(), kc: kc.max(1) }
+    }
+
+    /// The portable scalar config (bench baseline).
+    pub fn scalar() -> GemmConfig {
+        GemmConfig::of(KernelKind::Scalar4x4, 256)
+    }
+}
+
+impl std::fmt::Display for GemmConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} MR={} NR={} KC={}", self.kernel.name(), self.mr, self.nr, self.kc)
+    }
+}
+
+/// The SIMD capability tier the running CPU supports (for CI/bench logs).
+pub fn simd_tier() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return "avx2+fma";
+        }
+    }
+    "scalar"
+}
+
+fn kernel_candidates() -> Vec<KernelKind> {
+    #[allow(unused_mut)]
+    let mut ks = vec![KernelKind::Scalar4x4];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            ks.push(KernelKind::Avx2_8x4);
+            ks.push(KernelKind::Avx2_4x8);
+        }
+    }
+    ks
+}
+
+/// Map `IDIFF_GEMM_KERNEL` to a kernel, refusing SIMD names the CPU cannot
+/// run (so a stale env var cannot cause an unsound dispatch).
+fn parse_kernel_name(name: &str) -> Option<KernelKind> {
+    kernel_candidates().into_iter().find(|k| k.name() == name)
+}
+
+static GEMM_CONFIG: OnceLock<GemmConfig> = OnceLock::new();
+
+/// KC depths the autotuner tries (packed A panel = MR·KC·8 bytes; all three
+/// keep the panel L1/L2-resident).
+pub const AUTOTUNE_KCS: [usize; 3] = [128, 256, 512];
+/// Problem edge for the autotune probe (~2·160³ = 8 Mflop per rep — big
+/// enough to rank kernels, small enough that first use pays < ~100 ms once).
+const AUTOTUNE_N: usize = 160;
+
+/// The process-wide gemm configuration: autotuned on first use over the
+/// (available kernels × [`AUTOTUNE_KCS`]) grid, overridable via the
+/// `IDIFF_GEMM_KERNEL` (= a [`KernelKind::name`]) and `IDIFF_GEMM_KC` env
+/// vars for A/B runs.
+pub fn gemm_config() -> GemmConfig {
+    *GEMM_CONFIG.get_or_init(autotune)
+}
+
+fn autotune() -> GemmConfig {
+    let env_kc = std::env::var("IDIFF_GEMM_KC").ok().and_then(|s| s.parse::<usize>().ok());
+    if let Ok(name) = std::env::var("IDIFF_GEMM_KERNEL") {
+        if let Some(kernel) = parse_kernel_name(&name) {
+            return GemmConfig::of(kernel, env_kc.unwrap_or(256));
+        }
+    }
+    let n = AUTOTUNE_N;
+    // Deterministic fill — the autotuner must not perturb any user RNG.
+    let a = Mat::from_fn(n, n, |i, j| ((i * 31 + j * 7) % 16) as f64 * 0.0625 - 0.5);
+    let b = Mat::from_fn(n, n, |i, j| ((i * 13 + j * 29) % 16) as f64 * 0.0625 - 0.5);
+    let mut c = Mat::zeros(n, n);
+    let mut best: Option<(GemmConfig, f64)> = None;
+    for kernel in kernel_candidates() {
+        for &kc in &AUTOTUNE_KCS {
+            if let Some(forced) = env_kc {
+                if kc != forced {
+                    continue;
+                }
+            }
+            let cfg = GemmConfig::of(kernel, kc);
+            let mut bpack = Vec::new();
+            pack_b(&b, cfg.nr, &mut bpack);
+            // One warmup rep, then best-of-2 (min filters scheduler noise).
+            let mut min_s = f64::INFINITY;
+            for rep in 0..3 {
+                c.data.iter_mut().for_each(|v| *v = 0.0);
+                let t = std::time::Instant::now();
+                gemm_chunk(&a, false, &bpack, n, 0, &mut c.data, cfg);
+                let dt = t.elapsed().as_secs_f64();
+                if rep > 0 {
+                    min_s = min_s.min(dt);
+                }
+            }
+            if best.map_or(true, |(_, t)| min_s < t) {
+                best = Some((cfg, min_s));
+            }
+        }
+    }
+    best.map(|(cfg, _)| cfg).unwrap_or_else(GemmConfig::scalar)
+}
+
+// ---------------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------------
+
+/// Portable 4×4 kernel: the constant-bound loops unroll into 16 independent
+/// accumulators the compiler keeps in registers (and auto-vectorizes where
+/// the target allows).
+fn mk_scalar_4x4(apanel: &[f64], bpanel: &[f64], kc: usize, acc: &mut [f64]) {
+    debug_assert!(apanel.len() >= kc * 4 && bpanel.len() >= kc * 4 && acc.len() >= 16);
+    let mut t = [[0.0f64; 4]; 4];
+    for (ak, bk) in apanel[..kc * 4].chunks_exact(4).zip(bpanel[..kc * 4].chunks_exact(4)) {
+        for r in 0..4 {
+            let a = ak[r];
+            for c in 0..4 {
+                t[r][c] += a * bk[c];
+            }
+        }
+    }
+    for r in 0..4 {
+        acc[r * 4..r * 4 + 4].copy_from_slice(&t[r]);
+    }
+}
+
+/// AVX2+FMA 8×4 kernel: one ymm per C row (8 accumulators), A broadcast,
+/// B loaded once per k step.
+///
+/// # Safety
+/// Caller must have verified avx2+fma via `is_x86_feature_detected!`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk_avx2_8x4(apanel: &[f64], bpanel: &[f64], kc: usize, acc: &mut [f64]) {
+    use std::arch::x86_64::*;
+    debug_assert!(apanel.len() >= kc * 8 && bpanel.len() >= kc * 4 && acc.len() >= 32);
+    let mut c: [__m256d; 8] = [_mm256_setzero_pd(); 8];
+    let mut ap = apanel.as_ptr();
+    let mut bp = bpanel.as_ptr();
+    for _ in 0..kc {
+        let bk = _mm256_loadu_pd(bp);
+        for r in 0..8 {
+            c[r] = _mm256_fmadd_pd(_mm256_set1_pd(*ap.add(r)), bk, c[r]);
+        }
+        ap = ap.add(8);
+        bp = bp.add(4);
+    }
+    for r in 0..8 {
+        _mm256_storeu_pd(acc.as_mut_ptr().add(r * 4), c[r]);
+    }
+}
+
+/// AVX2+FMA 4×8 kernel: 4 C rows × two ymm column halves (8 accumulators,
+/// each B load reused across 4 rows).
+///
+/// # Safety
+/// Caller must have verified avx2+fma via `is_x86_feature_detected!`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk_avx2_4x8(apanel: &[f64], bpanel: &[f64], kc: usize, acc: &mut [f64]) {
+    use std::arch::x86_64::*;
+    debug_assert!(apanel.len() >= kc * 4 && bpanel.len() >= kc * 8 && acc.len() >= 32);
+    let mut c: [[__m256d; 2]; 4] = [[_mm256_setzero_pd(); 2]; 4];
+    let mut ap = apanel.as_ptr();
+    let mut bp = bpanel.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        for r in 0..4 {
+            let a = _mm256_set1_pd(*ap.add(r));
+            c[r][0] = _mm256_fmadd_pd(a, b0, c[r][0]);
+            c[r][1] = _mm256_fmadd_pd(a, b1, c[r][1]);
+        }
+        ap = ap.add(4);
+        bp = bp.add(8);
+    }
+    for r in 0..4 {
+        _mm256_storeu_pd(acc.as_mut_ptr().add(r * 8), c[r][0]);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(r * 8 + 4), c[r][1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed gemm driver
+// ---------------------------------------------------------------------------
+
+/// Pack B (p×n) into `nr`-wide column panels, k-major within a panel:
+/// `bpack[(jb·p + k)·nr + c] = B[k][jb·nr + c]`, zero-padded in the last
 /// panel. One pass over B (O(pn), negligible next to the O(mpn) flops) buys
 /// unit-stride loads in the microkernel for every row panel of C.
-fn pack_b(b: &Mat, bpack: &mut Vec<f64>) {
+fn pack_b(b: &Mat, nr: usize, bpack: &mut Vec<f64>) {
     let (p, n) = (b.rows, b.cols);
-    let nb = (n + NR - 1) / NR;
+    let nb = (n + nr - 1) / nr;
     bpack.clear();
-    bpack.resize(nb * p * NR, 0.0);
+    bpack.resize(nb * p * nr, 0.0);
     for jb in 0..nb {
-        let j0 = jb * NR;
-        let w = NR.min(n - j0);
-        let base = jb * p * NR;
+        let j0 = jb * nr;
+        let w = nr.min(n - j0);
+        let base = jb * p * nr;
         for k in 0..p {
-            let dst = base + k * NR;
+            let dst = base + k * nr;
             bpack[dst..dst + w].copy_from_slice(&b.data[k * n + j0..k * n + j0 + w]);
         }
     }
 }
 
-/// MR×NR register-blocked microkernel: acc += apanel·bpanel over kc steps.
-/// apanel is k-major MR-wide, bpanel is k-major NR-wide; the constant-bound
-/// inner loops unroll into MR·NR independent accumulators.
-#[inline(always)]
-fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
-    for (ak, bk) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
-        for r in 0..MR {
-            let a = ak[r];
-            for c in 0..NR {
-                acc[r][c] += a * bk[c];
-            }
-        }
-    }
-}
-
 /// Accumulate one row panel of C (rows i0..i0+rows, given as the mutable
-/// slice `cchunk`) against all of packed B.
-fn gemm_chunk(a: &Mat, bpack: &[f64], n: usize, i0: usize, cchunk: &mut [f64]) {
-    let p = a.cols;
+/// slice `cchunk`) against all of packed B. When `trans_a` is set, `a` holds
+/// the *transpose* of the logical A (p×m physical for an m×p logical A) and
+/// the pack reads it column-wise — Aᵀ·B without materializing Aᵀ.
+fn gemm_chunk(a: &Mat, trans_a: bool, bpack: &[f64], n: usize, i0: usize, cchunk: &mut [f64], cfg: GemmConfig) {
+    let (mr, nr, kcb) = (cfg.mr, cfg.nr, cfg.kc);
+    let p = if trans_a { a.rows } else { a.cols };
     let rows = cchunk.len() / n;
-    let nb = (n + NR - 1) / NR;
-    let mut apack = vec![0.0; MR * KC];
-    for k0 in (0..p).step_by(KC) {
-        let kc = KC.min(p - k0);
+    let nb = (n + nr - 1) / nr;
+    let mut apack = vec![0.0; mr * kcb];
+    let mut acc = vec![0.0; mr * nr];
+    for k0 in (0..p).step_by(kcb) {
+        let kc = kcb.min(p - k0);
         let mut ib = 0;
         while ib < rows {
-            let mr = MR.min(rows - ib);
-            // Pack A rows i0+ib..+mr over columns k0..k0+kc (k-major,
+            let mrv = mr.min(rows - ib);
+            // Pack A rows i0+ib..+mrv over depth k0..k0+kc (k-major,
             // zero-padding the missing micro-tile rows).
-            for r in 0..MR {
-                if r < mr {
-                    let arow = &a.data[(i0 + ib + r) * p + k0..(i0 + ib + r) * p + k0 + kc];
-                    for (k, &v) in arow.iter().enumerate() {
-                        apack[k * MR + r] = v;
+            for r in 0..mr {
+                if r < mrv {
+                    let i = i0 + ib + r;
+                    if trans_a {
+                        for k in 0..kc {
+                            apack[k * mr + r] = a.data[(k0 + k) * a.cols + i];
+                        }
+                    } else {
+                        let arow = &a.data[i * p + k0..i * p + k0 + kc];
+                        for (k, &v) in arow.iter().enumerate() {
+                            apack[k * mr + r] = v;
+                        }
                     }
                 } else {
                     for k in 0..kc {
-                        apack[k * MR + r] = 0.0;
+                        apack[k * mr + r] = 0.0;
                     }
                 }
             }
             for jb in 0..nb {
-                let j0 = jb * NR;
-                let w = NR.min(n - j0);
-                let bpanel = &bpack[(jb * p + k0) * NR..(jb * p + k0 + kc) * NR];
-                let mut acc = [[0.0f64; NR]; MR];
-                micro_kernel(&apack[..kc * MR], bpanel, &mut acc);
-                for r in 0..mr {
+                let j0 = jb * nr;
+                let w = nr.min(n - j0);
+                let bpanel = &bpack[(jb * p + k0) * nr..(jb * p + k0 + kc) * nr];
+                cfg.kernel.run(&apack[..kc * mr], bpanel, kc, &mut acc);
+                for r in 0..mrv {
                     let crow = &mut cchunk[(ib + r) * n + j0..(ib + r) * n + j0 + w];
-                    for (cv, av) in crow.iter_mut().zip(acc[r].iter()) {
+                    for (cv, av) in crow.iter_mut().zip(acc[r * nr..r * nr + w].iter()) {
                         *cv += *av;
                     }
                 }
             }
-            ib += mr;
+            ib += mrv;
         }
     }
 }
 
-/// C += A · B — packed, register-blocked gemm, parallelized over disjoint
-/// row panels of C when the product is large enough to amortize thread
-/// spawn. Exact same contraction order per element as the naive triple loop
-/// up to floating-point reassociation within a micro-tile.
+/// C += A·B (or Aᵀ·B when `trans_a`) through the packed kernel, parallelized
+/// over MR-aligned row panels of C past the flop threshold.
+fn gemm_packed(a: &Mat, b: &Mat, c: &mut Mat, trans_a: bool, cfg: GemmConfig) {
+    let (m, p) = if trans_a { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let n = b.cols;
+    let mut bpack = Vec::new();
+    pack_b(b, cfg.nr, &mut bpack);
+    let workers = gemm_workers(m, n, p);
+    if workers <= 1 {
+        gemm_chunk(a, trans_a, &bpack, n, 0, &mut c.data, cfg);
+        return;
+    }
+    // MR-aligned row panels, ≥2 per worker for load balance.
+    let target = (m + workers * 2 - 1) / (workers * 2);
+    let rows_per = ((target + cfg.mr - 1) / cfg.mr * cfg.mr).max(cfg.mr);
+    parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
+        gemm_chunk(a, trans_a, &bpack, n, ci * rows_per, cchunk, cfg);
+    });
+}
+
+/// C += A · B — packed, register-blocked, autotuned (SIMD where available)
+/// gemm, parallelized over disjoint row panels of C when the product is
+/// large enough to amortize thread spawn. Exact same contraction order per
+/// element as the naive triple loop up to floating-point reassociation
+/// within a micro-tile.
 pub fn gemm_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     let (m, p, n) = (a.rows, a.cols, b.cols);
     assert_eq!(p, b.rows, "gemm shape mismatch");
@@ -443,19 +731,7 @@ pub fn gemm_acc(a: &Mat, b: &Mat, c: &mut Mat) {
         }
         return;
     }
-    let mut bpack = Vec::new();
-    pack_b(b, &mut bpack);
-    let workers = gemm_workers(m, n, p);
-    if workers <= 1 {
-        gemm_chunk(a, &bpack, n, 0, &mut c.data);
-        return;
-    }
-    // MR-aligned row panels, ≥2 per worker for load balance.
-    let target = (m + workers * 2 - 1) / (workers * 2);
-    let rows_per = ((target + MR - 1) / MR * MR).max(MR);
-    parallel::parallel_chunks_mut(&mut c.data, rows_per * n, workers, |ci, cchunk| {
-        gemm_chunk(a, &bpack, n, ci * rows_per, cchunk);
-    });
+    gemm_packed(a, b, c, false, gemm_config());
 }
 
 #[cfg(test)]
@@ -527,6 +803,50 @@ mod tests {
         }
     }
 
+    /// Every *available* kernel (scalar everywhere; the AVX2 pair on CPUs
+    /// that have it) must agree with the naive loop on tail-heavy shapes,
+    /// across every autotune KC — the SIMD paths are not allowed to diverge
+    /// from the scalar semantics.
+    #[test]
+    fn every_kernel_candidate_matches_naive() {
+        let mut rng = Rng::new(21);
+        let shapes: &[(usize, usize, usize)] =
+            &[(1, 1, 1), (3, 5, 2), (9, 130, 11), (33, 257, 17), (70, 70, 70)];
+        for kernel in kernel_candidates() {
+            for &kc in &AUTOTUNE_KCS {
+                let cfg = GemmConfig::of(kernel, kc);
+                for &(m, p, n) in shapes {
+                    let a = Mat::randn(m, p, &mut rng);
+                    let b = Mat::randn(p, n, &mut rng);
+                    let c = a.matmul_cfg(&b, cfg);
+                    let c0 = naive_matmul(&a, &b);
+                    for i in 0..c.data.len() {
+                        assert!(
+                            (c.data[i] - c0.data[i]).abs() < 1e-9,
+                            "kernel {} kc={} shape ({m},{p},{n}) el {i}: {} vs {}",
+                            kernel.name(),
+                            kc,
+                            c.data[i],
+                            c0.data[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn autotuner_returns_consistent_config() {
+        let cfg = gemm_config();
+        assert_eq!(cfg.mr, cfg.kernel.mr());
+        assert_eq!(cfg.nr, cfg.kernel.nr());
+        assert!(AUTOTUNE_KCS.contains(&cfg.kc) || std::env::var("IDIFF_GEMM_KC").is_ok());
+        // Second call returns the cached winner.
+        assert_eq!(gemm_config(), cfg);
+        assert!(!simd_tier().is_empty());
+        assert!(!format!("{cfg}").is_empty());
+    }
+
     #[test]
     fn matmul_into_overwrites_stale_output() {
         let mut rng = Rng::new(8);
@@ -556,6 +876,25 @@ mod tests {
         let e2 = naive_matmul(&a, &d.transpose());
         for i in 0..e1.data.len() {
             assert!((e1.data[i] - e2.data[i]).abs() < 1e-9);
+        }
+    }
+
+    /// The packed trans-A path (t_matmul past the pack threshold) on
+    /// mid-size, tile-unaligned shapes.
+    #[test]
+    fn packed_t_matmul_matches_naive_on_awkward_shapes() {
+        let mut rng = Rng::new(22);
+        for &(p, m, n) in &[(37usize, 13usize, 9usize), (64, 31, 7), (130, 65, 33)] {
+            let a = Mat::randn(p, m, &mut rng); // logical Aᵀ is m×p
+            let b = Mat::randn(p, n, &mut rng);
+            let c1 = a.t_matmul(&b);
+            let c2 = naive_matmul(&a.transpose(), &b);
+            for i in 0..c1.data.len() {
+                assert!(
+                    (c1.data[i] - c2.data[i]).abs() < 1e-9,
+                    "t_matmul ({p},{m},{n}) el {i}"
+                );
+            }
         }
     }
 

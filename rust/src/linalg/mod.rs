@@ -11,6 +11,12 @@
 //! [`solve::solve_block`] solve A X = B for k right-hand sides with one
 //! (batched) operator application per iteration — the engine's dense
 //! Jacobians and multi-cotangent VJPs ride on it.
+//!
+//! Large-scale surface: [`sparse::CsrMat`]/[`sparse::CscMat`] give the same
+//! `LinOp` contract for d ≫ 10⁴ designs without densifying, and
+//! [`solve::SolvePrecision`] selects f32-inner/f64-refined mixed-precision
+//! solves (iterative refinement on factorizations, f32-state CG with an f64
+//! polish) where the `diff::precision` bounds allow it.
 
 pub mod bicgstab;
 pub mod cg;
@@ -20,8 +26,13 @@ pub mod lu;
 pub mod mat;
 pub mod op;
 pub mod solve;
+pub mod sparse;
 pub mod vecops;
 
-pub use mat::Mat;
+pub use mat::{gemm_config, simd_tier, GemmConfig, Mat};
 pub use op::LinOp;
-pub use solve::{BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind, SolveReport};
+pub use solve::{
+    BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind, SolvePrecision,
+    SolveReport,
+};
+pub use sparse::{CscMat, CsrMat};

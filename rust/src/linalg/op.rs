@@ -41,11 +41,43 @@ pub trait LinOp {
     /// ONE native block product for operators that have one (dense GEMM,
     /// batched implicit-diff Jacobians), the column loop otherwise. Used by
     /// tests, small systems, and the direct-solve factorization path.
+    /// Every call is recorded in [`densify`] so large-d tests can assert the
+    /// sparse path never materializes a dense d×d matrix.
     fn to_dense(&self) -> Mat {
         let d = self.dim();
+        densify::bump(d);
         let mut m = Mat::zeros(d, d);
         self.apply_block(&Mat::eye(d), &mut m);
         m
+    }
+}
+
+/// Thread-local ledger of [`LinOp::to_dense`] materializations — the
+/// "allocation counter" behind the sparse-path acceptance criterion: a
+/// d ≫ 10⁴ hypergradient must complete with `densify::count()` unchanged
+/// (and in particular `max_dim()` far below d), because a single dense d×d
+/// would be d²·8 bytes of memory and an O(d³) factor away from feasible.
+pub mod densify {
+    use std::cell::Cell;
+    thread_local! {
+        static CALLS: Cell<usize> = Cell::new(0);
+        static MAX_DIM: Cell<usize> = Cell::new(0);
+    }
+    pub(super) fn bump(dim: usize) {
+        CALLS.with(|c| c.set(c.get() + 1));
+        MAX_DIM.with(|c| c.set(c.get().max(dim)));
+    }
+    /// `to_dense` calls on this thread since the last [`reset`].
+    pub fn count() -> usize {
+        CALLS.with(|c| c.get())
+    }
+    /// Largest operator dimension densified since the last [`reset`].
+    pub fn max_dim() -> usize {
+        MAX_DIM.with(|c| c.get())
+    }
+    pub fn reset() {
+        CALLS.with(|c| c.set(0));
+        MAX_DIM.with(|c| c.set(0));
     }
 }
 
@@ -290,6 +322,27 @@ mod tests {
                 assert!((yb.at(i, j) - yc[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn densify_counter_records_to_dense_calls() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(6, 6, &mut rng);
+        let op = DenseOp::new(&a);
+        densify::reset();
+        assert_eq!(densify::count(), 0);
+        let _ = op.to_dense();
+        let _ = op.to_dense();
+        assert_eq!(densify::count(), 2);
+        assert_eq!(densify::max_dim(), 6);
+        // apply/apply_block never densify.
+        let x = Mat::randn(6, 2, &mut rng);
+        let mut y = Mat::zeros(6, 2);
+        op.apply_block(&x, &mut y);
+        assert_eq!(densify::count(), 2);
+        densify::reset();
+        assert_eq!(densify::count(), 0);
+        assert_eq!(densify::max_dim(), 0);
     }
 
     #[test]

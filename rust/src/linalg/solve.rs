@@ -8,12 +8,13 @@
 //! the serve subsystem's θ-keyed factorization cache.
 
 use super::bicgstab::bicgstab;
-use super::cg::{block_cg, cg};
-use super::chol::Cholesky;
+use super::cg::{block_cg, block_cg_mixed, cg, cg_mixed};
+use super::chol::{Cholesky, CholeskyF32};
 use super::gmres::gmres;
-use super::lu::Lu;
+use super::lu::{Lu, LuF32};
 use super::mat::Mat;
 use super::op::{AAtOp, LinOp, TransposedOp};
+use super::vecops::norm2;
 
 /// Which iterative method to use for the implicit-diff linear system.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +35,49 @@ pub enum LinearSolverKind {
     Auto,
 }
 
+/// Arithmetic policy for the implicit-diff linear solves (tentpole 3 of the
+/// kernel-layer rebuild): either pure f64 everywhere, or f32 inner work
+/// (factorization storage + substitution, Krylov block state) wrapped in f64
+/// iterative refinement. Mixed precision is an *accuracy-preserving*
+/// optimization: every mixed path re-measures residuals in f64 and falls
+/// back to (or polishes with) the f64 method, so converged results satisfy
+/// the same tolerance — the `diff::precision` Theorem-1 bound check applies
+/// unchanged. Methods without a mixed kernel (GMRES, BiCGSTAB) ignore the
+/// policy and run f64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolvePrecision {
+    /// Pure double precision (the default).
+    F64,
+    /// f32 factorizations / f32-state CG inner solves with f64 iterative
+    /// refinement and an f64 finishing pass.
+    MixedF32,
+}
+
+impl Default for SolvePrecision {
+    fn default() -> Self {
+        SolvePrecision::F64
+    }
+}
+
+impl SolvePrecision {
+    /// Wire name used by the serve protocol ("precision" request field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolvePrecision::F64 => "f64",
+            SolvePrecision::MixedF32 => "mixed",
+        }
+    }
+
+    /// Parse the serve-protocol wire name (accepts a couple of aliases).
+    pub fn parse(s: &str) -> Option<SolvePrecision> {
+        match s {
+            "f64" | "double" => Some(SolvePrecision::F64),
+            "mixed" | "mixed_f32" | "f32" => Some(SolvePrecision::MixedF32),
+            _ => None,
+        }
+    }
+}
+
 /// A dense factorization of a (square) operator: the direct-solve
 /// counterpart of the matrix-free iterative paths. Solves through a
 /// `Factorization` do NOT pass through [`solve`]/[`solve_block`] and are
@@ -45,12 +89,76 @@ pub enum Factorization {
     Chol(Cholesky),
     /// P A = L U (general A).
     Lu(Lu),
+    /// f32 Cholesky factor + the f64 matrix it came from, for iterative
+    /// refinement (substitute in f32, correct residuals in f64).
+    CholMixed(CholeskyF32, Mat),
+    /// f32 LU factor + the f64 matrix, refined the same way.
+    LuMixed(LuF32, Mat),
+}
+
+/// Refinement loop shared by the mixed factorization paths: start from the
+/// f32 substitution, then repeatedly solve the f64 residual through the same
+/// f32 factor. Each round multiplies the error by O(ε_f32·κ); we stop at
+/// f64 roundoff, stagnation, or [`REFINE_MAX`] rounds — for the dense
+/// systems the direct path handles, 2–3 rounds reach ~1e-15 backward error.
+const REFINE_MAX: usize = 8;
+const REFINE_TOL: f64 = 1e-14;
+
+fn refine(
+    residual: impl Fn(&[f64], &mut [f64]),
+    subst: impl Fn(&[f64]) -> Vec<f64>,
+    b: &[f64],
+) -> Vec<f64> {
+    let mut x = subst(b);
+    let bnorm = norm2(b).max(1e-30);
+    let mut ax = vec![0.0; b.len()];
+    let mut r = vec![0.0; b.len()];
+    let mut prev = f64::INFINITY;
+    for _ in 0..REFINE_MAX {
+        residual(&x, &mut ax);
+        for i in 0..b.len() {
+            r[i] = b[i] - ax[i];
+        }
+        let rel = norm2(&r) / bnorm;
+        if rel <= REFINE_TOL || rel >= 0.5 * prev {
+            break;
+        }
+        prev = rel;
+        let e = subst(&r);
+        for i in 0..x.len() {
+            x[i] += e[i];
+        }
+    }
+    x
 }
 
 impl Factorization {
     /// Factor a dense matrix. Tries Cholesky when `symmetric`, falling back
     /// to LU if A is indefinite; None only if A is numerically singular.
     pub fn of_mat(a: &Mat, symmetric: bool) -> Option<Factorization> {
+        Factorization::of_mat_prec(a, symmetric, SolvePrecision::F64)
+    }
+
+    /// Precision-aware factorization. Mixed: factor in f32 (half the
+    /// flops/traffic of the f64 factorization), keep A for f64 refinement;
+    /// falls back to the f64 factorization when f32 cannot represent the
+    /// problem (pivot/diagonal underflow at single precision).
+    pub fn of_mat_prec(
+        a: &Mat,
+        symmetric: bool,
+        precision: SolvePrecision,
+    ) -> Option<Factorization> {
+        if precision == SolvePrecision::MixedF32 {
+            if symmetric {
+                if let Some(ch) = CholeskyF32::factor(a) {
+                    return Some(Factorization::CholMixed(ch, a.clone()));
+                }
+            }
+            if let Some(lu) = LuF32::factor(a) {
+                return Some(Factorization::LuMixed(lu, a.clone()));
+            }
+            // fall through to f64
+        }
         if symmetric {
             if let Some(ch) = Cholesky::factor(a) {
                 return Some(Factorization::Chol(ch));
@@ -65,18 +173,40 @@ impl Factorization {
         Factorization::of_mat(&a.to_dense(), a.is_symmetric())
     }
 
+    /// Precision-aware [`Factorization::of_op`].
+    pub fn of_op_prec(a: &dyn LinOp, precision: SolvePrecision) -> Option<Factorization> {
+        Factorization::of_mat_prec(&a.to_dense(), a.is_symmetric(), precision)
+    }
+
     pub fn dim(&self) -> usize {
         match self {
             Factorization::Chol(ch) => ch.l.rows,
             Factorization::Lu(lu) => lu.dim(),
+            Factorization::CholMixed(ch, _) => ch.dim(),
+            Factorization::LuMixed(lu, _) => lu.dim(),
         }
     }
 
-    /// Solve A x = b by substitution.
+    /// The precision tier this factorization runs at.
+    pub fn precision(&self) -> SolvePrecision {
+        match self {
+            Factorization::Chol(_) | Factorization::Lu(_) => SolvePrecision::F64,
+            Factorization::CholMixed(..) | Factorization::LuMixed(..) => SolvePrecision::MixedF32,
+        }
+    }
+
+    /// Solve A x = b by substitution (mixed variants: f32 substitution +
+    /// f64 iterative refinement).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         match self {
             Factorization::Chol(ch) => ch.solve(b),
             Factorization::Lu(lu) => lu.solve(b),
+            Factorization::CholMixed(ch, a) => {
+                refine(|x, ax| a.matvec_into(x, ax), |r| ch.solve(r), b)
+            }
+            Factorization::LuMixed(lu, a) => {
+                refine(|x, ax| a.matvec_into(x, ax), |r| lu.solve(r), b)
+            }
         }
     }
 
@@ -86,6 +216,12 @@ impl Factorization {
         match self {
             Factorization::Chol(ch) => ch.solve(b),
             Factorization::Lu(lu) => lu.solve_t(b),
+            Factorization::CholMixed(ch, a) => {
+                refine(|x, ax| a.matvec_into(x, ax), |r| ch.solve(r), b)
+            }
+            Factorization::LuMixed(lu, a) => {
+                refine(|x, ax| a.matvec_t_into(x, ax), |r| lu.solve_t(r), b)
+            }
         }
     }
 
@@ -94,6 +230,7 @@ impl Factorization {
         match self {
             Factorization::Chol(ch) => ch.solve_mat(b),
             Factorization::Lu(lu) => lu.solve_mat(b),
+            _ => self.solve_cols(b, false),
         }
     }
 
@@ -102,7 +239,19 @@ impl Factorization {
         match self {
             Factorization::Chol(ch) => ch.solve_mat(b),
             Factorization::Lu(lu) => lu.solve_t_mat(b),
+            _ => self.solve_cols(b, true),
         }
+    }
+
+    /// Column loop for the mixed block paths (each column refines
+    /// independently; the factor is shared).
+    fn solve_cols(&self, b: &Mat, transpose: bool) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col = if transpose { self.solve_t(&b.col(j)) } else { self.solve(&b.col(j)) };
+            out.set_col(j, &col);
+        }
+        out
     }
 }
 
@@ -113,6 +262,9 @@ pub struct LinearSolveConfig {
     pub tol: f64,
     pub max_iter: usize,
     pub gmres_restart: usize,
+    /// Arithmetic policy: [`SolvePrecision::F64`] (default) or f32-inner /
+    /// f64-refined mixed precision on the CG and Direct paths.
+    pub precision: SolvePrecision,
 }
 
 impl Default for LinearSolveConfig {
@@ -122,6 +274,7 @@ impl Default for LinearSolveConfig {
             tol: 1e-10,
             max_iter: 2500,
             gmres_restart: 30,
+            precision: SolvePrecision::F64,
         }
     }
 }
@@ -129,6 +282,10 @@ impl Default for LinearSolveConfig {
 impl LinearSolveConfig {
     pub fn with_kind(kind: LinearSolverKind) -> Self {
         LinearSolveConfig { kind, ..Default::default() }
+    }
+
+    pub fn with_precision(self, precision: SolvePrecision) -> Self {
+        LinearSolveConfig { precision, ..self }
     }
 }
 
@@ -191,7 +348,9 @@ fn resolve(kind: LinearSolverKind, a: &dyn LinOp) -> LinearSolverKind {
 /// Solve A x = b in-place in `x` (initial guess on entry).
 pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -> SolveReport {
     counter::bump();
+    let mixed = cfg.precision == SolvePrecision::MixedF32;
     match resolve(cfg.kind, a) {
+        LinearSolverKind::Cg if mixed => cg_mixed(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::Cg => cg(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::BiCgStab => bicgstab(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::Gmres => gmres(a, b, x, cfg.tol, cfg.max_iter, cfg.gmres_restart),
@@ -199,11 +358,15 @@ pub fn solve(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &LinearSolveConfig) -
             // Solve A x = b via x = Aᵀ u where A Aᵀ u = b.
             let aat = AAtOp::new(a);
             let mut u = vec![0.0; b.len()];
-            let rep = cg(&aat, b, &mut u, cfg.tol, cfg.max_iter);
+            let rep = if mixed {
+                cg_mixed(&aat, b, &mut u, cfg.tol, cfg.max_iter)
+            } else {
+                cg(&aat, b, &mut u, cfg.tol, cfg.max_iter)
+            };
             a.apply_t(&u, x);
             rep
         }
-        LinearSolverKind::Direct => match Factorization::of_op(a) {
+        LinearSolverKind::Direct => match Factorization::of_op_prec(a, cfg.precision) {
             Some(f) => {
                 x.copy_from_slice(&f.solve(b));
                 direct_report(a, b, x, cfg.tol)
@@ -259,16 +422,22 @@ pub fn solve_block(
 ) -> BlockSolveReport {
     counter::bump();
     let kind = resolve(cfg.kind, a);
+    let mixed = cfg.precision == SolvePrecision::MixedF32;
     match kind {
+        LinearSolverKind::Cg if mixed => block_cg_mixed(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::Cg => block_cg(a, b, x, cfg.tol, cfg.max_iter),
         LinearSolverKind::NormalCg => {
             let aat = AAtOp::new(a);
             let mut u = Mat::zeros(b.rows, b.cols);
-            let rep = block_cg(&aat, b, &mut u, cfg.tol, cfg.max_iter);
+            let rep = if mixed {
+                block_cg_mixed(&aat, b, &mut u, cfg.tol, cfg.max_iter)
+            } else {
+                block_cg(&aat, b, &mut u, cfg.tol, cfg.max_iter)
+            };
             a.apply_t_block(&u, x);
             rep
         }
-        LinearSolverKind::Direct => match Factorization::of_op(a) {
+        LinearSolverKind::Direct => match Factorization::of_op_prec(a, cfg.precision) {
             Some(f) => {
                 // Factor once, substitute k times — the whole point of the
                 // direct block path.
@@ -390,7 +559,13 @@ mod tests {
             LinearSolverKind::Direct,
         ] {
             let mut x = vec![0.0; 14];
-            let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: 14 };
+            let cfg = LinearSolveConfig {
+                kind,
+                tol: 1e-11,
+                max_iter: 4000,
+                gmres_restart: 14,
+                ..Default::default()
+            };
             let rep = solve(&DenseOp::symmetric(&a), &b, &mut x, &cfg);
             assert!(rep.converged, "{kind:?} failed: {rep:?}");
             check_solution(&a, &b, &x, 1e-5);
@@ -411,7 +586,13 @@ mod tests {
             LinearSolverKind::NormalCg,
             LinearSolverKind::Direct,
         ] {
-            let cfg = LinearSolveConfig { kind, tol: 1e-11, max_iter: 4000, gmres_restart: n };
+            let cfg = LinearSolveConfig {
+                kind,
+                tol: 1e-11,
+                max_iter: 4000,
+                gmres_restart: n,
+                ..Default::default()
+            };
             let op = DenseOp::symmetric(&a);
             let mut x_block = Mat::zeros(n, k);
             let rep = solve_block(&op, &b, &mut x_block, &cfg);
@@ -534,6 +715,74 @@ mod tests {
         // Singular matrix: factorization refuses…
         let sing = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
         assert!(Factorization::of_mat(&sing, false).is_none());
+    }
+
+    #[test]
+    fn mixed_precision_matches_f64_within_refinement_tolerance() {
+        let mut rng = Rng::new(8);
+        let n = 18;
+        let a = Mat::randn(n + 4, n, &mut rng).gram().plus_diag(0.5);
+        let b = rng.normal_vec(n);
+        let op = DenseOp::symmetric(&a);
+        for kind in [LinearSolverKind::Cg, LinearSolverKind::NormalCg, LinearSolverKind::Direct] {
+            let f64_cfg = LinearSolveConfig {
+                kind,
+                tol: 1e-11,
+                max_iter: 4000,
+                gmres_restart: n,
+                ..Default::default()
+            };
+            let mixed_cfg = f64_cfg.with_precision(SolvePrecision::MixedF32);
+            let mut x64 = vec![0.0; n];
+            let rep64 = solve(&op, &b, &mut x64, &f64_cfg);
+            let mut xm = vec![0.0; n];
+            let repm = solve(&op, &b, &mut xm, &mixed_cfg);
+            assert!(rep64.converged && repm.converged, "{kind:?}: {rep64:?} vs {repm:?}");
+            for i in 0..n {
+                assert!(
+                    (x64[i] - xm[i]).abs() < 1e-6,
+                    "{kind:?} i={i}: {} vs {}",
+                    x64[i],
+                    xm[i]
+                );
+            }
+        }
+        // Mixed factorization: f32 factor + f64 refinement lands at f64-level
+        // backward error, and the variant advertises its tier.
+        let f = Factorization::of_mat_prec(&a, true, SolvePrecision::MixedF32).unwrap();
+        assert!(matches!(f, Factorization::CholMixed(..)));
+        assert_eq!(f.precision(), SolvePrecision::MixedF32);
+        let x = f.solve(&b);
+        check_solution(&a, &b, &x, 1e-7);
+        let xt = f.solve_t(&b);
+        check_solution(&a, &b, &xt, 1e-7);
+        let bm = Mat::randn(n, 3, &mut rng);
+        let xm = f.solve_mat(&bm);
+        let axm = a.matmul(&xm);
+        for i in 0..bm.data.len() {
+            assert!((axm.data[i] - bm.data[i]).abs() < 1e-6);
+        }
+        // General (non-SPD) matrix takes the LuMixed variant.
+        let mut g = Mat::randn(n, n, &mut rng);
+        for i in 0..n {
+            *g.at_mut(i, i) += 5.0;
+        }
+        let fg = Factorization::of_mat_prec(&g, false, SolvePrecision::MixedF32).unwrap();
+        assert!(matches!(fg, Factorization::LuMixed(..)));
+        let xg = fg.solve(&b);
+        let axg = g.matvec(&xg);
+        for i in 0..n {
+            assert!((axg[i] - b[i]).abs() < 1e-6);
+        }
+        let xgt = fg.solve_t(&b);
+        let atxg = g.matvec_t(&xgt);
+        for i in 0..n {
+            assert!((atxg[i] - b[i]).abs() < 1e-6);
+        }
+        // Wire names round-trip for the serve protocol.
+        assert_eq!(SolvePrecision::parse("mixed"), Some(SolvePrecision::MixedF32));
+        assert_eq!(SolvePrecision::parse(SolvePrecision::F64.name()), Some(SolvePrecision::F64));
+        assert_eq!(SolvePrecision::parse("bogus"), None);
     }
 
     #[test]

@@ -1,0 +1,568 @@
+//! Sparse CSR/CSC matrices with parallel SpMM — the large-d regime.
+//!
+//! Logreg/SVM fixed points over `data/gene_expr.rs`-scale designs (d ≫ 10⁴
+//! parameters) must never materialize a dense d×d system: the Hessian is
+//! λI + low-rank, so everything the implicit-diff solves need is
+//! matrix-vector/matrix-block products with the *design* matrix X and its
+//! transpose. [`CsrMat`] (row-compressed; fast `X·v` and row gather) and
+//! [`CscMat`] (column-compressed; fast `Xᵀ·u`) provide those products, with
+//! row-panel parallel SpMM via [`crate::util::parallel::parallel_chunks_mut`]
+//! past a flop threshold. Square instances implement [`LinOp`] so sparse
+//! operators drop into every Krylov solver unchanged.
+
+use super::mat::Mat;
+use super::op::LinOp;
+use super::vecops;
+use crate::util::parallel;
+
+/// Parallelize a sparse product once it has this many flops (2·nnz·k).
+const SPMM_PAR_FLOPS: f64 = 2e6;
+
+fn spmm_workers(nnz: usize, k: usize) -> usize {
+    if 2.0 * nnz as f64 * k as f64 >= SPMM_PAR_FLOPS {
+        parallel::default_workers()
+    } else {
+        1
+    }
+}
+
+/// Compressed sparse row matrix (rows × cols).
+///
+/// `indptr[i]..indptr[i+1]` indexes row i's column ids (`indices`, strictly
+/// ascending within a row) and values (`data`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Build from a dense matrix, dropping exact zeros. Row iteration order
+    /// is ascending column id — the same order a dense row scan with an
+    /// `if x != 0.0` skip visits, so accumulations over a CSR row are
+    /// bitwise-identical to the skip-guarded dense loop.
+    pub fn from_dense(m: &Mat) -> CsrMat {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows: m.rows, cols: m.cols, indptr, indices, data }
+    }
+
+    /// Build from (row, col, value) triplets: duplicates are summed, entries
+    /// sorted by (row, col), exact-zero results kept (caller's values, not
+    /// post-sum pruning, decide the pattern).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> CsrMat {
+        let mut t: Vec<(usize, usize, f64)> = triplets.to_vec();
+        for &(i, j, _) in &t {
+            assert!(i < rows && j < cols, "triplet ({i},{j}) out of {rows}x{cols}");
+        }
+        t.sort_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut data: Vec<f64> = Vec::with_capacity(t.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(i, j, v) in &t {
+            if last == Some((i, j)) {
+                *data.last_mut().unwrap() += v;
+            } else {
+                indices.push(j);
+                data.push(v);
+                indptr[i + 1] += 1; // per-row count, prefix-summed below
+                last = Some((i, j));
+            }
+        }
+        for i in 1..=rows {
+            indptr[i] += indptr[i - 1];
+        }
+        CsrMat { rows, cols, indptr, indices, data }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (column ids, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// Sᵀ as a CSR matrix (O(nnz) counting sort; ascending row order within
+    /// each output row). Callers on hot transpose-product paths should build
+    /// this once and reuse it.
+    pub fn transpose(&self) -> CsrMat {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut next = counts;
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let dst = next[j];
+                indices[dst] = i;
+                data[dst] = v;
+                next[j] += 1;
+            }
+        }
+        CsrMat { rows: self.cols, cols: self.rows, indptr, indices, data }
+    }
+
+    /// The same pattern/values as a [`CscMat`] (identical arrays, column
+    /// compression).
+    pub fn to_csc(&self) -> CscMat {
+        let t = self.transpose();
+        CscMat { rows: self.rows, cols: self.cols, indptr: t.indptr, indices: t.indices, data: t.data }
+    }
+
+    /// Dense copy (tests/small matrices only — deliberately NOT on any
+    /// solver path).
+    pub fn to_dense_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                *m.at_mut(i, j) = v;
+            }
+        }
+        m
+    }
+
+    /// y = S x (allocating).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = S x. Row-gather form; parallel over row panels past the flop
+    /// threshold (disjoint output chunks, no locking).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let workers = spmm_workers(self.nnz(), 1);
+        if workers <= 1 {
+            for i in 0..self.rows {
+                let (cols, vals) = self.row(i);
+                let mut s = 0.0;
+                for (&j, &v) in cols.iter().zip(vals) {
+                    s += v * x[j];
+                }
+                y[i] = s;
+            }
+            return;
+        }
+        let rows_per = ((self.rows + workers * 2 - 1) / (workers * 2)).max(1);
+        parallel::parallel_chunks_mut(y, rows_per, workers, |ci, ychunk| {
+            let r0 = ci * rows_per;
+            for (off, yi) in ychunk.iter_mut().enumerate() {
+                let (cols, vals) = self.row(r0 + off);
+                let mut s = 0.0;
+                for (&j, &v) in cols.iter().zip(vals) {
+                    s += v * x[j];
+                }
+                *yi = s;
+            }
+        });
+    }
+
+    /// y = Sᵀ x (allocating).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// y = Sᵀ x. Scatter form (serial — the output rows collide across input
+    /// rows). Hot transpose paths should hold the [`CsrMat::transpose`] and
+    /// use its gather-form `matvec_into` instead.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let (cols, vals) = self.row(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    y[j] += xi * v;
+                }
+            }
+        }
+    }
+
+    /// C = S · B for dense B (cols × k) into dense C (rows × k) — the SpMM
+    /// under `apply_block`. Parallel over disjoint row panels of C.
+    pub fn spmm_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(b.rows, self.cols, "spmm shape mismatch");
+        assert_eq!(c.rows, self.rows, "spmm output rows mismatch");
+        assert_eq!(c.cols, b.cols, "spmm output cols mismatch");
+        let k = b.cols;
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        if k == 0 {
+            return;
+        }
+        let workers = spmm_workers(self.nnz(), k);
+        let run_rows = |r0: usize, cchunk: &mut [f64]| {
+            let rows = cchunk.len() / k;
+            for off in 0..rows {
+                let (cols, vals) = self.row(r0 + off);
+                let crow = &mut cchunk[off * k..(off + 1) * k];
+                for (&j, &v) in cols.iter().zip(vals) {
+                    vecops::axpy_serial(v, b.row(j), crow);
+                }
+            }
+        };
+        if workers <= 1 {
+            run_rows(0, &mut c.data);
+            return;
+        }
+        let rows_per = ((self.rows + workers * 2 - 1) / (workers * 2)).max(1);
+        parallel::parallel_chunks_mut(&mut c.data, rows_per * k, workers, |ci, cchunk| {
+            run_rows(ci * rows_per, cchunk);
+        });
+    }
+
+    /// C = Sᵀ · B (scatter form, serial). Hot paths should precompute the
+    /// transpose and call its parallel [`CsrMat::spmm_into`].
+    pub fn t_spmm_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(b.rows, self.rows, "t_spmm shape mismatch");
+        assert_eq!(c.rows, self.cols, "t_spmm output rows mismatch");
+        assert_eq!(c.cols, b.cols, "t_spmm output cols mismatch");
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let brow = b.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                vecops::axpy_serial(v, brow, c.row_mut(j));
+            }
+        }
+    }
+}
+
+/// Square CSR matrices drop straight into the Krylov solvers. The
+/// transpose products use the scatter form — wrap a problem-level operator
+/// holding a precomputed transpose when `apply_t` is on the hot path.
+impl LinOp for CsrMat {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "LinOp requires a square CsrMat");
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_t_into(x, y);
+    }
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        self.spmm_into(x, y);
+    }
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        self.t_spmm_into(x, y);
+    }
+}
+
+/// Compressed sparse column matrix (rows × cols): `indptr[j]..indptr[j+1]`
+/// indexes column j's row ids and values. The mirror of [`CsrMat`] — gather
+/// form for `Sᵀ·u` products, scatter form for `S·v`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl CscMat {
+    pub fn from_dense(m: &Mat) -> CscMat {
+        CsrMat::from_dense(m).to_csc()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (row ids, values) of column j.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// The same pattern/values re-compressed by rows.
+    pub fn to_csr(&self) -> CsrMat {
+        // A CscMat's arrays ARE the CSR arrays of its transpose; transpose
+        // that CSR view to recover the row-compressed original.
+        let as_csr_of_t = CsrMat {
+            rows: self.cols,
+            cols: self.rows,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            data: self.data.clone(),
+        };
+        as_csr_of_t.transpose()
+    }
+
+    /// y = S x (scatter over columns; serial).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                let (rows, vals) = self.col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    y[i] += xj * v;
+                }
+            }
+        }
+    }
+
+    /// y = Sᵀ x (gather over columns; parallel over output chunks past the
+    /// flop threshold).
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        let workers = spmm_workers(self.nnz(), 1);
+        if workers <= 1 {
+            for j in 0..self.cols {
+                let (rows, vals) = self.col(j);
+                let mut s = 0.0;
+                for (&i, &v) in rows.iter().zip(vals) {
+                    s += v * x[i];
+                }
+                y[j] = s;
+            }
+            return;
+        }
+        let cols_per = ((self.cols + workers * 2 - 1) / (workers * 2)).max(1);
+        parallel::parallel_chunks_mut(y, cols_per, workers, |ci, ychunk| {
+            let c0 = ci * cols_per;
+            for (off, yj) in ychunk.iter_mut().enumerate() {
+                let (rows, vals) = self.col(c0 + off);
+                let mut s = 0.0;
+                for (&i, &v) in rows.iter().zip(vals) {
+                    s += v * x[i];
+                }
+                *yj = s;
+            }
+        });
+    }
+
+    /// C = Sᵀ · B (gather form — one disjoint output row per column of S;
+    /// parallel row panels).
+    pub fn t_spmm_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(b.rows, self.rows, "csc t_spmm shape mismatch");
+        assert_eq!(c.rows, self.cols, "csc t_spmm output rows mismatch");
+        assert_eq!(c.cols, b.cols, "csc t_spmm output cols mismatch");
+        let k = b.cols;
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        if k == 0 {
+            return;
+        }
+        let workers = spmm_workers(self.nnz(), k);
+        let run_cols = |c0: usize, cchunk: &mut [f64]| {
+            let ncols = cchunk.len() / k;
+            for off in 0..ncols {
+                let (rows, vals) = self.col(c0 + off);
+                let crow = &mut cchunk[off * k..(off + 1) * k];
+                for (&i, &v) in rows.iter().zip(vals) {
+                    vecops::axpy_serial(v, b.row(i), crow);
+                }
+            }
+        };
+        if workers <= 1 {
+            run_cols(0, &mut c.data);
+            return;
+        }
+        let cols_per = ((self.cols + workers * 2 - 1) / (workers * 2)).max(1);
+        parallel::parallel_chunks_mut(&mut c.data, cols_per * k, workers, |ci, cchunk| {
+            run_cols(ci * cols_per, cchunk);
+        });
+    }
+}
+
+impl LinOp for CscMat {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "LinOp requires a square CscMat");
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_t_into(x, y);
+    }
+    fn apply_t_block(&self, x: &Mat, y: &mut Mat) {
+        self.t_spmm_into(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random m×n matrix with ~density fraction of nonzeros.
+    fn sprandn(m: usize, n: usize, density: f64, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(m * n);
+        for _ in 0..m * n {
+            data.push(if rng.uniform() < density { rng.normal() } else { 0.0 });
+        }
+        Mat::from_vec(m, n, data)
+    }
+
+    #[test]
+    fn from_dense_roundtrip_and_nnz() {
+        let d = sprandn(13, 9, 0.3, 1);
+        let s = CsrMat::from_dense(&d);
+        assert_eq!(s.to_dense_mat(), d);
+        assert_eq!(s.nnz(), d.data.iter().filter(|&&v| v != 0.0).count());
+        // Column ids ascend within each row.
+        for i in 0..s.rows {
+            let (cols, _) = s.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        let c = CscMat::from_dense(&d);
+        assert_eq!(c.to_csr().to_dense_mat(), d);
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_sums_duplicates() {
+        let t = vec![(2usize, 1usize, 3.0), (0, 2, 1.0), (2, 1, -1.0), (1, 0, 4.0), (0, 0, 2.0)];
+        let s = CsrMat::from_triplets(3, 3, &t);
+        let d = s.to_dense_mat();
+        assert_eq!(d.at(0, 0), 2.0);
+        assert_eq!(d.at(0, 2), 1.0);
+        assert_eq!(d.at(1, 0), 4.0);
+        assert_eq!(d.at(2, 1), 2.0); // 3 − 1 summed
+        assert_eq!(s.nnz(), 4);
+    }
+
+    #[test]
+    fn triplets_with_empty_rows() {
+        let s = CsrMat::from_triplets(5, 4, &[(0, 1, 1.0), (4, 3, 2.0)]);
+        assert_eq!(s.indptr, vec![0, 1, 1, 1, 1, 2]);
+        assert_eq!(s.to_dense_mat().at(4, 3), 2.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let d = sprandn(40, 23, 0.2, 2);
+        let s = CsrMat::from_dense(&d);
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(23);
+        let u = rng.normal_vec(40);
+        let y_s = s.matvec(&x);
+        let y_d = d.matvec(&x);
+        for i in 0..40 {
+            assert!((y_s[i] - y_d[i]).abs() < 1e-12);
+        }
+        let yt_s = s.matvec_t(&u);
+        let yt_d = d.matvec_t(&u);
+        for j in 0..23 {
+            assert!((yt_s[j] - yt_d[j]).abs() < 1e-12);
+        }
+        // CSC mirrors.
+        let c = s.to_csc();
+        let mut y = vec![0.0; 40];
+        c.matvec_into(&x, &mut y);
+        for i in 0..40 {
+            assert!((y[i] - y_d[i]).abs() < 1e-12);
+        }
+        let mut yt = vec![0.0; 23];
+        c.matvec_t_into(&u, &mut yt);
+        for j in 0..23 {
+            assert!((yt[j] - yt_d[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul_including_parallel() {
+        // Big enough that 2·nnz·k crosses SPMM_PAR_FLOPS → parallel panels.
+        let d = sprandn(700, 300, 0.15, 4);
+        let s = CsrMat::from_dense(&d);
+        assert!(2.0 * s.nnz() as f64 * 40.0 >= super::SPMM_PAR_FLOPS);
+        let mut rng = Rng::new(5);
+        let b = Mat::randn(300, 40, &mut rng);
+        let mut c_s = Mat::zeros(700, 40);
+        s.spmm_into(&b, &mut c_s);
+        let c_d = d.matmul(&b);
+        for i in 0..c_s.data.len() {
+            assert!((c_s.data[i] - c_d.data[i]).abs() < 1e-10);
+        }
+        // Transpose SpMM, both scatter (CSR) and gather (CSC) forms.
+        let u = Mat::randn(700, 11, &mut rng);
+        let mut ct_scatter = Mat::zeros(300, 11);
+        s.t_spmm_into(&u, &mut ct_scatter);
+        let mut ct_gather = Mat::zeros(300, 11);
+        s.to_csc().t_spmm_into(&u, &mut ct_gather);
+        let ct_d = d.t_matmul(&u);
+        for i in 0..ct_d.data.len() {
+            assert!((ct_scatter.data[i] - ct_d.data[i]).abs() < 1e-10);
+            assert!((ct_gather.data[i] - ct_d.data[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_is_involution_and_matches_dense() {
+        let d = sprandn(17, 31, 0.25, 6);
+        let s = CsrMat::from_dense(&d);
+        let st = s.transpose();
+        assert_eq!(st.to_dense_mat(), d.transpose());
+        assert_eq!(st.transpose(), s);
+    }
+
+    #[test]
+    fn square_csr_is_a_linop() {
+        let d = sprandn(30, 30, 0.3, 7);
+        let s = CsrMat::from_dense(&d);
+        assert_eq!(s.dim(), 30);
+        let mut rng = Rng::new(8);
+        let x = rng.normal_vec(30);
+        let mut y = vec![0.0; 30];
+        LinOp::apply(&s, &x, &mut y);
+        let y_d = d.matvec(&x);
+        for i in 0..30 {
+            assert!((y[i] - y_d[i]).abs() < 1e-12);
+        }
+        let xb = Mat::randn(30, 4, &mut rng);
+        let mut yb = Mat::zeros(30, 4);
+        s.apply_block(&xb, &mut yb);
+        let yb_d = d.matmul(&xb);
+        for i in 0..yb.data.len() {
+            assert!((yb.data[i] - yb_d.data[i]).abs() < 1e-12);
+        }
+        let mut ytb = Mat::zeros(30, 4);
+        s.apply_t_block(&xb, &mut ytb);
+        let ytb_d = d.t_matmul(&xb);
+        for i in 0..ytb.data.len() {
+            assert!((ytb.data[i] - ytb_d.data[i]).abs() < 1e-12);
+        }
+    }
+}

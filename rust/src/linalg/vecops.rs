@@ -1,10 +1,53 @@
 //! Vector kernels used on every hot path. Free functions over `&[f64]` keep
 //! the call sites allocation-free; the `_into` variants write to caller
 //! buffers (hoisted out of solver loops during the perf pass).
+//!
+//! `dot`/`axpy`/`norm2` parallelize across worker threads past
+//! [`PAR_LEN`] elements (large-d sparse/logreg vectors); the `_serial`
+//! variants are for callers already inside a parallel region (the gemv/gemm
+//! row-panel workers) where nested thread spawn would thrash.
+
+use crate::util::parallel;
+
+/// Length above which `dot`/`axpy`/`norm2` split across worker threads.
+/// Below it, thread spawn costs more than the arithmetic saves.
+pub const PAR_LEN: usize = 1 << 16;
+
+fn vec_workers(n: usize) -> usize {
+    if n >= PAR_LEN {
+        parallel::default_workers()
+    } else {
+        1
+    }
+}
 
 /// Dot product (unrolled by 4 for ILP; on the perf-critical path).
+/// Splits across threads past [`PAR_LEN`] elements.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let workers = vec_workers(a.len());
+    if workers <= 1 {
+        return dot_serial(a, b);
+    }
+    let n = a.len();
+    // Chunk bounds stay 4-aligned so each partial keeps the serial kernel's
+    // unroll pattern; partials reduce in index order (deterministic result
+    // for a fixed worker count).
+    let chunk = (((n + workers - 1) / workers + 3) / 4 * 4).max(4);
+    let n_chunks = (n + chunk - 1) / chunk;
+    let mut partials = vec![0.0f64; n_chunks];
+    parallel::parallel_chunks_mut(&mut partials, 1, workers, |ci, p| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(n);
+        p[0] = dot_serial(&a[lo..hi], &b[lo..hi]);
+    });
+    partials.iter().sum()
+}
+
+/// Single-threaded dot — call sites already inside a parallel region.
+#[inline]
+pub fn dot_serial(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 4;
@@ -29,7 +72,9 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// inside the normal f64 range. For extreme vectors (entries near 1e±200,
 /// where squaring overflows to inf or underflows to 0 — which would silently
 /// break CG/GMRES relative-residual checks) fall back to a LAPACK
-/// `dnrm2`-style scale-then-sum accumulation.
+/// `dnrm2`-style scale-then-sum accumulation. The fast path inherits the
+/// parallel dot; the dnrm2 fallback stays serial (its running `scale`
+/// rescaling is order-dependent).
 #[inline]
 pub fn norm2(a: &[f64]) -> f64 {
     let s = dot(a, a);
@@ -89,9 +134,27 @@ pub fn norm_inf(a: &[f64]) -> f64 {
     a.iter().fold(0.0, |m, &x| m.max(x.abs()))
 }
 
-/// y += alpha * x
+/// y += alpha * x. Splits across threads past [`PAR_LEN`] elements
+/// (bitwise identical to the serial path — each element is touched once).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let workers = vec_workers(x.len());
+    if workers <= 1 {
+        axpy_serial(alpha, x, y);
+        return;
+    }
+    let n = y.len();
+    let chunk = ((n + workers - 1) / workers).max(1);
+    parallel::parallel_chunks_mut(y, chunk, workers, |ci, ych| {
+        let lo = ci * chunk;
+        axpy_serial(alpha, &x[lo..lo + ych.len()], ych);
+    });
+}
+
+/// Single-threaded axpy — call sites already inside a parallel region.
+#[inline]
+pub fn axpy_serial(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for i in 0..x.len() {
         y[i] += alpha * x[i];
@@ -175,6 +238,33 @@ mod tests {
         assert!((dot(&a, &b) - naive).abs() < 1e-10);
     }
 
+    /// Regression: the threaded dot/axpy/norm2 paths agree with the serial
+    /// kernels on vectors past the parallel threshold (axpy bitwise; dot to
+    /// reassociation-level relative error), and again on threshold-straddling
+    /// lengths.
+    #[test]
+    fn parallel_vec_kernels_match_serial() {
+        for &n in &[PAR_LEN - 1, PAR_LEN, PAR_LEN + 7, 3 * PAR_LEN + 5] {
+            let a: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 97) as f64 * 0.03 - 1.4).collect();
+            let b: Vec<f64> = (0..n).map(|i| ((i * 17 + 5) % 89) as f64 * 0.02 - 0.9).collect();
+            let d_par = dot(&a, &b);
+            let d_ser = dot_serial(&a, &b);
+            let denom = d_ser.abs().max(1.0);
+            assert!(
+                (d_par - d_ser).abs() / denom < 1e-12,
+                "n={n}: parallel dot {d_par} vs serial {d_ser}"
+            );
+            let n_par = norm2(&a);
+            let n_ser = dot_serial(&a, &a).sqrt();
+            assert!((n_par - n_ser).abs() / n_ser.max(1.0) < 1e-12, "n={n} norm2");
+            let mut y_par = b.clone();
+            axpy(1.5, &a, &mut y_par);
+            let mut y_ser = b.clone();
+            axpy_serial(1.5, &a, &mut y_ser);
+            assert_eq!(y_par, y_ser, "n={n}: parallel axpy must be bitwise-identical");
+        }
+    }
+
     #[test]
     fn norms() {
         let v = [3.0, -4.0];
@@ -202,6 +292,25 @@ mod tests {
         // Infinities and NaNs propagate.
         assert_eq!(norm2(&[f64::INFINITY, 1.0]), f64::INFINITY);
         assert!(norm2(&[f64::NAN, 1.0]).is_nan());
+    }
+
+    /// The extreme-magnitude guarantees must hold above the parallel
+    /// threshold too (the dnrm2 fallback triggers off the *parallel* fast
+    /// path's unreliable square).
+    #[test]
+    fn norm2_extreme_magnitudes_above_parallel_threshold() {
+        let n = PAR_LEN + 3;
+        let mut big = vec![0.0f64; n];
+        big[7] = 1e200;
+        big[n - 1] = -1e200;
+        let expected = 1e200 * 2.0f64.sqrt();
+        assert!((norm2(&big) - expected).abs() / expected < 1e-14);
+        let mut nan = vec![1.0f64; n];
+        nan[n / 2] = f64::NAN;
+        assert!(norm2(&nan).is_nan());
+        let mut inf = vec![1.0f64; n];
+        inf[3] = f64::INFINITY;
+        assert_eq!(norm2(&inf), f64::INFINITY);
     }
 
     #[test]

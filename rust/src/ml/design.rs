@@ -1,0 +1,277 @@
+//! Dense-or-sparse design matrices for the ML substrates.
+//!
+//! The logreg/SVM objectives only touch their design matrix X through a
+//! handful of primitives: per-row score gathers (Wᵀx_i), rank-one outer
+//! updates (x_i ⊗ g), and X/Xᵀ mat-vec/mat-mat products. [`Design`] closes
+//! that surface over either a dense [`Mat`] or a [`CsrMat`] (with a
+//! precomputed transpose for gather-form parallel Xᵀ products), so the
+//! d ≫ 10⁴ catalog entries run the *same* oracle code without ever
+//! materializing a dense m×p — let alone d×d — array.
+//!
+//! The CSR row primitives visit stored nonzeros in ascending column order,
+//! which is exactly the order the dense loops visit entries under their
+//! `if x != 0.0` skip guards. Accumulations therefore agree **bitwise**
+//! between the two backings (asserted by the tests below and by the
+//! dense-vs-CSR sweeps in `tests/grad_check.rs`).
+
+use crate::linalg::mat::Mat;
+use crate::linalg::sparse::CsrMat;
+use crate::linalg::vecops;
+
+/// A design matrix, dense or row-compressed sparse.
+#[derive(Clone, Debug)]
+pub enum Design {
+    Dense(Mat),
+    /// CSR plus its transpose (built once at construction) so that
+    /// Xᵀ products use the parallel gather form, not the serial scatter.
+    Csr { csr: CsrMat, csr_t: CsrMat },
+}
+
+impl From<Mat> for Design {
+    fn from(m: Mat) -> Design {
+        Design::Dense(m)
+    }
+}
+
+impl From<CsrMat> for Design {
+    fn from(csr: CsrMat) -> Design {
+        let csr_t = csr.transpose();
+        Design::Csr { csr, csr_t }
+    }
+}
+
+impl Design {
+    pub fn rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows,
+            Design::Csr { csr, .. } => csr.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.cols,
+            Design::Csr { csr, .. } => csr.cols,
+        }
+    }
+
+    /// Stored nonzeros (dense counts every entry).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows * m.cols,
+            Design::Csr { csr, .. } => csr.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Design::Csr { .. })
+    }
+
+    pub fn backing(&self) -> &'static str {
+        match self {
+            Design::Dense(_) => "dense",
+            Design::Csr { .. } => "csr",
+        }
+    }
+
+    /// scores[b] = Σ_a x_ia · w[a·k + b] — the per-row score gather Wᵀx_i
+    /// (W is p×k row-major, flattened). Zero-skip on the dense path; CSR
+    /// visits the identical entry sequence, so both backings accumulate in
+    /// the same order and agree bitwise.
+    #[inline]
+    pub fn score_row(&self, i: usize, w: &[f64], k: usize, scores: &mut [f64]) {
+        scores.iter_mut().for_each(|s| *s = 0.0);
+        match self {
+            Design::Dense(m) => {
+                let xi = m.row(i);
+                for (a, &xa) in xi.iter().enumerate() {
+                    if xa != 0.0 {
+                        let wrow = &w[a * k..(a + 1) * k];
+                        for b in 0..k {
+                            scores[b] += xa * wrow[b];
+                        }
+                    }
+                }
+            }
+            Design::Csr { csr, .. } => {
+                let (cols, vals) = csr.row(i);
+                for (&a, &xa) in cols.iter().zip(vals) {
+                    let wrow = &w[a * k..(a + 1) * k];
+                    for b in 0..k {
+                        scores[b] += xa * wrow[b];
+                    }
+                }
+            }
+        }
+    }
+
+    /// out[a·k + b] += (x_ia · scale) · g[b] — rank-one outer update
+    /// x_i ⊗ g into a p×k row-major accumulator. Same zero-skip/order
+    /// guarantee as [`Design::score_row`].
+    #[inline]
+    pub fn add_outer(&self, i: usize, scale: f64, g: &[f64], k: usize, out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => {
+                let xi = m.row(i);
+                for (a, &v) in xi.iter().enumerate() {
+                    let xa = v * scale;
+                    if xa != 0.0 {
+                        let orow = &mut out[a * k..(a + 1) * k];
+                        for b in 0..k {
+                            orow[b] += xa * g[b];
+                        }
+                    }
+                }
+            }
+            Design::Csr { csr, .. } => {
+                let (cols, vals) = csr.row(i);
+                for (&a, &v) in cols.iter().zip(vals) {
+                    let xa = v * scale;
+                    if xa != 0.0 {
+                        let orow = &mut out[a * k..(a + 1) * k];
+                        for b in 0..k {
+                            orow[b] += xa * g[b];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// ‖x_i‖² over stored entries.
+    pub fn row_sq_norm(&self, i: usize) -> f64 {
+        match self {
+            Design::Dense(m) => {
+                let xi = m.row(i);
+                vecops::dot(xi, xi)
+            }
+            Design::Csr { csr, .. } => {
+                let (_, vals) = csr.row(i);
+                vals.iter().map(|v| v * v).sum()
+            }
+        }
+    }
+
+    /// y = X v.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.matvec(v),
+            Design::Csr { csr, .. } => csr.matvec(v),
+        }
+    }
+
+    /// y = Xᵀ u (gather form on both backings).
+    pub fn matvec_t(&self, u: &[f64]) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.matvec_t(u),
+            Design::Csr { csr_t, .. } => csr_t.matvec(u),
+        }
+    }
+
+    /// C = X · B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        match self {
+            Design::Dense(m) => m.matmul(b),
+            Design::Csr { csr, .. } => {
+                let mut c = Mat::zeros(csr.rows, b.cols);
+                csr.spmm_into(b, &mut c);
+                c
+            }
+        }
+    }
+
+    /// C = Xᵀ · B (gather form on both backings).
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        match self {
+            Design::Dense(m) => m.t_matmul(b),
+            Design::Csr { csr_t, .. } => {
+                let mut c = Mat::zeros(csr_t.rows, b.cols);
+                csr_t.spmm_into(b, &mut c);
+                c
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// ~density fraction nonzero, rest exact zeros — exercises the skip
+    /// guards on the dense path.
+    fn sparse_dense_pair(m: usize, p: usize, density: f64, seed: u64) -> (Design, Design) {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(m * p);
+        for _ in 0..m * p {
+            data.push(if rng.uniform() < density { rng.normal() } else { 0.0 });
+        }
+        let d = Mat::from_vec(m, p, data);
+        let s = CsrMat::from_dense(&d);
+        (Design::from(d), Design::from(s))
+    }
+
+    #[test]
+    fn row_primitives_bitwise_match_across_backings() {
+        let (m, p, k) = (19, 13, 4);
+        let (dense, csr) = sparse_dense_pair(m, p, 0.3, 1);
+        assert!(!dense.is_sparse() && csr.is_sparse());
+        assert_eq!(dense.rows(), m);
+        assert_eq!(csr.cols(), p);
+        let mut rng = Rng::new(2);
+        let w = rng.normal_vec(p * k);
+        let g = rng.normal_vec(k);
+        let mut sd = vec![0.0; k];
+        let mut ss = vec![0.0; k];
+        let mut od = vec![0.0; p * k];
+        let mut os = vec![0.0; p * k];
+        for i in 0..m {
+            dense.score_row(i, &w, k, &mut sd);
+            csr.score_row(i, &w, k, &mut ss);
+            for b in 0..k {
+                assert_eq!(sd[b].to_bits(), ss[b].to_bits(), "score row {i} col {b}");
+            }
+            dense.add_outer(i, 0.37, &g, k, &mut od);
+            csr.add_outer(i, 0.37, &g, k, &mut os);
+            assert_eq!(
+                dense.row_sq_norm(i).to_bits(),
+                csr.row_sq_norm(i).to_bits(),
+                "row_sq {i}"
+            );
+        }
+        for j in 0..p * k {
+            assert_eq!(od[j].to_bits(), os[j].to_bits(), "outer {j}");
+        }
+    }
+
+    #[test]
+    fn products_match_dense_reference() {
+        let (m, p) = (37, 21);
+        let (dense, csr) = sparse_dense_pair(m, p, 0.25, 3);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(p);
+        let u = rng.normal_vec(m);
+        let yd = dense.matvec(&v);
+        let ys = csr.matvec(&v);
+        for i in 0..m {
+            assert!((yd[i] - ys[i]).abs() < 1e-12);
+        }
+        let td = dense.matvec_t(&u);
+        let ts = csr.matvec_t(&u);
+        for j in 0..p {
+            assert!((td[j] - ts[j]).abs() < 1e-12);
+        }
+        let b = Mat::randn(p, 5, &mut rng);
+        let cd = dense.matmul(&b);
+        let cs = csr.matmul(&b);
+        for i in 0..cd.data.len() {
+            assert!((cd.data[i] - cs.data[i]).abs() < 1e-11);
+        }
+        let bt = Mat::randn(m, 6, &mut rng);
+        let ctd = dense.t_matmul(&bt);
+        let cts = csr.t_matmul(&bt);
+        for i in 0..ctd.data.len() {
+            assert!((ctd.data[i] - cts.data[i]).abs() < 1e-11);
+        }
+    }
+}

@@ -10,6 +10,7 @@
 
 use crate::linalg::mat::Mat;
 use crate::mappings::objective::Objective;
+use crate::ml::design::Design;
 use crate::proj::simplex::{softmax, softmax_jacobian_product};
 
 /// Softmax cross-entropy loss and its gradient w.r.t. scores.
@@ -80,21 +81,29 @@ fn row_scores(w: &[f64], xi: &[f64], p: usize, k: usize, scores: &mut [f64]) {
 /// (softmax algebra), so the stationary mapping F = ∇₁f is solve-free and
 /// A = ∇²f = H_CE + λI is SPD for λ > 0 (CG + Cholesky apply). This is the
 /// "logreg" entry of the serve catalog.
+///
+/// The design is a [`Design`] — dense or CSR — and every oracle goes
+/// through its row primitives, whose accumulation order is identical for
+/// both backings (bitwise-equal gradients, see `ml/design.rs`). At
+/// d = p·k ≫ 10⁴ the CSR backing keeps the whole implicit-diff pipeline
+/// matrix-free: A = H_CE + λI is only ever *applied* (rank ≤ m·k + identity),
+/// never materialized.
 pub struct LogRegProblem {
-    pub x: Mat, // m × p design
+    pub x: Design, // m × p design
     pub labels: Vec<usize>,
     pub k: usize,
 }
 
 impl LogRegProblem {
-    pub fn new(x: Mat, labels: Vec<usize>, k: usize) -> LogRegProblem {
-        assert_eq!(x.rows, labels.len());
+    pub fn new(x: impl Into<Design>, labels: Vec<usize>, k: usize) -> LogRegProblem {
+        let x = x.into();
+        assert_eq!(x.rows(), labels.len());
         assert!(labels.iter().all(|&l| l < k));
         LogRegProblem { x, labels, k }
     }
 
     pub fn p(&self) -> usize {
-        self.x.cols
+        self.x.cols()
     }
 
     /// Fit W by backtracking gradient descent (strongly convex for λ > 0).
@@ -117,38 +126,47 @@ impl Objective for LogRegProblem {
         1
     }
     fn value(&self, w: &[f64], theta: &[f64]) -> f64 {
-        mean_ce_loss(w, &self.x, &self.labels, self.k)
-            + 0.5 * theta[0] * crate::linalg::vecops::dot(w, w)
+        let k = self.k;
+        let m = self.x.rows();
+        let mut total = 0.0;
+        let mut scores = vec![0.0; k];
+        for i in 0..m {
+            self.x.score_row(i, w, k, &mut scores);
+            let (l, _) = ce_loss_grad(&scores, self.labels[i]);
+            total += l;
+        }
+        total / m as f64 + 0.5 * theta[0] * crate::linalg::vecops::dot(w, w)
     }
     fn grad_x(&self, w: &[f64], theta: &[f64], out: &mut [f64]) {
-        mean_ce_grad(w, &self.x, &self.labels, self.k, out);
+        let k = self.k;
+        let m = self.x.rows();
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut scores = vec![0.0; k];
+        let inv_m = 1.0 / m as f64;
+        for i in 0..m {
+            self.x.score_row(i, w, k, &mut scores);
+            let (_, g) = ce_loss_grad(&scores, self.labels[i]);
+            self.x.add_outer(i, inv_m, &g, k, out);
+        }
         for i in 0..w.len() {
             out[i] += theta[0] * w[i];
         }
     }
     fn hvp_xx(&self, w: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
-        let (p, k) = (self.p(), self.k);
+        let k = self.k;
+        let m = self.x.rows();
         out.iter_mut().for_each(|o| *o = 0.0);
         let mut s = vec![0.0; k];
         let mut prob = vec![0.0; k];
         let mut ds = vec![0.0; k];
         let mut dp = vec![0.0; k];
-        let inv_m = 1.0 / self.x.rows as f64;
-        for i in 0..self.x.rows {
-            let xi = self.x.row(i);
-            row_scores(w, xi, p, k, &mut s);
+        let inv_m = 1.0 / m as f64;
+        for i in 0..m {
+            self.x.score_row(i, w, k, &mut s);
             softmax(&s, &mut prob);
-            row_scores(v, xi, p, k, &mut ds); // ds = Vᵀ x_i
+            self.x.score_row(i, v, k, &mut ds); // ds = Vᵀ x_i
             softmax_jacobian_product(&prob, &ds, &mut dp);
-            for a in 0..p {
-                let xa = xi[a] * inv_m;
-                if xa != 0.0 {
-                    let orow = &mut out[a * k..(a + 1) * k];
-                    for b in 0..k {
-                        orow[b] += xa * dp[b];
-                    }
-                }
-            }
+            self.x.add_outer(i, inv_m, &dp, k, out);
         }
         for i in 0..v.len() {
             out[i] += theta[0] * v[i];
@@ -428,6 +446,39 @@ mod tests {
             row_scores(&w, &theta[c * p..(c + 1) * p], p, k, &mut s);
             let argmax = (0..k).max_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap()).unwrap();
             assert_eq!(argmax, c);
+        }
+    }
+
+    #[test]
+    fn dense_and_csr_oracles_agree_bitwise() {
+        // Same problem, two design backings: every oracle product must agree
+        // to the last bit (the CSR row iteration replays the dense zero-skip
+        // accumulation order exactly).
+        let (m, p, k) = (18, 7, 3);
+        let mut rng = Rng::new(21);
+        let mut data = Vec::with_capacity(m * p);
+        for _ in 0..m * p {
+            data.push(if rng.uniform() < 0.4 { rng.normal() } else { 0.0 });
+        }
+        let x = Mat::from_vec(m, p, data);
+        let labels: Vec<usize> = (0..m).map(|i| i % k).collect();
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&x);
+        let lr_d = LogRegProblem::new(x, labels.clone(), k);
+        let lr_s = LogRegProblem::new(csr, labels, k);
+        assert!(lr_s.x.is_sparse());
+        let w = rng.normal_vec(p * k);
+        let v = rng.normal_vec(p * k);
+        let theta = [0.2];
+        assert_eq!(lr_d.value(&w, &theta).to_bits(), lr_s.value(&w, &theta).to_bits());
+        let gd = lr_d.grad_x_vec(&w, &theta);
+        let gs = lr_s.grad_x_vec(&w, &theta);
+        let mut hd = vec![0.0; p * k];
+        let mut hs = vec![0.0; p * k];
+        lr_d.hvp_xx(&w, &theta, &v, &mut hd);
+        lr_s.hvp_xx(&w, &theta, &v, &mut hs);
+        for i in 0..p * k {
+            assert_eq!(gd[i].to_bits(), gs[i].to_bits(), "grad {i}");
+            assert_eq!(hd[i].to_bits(), hs[i].to_bits(), "hvp {i}");
         }
     }
 

@@ -5,7 +5,9 @@
 //! - [`svm`]: multiclass SVM dual, Crammer–Singer (Fig. 4, §4.1)
 //! - [`dict`]: (task-driven) dictionary learning (Table 2, §4.3)
 //! - [`metrics`]: AUC and friends
+//! - [`design`]: dense-or-CSR design matrices backing logreg/SVM at large d
 
+pub mod design;
 pub mod dict;
 pub mod logreg;
 pub mod metrics;

@@ -11,10 +11,13 @@
 
 use crate::linalg::mat::Mat;
 use crate::mappings::objective::Objective;
+use crate::ml::design::Design;
 use crate::proj::simplex;
 
 pub struct MulticlassSvm {
-    pub x_tr: Mat, // m × p
+    /// m × p training design — dense or CSR ([`Design`]); every oracle is a
+    /// product with X or Xᵀ, so sparse designs run matrix-free at large p.
+    pub x_tr: Design,
     pub y_tr: Mat, // m × k one-hot
     pub k: usize,
     /// Cached spectral norm of XᵀX (power iteration, lazy).
@@ -22,8 +25,9 @@ pub struct MulticlassSvm {
 }
 
 impl MulticlassSvm {
-    pub fn new(x_tr: Mat, y_tr: Mat) -> MulticlassSvm {
-        assert_eq!(x_tr.rows, y_tr.rows);
+    pub fn new(x_tr: impl Into<Design>, y_tr: Mat) -> MulticlassSvm {
+        let x_tr = x_tr.into();
+        assert_eq!(x_tr.rows(), y_tr.rows);
         let k = y_tr.cols;
         MulticlassSvm { x_tr, y_tr, k, sigma2: std::cell::Cell::new(0.0) }
     }
@@ -57,10 +61,10 @@ impl MulticlassSvm {
     }
 
     pub fn m(&self) -> usize {
-        self.x_tr.rows
+        self.x_tr.rows()
     }
     pub fn p(&self) -> usize {
-        self.x_tr.cols
+        self.x_tr.cols()
     }
 
     /// Dual-primal map W(x, θ) = Xᵀ(Y − x)/θ ∈ R^{p×k}.
@@ -87,22 +91,19 @@ impl MulticlassSvm {
         let (m, k) = (self.m(), self.k);
         let mut x = self.init();
         let mut w = self.primal_w(&x, theta);
-        let row_sq: Vec<f64> = (0..m)
-            .map(|i| crate::linalg::vecops::dot(self.x_tr.row(i), self.x_tr.row(i)))
-            .collect();
+        let row_sq: Vec<f64> = (0..m).map(|i| self.x_tr.row_sq_norm(i)).collect();
+        let mut scores = vec![0.0; k];
         let mut grad_row = vec![0.0; k];
         let mut target = vec![0.0; k];
         let mut new_row = vec![0.0; k];
+        let mut delta = vec![0.0; k];
         for _ in 0..sweeps {
             for i in 0..m {
-                let xi = self.x_tr.row(i);
-                // grad_i = −X_i W + Y_i
+                // grad_i = −X_i W + Y_i (W is p×k row-major, so its flat
+                // data indexes as w[a·k + b] — exactly the score gather)
+                self.x_tr.score_row(i, &w.data, k, &mut scores);
                 for b in 0..k {
-                    let mut s = 0.0;
-                    for a in 0..self.p() {
-                        s += xi[a] * w.at(a, b);
-                    }
-                    grad_row[b] = -s + self.y_tr.at(i, b);
+                    grad_row[b] = -scores[b] + self.y_tr.at(i, b);
                 }
                 let lip = row_sq[i] / theta;
                 if lip <= 0.0 {
@@ -112,16 +113,12 @@ impl MulticlassSvm {
                     target[b] = x[i * k + b] - grad_row[b] / lip;
                 }
                 simplex::project_simplex(&target, &mut new_row);
-                // W += X_iᵀ (x_old − x_new)/θ
+                // W += x_i ⊗ (x_old − x_new)/θ
                 for b in 0..k {
-                    let delta = (x[i * k + b] - new_row[b]) / theta;
-                    if delta != 0.0 {
-                        for a in 0..self.p() {
-                            *w.at_mut(a, b) += xi[a] * delta;
-                        }
-                    }
+                    delta[b] = (x[i * k + b] - new_row[b]) / theta;
                     x[i * k + b] = new_row[b];
                 }
+                self.x_tr.add_outer(i, 1.0, &delta, k, &mut w.data);
             }
         }
         x
@@ -334,6 +331,54 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-9);
             assert!(row.iter().all(|&v| v >= -1e-12));
         }
+    }
+
+    #[test]
+    fn dense_and_csr_designs_agree() {
+        // Same SVM, dense vs CSR design. The sparse oracles use SpMM rather
+        // than packed GEMM, so agreement is to solver precision, not bitwise
+        // (unlike logreg, whose row primitives replay the dense order).
+        let (m, p, k) = (20, 12, 3);
+        let mut rng = Rng::new(9);
+        let mut data = Vec::with_capacity(m * p);
+        for _ in 0..m * p {
+            data.push(if rng.uniform() < 0.35 { rng.normal() } else { 0.0 });
+        }
+        let x = Mat::from_vec(m, p, data);
+        let y = {
+            let mut y = Mat::zeros(m, k);
+            for i in 0..m {
+                *y.at_mut(i, i % k) = 1.0;
+            }
+            y
+        };
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&x);
+        let svm_d = MulticlassSvm::new(x, y.clone());
+        let svm_s = MulticlassSvm::new(csr, y);
+        assert!(svm_s.x_tr.is_sparse());
+        let d = svm_d.dim_x();
+        let xdual = rng.uniform_vec(d);
+        let theta = [1.1];
+        let gd = svm_d.grad_x_vec(&xdual, &theta);
+        let gs = svm_s.grad_x_vec(&xdual, &theta);
+        let v = rng.normal_vec(d);
+        let mut hd = vec![0.0; d];
+        let mut hs = vec![0.0; d];
+        svm_d.hvp_xx(&xdual, &theta, &v, &mut hd);
+        svm_s.hvp_xx(&xdual, &theta, &v, &mut hs);
+        let mut cd = vec![0.0; d];
+        let mut cs = vec![0.0; d];
+        svm_d.jvp_x_theta(&xdual, &theta, &[1.0], &mut cd);
+        svm_s.jvp_x_theta(&xdual, &theta, &[1.0], &mut cs);
+        for i in 0..d {
+            assert!((gd[i] - gs[i]).abs() < 1e-10, "grad {i}: {} vs {}", gd[i], gs[i]);
+            assert!((hd[i] - hs[i]).abs() < 1e-10, "hvp {i}: {} vs {}", hd[i], hs[i]);
+            assert!((cd[i] - cs[i]).abs() < 1e-10, "cross {i}: {} vs {}", cd[i], cs[i]);
+        }
+        // BCD on both backings reaches the same fixed point.
+        let xb_d = svm_d.solve_bcd(0.9, 200);
+        let xb_s = svm_s.solve_bcd(0.9, 200);
+        assert!(crate::linalg::vecops::rel_err(&xb_d, &xb_s) < 1e-8);
     }
 
     #[test]

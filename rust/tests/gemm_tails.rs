@@ -1,0 +1,101 @@
+//! Packed-GEMM tail correctness: every kernel/blocking configuration must
+//! agree with a naive triple loop on shapes that exercise the partial-tile
+//! edges — m, k, n not divisible by MR/NR/KC, the degenerate 1×1, 1×n and
+//! m×1 products, and n < NR (a single ragged column panel). The SIMD
+//! microkernels write through a tail buffer on ragged tiles, so these are
+//! exactly the shapes where a masking bug would hide.
+
+#[cfg(target_arch = "x86_64")]
+use idiff::linalg::mat::KernelKind;
+use idiff::linalg::{gemm_config, GemmConfig, Mat};
+use idiff::util::rng::Rng;
+use idiff::util::testkit::{check, Gen};
+
+/// Reference i-k-j triple loop — no packing, no blocking, no SIMD.
+fn naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for l in 0..a.cols {
+            let ail = a.at(i, l);
+            for j in 0..b.cols {
+                *c.at_mut(i, j) += ail * b.at(l, j);
+            }
+        }
+    }
+    c
+}
+
+/// Per-element agreement with a depth-scaled tolerance (different
+/// summation orders accumulate different roundoff).
+fn agrees(c: &Mat, r: &Mat, depth: usize) -> bool {
+    let tol = 1e-13 * (depth as f64).max(1.0);
+    c.data.iter().zip(&r.data).all(|(x, y)| {
+        let s = x.abs().max(y.abs()).max(1.0);
+        (x - y).abs() <= tol * s
+    })
+}
+
+/// The scalar baseline, the autotuned pick, and (where the CPU allows)
+/// both AVX2 kernels at deliberately awkward KC choices.
+fn configs_under_test() -> Vec<GemmConfig> {
+    let mut cfgs = vec![GemmConfig::scalar(), gemm_config()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            cfgs.push(GemmConfig::of(KernelKind::Avx2_8x4, 64));
+            cfgs.push(GemmConfig::of(KernelKind::Avx2_4x8, 40));
+        }
+    }
+    cfgs
+}
+
+#[test]
+fn tail_shapes_match_naive_for_every_kernel() {
+    let mut rng = Rng::new(91);
+    for cfg in configs_under_test() {
+        let shapes = [
+            (1, 1, 1),
+            (1, 1, 5),
+            (1, 9, 1),
+            (1, 6, 11),
+            (7, 1, 3),
+            (3, 4, 1),
+            (2, 3, 2),
+            // ragged panels pinned to THIS config's tile sizes
+            (cfg.nr + 1, 5, cfg.nr - 1),
+            (cfg.mr - 1, 7, cfg.nr + 1),
+            (2 * cfg.mr + 1, cfg.kc + 3, 3 * cfg.nr + 2),
+            (cfg.mr, cfg.kc, cfg.nr),
+            (13, 17, 19),
+        ];
+        for (m, k, n) in shapes {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = a.matmul_cfg(&b, cfg);
+            let r = naive(&a, &b);
+            assert!(agrees(&c, &r, k), "{cfg}: {m}x{k}x{n} disagrees with naive");
+        }
+    }
+}
+
+#[test]
+fn random_shapes_match_naive_across_configs() {
+    let gen: Gen<(usize, usize, usize, u64)> = Gen::new(|rng: &mut Rng| {
+        (
+            1 + (rng.uniform() * 33.0) as usize,
+            1 + (rng.uniform() * 40.0) as usize,
+            1 + (rng.uniform() * 33.0) as usize,
+            (rng.uniform() * 1e9) as u64,
+        )
+    });
+    check("gemm-tails-random", 92, 60, &gen, |&(m, k, n, seed)| {
+        let mut rng = Rng::new(seed + 1);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let r = naive(&a, &b);
+        // the default dispatch path AND every explicit config
+        agrees(&a.matmul(&b), &r, k)
+            && configs_under_test().iter().all(|&cfg| agrees(&a.matmul_cfg(&b, cfg), &r, k))
+    });
+}

@@ -18,10 +18,15 @@
 //! differences disagree is skipped rather than compared against a
 //! meaningless central difference.
 
-use idiff::diff::root::{implicit_jvp, jacobian_via_root, jacobian_via_root_columns};
+use idiff::diff::precision::{check_bound, ridge_constants, select_precision, ErrorPair};
+use idiff::diff::root::{
+    implicit_jvp, implicit_vjp, jacobian_via_root, jacobian_via_root_columns,
+    FACTORIZE_DENSE_LIMIT,
+};
 use idiff::diff::spec::{FixedPointResidual, RootMap};
-use idiff::linalg::solve::LinearSolveConfig;
-use idiff::linalg::{vecops, Mat};
+use idiff::linalg::op::densify;
+use idiff::linalg::solve::{LinearSolveConfig, SolvePrecision};
+use idiff::linalg::{vecops, CsrMat, Mat};
 use idiff::mappings::objective::QuadObjective;
 use idiff::mappings::prox_grad::{ProjGradFixedPoint, ProxGradFixedPoint};
 use idiff::mappings::stationary::{GradientDescentFixedPoint, StationaryMapping};
@@ -395,6 +400,168 @@ fn unroll_jvp_converges_to_implicit_jvp() {
     let err_long = vecops::norm2(&vecops::sub(&dx_unroll, &dx_impl));
     let err_short = vecops::norm2(&vecops::sub(&dx_short, &dx_impl));
     assert!(err_short > 10.0 * err_long.max(1e-12), "short {err_short} vs long {err_long}");
+}
+
+// --------------------- 4. sparse designs & arithmetic-policy checks --
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str, trial: usize) {
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert!(
+            a[i].to_bits() == b[i].to_bits(),
+            "{what} trial {trial} elt {i}: dense {} vs csr {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// A CSR design replays the dense zero-skip accumulation order exactly, so
+/// every logreg derivative oracle must agree with the dense backing TO THE
+/// BIT — swapping in the sparse path can never move a gradient.
+#[test]
+fn logreg_oracles_dense_and_csr_agree_bitwise() {
+    let mut rng = Rng::new(31);
+    let ds = idiff::data::classification::make_classification(14, 5, 3, 0.3, 2.0, &mut rng);
+    let csr = CsrMat::from_dense(&ds.x);
+    let md = StationaryMapping::new(LogRegProblem::new(ds.x.clone(), ds.labels.clone(), 3));
+    let ms = StationaryMapping::new(LogRegProblem::new(csr, ds.labels, 3));
+    let (d, n) = (md.dim_x(), md.dim_theta());
+    for trial in 0..5 {
+        let x = rng.normal_vec(d);
+        let theta = vec![rng.uniform_in(0.2, 1.5)];
+        let v = rng.normal_vec(d);
+        let vt = rng.normal_vec(n);
+        assert_bits(&md.eval_vec(&x, &theta), &ms.eval_vec(&x, &theta), "eval", trial);
+        let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+        md.jvp_x(&x, &theta, &v, &mut a);
+        ms.jvp_x(&x, &theta, &v, &mut b);
+        assert_bits(&a, &b, "jvp_x", trial);
+        md.vjp_x(&x, &theta, &v, &mut a);
+        ms.vjp_x(&x, &theta, &v, &mut b);
+        assert_bits(&a, &b, "vjp_x", trial);
+        md.jvp_theta(&x, &theta, &vt, &mut a);
+        ms.jvp_theta(&x, &theta, &vt, &mut b);
+        assert_bits(&a, &b, "jvp_theta", trial);
+        let (mut at, mut bt) = (vec![0.0; n], vec![0.0; n]);
+        md.vjp_theta(&x, &theta, &v, &mut at);
+        ms.vjp_theta(&x, &theta, &v, &mut bt);
+        assert_bits(&at, &bt, "vjp_theta", trial);
+    }
+}
+
+/// SVM products route through GEMM (dense) vs SpMM (CSR) — different
+/// summation orders — so the oracles agree tightly but not bitwise.
+#[test]
+fn svm_oracles_dense_and_csr_agree() {
+    let mut rng = Rng::new(32);
+    let ds = idiff::data::classification::make_classification(12, 6, 3, 0.3, 2.0, &mut rng);
+    let y = ds.one_hot();
+    let md = StationaryMapping::new(MulticlassSvm::new(ds.x.clone(), y.clone()));
+    let ms = StationaryMapping::new(MulticlassSvm::new(CsrMat::from_dense(&ds.x), y));
+    let d = md.dim_x();
+    for trial in 0..5 {
+        let x = rng.normal_vec(d);
+        let theta = vec![rng.uniform_in(0.6, 1.8)];
+        let v = rng.normal_vec(d);
+        assert!(
+            close(&md.eval_vec(&x, &theta), &ms.eval_vec(&x, &theta), 1e-10),
+            "eval trial {trial}"
+        );
+        let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+        md.jvp_x(&x, &theta, &v, &mut a);
+        ms.jvp_x(&x, &theta, &v, &mut b);
+        assert!(close(&a, &b, 1e-10), "jvp_x trial {trial}");
+        md.vjp_x(&x, &theta, &v, &mut a);
+        ms.vjp_x(&x, &theta, &v, &mut b);
+        assert!(close(&a, &b, 1e-10), "vjp_x trial {trial}");
+        let (mut at, mut bt) = (vec![0.0; 1], vec![0.0; 1]);
+        md.vjp_theta(&x, &theta, &v, &mut at);
+        ms.vjp_theta(&x, &theta, &v, &mut bt);
+        assert!(close(&at, &bt, 1e-10), "vjp_theta trial {trial}");
+    }
+}
+
+/// Hypergradient of a d = 12000 CSR logreg: the whole implicit-VJP path —
+/// CG on the Hessian operator, cross-products, ridge term — must stay
+/// matrix-free. The densify counter catches ANY dense d×d materialisation.
+#[test]
+fn sparse_logreg_hypergrad_large_d_never_densifies() {
+    let mut rng = Rng::new(33);
+    let (m, p, k, nnz_row) = (30usize, 4000usize, 3usize, 25usize);
+    let scale = 1.0 / (nnz_row as f64).sqrt();
+    let mut trips = Vec::with_capacity(m * nnz_row);
+    let mut labels = Vec::with_capacity(m);
+    for i in 0..m {
+        labels.push(i % k);
+        for _ in 0..nnz_row {
+            let j = (rng.uniform() * p as f64) as usize % p;
+            trips.push((i, j, scale * rng.normal()));
+        }
+    }
+    let csr = CsrMat::from_triplets(m, p, &trips);
+    let prob = StationaryMapping::new(LogRegProblem::new(csr, labels, k));
+    let d = p * k;
+    assert_eq!(prob.dim_x(), d);
+    assert!(d > FACTORIZE_DENSE_LIMIT, "test must exercise the iterative-only tier");
+    let x = rng.normal_vec(d);
+    let theta = vec![0.5];
+    let u = rng.normal_vec(d);
+    densify::reset();
+    let (hg, rep) = implicit_vjp(&prob, &x, &theta, &u, &LinearSolveConfig::default());
+    assert!(rep.converged, "CG on the sparse Hessian operator must converge");
+    assert_eq!(hg.len(), 1);
+    assert!(hg[0].is_finite());
+    assert_eq!(densify::count(), 0, "d = {d} hypergrad must never build a dense d×d");
+}
+
+/// Mixed-precision implicit JVPs on the Fig. 3 ridge problem: the
+/// f32-inner/f64-refined answer lands within 10× of the pure-f64 one, and
+/// JVPs at approximate iterates obey Theorem 1's certified slope for BOTH
+/// arithmetic policies (`diff::precision::check_bound`).
+#[test]
+fn mixed_precision_jvp_meets_theorem1_bound() {
+    let (phi, y) = idiff::data::regression::diabetes_like(40, 6, 7);
+    let rp = RidgeProblem::new(phi, y);
+    let mut rng = Rng::new(34);
+    let theta: Vec<f64> = (0..6).map(|_| rng.uniform_in(0.6, 1.4)).collect();
+    let x_star = rp.solve_closed_form_vec(&theta);
+    let root = RidgeRoot(&rp);
+    let v = rng.normal_vec(6);
+    let truth = rp.jacobian_closed_form(&theta).matvec(&v);
+    let cfg64 = LinearSolveConfig::default();
+    let cfgmx = cfg64.with_precision(SolvePrecision::MixedF32);
+    let (dx64, r64) = implicit_jvp(&root, &x_star, &theta, &v, &cfg64);
+    let (dxmx, rmx) = implicit_jvp(&root, &x_star, &theta, &v, &cfgmx);
+    assert!(r64.converged && rmx.converged);
+    let scale = vecops::norm2(&truth).max(1.0);
+    let err64 = vecops::norm2(&vecops::sub(&dx64, &truth));
+    let errmx = vecops::norm2(&vecops::sub(&dxmx, &truth));
+    assert!(
+        errmx <= 10.0 * err64.max(1e-9 * scale),
+        "f64-refined mixed error {errmx} must stay within 10× of pure-f64 {err64}"
+    );
+
+    let consts = ridge_constants(&rp.x, &theta, &x_star);
+    let mut dir = rng.normal_vec(6);
+    let nd = vecops::norm2(&dir);
+    for di in dir.iter_mut() {
+        *di /= nd;
+    }
+    let vnorm = vecops::norm2(&v);
+    let mut pairs = Vec::new();
+    for &eps in &[1e-4, 1e-3, 1e-2] {
+        let x_hat: Vec<f64> = x_star.iter().zip(&dir).map(|(a, b)| a + eps * b).collect();
+        for cfg in [&cfg64, &cfgmx] {
+            let (dx_hat, rep) = implicit_jvp(&root, &x_hat, &theta, &v, cfg);
+            assert!(rep.converged);
+            let jerr = vecops::norm2(&vecops::sub(&dx_hat, &truth)) / vnorm;
+            pairs.push(ErrorPair { iterate_err: eps, jacobian_err: jerr });
+        }
+    }
+    check_bound(&consts, &pairs, 0.05);
+    // The Theorem-1 gate certifies the cheap policy at the solver tolerance.
+    assert_eq!(select_precision(&consts, cfg64.tol, 1e-6), SolvePrecision::MixedF32);
 }
 
 #[test]
