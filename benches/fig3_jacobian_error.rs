@@ -1,5 +1,8 @@
-//! Regenerates paper Fig. 3 (Jacobian estimate error vs iterate error).
-//! Rows/series printed match the paper's curves: implicit, unrolled, bound.
+//! Regenerates paper Fig. 3 (Jacobian estimate error vs iterate error) as a
+//! three-way mode comparison: implicit, unrolled, one-step, plus the
+//! Theorem-1 bound curve. Also journals the per-mode accuracy/latency
+//! summary at the converged solution to `BENCH_modes.json`
+//! (EXPERIMENTS.md §Modes).
 use idiff::coordinator::experiments::fig3;
 use idiff::util::cli::Args;
 

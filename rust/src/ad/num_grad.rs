@@ -2,6 +2,11 @@
 //! analytic/AD derivative in the crate is tested against, and the
 //! ground-truth Jacobian for Fig. 15 (the paper uses finite differences
 //! there too).
+//!
+//! The vector-JVP core is shared with the test suite through
+//! `util::testkit::fd_jvp_central` (one implementation, one set of FD
+//! tolerances); the kink-aware variant lives there too as
+//! `util::testkit::fd_jvp`.
 
 /// Central-difference gradient of a scalar function.
 pub fn grad_fd(f: impl Fn(&[f64]) -> f64, x: &[f64], h: f64) -> Vec<f64> {
@@ -21,12 +26,9 @@ pub fn grad_fd(f: impl Fn(&[f64]) -> f64, x: &[f64], h: f64) -> Vec<f64> {
 }
 
 /// Central-difference JVP of a vector function: (f(x+hv) − f(x−hv)) / 2h.
+/// Delegates to the shared testkit implementation.
 pub fn jvp_fd(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], v: &[f64], h: f64) -> Vec<f64> {
-    let xp: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi + h * vi).collect();
-    let xm: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi - h * vi).collect();
-    let fp = f(&xp);
-    let fm = f(&xm);
-    fp.iter().zip(&fm).map(|(&a, &b)| (a - b) / (2.0 * h)).collect()
+    crate::util::testkit::fd_jvp_central(f, x, v, h)
 }
 
 /// Full dense Jacobian by central differences (p outputs × n inputs).

@@ -3,17 +3,21 @@
 //! differentiation (VJP through the optimality mapping) or by unrolling, and
 //! small outer optimizers (GD, momentum, Adam).
 
+use crate::diff::mode::{DiffMode, ModeDecision, ModePolicy};
+use crate::diff::one_step::{estimate_contraction, CONTRACTION_POWER_ITERS};
 use crate::diff::root::{implicit_vjp, implicit_vjp_multi};
 use crate::diff::spec::{FixedPointMap, FixedPointResidual, RootMap};
 use crate::linalg::mat::Mat;
 use crate::linalg::solve::LinearSolveConfig;
 
-/// How the hypergradient is obtained — the axis Figs. 3/4 compare.
+/// How the hypergradient is obtained — the axis Figs. 3/4 compare, plus the
+/// Jacobian-free one-step estimator (Bolte et al., 2023).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HypergradMethod {
     Implicit,
     UnrollForward,
     UnrollReverse,
+    OneStep,
 }
 
 /// Hypergradient of L(x*(θ), θ) via implicit differentiation of a root map:
@@ -74,6 +78,67 @@ pub fn hypergrad_fixed_point<T: FixedPointMap>(
 ) -> Vec<f64> {
     let res = FixedPointResidual(t);
     hypergrad_implicit(&res, x_star, theta, grad_x_outer, grad_theta_outer, cfg)
+}
+
+/// Jacobian-free one-step hypergradient at a converged x*: ∂₂Tᵀ ∇_x L +
+/// ∇_θ L — no linear solve, error O(ρ) in the contraction factor.
+pub fn hypergrad_one_step<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    grad_x_outer: &[f64],
+    grad_theta_outer: &[f64],
+) -> Vec<f64> {
+    let mut g = crate::diff::one_step::one_step_vjp(t, x_star, theta, grad_x_outer);
+    for (gi, &go) in g.iter_mut().zip(grad_theta_outer) {
+        *gi += go;
+    }
+    g
+}
+
+/// Mode-dispatching hypergradient through a fixed-point mapping: the single
+/// entry point behind the serve protocol's `"mode"` field. `Implicit`
+/// solves the residual system (exact up to `cfg`), `OneStep` and `Unroll`
+/// are solve-free with O(ρ) / O(ρᵏ) error, and `Auto` resolves via
+/// [`ModePolicy::default`] after estimating ρ by power iteration (a
+/// standalone caller has no θ-factorization cache, so `Auto` here never
+/// reports a warm cache).
+pub fn hypergrad_fixed_point_mode<T: FixedPointMap>(
+    t: T,
+    x_star: &[f64],
+    theta: &[f64],
+    grad_x_outer: &[f64],
+    grad_theta_outer: &[f64],
+    mode: DiffMode,
+    unroll_iters: Option<usize>,
+    cfg: &LinearSolveConfig,
+) -> Vec<f64> {
+    let decision = {
+        // ρ is only needed when the policy has a choice to make.
+        let need_rho =
+            mode == DiffMode::Auto || (mode == DiffMode::Unroll && unroll_iters.is_none());
+        let rho = if need_rho {
+            estimate_contraction(&t, x_star, theta, CONTRACTION_POWER_ITERS, 0x10de)
+        } else {
+            0.0
+        };
+        ModePolicy::default().resolve(mode, rho, false, unroll_iters)
+    };
+    match decision {
+        ModeDecision::Implicit => {
+            hypergrad_fixed_point(t, x_star, theta, grad_x_outer, grad_theta_outer, cfg)
+        }
+        ModeDecision::OneStep => {
+            hypergrad_one_step(&t, x_star, theta, grad_x_outer, grad_theta_outer)
+        }
+        ModeDecision::Unroll(k) => {
+            let mut g = crate::diff::one_step::neumann_vjp(&t, x_star, theta, grad_x_outer, k);
+            for (gi, &go) in g.iter_mut().zip(grad_theta_outer) {
+                *gi += go;
+            }
+            g
+        }
+    }
 }
 
 /// Hypergradient via reverse-mode unrolling of the fixed-point iteration.
@@ -277,6 +342,63 @@ mod tests {
         let g100 = hypergrad_unroll_reverse(&T, &[0.0], &theta, &[1.0], &[0.0], 100);
         assert!((g100[0] - gi[0]).abs() < (g30[0] - gi[0]).abs());
         assert!((g100[0] - gi[0]).abs() < 1e-8);
+    }
+
+    /// The mode-dispatching entry point on the 0.7-contraction: implicit is
+    /// exact, unroll(k) approaches it geometrically, one-step lands within
+    /// the O(ρ) bound, and auto (cold, ρ = 0.7) takes the one-step route.
+    #[test]
+    fn mode_dispatch_obeys_contraction_bounds() {
+        struct T;
+        impl crate::diff::spec::FixedPointMap for T {
+            fn dim_x(&self) -> usize {
+                1
+            }
+            fn dim_theta(&self) -> usize {
+                1
+            }
+            fn eval(&self, x: &[f64], th: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * x[0] + th[0];
+            }
+            fn jvp_x(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * v[0];
+            }
+            fn vjp_x(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                out[0] = 0.7 * u[0];
+            }
+            fn jvp_theta(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                out[0] = v[0];
+            }
+            fn vjp_theta(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                out[0] = u[0];
+            }
+        }
+        let theta = [0.6];
+        let x_star = [2.0]; // x* = θ/0.3
+        let cfg = LinearSolveConfig::default();
+        let gi = hypergrad_fixed_point_mode(
+            T, &x_star, &theta, &[1.0], &[0.0], DiffMode::Implicit, None, &cfg,
+        );
+        assert!((gi[0] - 1.0 / 0.3).abs() < 1e-8);
+        // One-step: g = ∂₂Tᵀ·1 = 1, error exactly ρ·|g_impl| here.
+        let g1 = hypergrad_fixed_point_mode(
+            T, &x_star, &theta, &[1.0], &[0.0], DiffMode::OneStep, None, &cfg,
+        );
+        assert!((g1[0] - 1.0).abs() < 1e-12);
+        assert!((g1[0] - gi[0]).abs() <= 1.01 * 0.7 * gi[0].abs());
+        // Unroll(k): Σ_{i<k} 0.7^i, error ρᵏ·|g_impl|.
+        for k in [2usize, 5, 20] {
+            let gk = hypergrad_fixed_point_mode(
+                T, &x_star, &theta, &[1.0], &[0.0], DiffMode::Unroll, Some(k), &cfg,
+            );
+            let err = (gk[0] - gi[0]).abs();
+            assert!(err <= 1.01 * 0.7f64.powi(k as i32) * gi[0].abs(), "k = {k}: {err}");
+        }
+        // Auto with ρ = 0.7 < rho_max resolves to one-step.
+        let ga = hypergrad_fixed_point_mode(
+            T, &x_star, &theta, &[1.0], &[0.0], DiffMode::Auto, None, &cfg,
+        );
+        assert_eq!(ga[0], g1[0]);
     }
 
     #[test]

@@ -1,17 +1,36 @@
 //! Fig. 3 — Jacobian estimate error vs iterate error on ridge regression
-//! (diabetes-like data), for implicit differentiation vs forward-mode
-//! unrolling, overlaid with Theorem 1's bound.
+//! (diabetes-like data), three derivative modes side by side: implicit
+//! differentiation, forward-mode unrolling, and Jacobian-free one-step
+//! differentiation, overlaid with Theorem 1's bound. Besides the figure
+//! series, a per-mode summary at the converged solution (Jacobian error,
+//! wall time, estimated contraction factor ρ) is journaled to
+//! `BENCH_modes.json` so CI tracks the accuracy/latency trade across PRs
+//! (EXPERIMENTS.md §Modes).
 
 use crate::data::regression::diabetes_like;
+use crate::diff::mode::ModePolicy;
+use crate::diff::one_step::{
+    estimate_contraction, neumann_jvp_multi, one_step_jvp_multi, CONTRACTION_POWER_ITERS,
+};
 use crate::diff::precision;
 use crate::diff::root::jacobian_via_root;
-use crate::diff::spec::FixedPointResidual;
+use crate::linalg::mat::Mat;
 use crate::linalg::vecops;
 use crate::mappings::stationary::GradientDescentFixedPoint;
 use crate::ml::ridge::{RidgeProblem, RidgeRoot};
-use crate::util::bench::{write_figure, Series};
+use crate::util::bench::{bench, write_figure, BenchConfig, BenchJournal, Series};
 use crate::util::cli::Args;
 use crate::util::json::Json;
+
+fn fro_err(a: &Mat, b: &Mat) -> f64 {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut s = 0.0;
+    for i in 0..a.data.len() {
+        let d = a.data[i] - b.data[i];
+        s += d * d;
+    }
+    s.sqrt()
+}
 
 pub fn run(args: &Args) -> Json {
     let m = args.get_usize("m", 442);
@@ -31,9 +50,20 @@ pub fn run(args: &Args) -> Json {
 
     let mut s_implicit = Series::new("implicit");
     let mut s_unroll = Series::new("unroll (forward)");
+    let mut s_one_step = Series::new("one-step");
     let mut s_bound = Series::new("theorem-1 bound");
     let consts = precision::ridge_constants(&x_mat, &theta, &x_star);
     let mut bound_pairs = Vec::new();
+
+    // The fixed-point view T(x, θ) = x − η∇f shared by the unroll and
+    // one-step estimates, and the identity block for dense Jacobians.
+    let fp = GradientDescentFixedPoint { obj: RidgeProblem::new(x_mat.clone(), rp.y.clone()), eta: step };
+    let mut eye = Mat::zeros(p, p);
+    for j in 0..p {
+        let mut e = vec![0.0; p];
+        e[j] = 1.0;
+        eye.set_col(j, &e);
+    }
 
     let iter_grid: Vec<usize> =
         args.get_usize_list("iters", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048]);
@@ -53,17 +83,12 @@ pub fn run(args: &Args) -> Json {
         }
         let err_imp = err_imp.sqrt();
         // unrolled estimate: forward-mode through t GD iterations, per basis dir
-        let fp = GradientDescentFixedPoint {
-            obj: RidgeProblem::new(x_mat.clone(), rp.y.clone()),
-            eta: step,
-        };
-        let res = FixedPointResidual(fp);
         let mut err_unr = 0.0;
         {
             let mut e = vec![0.0; p];
             for j in 0..p {
                 e[j] = 1.0;
-                let (_, dx) = crate::unroll::unroll_jvp(&res.0, &vec![0.0; p], &theta, &e, t);
+                let (_, dx) = crate::unroll::unroll_jvp(&fp, &vec![0.0; p], &theta, &e, t);
                 for i in 0..p {
                     let d = dx[i] - jac_true.at(i, j);
                     err_unr += d * d;
@@ -72,8 +97,13 @@ pub fn run(args: &Args) -> Json {
             }
         }
         let err_unr = err_unr.sqrt();
+        // one-step estimate: differentiate ONE application of T at x̂ —
+        // J_os = ∂₂T(x̂, θ); no solve, no tape through the trajectory.
+        let jac_os = one_step_jvp_multi(&fp, &x_hat, &theta, &eye);
+        let err_os = fro_err(&jac_os, &jac_true);
         s_implicit.push(iter_err, err_imp, 0.0);
         s_unroll.push(iter_err, err_unr, 0.0);
+        s_one_step.push(iter_err, err_os, 0.0);
         s_bound.push(iter_err, consts.bound(iter_err), 0.0);
         // Below ~1e-6 the measured Jacobian error is dominated by the CG
         // solve tolerance, not Theorem 1's term — exclude from the check.
@@ -85,18 +115,68 @@ pub fn run(args: &Args) -> Json {
     let worst = precision::check_bound(&consts, &bound_pairs, 0.05);
     println!("fig3: worst bound ratio = {worst:.4} (must be ≤ 1)");
     println!("fig3: each dense Jacobian ({p} columns) = {solves_per_jacobian} block solve(s)");
-    println!("{:<12} {:>14} {:>14} {:>14}", "iter_err", "implicit", "unroll", "bound");
+    println!(
+        "{:<12} {:>14} {:>14} {:>14} {:>14}",
+        "iter_err", "implicit", "unroll", "one-step", "bound"
+    );
     for i in 0..s_implicit.rows.len() {
         println!(
-            "{:<12.3e} {:>14.3e} {:>14.3e} {:>14.3e}",
-            s_implicit.rows[i].0, s_implicit.rows[i].1, s_unroll.rows[i].1, s_bound.rows[i].1
+            "{:<12.3e} {:>14.3e} {:>14.3e} {:>14.3e} {:>14.3e}",
+            s_implicit.rows[i].0,
+            s_implicit.rows[i].1,
+            s_unroll.rows[i].1,
+            s_one_step.rows[i].1,
+            s_bound.rows[i].1
         );
     }
-    let series = vec![s_implicit, s_unroll, s_bound];
+
+    // ---- per-mode summary at the converged solution → BENCH_modes.json --
+    // Accuracy AND wall time for one dense p-column Jacobian, plus the
+    // estimated contraction factor driving `ModePolicy` (EXPERIMENTS.md
+    // §Modes defines the row schema).
+    let rho = estimate_contraction(&fp, &x_star, &theta, CONTRACTION_POWER_ITERS, 0xf193);
+    let k_auto = ModePolicy::default().default_unroll_terms(rho);
+    let jac_for = |mode: &str| -> Mat {
+        match mode {
+            "implicit" => jacobian_via_root(&root, &x_star, &theta),
+            "unroll" => neumann_jvp_multi(&fp, &x_star, &theta, &eye, k_auto),
+            "one-step" => one_step_jvp_multi(&fp, &x_star, &theta, &eye),
+            other => panic!("unknown mode {other}"),
+        }
+    };
+    let bcfg = BenchConfig { warmup_iters: 2, samples: 7, reps_per_sample: 1 };
+    let mut journal = BenchJournal::new();
+    let mut modes_json = Vec::new();
+    println!("fig3: rho = {rho:.4}, policy unroll depth = {k_auto}");
+    for mode in ["implicit", "unroll", "one-step"] {
+        let meas = bench(&format!("fig3/jacobian/{mode}"), bcfg, || jac_for(mode));
+        let err = fro_err(&jac_for(mode), &jac_true);
+        println!("fig3: mode {mode:<9} jacobian_err = {err:.3e}");
+        journal.record(&meas, None);
+        let row = Json::obj(vec![
+            ("name", Json::Str(format!("fig3/jacobian_err/{mode}"))),
+            ("mode", Json::Str(mode.to_string())),
+            ("jacobian_err", Json::Num(err)),
+            ("mean_s", Json::Num(meas.mean_s())),
+        ]);
+        journal.note(row.clone());
+        modes_json.push(row);
+    }
+    journal.note(Json::obj(vec![
+        ("name", Json::Str("fig3/contraction".into())),
+        ("rho", Json::Num(rho)),
+        ("unroll_terms", Json::Num(k_auto as f64)),
+    ]));
+    journal.write("BENCH_modes.json");
+
+    let series = vec![s_implicit, s_unroll, s_one_step, s_bound];
     write_figure("fig3", &series);
     Json::obj(vec![
         ("worst_bound_ratio", Json::Num(worst)),
         ("solves_per_jacobian", Json::Num(solves_per_jacobian as f64)),
+        ("rho", Json::Num(rho)),
+        ("unroll_terms", Json::Num(k_auto as f64)),
+        ("modes", Json::Arr(modes_json)),
         ("series", Json::Arr(series.iter().map(Series::to_json).collect())),
     ])
 }

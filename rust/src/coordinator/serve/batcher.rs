@@ -9,6 +9,7 @@
 //! own column. A panicking compute is caught and surfaced as a per-request
 //! error instead of hanging the followers.
 
+use crate::diff::mode::DiffMode;
 use crate::linalg::mat::Mat;
 use crate::linalg::solve::SolvePrecision;
 use std::collections::HashMap;
@@ -25,14 +26,20 @@ pub enum BatchOp {
     Jvp,
 }
 
-/// Coalescing key: requests batch together iff problem, θ bits, op AND
-/// arithmetic policy all match (an f64 and a mixed-precision request must
-/// not share one block solve).
+/// Coalescing key: requests batch together iff problem, θ bits, op,
+/// arithmetic policy AND derivative mode all match (an f64 and a
+/// mixed-precision request must not share one block solve; an implicit and
+/// a one-step request don't even run the same compute). Explicit-k unroll
+/// requests additionally key on k, since the leader's truncation depth is
+/// applied to the whole block.
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 pub struct BatchKey {
     pub problem: String,
     pub op: BatchOp,
     pub precision: SolvePrecision,
+    pub mode: DiffMode,
+    /// Requested unroll depth (0 = let the policy choose).
+    pub iters: usize,
     bits: Vec<u64>,
 }
 
@@ -43,10 +50,23 @@ impl BatchKey {
         theta: &[f64],
         precision: SolvePrecision,
     ) -> BatchKey {
+        BatchKey::with_mode(problem, op, theta, precision, DiffMode::Implicit, 0)
+    }
+
+    pub fn with_mode(
+        problem: &str,
+        op: BatchOp,
+        theta: &[f64],
+        precision: SolvePrecision,
+        mode: DiffMode,
+        iters: usize,
+    ) -> BatchKey {
         BatchKey {
             problem: problem.to_string(),
             op,
             precision,
+            mode,
+            iters,
             bits: theta.iter().map(|t| t.to_bits()).collect(),
         }
     }
@@ -288,6 +308,28 @@ mod tests {
         assert_eq!((a.unwrap(), sa), (vec![1.0], 1));
         assert_eq!((c.unwrap(), sc), (vec![2.0], 1));
         assert_eq!(batcher.stats().0, 2);
+        // Same (problem, op, θ, precision) but a different derivative mode
+        // or unroll depth opens its own batch.
+        let k1 = BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64);
+        let k2 = BatchKey::with_mode(
+            "p",
+            BatchOp::Vjp,
+            &[1.0],
+            SolvePrecision::F64,
+            DiffMode::OneStep,
+            0,
+        );
+        let k3 = BatchKey::with_mode(
+            "p",
+            BatchOp::Vjp,
+            &[1.0],
+            SolvePrecision::F64,
+            DiffMode::Unroll,
+            8,
+        );
+        assert_eq!(k1.mode, DiffMode::Implicit);
+        assert_ne!(k1, k2);
+        assert_ne!(k2, k3);
     }
 
     #[test]

@@ -11,8 +11,8 @@
 //! | `{"op":"problems"}`                                            | `{"problems":[{"name","desc","dim_x","dim_theta"},…]}` |
 //! | `{"op":"stats"}`                                               | serve counters (solves, batches, cache hits, …) |
 //! | `{"op":"solve","problem":P,"theta":[…]}`                       | `{"x":[…],"cached":bool}` |
-//! | `{"op":"hypergrad","problem":P,"theta":[…],"v":[… dim_x]}`     | `{"grad":[… dim_theta],"batched":k,"cached":bool}` |
-//! | `{"op":"jvp","problem":P,"theta":[…],"v":[… dim_theta]}`       | `{"jv":[… dim_x],"batched":k,"cached":bool}` |
+//! | `{"op":"hypergrad","problem":P,"theta":[…],"v":[… dim_x]}`     | `{"grad":[… dim_theta],"batched":k,"cached":bool,"mode":m}` |
+//! | `{"op":"jvp","problem":P,"theta":[…],"v":[… dim_theta]}`       | `{"jv":[… dim_x],"batched":k,"cached":bool,"mode":m}` |
 //! | `{"op":"jacobian","problem":P,"theta":[…]}`                    | `{"jacobian":[[…]…],"cached":bool}` |
 //!
 //! `"vjp"` is accepted as an alias of `"hypergrad"`; the pre-registry ops
@@ -27,6 +27,19 @@
 //! share a batch, and the θ-keyed cache always stores full-precision
 //! factorizations, so a cache hit serves f64 quality regardless of the
 //! requested policy.
+//!
+//! They also accept an optional `"mode"` field choosing the derivative
+//! mechanism: `"implicit"` (default — the IFT linear solve), `"one-step"`
+//! (differentiate a single application of the fixed-point iteration at x*:
+//! zero solves, zero factorizations, error O(ρ) in the contraction factor),
+//! `"unroll"` (k-term truncated Neumann at x*, error O(ρᵏ); optional
+//! `"iters"` sets k), or `"auto"` (a warm θ-cache serves factored implicit;
+//! a cold one estimates ρ by power iteration — Jacobian products only — and
+//! picks the cheapest mode whose error bound meets the policy target). The
+//! solve-free modes bypass the factorization cache entirely: they neither
+//! read nor populate it. Replies echo the requested mode in `"mode"`
+//! (cache hits report `"implicit"`, which is what they served). Requests
+//! with different modes (or explicit unroll depths) never share a batch.
 //!
 //! # Request path
 //!
@@ -51,7 +64,9 @@ pub mod batcher;
 pub mod cache;
 pub mod registry;
 
+use crate::diff::mode::{DiffMode, ModeDecision, ModePolicy};
 use crate::linalg::mat::Mat;
+use crate::linalg::op::densify;
 use crate::linalg::solve::{counter, SolvePrecision};
 use crate::util::json::{self, Json};
 use crate::util::parallel::WorkerPool;
@@ -108,6 +123,12 @@ pub struct ServeStats {
     pub inner_solves: AtomicU64,
     /// Requests answered from the θ-keyed factorization cache.
     pub cache_hits: AtomicU64,
+    /// Dense factorizations performed (cache population). The solve-free
+    /// modes must never bump this — asserted by the integration tests.
+    pub factorizations: AtomicU64,
+    /// Dense d×d operators materialized while answering derivative
+    /// requests (thread-local densify-counter deltas around each compute).
+    pub densified: AtomicU64,
 }
 
 /// The serving engine. `handle` is the transport-free core (tests and
@@ -216,6 +237,11 @@ impl Server {
             ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
             ("block_solves", Json::Num(self.stats.block_solves.load(Ordering::Relaxed) as f64)),
             ("inner_solves", Json::Num(self.stats.inner_solves.load(Ordering::Relaxed) as f64)),
+            (
+                "factorizations",
+                Json::Num(self.stats.factorizations.load(Ordering::Relaxed) as f64),
+            ),
+            ("densified", Json::Num(self.stats.densified.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(batches as f64)),
             ("coalesced_requests", Json::Num(coalesced as f64)),
             ("cache_hits", Json::Num(hits as f64)),
@@ -260,6 +286,7 @@ impl Server {
         let x_star = Arc::new(p.solve(theta));
         self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
         if let Some(fact) = p.factorize(&x_star, theta) {
+            self.stats.factorizations.fetch_add(1, Ordering::Relaxed);
             let entry = CacheEntry { x_star: x_star.clone(), fact: Arc::new(fact) };
             self.cache.insert(key, entry);
         }
@@ -271,9 +298,12 @@ impl Server {
         Json::obj(vec![("x", Json::arr_f64(&x_star)), ("cached", Json::Bool(was_hit))])
     }
 
-    /// The batched derivative path: cache hit → factored substitution
-    /// (zero iterative solves); miss → micro-batch onto ONE block solve
-    /// under the requested arithmetic policy.
+    /// The batched derivative path. Implicit/auto on a warm θ → factored
+    /// substitution (zero iterative solves). Implicit on a miss →
+    /// micro-batch onto ONE block solve under the requested arithmetic
+    /// policy. One-step / unroll / auto on a miss → micro-batch onto a
+    /// Jacobian-free compute: zero solves, zero factorizations, cache
+    /// bypassed by design.
     fn op_derivative(&self, p: &Problem, theta: &[f64], req: &Json, op: BatchOp) -> Json {
         let (in_dim, out_key) = match op {
             BatchOp::Vjp => (p.dim_x(), "grad"),
@@ -292,52 +322,149 @@ impl Server {
                 }
             },
         };
+        let mode = match req.get("mode") {
+            None => DiffMode::Implicit,
+            Some(j) => match j.as_str().and_then(DiffMode::parse) {
+                Some(m) => m,
+                None => {
+                    return err_json(
+                        "'mode' must be \"implicit\", \"unroll\", \"one-step\" or \"auto\"",
+                    );
+                }
+            },
+        };
+        // Explicit unroll depth (0 = let the policy derive it from ρ).
+        let iters = match req.get("iters") {
+            None => 0usize,
+            Some(j) => match j.as_f64() {
+                Some(k) if k.fract() == 0.0 && (1.0..=1e6).contains(&k) => k as usize,
+                _ => return err_json("'iters' must be a positive integer"),
+            },
+        };
 
-        // Fast path: prefactored θ.
-        if let Some(entry) = self.cache.get(&ThetaKey::new(p.name, theta)) {
-            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            let vmat = Mat::from_col(&v);
-            let before = counter::count();
-            let out = match op {
-                BatchOp::Vjp => p.vjp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
-                BatchOp::Jvp => p.jvp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
-            };
-            self.stats
-                .block_solves
-                .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
-            return Json::obj(vec![
-                (out_key, Json::arr_f64(&out.col(0))),
-                ("batched", Json::Num(1.0)),
-                ("cached", Json::Bool(true)),
-            ]);
+        // Fast path: prefactored θ. Only implicit and auto look — the
+        // explicit solve-free modes bypass the cache by design.
+        if matches!(mode, DiffMode::Implicit | DiffMode::Auto) {
+            if let Some(entry) = self.cache.get(&ThetaKey::new(p.name, theta)) {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                let vmat = Mat::from_col(&v);
+                let before = counter::count();
+                let out = match op {
+                    BatchOp::Vjp => p.vjp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
+                    BatchOp::Jvp => p.jvp_multi_factored(&entry.fact, &entry.x_star, theta, &vmat),
+                };
+                self.stats
+                    .block_solves
+                    .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
+                return Json::obj(vec![
+                    (out_key, Json::arr_f64(&out.col(0))),
+                    ("batched", Json::Num(1.0)),
+                    ("cached", Json::Bool(true)),
+                    ("mode", Json::Str("implicit".into())),
+                ]);
+            }
         }
 
-        // Batched path: coalesce same-(problem, θ, op, precision) requests
-        // into one block solve, then prefactor for future repeats of this θ.
-        let key = BatchKey::new(p.name, op, theta, precision);
+        if mode == DiffMode::Implicit {
+            // Batched implicit path: coalesce same-(problem, θ, op,
+            // precision) requests into one block solve, then prefactor for
+            // future repeats of this θ.
+            let key = BatchKey::new(p.name, op, theta, precision);
+            let (col, size) = self.batcher.submit(key, v, in_dim, |block| {
+                let x_star = p.solve(theta);
+                self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
+                let solves_before = counter::count();
+                let densify_before = densify::count();
+                let (out, rep) = match op {
+                    BatchOp::Vjp => p.vjp_multi_prec(&x_star, theta, block, precision),
+                    BatchOp::Jvp => p.jvp_multi_prec(&x_star, theta, block, precision),
+                };
+                self.stats
+                    .block_solves
+                    .fetch_add((counter::count() - solves_before) as u64, Ordering::Relaxed);
+                if !rep.converged {
+                    return Err(format!(
+                        "linear solve did not converge (residual {:.2e} after {} iterations)",
+                        rep.max_residual, rep.iterations
+                    ));
+                }
+                if let Some(fact) = p.factorize(&x_star, theta) {
+                    self.stats.factorizations.fetch_add(1, Ordering::Relaxed);
+                    self.cache.insert(
+                        ThetaKey::new(p.name, theta),
+                        CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) },
+                    );
+                }
+                self.stats
+                    .densified
+                    .fetch_add((densify::count() - densify_before) as u64, Ordering::Relaxed);
+                Ok(out)
+            });
+            return match col {
+                Ok(col) => Json::obj(vec![
+                    (out_key, Json::arr_f64(&col)),
+                    ("batched", Json::Num(size as f64)),
+                    ("cached", Json::Bool(false)),
+                    ("mode", Json::Str("implicit".into())),
+                ]),
+                Err(e) => err_json(&e),
+            };
+        }
+
+        // Solve-free path: one-step / truncated unroll / auto on a cold θ.
+        // The leader solves the inner problem once for the whole batch and
+        // answers with Jacobian products of the fixed-point map — no linear
+        // solve, no factorization, no cache insert (an auto request that
+        // resolves to implicit because T barely contracts is the one
+        // exception: it pays the solve and prefactors like implicit would).
+        let key = BatchKey::with_mode(p.name, op, theta, precision, mode, iters);
         let (col, size) = self.batcher.submit(key, v, in_dim, |block| {
             let x_star = p.solve(theta);
             self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
-            let before = counter::count();
-            let (out, rep) = match op {
-                BatchOp::Vjp => p.vjp_multi_prec(&x_star, theta, block, precision),
-                BatchOp::Jvp => p.jvp_multi_prec(&x_star, theta, block, precision),
+            let policy = ModePolicy::default();
+            let need_rho =
+                mode == DiffMode::Auto || (mode == DiffMode::Unroll && iters == 0);
+            let rho = if need_rho { p.contraction(&x_star, theta) } else { f64::NAN };
+            let decision =
+                policy.resolve(mode, rho, false, if iters > 0 { Some(iters) } else { None });
+            let solves_before = counter::count();
+            let densify_before = densify::count();
+            let out = match decision {
+                ModeDecision::OneStep => match op {
+                    BatchOp::Vjp => p.one_step_vjp_multi(&x_star, theta, block),
+                    BatchOp::Jvp => p.one_step_jvp_multi(&x_star, theta, block),
+                },
+                ModeDecision::Unroll(k) => match op {
+                    BatchOp::Vjp => p.unroll_vjp_multi(&x_star, theta, block, k),
+                    BatchOp::Jvp => p.unroll_jvp_multi(&x_star, theta, block, k),
+                },
+                ModeDecision::Implicit => {
+                    let (out, rep) = match op {
+                        BatchOp::Vjp => p.vjp_multi_prec(&x_star, theta, block, precision),
+                        BatchOp::Jvp => p.jvp_multi_prec(&x_star, theta, block, precision),
+                    };
+                    if !rep.converged {
+                        return Err(format!(
+                            "linear solve did not converge (residual {:.2e} after {} iterations)",
+                            rep.max_residual, rep.iterations
+                        ));
+                    }
+                    if let Some(fact) = p.factorize(&x_star, theta) {
+                        self.stats.factorizations.fetch_add(1, Ordering::Relaxed);
+                        self.cache.insert(
+                            ThetaKey::new(p.name, theta),
+                            CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) },
+                        );
+                    }
+                    out
+                }
             };
             self.stats
                 .block_solves
-                .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
-            if !rep.converged {
-                return Err(format!(
-                    "linear solve did not converge (residual {:.2e} after {} iterations)",
-                    rep.max_residual, rep.iterations
-                ));
-            }
-            if let Some(fact) = p.factorize(&x_star, theta) {
-                self.cache.insert(
-                    ThetaKey::new(p.name, theta),
-                    CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) },
-                );
-            }
+                .fetch_add((counter::count() - solves_before) as u64, Ordering::Relaxed);
+            self.stats
+                .densified
+                .fetch_add((densify::count() - densify_before) as u64, Ordering::Relaxed);
             Ok(out)
         });
         match col {
@@ -345,6 +472,7 @@ impl Server {
                 (out_key, Json::arr_f64(&col)),
                 ("batched", Json::Num(size as f64)),
                 ("cached", Json::Bool(false)),
+                ("mode", Json::Str(mode.as_str().into())),
             ]),
             Err(e) => err_json(&e),
         }
@@ -362,6 +490,7 @@ impl Server {
             self.stats.inner_solves.fetch_add(1, Ordering::Relaxed);
             match p.factorize(&x_star, theta) {
                 Some(fact) => {
+                    self.stats.factorizations.fetch_add(1, Ordering::Relaxed);
                     let entry =
                         CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) };
                     self.cache.insert(key, entry.clone());
@@ -746,6 +875,112 @@ mod tests {
                 gf[i]
             );
         }
+    }
+
+    /// The `"mode"` field end to end: validation, the solve-free one-step
+    /// path (zero iterative solves, zero factorizations, zero dense
+    /// materializations, cache bypassed), the O(ρ)/O(ρᵏ) accuracy bounds
+    /// against the implicit answer, and auto's cold→solve-free /
+    /// warm→factored switching.
+    #[test]
+    fn mode_field_serves_solve_free_answers_within_contraction_bounds() {
+        let s = Server::new(quiet_cfg());
+        let bad = s.handle(
+            r#"{"op":"hypergrad","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1],"mode":"onestep"}"#,
+        );
+        assert!(bad.str_or("error", "").contains("mode"));
+        let bad_iters = s.handle(
+            r#"{"op":"jvp","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1],"mode":"unroll","iters":0.5}"#,
+        );
+        assert!(bad_iters.str_or("error", "").contains("iters"));
+
+        let theta = vec![1.2; 8];
+        let v = vec![0.4; 8];
+        let mk = |op: &str, mode: &str, iters: usize| {
+            let mut fields = vec![
+                ("op", Json::Str(op.into())),
+                ("problem", Json::Str("ridge".into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(&v)),
+            ];
+            if !mode.is_empty() {
+                fields.push(("mode", Json::Str(mode.into())));
+            }
+            if iters > 0 {
+                fields.push(("iters", Json::Num(iters as f64)));
+            }
+            Json::obj(fields).to_string_compact()
+        };
+        let vec_of = |r: &Json, key: &str| -> Vec<f64> {
+            r.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or_else(|| panic!("no {key} in {}", r.to_string_compact()))
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect()
+        };
+
+        // One-step on a cold θ: Jacobian-free end to end.
+        let r_os = s.handle(&mk("hypergrad", "one-step", 0));
+        assert_eq!(r_os.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(r_os.str_or("mode", ""), "one-step");
+        assert_eq!(vec_of(&r_os, "grad").len(), 8);
+        let jv_os = vec_of(&s.handle(&mk("jvp", "one-step", 0)), "jv");
+        assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), 0);
+        assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 0);
+        assert_eq!(s.stats.densified.load(Ordering::Relaxed), 0);
+        assert_eq!(s.cache.len(), 0, "one-step must bypass the θ-cache");
+        assert_eq!(s.stats.inner_solves.load(Ordering::Relaxed), 2);
+
+        // Implicit on the same θ: pays the solve, factorizes, warms the cache.
+        let jv_imp = vec_of(&s.handle(&mk("jvp", "", 0)), "jv");
+        assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 1);
+        let norm = |x: &[f64]| x.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let diff = |a: &[f64], b: &[f64]| {
+            norm(&a.iter().zip(b).map(|(x, y)| x - y).collect::<Vec<f64>>())
+        };
+        let p = s.registry.get("ridge").unwrap();
+        let x_star = p.solve(&theta);
+        let rho = p.contraction(&x_star, &theta);
+        assert!(rho > 0.0 && rho < 1.0, "ridge gradient step must contract, rho = {rho}");
+        // The Bolte-style bound ‖(J_os − J_imp)v‖ ≤ ρ‖J_imp v‖ (slack for
+        // the power-iteration estimate approaching σ_max from below).
+        let err_os = diff(&jv_os, &jv_imp);
+        assert!(
+            err_os <= 1.1 * rho * norm(&jv_imp) + 1e-12,
+            "one-step err {err_os} vs rho {rho} · {}",
+            norm(&jv_imp)
+        );
+        // unroll(k) tightens geometrically: err ≤ ρᵏ‖J_imp v‖.
+        let jv_u6 = vec_of(&s.handle(&mk("jvp", "unroll", 6)), "jv");
+        let err_u6 = diff(&jv_u6, &jv_imp);
+        assert!(
+            err_u6 <= 1.1 * rho.powi(6) * norm(&jv_imp) + 1e-9,
+            "unroll(6) err {err_u6} vs rho^6 bound"
+        );
+        assert!(err_u6 <= err_os + 1e-12, "unroll(6) must beat one-step");
+
+        // Auto on the now-warm θ serves the factored implicit answer…
+        let r_auto = s.handle(&mk("hypergrad", "auto", 0));
+        assert_eq!(r_auto.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(r_auto.str_or("mode", ""), "implicit");
+        // …and on a cold θ goes one-step: no new solves or factorizations.
+        let solves_before = s.stats.block_solves.load(Ordering::Relaxed);
+        let facts_before = s.stats.factorizations.load(Ordering::Relaxed);
+        let theta2 = vec![0.7; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta2)),
+            ("v", Json::arr_f64(&v)),
+            ("mode", Json::Str("auto".into())),
+        ]);
+        let r_cold = s.handle(&req.to_string_compact());
+        assert_eq!(r_cold.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(r_cold.str_or("mode", ""), "auto");
+        assert_eq!(vec_of(&r_cold, "grad").len(), 8);
+        assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), solves_before);
+        assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), facts_before);
     }
 
     #[test]

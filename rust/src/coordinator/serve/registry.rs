@@ -9,11 +9,12 @@
 //! through the factored paths when the θ-keyed cache holds A's
 //! Cholesky/LU factorization.
 
+use crate::diff::one_step::{estimate_contraction, GradientStepMap, CONTRACTION_POWER_ITERS};
 use crate::diff::root::{
     factorize_root, implicit_jvp_multi, implicit_jvp_multi_factored, implicit_vjp_multi,
     implicit_vjp_multi_factored, jacobian_via_root,
 };
-use crate::diff::spec::{FixedPointResidual, RootMap};
+use crate::diff::spec::{FixedPointMap, FixedPointResidual, RootMap};
 use crate::linalg::mat::Mat;
 use crate::linalg::solve::{
     BlockSolveReport, Factorization, LinearSolveConfig, LinearSolverKind, SolvePrecision,
@@ -46,6 +47,23 @@ pub trait ProblemCore: Send + Sync {
     }
     /// Build the optimality mapping for θ and pass it to `f`.
     fn with_root(&self, theta: &[f64], f: &mut dyn FnMut(&dyn RootMap));
+    /// Build a *contractive fixed-point* view T(x, θ) valid near (x*, θ) and
+    /// pass it to `f` — the object the solve-free one-step / truncated-unroll
+    /// derivative modes differentiate. The default wraps the `with_root`
+    /// mapping in a step-tuned gradient step T = x − ηF (a contraction
+    /// whenever ∂₁F is SPD at x*); cores whose mapping is natively a
+    /// fixed-point iteration override this with that iteration directly.
+    fn with_fixed_point(
+        &self,
+        x_star: &[f64],
+        theta: &[f64],
+        f: &mut dyn FnMut(&dyn FixedPointMap),
+    ) {
+        self.with_root(theta, &mut |m| {
+            let t = GradientStepMap::tuned(m, x_star, theta);
+            (*f)(&t);
+        });
+    }
 }
 
 /// A named, served catalog problem.
@@ -201,6 +219,59 @@ impl Problem {
     pub fn jacobian_factored(&self, fact: &Factorization, x_star: &[f64], theta: &[f64]) -> Mat {
         let eye = Mat::eye(self.dim_theta());
         self.jvp_multi_factored(fact, x_star, theta, &eye)
+    }
+
+    // ------------------------------------------- solve-free modes --
+
+    /// One-step JVP block ∂₂T·V at (x*, θ): Jacobian-free, zero linear
+    /// solves, zero factorizations (serve mode `"one-step"`). Error vs the
+    /// implicit block is O(ρ) in the contraction factor.
+    pub fn one_step_jvp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> Mat {
+        let mut out = None;
+        self.core.with_fixed_point(x_star, theta, &mut |t| {
+            out = Some(crate::diff::one_step::one_step_jvp_multi(t, x_star, theta, v));
+        });
+        out.expect("with_fixed_point must invoke its callback")
+    }
+
+    /// One-step VJP block ∂₂Tᵀ·U at (x*, θ) — the reverse-mode counterpart.
+    pub fn one_step_vjp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat) -> Mat {
+        let mut out = None;
+        self.core.with_fixed_point(x_star, theta, &mut |t| {
+            out = Some(crate::diff::one_step::one_step_vjp_multi(t, x_star, theta, v));
+        });
+        out.expect("with_fixed_point must invoke its callback")
+    }
+
+    /// k-term truncated-unroll (Neumann) JVP block at the converged point:
+    /// Σ_{i<k}(∂₁T)^i ∂₂T · V, error O(ρᵏ), still zero solves.
+    pub fn unroll_jvp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat, k: usize) -> Mat {
+        let mut out = None;
+        self.core.with_fixed_point(x_star, theta, &mut |t| {
+            out = Some(crate::diff::one_step::neumann_jvp_multi(t, x_star, theta, v, k));
+        });
+        out.expect("with_fixed_point must invoke its callback")
+    }
+
+    /// k-term truncated-unroll VJP block — the exact adjoint of
+    /// [`Problem::unroll_jvp_multi`].
+    pub fn unroll_vjp_multi(&self, x_star: &[f64], theta: &[f64], v: &Mat, k: usize) -> Mat {
+        let mut out = None;
+        self.core.with_fixed_point(x_star, theta, &mut |t| {
+            out = Some(crate::diff::one_step::neumann_vjp_multi(t, x_star, theta, v, k));
+        });
+        out.expect("with_fixed_point must invoke its callback")
+    }
+
+    /// Estimated contraction factor ρ ≈ ‖∂₁T(x*, θ)‖₂ of the fixed-point
+    /// view (power iteration; Jacobian products only — no solves, no dense
+    /// materialization). Drives the `"auto"` mode policy.
+    pub fn contraction(&self, x_star: &[f64], theta: &[f64]) -> f64 {
+        let mut out = f64::NAN;
+        self.core.with_fixed_point(x_star, theta, &mut |t| {
+            out = estimate_contraction(t, x_star, theta, CONTRACTION_POWER_ITERS, 0x1dea);
+        });
+        out
     }
 }
 
@@ -424,6 +495,19 @@ impl ProblemCore for SvmCore {
         let res = FixedPointResidual(ProjGradFixedPoint::new(svm, proj, eta));
         f(&res);
     }
+    fn with_fixed_point(
+        &self,
+        _x_star: &[f64],
+        theta: &[f64],
+        f: &mut dyn FnMut(&dyn FixedPointMap),
+    ) {
+        // The PG iteration itself — no gradient-step wrapper needed.
+        let svm = self.svm();
+        let eta = svm.pg_step(theta[0]);
+        let proj = RowsSimplexProjection { m: self.x_tr.rows, k: self.k };
+        let fp = ProjGradFixedPoint::new(svm, proj, eta);
+        f(&fp);
+    }
 }
 
 struct LassoCore {
@@ -501,6 +585,14 @@ impl ProblemCore for LassoCore {
         let res = FixedPointResidual(self.fixed_point());
         f(&res);
     }
+    fn with_fixed_point(
+        &self,
+        _x_star: &[f64],
+        _theta: &[f64],
+        f: &mut dyn FnMut(&dyn FixedPointMap),
+    ) {
+        f(&self.fixed_point());
+    }
 }
 
 struct ProjGdCore {
@@ -547,7 +639,6 @@ impl ProblemCore for ProjGdCore {
         Ok(())
     }
     fn solve(&self, theta: &[f64]) -> Vec<f64> {
-        use crate::diff::spec::FixedPointMap;
         let t = self.fixed_point();
         let d = self.dim_x();
         let mut x = vec![1.0 / d as f64; d];
@@ -575,6 +666,14 @@ impl ProblemCore for ProjGdCore {
     fn with_root(&self, _theta: &[f64], f: &mut dyn FnMut(&dyn RootMap)) {
         let res = FixedPointResidual(self.fixed_point());
         f(&res);
+    }
+    fn with_fixed_point(
+        &self,
+        _x_star: &[f64],
+        _theta: &[f64],
+        f: &mut dyn FnMut(&dyn FixedPointMap),
+    ) {
+        f(&self.fixed_point());
     }
 }
 
@@ -683,6 +782,53 @@ mod tests {
                     j_fact.data[i]
                 );
             }
+        }
+    }
+
+    /// Every catalog entry exposes a fixed-point view T with T(x*, θ) = x*,
+    /// and its estimated contraction factor ρ = ‖∂₁T‖₂ is at most 1 (every
+    /// view composes nonexpansive maps with a tuned gradient step). Smooth
+    /// strongly-convex entries must be strict contractions — that is what
+    /// lets `"auto"` serve them one-step on a cold cache. The whole check is
+    /// solve-free and never materializes a dense operator.
+    #[test]
+    fn catalog_fixed_point_views_are_contractions_at_the_solution() {
+        let reg = Registry::standard();
+        let mut rng = Rng::new(33);
+        counter::reset();
+        densify::reset();
+        for p in reg.problems() {
+            let n = p.dim_theta();
+            let d = p.dim_x();
+            let theta: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.5, 1.0)).collect();
+            let x_star = p.solve(&theta);
+            counter::reset();
+            densify::reset();
+            let mut tn = f64::NAN;
+            p.core.with_fixed_point(&x_star, &theta, &mut |t| {
+                assert_eq!(t.dim_x(), d, "{}", p.name);
+                assert_eq!(t.dim_theta(), n, "{}", p.name);
+                let mut tx = vec![0.0; d];
+                t.eval(&x_star, &theta, &mut tx);
+                tn = tx
+                    .iter()
+                    .zip(&x_star)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+            });
+            assert!(tn < 1e-4, "{}: fixed-point residual {tn}", p.name);
+            let rho = p.contraction(&x_star, &theta);
+            assert!(rho.is_finite() && rho <= 1.0 + 1e-9, "{}: rho = {rho}", p.name);
+            // The SVM dual quadratic is rank-deficient (gram of m > p rows),
+            // so its PG step is only nonexpansive along null directions the
+            // simplex projection keeps; every other entry is a strict
+            // contraction at x*.
+            if p.name != "svm" {
+                assert!(rho < 1.0, "{}: rho = {rho} must contract", p.name);
+            }
+            assert_eq!(counter::count(), 0, "{}: mode path issued a solve", p.name);
+            assert_eq!(densify::count(), 0, "{}: mode path densified", p.name);
         }
     }
 

@@ -18,13 +18,25 @@
 //! or cotangents into ONE block solve (dense Jacobians are the n-basis
 //! special case), amortizing the Krylov work the way Margossian & Betancourt
 //! (2021) prescribe.
+//!
+//! Solve-free alternatives live in [`one_step`] (single-step and truncated
+//! Neumann differentiation at x*, error O(ρ) / O(ρᵏ) in the contraction
+//! factor ρ = ‖∂₁T‖) with the accuracy/latency selection policy in
+//! [`mode`].
 
 pub mod fixed_point;
+pub mod mode;
+pub mod one_step;
 pub mod precision;
 pub mod root;
 pub mod spec;
 
 pub use fixed_point::CustomFixedPoint;
+pub use mode::{DiffMode, ModeDecision, ModePolicy};
+pub use one_step::{
+    estimate_contraction, neumann_jvp, neumann_jvp_multi, neumann_vjp, neumann_vjp_multi,
+    one_step_jvp, one_step_jvp_multi, one_step_vjp, one_step_vjp_multi, GradientStepMap,
+};
 pub use root::{
     implicit_jvp, implicit_jvp_multi, implicit_vjp, implicit_vjp_multi, jacobian_via_root,
     jacobian_via_root_columns, CustomRoot,

@@ -1,0 +1,208 @@
+//! Derivative-mode selection: implicit vs truncated-unroll vs one-step.
+//!
+//! The three mechanisms share one interface (Jacobian products of `T`) but
+//! sit at different points on the accuracy/latency curve at a converged
+//! fixed point x*(θ) with contraction factor ρ = ‖∂₁T(x*, θ)‖₂:
+//!
+//! | mode      | cost per JVP/VJP            | relative error    |
+//! |-----------|-----------------------------|-------------------|
+//! | implicit  | one linear solve (or a      | solver tolerance  |
+//! |           | cached factorization)       |                   |
+//! | unroll(k) | k Jacobian products         | ≤ ρᵏ              |
+//! | one-step  | 1 Jacobian product          | ≤ ρ               |
+//!
+//! [`ModePolicy`] encodes the serving tier's decision rule: a warm
+//! θ-factorization cache makes implicit both exact and cheapest, so always
+//! take it; on a cache miss, a contraction (ρ < `rho_max`) admits the
+//! Bolte-style one-step bound, so answer Jacobian-free with zero
+//! factorizations; when T barely contracts, unroll just enough terms to hit
+//! `err_target`, and past `max_unroll` terms give up and pay the solve.
+
+/// Requested derivative mode — the serve protocol's `"mode"` field and the
+/// mode parameter of `bilevel::hypergrad_fixed_point_mode`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiffMode {
+    /// Solve the IFT linear system (paper Eq. 2); exact up to solver tol.
+    Implicit,
+    /// k-term truncated unrolling at x* (Neumann series); error O(ρᵏ).
+    Unroll,
+    /// Single-step differentiation (Bolte et al., 2023); error O(ρ).
+    OneStep,
+    /// Let [`ModePolicy`] pick from the cache state + estimated ρ.
+    Auto,
+}
+
+impl DiffMode {
+    /// Parse the protocol spelling; `None` on anything else.
+    pub fn parse(s: &str) -> Option<DiffMode> {
+        match s {
+            "implicit" => Some(DiffMode::Implicit),
+            "unroll" => Some(DiffMode::Unroll),
+            "one-step" => Some(DiffMode::OneStep),
+            "auto" => Some(DiffMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiffMode::Implicit => "implicit",
+            DiffMode::Unroll => "unroll",
+            DiffMode::OneStep => "one-step",
+            DiffMode::Auto => "auto",
+        }
+    }
+}
+
+/// A concrete execution plan after `Auto` is resolved (`Unroll` carries the
+/// chosen term count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModeDecision {
+    Implicit,
+    Unroll(usize),
+    OneStep,
+}
+
+impl ModeDecision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModeDecision::Implicit => "implicit",
+            ModeDecision::Unroll(_) => "unroll",
+            ModeDecision::OneStep => "one-step",
+        }
+    }
+}
+
+/// Accuracy/latency policy resolving [`DiffMode::Auto`].
+#[derive(Clone, Copy, Debug)]
+pub struct ModePolicy {
+    /// Serve one-step whenever the estimated ρ stays below this: the O(ρ)
+    /// bound is then meaningful and the answer costs one Jacobian product.
+    /// The default admits every contraction the estimator can certify
+    /// (ρ bounded away from 1 by more than estimation noise).
+    pub rho_max: f64,
+    /// Relative Jacobian-error target for the unroll fallback when ρ is too
+    /// close to 1 for one-step.
+    pub err_target: f64,
+    /// Latency cap on unroll terms; needing more than this means the
+    /// iterative implicit solve is the cheaper route to `err_target`.
+    pub max_unroll: usize,
+}
+
+impl Default for ModePolicy {
+    fn default() -> Self {
+        ModePolicy { rho_max: 0.999, err_target: 1e-3, max_unroll: 512 }
+    }
+}
+
+impl ModePolicy {
+    /// Resolve `Auto` from the θ-cache state and the estimated contraction
+    /// factor at (x*, θ). `rho` comes from
+    /// [`super::one_step::estimate_contraction`] — Jacobian products only,
+    /// so the decision itself never solves, factorizes or densifies.
+    pub fn select(&self, rho: f64, cache_warm: bool) -> ModeDecision {
+        if cache_warm {
+            // A cached factorization makes implicit exact AND cheapest.
+            return ModeDecision::Implicit;
+        }
+        if rho.is_finite() && rho < self.rho_max {
+            return ModeDecision::OneStep;
+        }
+        if rho.is_finite() && rho < 1.0 {
+            // Terms needed for ρᵏ ≤ err_target.
+            let k = (self.err_target.ln() / rho.ln()).ceil();
+            if k.is_finite() && k >= 1.0 && (k as usize) <= self.max_unroll {
+                return ModeDecision::Unroll(k as usize);
+            }
+        }
+        // Not (certifiably) a contraction: Jacobian-free modes carry no
+        // bound, so pay the solve.
+        ModeDecision::Implicit
+    }
+
+    /// Resolve an explicitly requested mode (`Unroll` gets a term count
+    /// from `err_target` when the caller didn't pass one).
+    pub fn resolve(&self, mode: DiffMode, rho: f64, cache_warm: bool, iters: Option<usize>) -> ModeDecision {
+        match mode {
+            DiffMode::Implicit => ModeDecision::Implicit,
+            DiffMode::OneStep => ModeDecision::OneStep,
+            DiffMode::Unroll => {
+                ModeDecision::Unroll(iters.unwrap_or_else(|| self.default_unroll_terms(rho)))
+            }
+            DiffMode::Auto => self.select(rho, cache_warm),
+        }
+    }
+
+    /// Term count hitting `err_target` for a given ρ, clamped to
+    /// [1, `max_unroll`] (used when `"mode":"unroll"` arrives without an
+    /// explicit `"iters"`).
+    pub fn default_unroll_terms(&self, rho: f64) -> usize {
+        if !(rho.is_finite() && rho > 0.0 && rho < 1.0) {
+            return self.max_unroll;
+        }
+        let k = (self.err_target.ln() / rho.ln()).ceil();
+        (k.max(1.0) as usize).min(self.max_unroll)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_mode() {
+        for m in [DiffMode::Implicit, DiffMode::Unroll, DiffMode::OneStep, DiffMode::Auto] {
+            assert_eq!(DiffMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(DiffMode::parse("onestep"), None);
+        assert_eq!(DiffMode::parse(""), None);
+    }
+
+    #[test]
+    fn warm_cache_always_wins() {
+        let p = ModePolicy::default();
+        for rho in [0.0, 0.5, 0.9999, 2.0, f64::NAN] {
+            assert_eq!(p.select(rho, true), ModeDecision::Implicit);
+        }
+    }
+
+    #[test]
+    fn cold_cache_contractions_go_one_step() {
+        let p = ModePolicy::default();
+        assert_eq!(p.select(0.3, false), ModeDecision::OneStep);
+        assert_eq!(p.select(0.99, false), ModeDecision::OneStep);
+    }
+
+    #[test]
+    fn near_unit_rho_unrolls_and_divergent_rho_solves() {
+        let p = ModePolicy { rho_max: 0.9, err_target: 1e-3, max_unroll: 512 };
+        match p.select(0.95, false) {
+            ModeDecision::Unroll(k) => {
+                // 0.95^k ≤ 1e-3 ⇒ k ≥ 135.
+                assert!((130..=140).contains(&k), "k = {k}");
+            }
+            other => panic!("expected unroll, got {other:?}"),
+        }
+        // ρ so close to 1 that k would blow the latency cap → implicit.
+        assert_eq!(p.select(0.99999, false), ModeDecision::Implicit);
+        // Not a contraction at all → implicit.
+        assert_eq!(p.select(1.5, false), ModeDecision::Implicit);
+        assert_eq!(p.select(f64::NAN, false), ModeDecision::Implicit);
+    }
+
+    #[test]
+    fn explicit_unroll_respects_caller_iters() {
+        let p = ModePolicy::default();
+        assert_eq!(
+            p.resolve(DiffMode::Unroll, 0.5, false, Some(7)),
+            ModeDecision::Unroll(7)
+        );
+        // Without iters, fall back to the err_target-derived count.
+        match p.resolve(DiffMode::Unroll, 0.5, false, None) {
+            ModeDecision::Unroll(k) => assert!(k >= 10, "0.5^k ≤ 1e-3 needs k ≥ 10, got {k}"),
+            other => panic!("expected unroll, got {other:?}"),
+        }
+        assert_eq!(p.resolve(DiffMode::Auto, 0.5, true, None), ModeDecision::Implicit);
+        assert_eq!(p.resolve(DiffMode::OneStep, 2.0, true, None), ModeDecision::OneStep);
+    }
+}

@@ -1,0 +1,544 @@
+//! One-step differentiation (Bolte, Pauwels & Vaiter, 2023) — the third
+//! derivative mode next to implicit diff (`diff/root.rs`) and full unrolling
+//! (`unroll/`).
+//!
+//! At the converged fixed point x*(θ) = T(x*, θ) the implicit Jacobian is
+//!
+//! ```text
+//!   J_impl = (I − ∂₁T)⁻¹ ∂₂T
+//! ```
+//!
+//! One-step differentiation backpropagates through a SINGLE application of T
+//! and drops the (I − ∂₁T)⁻¹ factor entirely:
+//!
+//! ```text
+//!   J_one = ∂₂T(x*, θ),   J_impl − J_one = ∂₁T · J_impl
+//! ```
+//!
+//! so the error is controlled by the contraction factor ρ = ‖∂₁T(x*, θ)‖₂:
+//! ‖(J_impl − J_one)v‖ ≤ ρ·‖J_impl v‖. No linear system is solved, no
+//! factorization is needed and no trajectory is taped — a JVP/VJP costs one
+//! Jacobian product of T. The k-term truncation ("Neumann unrolling at x*",
+//! [`neumann_jvp`]) interpolates between the two: J_k = Σ_{i<k} (∂₁T)^i ∂₂T
+//! with error ‖(J_impl − J_k)v‖ ≤ ρᵏ·‖J_impl v‖, and k → ∞ recovers
+//! implicit diff. [`estimate_contraction`] measures ρ by power iteration on
+//! ∂₁Tᵀ∂₁T (Jacobian products only), which is what the mode-selection policy
+//! in [`super::mode`] consumes.
+//!
+//! Everything here is generic over [`FixedPointMap`]; root-map catalog
+//! entries without a native fixed point get one via [`GradientStepMap`]
+//! (T = x − η·F with η tuned by the same power iteration).
+
+use super::spec::{FixedPointMap, RootMap};
+use crate::linalg::mat::Mat;
+use crate::linalg::vecops;
+use crate::util::rng::Rng;
+
+/// One-step JVP: out = ∂₂T(x*, θ)·v, v ∈ R^n. Jacobian-free — no solve.
+pub fn one_step_jvp<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    v: &[f64],
+) -> Vec<f64> {
+    assert_eq!(v.len(), t.dim_theta(), "one_step_jvp: v must have dim_theta entries");
+    let mut out = vec![0.0; t.dim_x()];
+    t.jvp_theta(x_star, theta, v, &mut out);
+    out
+}
+
+/// One-step VJP: out = ∂₂T(x*, θ)ᵀ·u, u ∈ R^d → out ∈ R^n.
+pub fn one_step_vjp<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    u: &[f64],
+) -> Vec<f64> {
+    assert_eq!(u.len(), t.dim_x(), "one_step_vjp: u must have dim_x entries");
+    let mut out = vec![0.0; t.dim_theta()];
+    t.vjp_theta(x_star, theta, u, &mut out);
+    out
+}
+
+/// Block one-step JVP: ∂₂T·V for V ∈ R^{n×k} → R^{d×k} in one batched product.
+pub fn one_step_jvp_multi<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    v: &Mat,
+) -> Mat {
+    assert_eq!(v.rows, t.dim_theta(), "one_step_jvp_multi: V must be n × k");
+    let mut out = Mat::zeros(t.dim_x(), v.cols);
+    t.jvp_theta_batch(x_star, theta, v, &mut out);
+    out
+}
+
+/// Block one-step VJP: ∂₂Tᵀ·U for U ∈ R^{d×k} → R^{n×k}.
+pub fn one_step_vjp_multi<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    u: &Mat,
+) -> Mat {
+    assert_eq!(u.rows, t.dim_x(), "one_step_vjp_multi: U must be d × k");
+    let mut out = Mat::zeros(t.dim_theta(), u.cols);
+    t.vjp_theta_batch(x_star, theta, u, &mut out);
+    out
+}
+
+/// k-term truncated (Neumann) JVP at x*: dx_k with dx_0 = 0 and
+/// dx_{i+1} = ∂₁T·dx_i + ∂₂T·v, i.e. dx_k = Σ_{i<k} (∂₁T)^i ∂₂T v.
+/// k = 1 is exactly [`one_step_jvp`]; k → ∞ converges to the implicit JVP
+/// at rate ρᵏ when T is a contraction at x*.
+pub fn neumann_jvp<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    v: &[f64],
+    k: usize,
+) -> Vec<f64> {
+    assert!(k >= 1, "neumann_jvp: need at least one term");
+    let b = one_step_jvp(t, x_star, theta, v);
+    let mut dx = b.clone();
+    let mut tmp = vec![0.0; t.dim_x()];
+    for _ in 1..k {
+        t.jvp_x(x_star, theta, &dx, &mut tmp);
+        for i in 0..dx.len() {
+            dx[i] = tmp[i] + b[i];
+        }
+    }
+    dx
+}
+
+/// k-term truncated VJP at x*: ∂₂Tᵀ · Σ_{i<k} (∂₁Tᵀ)^i u — the exact
+/// adjoint of [`neumann_jvp`] (the same truncated sum, transposed), so the
+/// adjoint identity ⟨u, J_k v⟩ = ⟨J_kᵀ u, v⟩ holds to round-off for every k.
+pub fn neumann_vjp<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    u: &[f64],
+    k: usize,
+) -> Vec<f64> {
+    assert!(k >= 1, "neumann_vjp: need at least one term");
+    assert_eq!(u.len(), t.dim_x(), "neumann_vjp: u must have dim_x entries");
+    let mut w = u.to_vec();
+    let mut acc = u.to_vec();
+    let mut tmp = vec![0.0; t.dim_x()];
+    for _ in 1..k {
+        t.vjp_x(x_star, theta, &w, &mut tmp);
+        w.copy_from_slice(&tmp);
+        vecops::axpy(1.0, &w, &mut acc);
+    }
+    one_step_vjp(t, x_star, theta, &acc)
+}
+
+/// Block [`neumann_jvp`]: V ∈ R^{n×k_rhs} → R^{d×k_rhs}, one batched
+/// Jacobian product per Neumann term.
+pub fn neumann_jvp_multi<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    v: &Mat,
+    k: usize,
+) -> Mat {
+    assert!(k >= 1, "neumann_jvp_multi: need at least one term");
+    let b = one_step_jvp_multi(t, x_star, theta, v);
+    let mut dx = b.clone();
+    let mut tmp = Mat::zeros(dx.rows, dx.cols);
+    for _ in 1..k {
+        t.jvp_x_batch(x_star, theta, &dx, &mut tmp);
+        for (d, (ti, bi)) in dx.data.iter_mut().zip(tmp.data.iter().zip(b.data.iter())) {
+            *d = *ti + *bi;
+        }
+    }
+    dx
+}
+
+/// Block [`neumann_vjp`]: U ∈ R^{d×k_rhs} → R^{n×k_rhs}.
+pub fn neumann_vjp_multi<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    u: &Mat,
+    k: usize,
+) -> Mat {
+    assert!(k >= 1, "neumann_vjp_multi: need at least one term");
+    let mut w = u.clone();
+    let mut acc = u.clone();
+    let mut tmp = Mat::zeros(u.rows, u.cols);
+    for _ in 1..k {
+        t.vjp_x_batch(x_star, theta, &w, &mut tmp);
+        w.data.copy_from_slice(&tmp.data);
+        for (a, wi) in acc.data.iter_mut().zip(w.data.iter()) {
+            *a += *wi;
+        }
+    }
+    one_step_vjp_multi(t, x_star, theta, &acc)
+}
+
+/// Power iteration on MᵀM for a square operator M given by its forward and
+/// transposed products; returns the dominant singular value σ_max(M),
+/// approached from below. Deterministic for a fixed seed.
+fn power_sigma(
+    d: usize,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    mut apply_t: impl FnMut(&[f64], &mut [f64]),
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut v = rng.normal_vec(d);
+    let nv = vecops::norm2(&v);
+    if nv == 0.0 {
+        return 0.0;
+    }
+    vecops::scale(&mut v, 1.0 / nv);
+    let mut w = vec![0.0; d];
+    let mut z = vec![0.0; d];
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        apply(&v, &mut w);
+        sigma = vecops::norm2(&w);
+        if sigma < 1e-300 {
+            return 0.0;
+        }
+        apply_t(&w, &mut z);
+        let nz = vecops::norm2(&z);
+        if nz < 1e-300 {
+            return sigma;
+        }
+        for (vi, zi) in v.iter_mut().zip(z.iter()) {
+            *vi = *zi / nz;
+        }
+    }
+    sigma
+}
+
+/// Default power-iteration length for contraction estimation: enough for a
+/// two-digit σ_max estimate on the catalog spectra, cheap enough to run per
+/// request (each iteration is one JVP + one VJP of T, no solves).
+pub const CONTRACTION_POWER_ITERS: usize = 30;
+
+/// Estimate the contraction factor ρ = ‖∂₁T(x*, θ)‖₂ by power iteration on
+/// ∂₁Tᵀ∂₁T. Costs `iters` JVP/VJP pairs of T — no linear solves, no
+/// densification — and is deterministic for a fixed seed. The estimate
+/// approaches σ_max from below, which is why the bound assertions in the
+/// mode tests carry a slack constant C > 1.
+pub fn estimate_contraction<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    power_sigma(
+        t.dim_x(),
+        |v, o| t.jvp_x(x_star, theta, v, o),
+        |u, o| t.vjp_x(x_star, theta, u, o),
+        iters,
+        seed,
+    )
+}
+
+/// Fixed-point view of an arbitrary [`RootMap`]: T(x, θ) = x − η·F(x, θ).
+/// Any root of F is a fixed point of T, and for stationary-point mappings
+/// (F = ∇f, Hessian H ⪰ λ_min I) the tuned step η = 1/σ_max(H) makes T a
+/// contraction with ρ = 1 − λ_min/λ_max < 1. This is what gives the
+/// catalog's root-map-only problems (ridge, logreg, quad, sparse_logreg) a
+/// uniform one-step/unroll mode without writing a bespoke T for each.
+pub struct GradientStepMap<'a> {
+    pub root: &'a dyn RootMap,
+    pub eta: f64,
+}
+
+impl<'a> GradientStepMap<'a> {
+    /// Tune η = 1/σ_max(∂₁F(x, θ)) by power iteration (falls back to η = 1
+    /// when the operator is numerically zero).
+    pub fn tuned(root: &'a dyn RootMap, x: &[f64], theta: &[f64]) -> GradientStepMap<'a> {
+        let sigma = power_sigma(
+            root.dim_x(),
+            |v, o| root.jvp_x(x, theta, v, o),
+            |u, o| root.vjp_x(x, theta, u, o),
+            CONTRACTION_POWER_ITERS,
+            0x6d0de5e1,
+        );
+        let eta = if sigma > 1e-300 { 1.0 / sigma } else { 1.0 };
+        GradientStepMap { root, eta }
+    }
+}
+
+impl FixedPointMap for GradientStepMap<'_> {
+    fn dim_x(&self) -> usize {
+        self.root.dim_x()
+    }
+    fn dim_theta(&self) -> usize {
+        self.root.dim_theta()
+    }
+    fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.root.eval(x, theta, out);
+        for (o, xi) in out.iter_mut().zip(x.iter()) {
+            *o = *xi - self.eta * *o;
+        }
+    }
+    fn jvp_x(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.root.jvp_x(x, theta, v, out);
+        for (o, vi) in out.iter_mut().zip(v.iter()) {
+            *o = *vi - self.eta * *o;
+        }
+    }
+    fn vjp_x(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.root.vjp_x(x, theta, u, out);
+        for (o, ui) in out.iter_mut().zip(u.iter()) {
+            *o = *ui - self.eta * *o;
+        }
+    }
+    fn jvp_theta(&self, x: &[f64], theta: &[f64], v: &[f64], out: &mut [f64]) {
+        self.root.jvp_theta(x, theta, v, out);
+        vecops::scale(out, -self.eta);
+    }
+    fn vjp_theta(&self, x: &[f64], theta: &[f64], u: &[f64], out: &mut [f64]) {
+        self.root.vjp_theta(x, theta, u, out);
+        vecops::scale(out, -self.eta);
+    }
+    fn jvp_x_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.root.jvp_x_batch(x, theta, v, out);
+        for (o, vi) in out.data.iter_mut().zip(v.data.iter()) {
+            *o = *vi - self.eta * *o;
+        }
+    }
+    fn vjp_x_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.root.vjp_x_batch(x, theta, u, out);
+        for (o, ui) in out.data.iter_mut().zip(u.data.iter()) {
+            *o = *ui - self.eta * *o;
+        }
+    }
+    fn jvp_theta_batch(&self, x: &[f64], theta: &[f64], v: &Mat, out: &mut Mat) {
+        self.root.jvp_theta_batch(x, theta, v, out);
+        vecops::scale(&mut out.data, -self.eta);
+    }
+    fn vjp_theta_batch(&self, x: &[f64], theta: &[f64], u: &Mat, out: &mut Mat) {
+        self.root.vjp_theta_batch(x, theta, u, out);
+        vecops::scale(&mut out.data, -self.eta);
+    }
+    fn a_symmetric(&self) -> bool {
+        self.root.a_symmetric()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diff::root::implicit_jvp;
+    use crate::diff::spec::FixedPointResidual;
+    use crate::linalg::LinearSolveConfig;
+
+    /// T(x, θ) = A x + B θ with ‖A‖ < 1: implicit Jacobian (I − A)⁻¹B.
+    struct Affine {
+        a: Mat,
+        b: Mat,
+    }
+
+    impl FixedPointMap for Affine {
+        fn dim_x(&self) -> usize {
+            self.a.rows
+        }
+        fn dim_theta(&self) -> usize {
+            self.b.cols
+        }
+        fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+            self.a.matvec_into(x, out);
+            let bt = self.b.matvec(theta);
+            for i in 0..out.len() {
+                out[i] += bt[i];
+            }
+        }
+        fn jvp_x(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+            self.a.matvec_into(v, out);
+        }
+        fn vjp_x(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(&self.a.matvec_t(u));
+        }
+        fn jvp_theta(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+            self.b.matvec_into(v, out);
+        }
+        fn vjp_theta(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(&self.b.matvec_t(u));
+        }
+        fn a_symmetric(&self) -> bool {
+            false
+        }
+    }
+
+    fn affine(seed: u64, rho: f64) -> Affine {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::randn(4, 4, &mut rng);
+        // Scale to spectral norm ≈ rho (power iteration for the true norm).
+        let sigma = power_sigma(
+            4,
+            |v, o| a.matvec_into(v, o),
+            |u, o| o.copy_from_slice(&a.matvec_t(u)),
+            200,
+            1,
+        );
+        vecops::scale(&mut a.data, rho / sigma);
+        let b = Mat::randn(4, 3, &mut rng);
+        Affine { a, b }
+    }
+
+    #[test]
+    fn one_step_error_is_bounded_by_contraction_factor() {
+        let t = affine(5, 0.6);
+        let x = vec![0.0; 4];
+        let th = vec![0.1, -0.4, 0.7];
+        let v = vec![1.0, 0.5, -2.0];
+        let res = FixedPointResidual(affine(5, 0.6));
+        let (jv_impl, rep) =
+            implicit_jvp(&res, &x, &th, &v, &LinearSolveConfig::default());
+        assert!(rep.converged);
+        let jv_one = one_step_jvp(&t, &x, &th, &v);
+        let err = vecops::norm2(&vecops::sub(&jv_impl, &jv_one));
+        let rho = estimate_contraction(&t, &x, &th, 100, 7);
+        assert!((rho - 0.6).abs() < 0.01, "rho estimate {rho} should be ≈ 0.6");
+        assert!(
+            err <= 1.05 * rho * vecops::norm2(&jv_impl),
+            "one-step err {err} vs bound {}",
+            rho * vecops::norm2(&jv_impl)
+        );
+    }
+
+    #[test]
+    fn neumann_converges_geometrically_and_k1_is_one_step() {
+        let t = affine(9, 0.5);
+        let x = vec![0.0; 4];
+        let th = vec![0.3, 0.3, -0.1];
+        let v = vec![-1.0, 2.0, 0.4];
+        let res = FixedPointResidual(affine(9, 0.5));
+        let (jv_impl, _) = implicit_jvp(&res, &x, &th, &v, &LinearSolveConfig::default());
+        let k1 = neumann_jvp(&t, &x, &th, &v, 1);
+        let one = one_step_jvp(&t, &x, &th, &v);
+        for i in 0..4 {
+            assert_eq!(k1[i], one[i], "k = 1 must be exactly one-step");
+        }
+        let nj = vecops::norm2(&jv_impl);
+        let mut prev = f64::INFINITY;
+        for k in [1usize, 4, 8, 16] {
+            let jk = neumann_jvp(&t, &x, &th, &v, k);
+            let err = vecops::norm2(&vecops::sub(&jv_impl, &jk));
+            // ‖(J_impl − J_k)v‖ = ‖A^k J_impl v‖ ≤ ρ^k·‖J_impl v‖, ρ = 0.5.
+            assert!(
+                err <= 1.01 * 0.5f64.powi(k as i32) * nj + 1e-9,
+                "k = {k}: err {err} exceeds geometric bound"
+            );
+            assert!(err < prev + 1e-12, "error must not grow with k");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn neumann_vjp_is_exact_adjoint_of_neumann_jvp() {
+        let t = affine(13, 0.7);
+        let x = vec![0.2; 4];
+        let th = vec![0.5, -0.5, 1.0];
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(3);
+        let u = rng.normal_vec(4);
+        for k in [1usize, 2, 5, 9] {
+            let jv = neumann_jvp(&t, &x, &th, &v, k);
+            let ju = neumann_vjp(&t, &x, &th, &u, k);
+            let lhs = vecops::dot(&u, &jv);
+            let rhs = vecops::dot(&ju, &v);
+            assert!(
+                (lhs - rhs).abs() < 1e-12 * (1.0 + lhs.abs()),
+                "adjoint identity at k = {k}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_variants_match_column_loops() {
+        let t = affine(21, 0.4);
+        let x = vec![0.1; 4];
+        let th = vec![0.2, 0.9, -0.3];
+        let mut rng = Rng::new(4);
+        let v = Mat::randn(3, 5, &mut rng);
+        let u = Mat::randn(4, 5, &mut rng);
+        for k in [1usize, 6] {
+            let jm = neumann_jvp_multi(&t, &x, &th, &v, k);
+            let um = neumann_vjp_multi(&t, &x, &th, &u, k);
+            for j in 0..5 {
+                let jc = neumann_jvp(&t, &x, &th, &v.col(j), k);
+                let uc = neumann_vjp(&t, &x, &th, &u.col(j), k);
+                for i in 0..4 {
+                    assert!((jm.at(i, j) - jc[i]).abs() < 1e-12);
+                }
+                for i in 0..3 {
+                    assert!((um.at(i, j) - uc[i]).abs() < 1e-12);
+                }
+            }
+        }
+        let om = one_step_vjp_multi(&t, &x, &th, &u);
+        for j in 0..5 {
+            let oc = one_step_vjp(&t, &x, &th, &u.col(j));
+            for i in 0..3 {
+                assert!((om.at(i, j) - oc[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_step_map_is_a_tuned_contraction_on_spd_roots() {
+        // F = ∇f for f(x, θ) = ½xᵀQx − θᵀx with SPD Q: root map via closure-
+        // free analytic products through a tiny inline RootMap.
+        struct QuadRoot {
+            q: Mat,
+        }
+        impl RootMap for QuadRoot {
+            fn dim_x(&self) -> usize {
+                self.q.rows
+            }
+            fn dim_theta(&self) -> usize {
+                self.q.rows
+            }
+            fn eval(&self, x: &[f64], theta: &[f64], out: &mut [f64]) {
+                self.q.matvec_into(x, out);
+                for i in 0..out.len() {
+                    out[i] -= theta[i];
+                }
+            }
+            fn jvp_x(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                self.q.matvec_into(v, out);
+            }
+            fn vjp_x(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                self.q.matvec_into(u, out); // symmetric
+            }
+            fn jvp_theta(&self, _x: &[f64], _t: &[f64], v: &[f64], out: &mut [f64]) {
+                for i in 0..out.len() {
+                    out[i] = -v[i];
+                }
+            }
+            fn vjp_theta(&self, _x: &[f64], _t: &[f64], u: &[f64], out: &mut [f64]) {
+                for i in 0..out.len() {
+                    out[i] = -u[i];
+                }
+            }
+            fn a_symmetric(&self) -> bool {
+                true
+            }
+        }
+        let mut rng = Rng::new(31);
+        let q = Mat::randn(7, 5, &mut rng).gram().plus_diag(0.5);
+        let root = QuadRoot { q };
+        let x = rng.normal_vec(5);
+        let th = rng.normal_vec(5);
+        let t = GradientStepMap::tuned(&root, &x, &th);
+        let rho = estimate_contraction(&t, &x, &th, 100, 11);
+        assert!(rho < 1.0, "tuned gradient step must contract, got rho = {rho}");
+        // Fixed-point check: x* = Q⁻¹θ satisfies T(x*) = x*.
+        let chol = crate::linalg::chol::Cholesky::factor(&root.q).unwrap();
+        let xs = chol.solve(&th);
+        let txs = t.eval_vec(&xs, &th);
+        let err = vecops::norm2(&vecops::sub(&txs, &xs));
+        assert!(err < 1e-10, "x* must be a fixed point of the tuned map, err {err}");
+    }
+}

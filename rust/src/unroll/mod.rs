@@ -7,6 +7,12 @@
 //! the loop, expressed with the same JVP oracles the implicit path uses, so
 //! runtime comparisons are apples-to-apples. The reverse-mode memory model
 //! (iterations × state) drives the Fig. 13 OOM simulation.
+//!
+//! When the iterate is already converged, the tangent recursion no longer
+//! needs the trajectory: every step linearizes at the same x*, and k-step
+//! unrolling collapses to the truncated Neumann series of
+//! `diff::one_step` ([`unroll_jvp_at`] / [`unroll_vjp_at`]). That is the
+//! "unroll" serve mode: trajectory-free, solve-free, error O(ρᵏ).
 
 use crate::diff::spec::FixedPointMap;
 
@@ -87,6 +93,35 @@ pub fn unroll_vjp<T: FixedPointMap>(
     (trajectory.pop().unwrap(), grad_theta)
 }
 
+/// k-step unrolling AT a converged fixed point x* = T(x*, θ): the tangent
+/// recursion with x frozen, dx_k = Σ_{i<k} (∂₁T)^i ∂₂T v. Identical to
+/// [`unroll_jvp`] started at x0 = x* for an exactly-converged iterate, but
+/// without re-evaluating T or storing anything. k = 1 is one-step
+/// differentiation; the error against the implicit JVP is O(ρᵏ).
+pub fn unroll_jvp_at<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    v_theta: &[f64],
+    k: usize,
+) -> Vec<f64> {
+    crate::diff::one_step::neumann_jvp(t, x_star, theta, v_theta, k)
+}
+
+/// Reverse-mode counterpart of [`unroll_jvp_at`]: the exact adjoint of the
+/// k-step frozen-point tangent recursion, ∂₂Tᵀ Σ_{i<k} (∂₁Tᵀ)^i u. Unlike
+/// [`unroll_vjp`] it needs no trajectory storage (Fig. 13's memory wall
+/// does not apply at a converged point).
+pub fn unroll_vjp_at<T: FixedPointMap + ?Sized>(
+    t: &T,
+    x_star: &[f64],
+    theta: &[f64],
+    u: &[f64],
+    k: usize,
+) -> Vec<f64> {
+    crate::diff::one_step::neumann_vjp(t, x_star, theta, u, k)
+}
+
 /// Reverse-mode unrolling memory model (bytes): storing `iters` iterates of
 /// `state_dim` f32 values on device — the quantity that hits the 16 GB GPU
 /// budget in paper Fig. 13.
@@ -152,6 +187,21 @@ mod tests {
         let (_, dx) = unroll_jvp(&Affine, &[0.0], &[3.0], &[1.0], 50);
         let (_, gt) = unroll_vjp(&Affine, &[0.0], &[3.0], &[1.0], 50);
         assert!((dx[0] - gt[0]).abs() < 1e-10, "{} vs {}", dx[0], gt[0]);
+    }
+
+    #[test]
+    fn frozen_point_unroll_matches_trajectory_unroll_at_the_fixed_point() {
+        // Starting the trajectory at the exact fixed point x* = 2θ, the
+        // iterate never moves, so trajectory unrolling and the frozen-point
+        // (Neumann) form must agree term for term.
+        for k in [1usize, 3, 20] {
+            let (_, dx) = unroll_jvp(&Affine, &[6.0], &[3.0], &[1.0], k);
+            let at = unroll_jvp_at(&Affine, &[6.0], &[3.0], &[1.0], k);
+            assert!((dx[0] - at[0]).abs() < 1e-12, "k = {k}: {} vs {}", dx[0], at[0]);
+            let (_, gt) = unroll_vjp(&Affine, &[6.0], &[3.0], &[1.0], k);
+            let at_v = unroll_vjp_at(&Affine, &[6.0], &[3.0], &[1.0], k);
+            assert!((gt[0] - at_v[0]).abs() < 1e-12, "vjp k = {k}");
+        }
     }
 
     #[test]

@@ -1,11 +1,70 @@
-//! Mini property-based-testing kit (proptest is not available offline).
+//! Mini property-based-testing kit (proptest is not available offline),
+//! plus the crate's ONE finite-difference referee.
 //!
 //! `Gen<T>` generators produce random values from an `Rng`; `check` runs a
 //! property over many cases and, on failure, performs greedy shrinking (for
 //! the built-in numeric/vector generators) before panicking with the minimal
 //! counter-example found.
+//!
+//! [`fd_jvp`] / [`fd_jvp_central`] are the single central-difference
+//! implementation every derivative test in the crate compares against
+//! (`ad::num_grad` delegates here, and the grad_check / mode sweeps call it
+//! directly), so implicit, unrolled and one-step modes are all refereed with
+//! identical FD tolerances.
 
 use super::rng::Rng;
+
+// ------------------------------------------------ finite differences --
+
+/// Plain central-difference JVP: (f(x + hv) − f(x − hv)) / 2h. This is the
+/// shared implementation behind `ad::num_grad::jvp_fd`; prefer [`fd_jvp`]
+/// in tests of piecewise-smooth mappings.
+pub fn fd_jvp_central(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], v: &[f64], h: f64) -> Vec<f64> {
+    let xp: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi + h * vi).collect();
+    let xm: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi - h * vi).collect();
+    let fp = f(&xp);
+    let fm = f(&xm);
+    fp.iter().zip(&fm).map(|(&a, &b)| (a - b) / (2.0 * h)).collect()
+}
+
+/// Kink-aware central-difference JVP: refuses to answer at kinks. If the
+/// forward difference (f(x+hv) − f(x))/h and the backward difference
+/// (f(x) − f(x−hv))/h disagree by more than `kink_tol` relative to the
+/// larger one-sided slope, the segment [x − hv, x + hv] straddles a
+/// non-smooth point and the draw should be skipped (`None`) rather than
+/// compared against a meaningless central difference.
+///
+/// Tolerance coupling used by the sweeps: a derivative jump smaller than
+/// half the comparison tolerance cannot fail the check (central
+/// differencing averages the two sides), and a larger one flags the draw —
+/// so callers pass `kink_tol = 0.5 * fd_tol`.
+pub fn fd_jvp(
+    f: impl Fn(&[f64]) -> Vec<f64>,
+    x: &[f64],
+    v: &[f64],
+    h: f64,
+    kink_tol: f64,
+) -> Option<Vec<f64>> {
+    let f0 = f(x);
+    let xp: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi + h * vi).collect();
+    let xm: Vec<f64> = x.iter().zip(v).map(|(&xi, &vi)| xi - h * vi).collect();
+    let fp = f(&xp);
+    let fm = f(&xm);
+    let mut scale = 1.0f64;
+    let mut max_gap = 0.0f64;
+    let mut central = vec![0.0; f0.len()];
+    for i in 0..f0.len() {
+        let fwd = (fp[i] - f0[i]) / h;
+        let bwd = (f0[i] - fm[i]) / h;
+        central[i] = (fp[i] - fm[i]) / (2.0 * h);
+        scale = scale.max(fwd.abs()).max(bwd.abs());
+        max_gap = max_gap.max((fwd - bwd).abs());
+    }
+    if max_gap > kink_tol * scale {
+        return None; // kink between x−hv and x+hv
+    }
+    Some(central)
+}
 
 /// A generator of values of type T.
 pub struct Gen<T> {
@@ -171,5 +230,27 @@ mod tests {
         let (a, b) = g.sample(&mut r);
         assert!(a < 4);
         assert!((0.0..1.0).contains(&b));
+    }
+
+    #[test]
+    fn fd_jvp_smooth_matches_central() {
+        let f = |x: &[f64]| vec![x[0] * x[0] - x[1], x[1].exp()];
+        let x = [0.7, -0.3];
+        let v = [1.0, 2.0];
+        let kk = fd_jvp(f, &x, &v, 1e-6, 1e-4).expect("smooth point must not be flagged");
+        let cc = fd_jvp_central(f, &x, &v, 1e-6);
+        for i in 0..2 {
+            assert_eq!(kk[i], cc[i], "kink-aware central must equal the plain one");
+        }
+        assert!((kk[0] - (2.0 * 0.7 - 2.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fd_jvp_flags_kinks() {
+        // |x| straddled at the origin: forward slope +1, backward −1.
+        let f = |x: &[f64]| vec![x[0].abs()];
+        assert!(fd_jvp(f, &[0.0], &[1.0], 1e-6, 1e-4).is_none());
+        // Away from the kink the one-sided slopes agree.
+        assert!(fd_jvp(f, &[0.5], &[1.0], 1e-6, 1e-4).is_some());
     }
 }

@@ -40,40 +40,9 @@ use idiff::proj::simplex::SimplexProjection;
 use idiff::proj::Projection;
 use idiff::prox::LassoProx;
 use idiff::util::rng::Rng;
-use idiff::util::testkit::{check, Gen};
+use idiff::util::testkit::{check, fd_jvp, Gen};
 
 // ------------------------------------------------------------- helpers --
-
-/// Central-difference JVP that refuses to answer at kinks: if the forward
-/// and backward one-sided differences disagree, the segment [x−hv, x+hv]
-/// straddles a non-smooth point and the draw is skipped.
-fn trusted_fd_jvp(
-    f: impl Fn(&[f64]) -> Vec<f64>,
-    x: &[f64],
-    v: &[f64],
-    h: f64,
-    kink_tol: f64,
-) -> Option<Vec<f64>> {
-    let f0 = f(x);
-    let xp: Vec<f64> = x.iter().zip(v).map(|(a, b)| a + h * b).collect();
-    let xm: Vec<f64> = x.iter().zip(v).map(|(a, b)| a - h * b).collect();
-    let fp = f(&xp);
-    let fm = f(&xm);
-    let mut scale = 1.0f64;
-    let mut max_gap = 0.0f64;
-    let mut central = vec![0.0; f0.len()];
-    for i in 0..f0.len() {
-        let fwd = (fp[i] - f0[i]) / h;
-        let bwd = (f0[i] - fm[i]) / h;
-        central[i] = (fp[i] - fm[i]) / (2.0 * h);
-        scale = scale.max(fwd.abs()).max(bwd.abs());
-        max_gap = max_gap.max((fwd - bwd).abs());
-    }
-    if max_gap > kink_tol * scale {
-        return None; // kink between x−hv and x+hv
-    }
-    Some(central)
-}
 
 fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
     let scale = a.iter().chain(b).fold(1.0f64, |m, v| m.max(v.abs()));
@@ -99,7 +68,7 @@ fn sweep_draw(m: &dyn RootMap, x: &[f64], theta: &[f64], dir_seed: u64, fd_tol: 
     // jvp_x vs FD in x
     let mut jx = vec![0.0; d];
     m.jvp_x(x, theta, &v_x, &mut jx);
-    match trusted_fd_jvp(|xx| m.eval_vec(xx, theta), x, &v_x, 1e-6, kink_tol) {
+    match fd_jvp(|xx| m.eval_vec(xx, theta), x, &v_x, 1e-6, kink_tol) {
         Some(fd) => {
             if !close(&jx, &fd, fd_tol) {
                 eprintln!("jvp_x mismatch:\n  analytic {jx:?}\n  fd       {fd:?}");
@@ -112,7 +81,7 @@ fn sweep_draw(m: &dyn RootMap, x: &[f64], theta: &[f64], dir_seed: u64, fd_tol: 
     // jvp_theta vs FD in θ
     let mut jt = vec![0.0; d];
     m.jvp_theta(x, theta, &v_t, &mut jt);
-    match trusted_fd_jvp(|tt| m.eval_vec(x, tt), theta, &v_t, 1e-6, kink_tol) {
+    match fd_jvp(|tt| m.eval_vec(x, tt), theta, &v_t, 1e-6, kink_tol) {
         Some(fd) => {
             if !close(&jt, &fd, fd_tol) {
                 eprintln!("jvp_theta mismatch:\n  analytic {jt:?}\n  fd       {fd:?}");
@@ -400,6 +369,141 @@ fn unroll_jvp_converges_to_implicit_jvp() {
     let err_long = vecops::norm2(&vecops::sub(&dx_unroll, &dx_impl));
     let err_short = vecops::norm2(&vecops::sub(&dx_short, &dx_impl));
     assert!(err_short > 10.0 * err_long.max(1e-12), "short {err_short} vs long {err_long}");
+}
+
+// ------------- 3b. three-mode equivalence (implicit / unroll / one-step) --
+
+/// One catalog fixed-point map through all three derivative modes at its
+/// converged x*: the Neumann JVP/VJP pair satisfies the adjoint identity
+/// EXACTLY for every truncation k; one-step (k = 1) is refereed against the
+/// kink-aware FD oracle on ∂₂T; and both solve-free modes land within the
+/// Bolte-style contraction bounds of the implicit answer — O(ρ) for
+/// one-step, O(ρᵏ) and non-increasing for unroll(k).
+fn mode_equivalence_case<T: idiff::diff::spec::FixedPointMap>(
+    name: &str,
+    t: T,
+    theta: &[f64],
+    x0: &[f64],
+    fd_tol: f64,
+    dir_seed: u64,
+) {
+    use idiff::diff::spec::FixedPointMap;
+    use idiff::diff::{estimate_contraction, neumann_jvp, neumann_vjp, one_step_jvp};
+    let d = t.dim_x();
+    let n = t.dim_theta();
+    // Converge x* by iterating the map itself (it contracts by fixture
+    // construction, so this is also a convergence check).
+    let mut x = x0.to_vec();
+    let mut nx = vec![0.0; d];
+    for _ in 0..60_000 {
+        t.eval(&x, theta, &mut nx);
+        let delta = vecops::norm2(&vecops::sub(&x, &nx));
+        std::mem::swap(&mut x, &mut nx);
+        if delta < 1e-14 {
+            break;
+        }
+    }
+    let x_star = x;
+    let mut rng = Rng::new(dir_seed);
+    let v_t = rng.normal_vec(n);
+    let u = rng.normal_vec(d);
+
+    let rho = estimate_contraction(&t, &x_star, theta, 60, 0xabc);
+    assert!(rho.is_finite() && rho < 1.0, "{name}: rho = {rho}");
+
+    // Adjoint identity ⟨u, J_k v⟩ = ⟨J_kᵀ u, v⟩ — exact (same finite sum
+    // transposed, no solver in sight), for every truncation depth.
+    for k in [1usize, 3, 7] {
+        let jv = neumann_jvp(&t, &x_star, theta, &v_t, k);
+        let ju = neumann_vjp(&t, &x_star, theta, &u, k);
+        let lhs = vecops::dot(&u, &jv);
+        let rhs = vecops::dot(&ju, &v_t);
+        assert!(
+            (lhs - rhs).abs() <= 1e-10 * lhs.abs().max(rhs.abs()).max(1.0),
+            "{name} k={k}: adjoint identity {lhs} vs {rhs}"
+        );
+    }
+
+    // One-step IS ∂₂T — referee it against the shared kink-aware FD oracle
+    // (a draw straddling a prox/projection kink is skipped, same policy as
+    // the RootMap sweeps).
+    let os = one_step_jvp(&t, &x_star, theta, &v_t);
+    if let Some(fd) = fd_jvp(|tt| t.eval_vec(&x_star, tt), theta, &v_t, 1e-6, 0.5 * fd_tol) {
+        assert!(
+            close(&os, &fd, fd_tol),
+            "{name}: one-step jvp vs fd\n  {os:?}\n  {fd:?}"
+        );
+    }
+
+    // Contraction bounds against the implicit-diff answer. NormalCg handles
+    // the non-symmetric PG/prox residuals (same choice as the registry).
+    let res = FixedPointResidual(t);
+    let cfg = LinearSolveConfig {
+        kind: idiff::linalg::solve::LinearSolverKind::NormalCg,
+        tol: 1e-11,
+        max_iter: 4000,
+        ..Default::default()
+    };
+    let (jv_imp, rep) = implicit_jvp(&res, &x_star, theta, &v_t, &cfg);
+    assert!(rep.converged, "{name}: implicit solve {rep:?}");
+    let nj = vecops::norm2(&jv_imp);
+    let err_vs_imp = |a: &[f64]| vecops::norm2(&vecops::sub(a, &jv_imp));
+    let e1 = err_vs_imp(&os);
+    // slack 1.15: the power-iteration ρ̂ approaches σ_max(∂₁T) from below
+    assert!(
+        e1 <= 1.15 * rho * nj + 1e-9,
+        "{name}: one-step err {e1} vs bound rho {rho} · ‖Jv‖ {nj}"
+    );
+    let mut prev = f64::INFINITY;
+    for k in [1usize, 2, 4, 8, 16] {
+        let jk = neumann_jvp(&res.0, &x_star, theta, &v_t, k);
+        let ek = err_vs_imp(&jk);
+        assert!(
+            ek <= 1.15 * rho.powi(k as i32) * nj + 1e-9,
+            "{name} k={k}: err {ek} vs rho^k bound (rho {rho}, ‖Jv‖ {nj})"
+        );
+        assert!(ek <= prev + 1e-12, "{name} k={k}: unroll error must not grow");
+        prev = ek;
+    }
+}
+
+/// λ_max by power iteration — fixture step sizes must actually contract.
+fn lambda_max(q: &Mat) -> f64 {
+    let mut v = vec![1.0; q.rows];
+    let mut lam = 1.0;
+    for _ in 0..100 {
+        let mut w = q.matvec(&v);
+        lam = vecops::norm2(&w).max(1e-30);
+        for wi in w.iter_mut() {
+            *wi /= lam;
+        }
+        v = w;
+    }
+    lam
+}
+
+#[test]
+fn three_mode_equivalence_gd_quadratic() {
+    let quad = random_quad(6, 3, 41);
+    let eta = 0.9 / lambda_max(&quad.q);
+    let fp = GradientDescentFixedPoint { obj: quad, eta };
+    mode_equivalence_case("gd-quad", fp, &[0.4, -0.8, 1.1], &[0.0; 6], 2e-4, 0x3a01);
+}
+
+#[test]
+fn three_mode_equivalence_prox_grad_lasso() {
+    let quad = random_quad(6, 2, 42);
+    let eta = 0.9 / lambda_max(&quad.q);
+    let t = ProxGradFixedPoint::new(quad, LassoProx { d: 6 }, eta);
+    mode_equivalence_case("prox-lasso", t, &[0.3, -0.4, 0.25], &[0.0; 6], 5e-4, 0x3a02);
+}
+
+#[test]
+fn three_mode_equivalence_proj_grad_simplex() {
+    let quad = random_quad(5, 2, 43);
+    let eta = 0.9 / lambda_max(&quad.q);
+    let t = ProjGradFixedPoint::new(quad, SimplexProjection { d: 5 }, eta);
+    mode_equivalence_case("proj-simplex", t, &[0.6, -0.2], &[0.2; 5], 5e-4, 0x3a03);
 }
 
 // --------------------- 4. sparse designs & arithmetic-policy checks --

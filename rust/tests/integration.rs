@@ -323,3 +323,93 @@ fn concurrent_tcp_clients_share_one_block_solve() {
     assert_eq!(server.stats.block_solves.load(Ordering::Relaxed), 1, "repeat θ: no new solves");
     assert_eq!(server.stats.inner_solves.load(Ordering::Relaxed), 1);
 }
+
+#[test]
+fn concurrent_auto_mode_on_cold_theta_is_solve_and_factorization_free() {
+    // The one-step serve acceptance property end-to-end over TCP: k clients
+    // firing `"mode":"auto"` hypergrads at a cold θ get one-step answers
+    // from ONE shared inner solve — zero iterative block solves, zero
+    // factorizations, zero dense materializations, θ-cache untouched. After
+    // an implicit request warms the cache, auto flips to the factored
+    // implicit path.
+    use idiff::coordinator::serve::{ServeConfig, Server};
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+    let n = 4;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = std::sync::Arc::new(Server::new(ServeConfig {
+        batch_window: std::time::Duration::from_secs(10),
+        batch_max: n,
+        workers: n + 1,
+        ..ServeConfig::default()
+    }));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
+    let theta = "[1.3,1.3,1.3,1.3,1.3,1.3,1.3,1.3]";
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let v: Vec<String> =
+                    (0..8).map(|j| if j == i { "1.0".into() } else { "0.0".into() }).collect();
+                let req = format!(
+                    "{{\"op\":\"hypergrad\",\"problem\":\"ridge\",\"theta\":{theta},\"v\":[{}],\"mode\":\"auto\"}}\n",
+                    v.join(",")
+                );
+                stream.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.contains("\"grad\""), "{line}");
+                assert!(line.contains(&format!("\"batched\":{n}")), "{line}");
+                assert!(line.contains("\"cached\":false"), "{line}");
+                assert!(line.contains("\"mode\":\"auto\""), "{line}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        server.stats.block_solves.load(Ordering::Relaxed),
+        0,
+        "auto on a cold contraction must answer without any iterative solve"
+    );
+    assert_eq!(server.stats.factorizations.load(Ordering::Relaxed), 0);
+    assert_eq!(server.stats.densified.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        server.stats.inner_solves.load(Ordering::Relaxed),
+        1,
+        "the batch leader solves the inner problem once for everyone"
+    );
+    // Warm the θ-cache through an implicit request…
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let req = format!(
+        "{{\"op\":\"hypergrad\",\"problem\":\"ridge\",\"theta\":{theta},\"v\":[1,1,1,1,1,1,1,1]}}\n"
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"mode\":\"implicit\""), "{line}");
+    assert_eq!(server.stats.factorizations.load(Ordering::Relaxed), 1);
+    // …after which auto serves the factored implicit answer.
+    let req = format!(
+        "{{\"op\":\"hypergrad\",\"problem\":\"ridge\",\"theta\":{theta},\"v\":[1,1,1,1,1,1,1,1],\"mode\":\"auto\"}}\n"
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"cached\":true"), "{line}");
+    assert!(line.contains("\"mode\":\"implicit\""), "{line}");
+    assert_eq!(
+        server.stats.factorizations.load(Ordering::Relaxed),
+        1,
+        "the warm-cache auto path must not refactorize"
+    );
+}
