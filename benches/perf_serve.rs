@@ -9,17 +9,29 @@
 //! - `unique-theta`: every request is a fresh θ — worst case, every request
 //!   pays an inner solve + block solve (batching can still coalesce nothing).
 //!
+//! Two extra shapes ride along:
+//!
+//! - `proto=json` vs `proto=binary`: identical unique-θ k=32 traffic over
+//!   the JSON line protocol and the zero-copy binary frame protocol — the
+//!   journaled p50/p95 ratio is the wire-format tax.
+//! - `restart cold` vs `restart warm`: a fresh server paying every
+//!   factorization, then a rebooted server warm-started from the first
+//!   one's manifest replaying the same θ-pool traffic (expected: ZERO new
+//!   factorizations).
+//!
 //! Journals mean/median/p95 latency and requests/s to `BENCH_serve.json`
 //! (uploaded by CI next to `BENCH_linalg.json`).
 //!
 //! Run: cargo bench --bench perf_serve [-- --requests 80]
 
+use idiff::coordinator::serve::wire::{self, RequestFrame};
 use idiff::coordinator::serve::{ServeConfig, Server};
 use idiff::util::cli::Args;
 use idiff::util::json::Json;
 use idiff::util::timer::Timer;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -28,6 +40,12 @@ enum Traffic {
     SharedTheta,
     ThetaPool,
     UniqueTheta,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Proto {
+    Json,
+    Binary,
 }
 
 /// `cell` salts the unique-theta stream so no bench cell replays a θ an
@@ -51,34 +69,14 @@ fn run_load(
     clients: usize,
     requests_per_client: usize,
     traffic: Traffic,
+    proto: Proto,
 ) -> (f64, Vec<f64>) {
     let t = Timer::start();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
-            std::thread::spawn(move || {
-                let mut lat = Vec::with_capacity(requests_per_client);
-                let stream = TcpStream::connect(addr).expect("connect");
-                let mut writer = stream.try_clone().unwrap();
-                let mut reader = BufReader::new(stream);
-                let mut line = String::new();
-                for i in 0..requests_per_client {
-                    let theta = theta_for(traffic, cell, c, i, 8);
-                    let v = vec![1.0; 8];
-                    let req = Json::obj(vec![
-                        ("op", Json::Str("hypergrad".into())),
-                        ("problem", Json::Str("ridge".into())),
-                        ("theta", Json::arr_f64(&theta)),
-                        ("v", Json::arr_f64(&v)),
-                    ]);
-                    let rt = Timer::start();
-                    writer.write_all(req.to_string_compact().as_bytes()).unwrap();
-                    writer.write_all(b"\n").unwrap();
-                    line.clear();
-                    reader.read_line(&mut line).unwrap();
-                    lat.push(rt.elapsed_s());
-                    assert!(line.contains("\"grad\""), "bad reply: {line}");
-                }
-                lat
+            std::thread::spawn(move || match proto {
+                Proto::Json => json_client(addr, cell, c, requests_per_client, traffic),
+                Proto::Binary => binary_client(addr, cell, c, requests_per_client, traffic),
             })
         })
         .collect();
@@ -87,6 +85,72 @@ fn run_load(
         latencies.extend(h.join().unwrap());
     }
     (t.elapsed_s(), latencies)
+}
+
+fn json_client(
+    addr: std::net::SocketAddr,
+    cell: usize,
+    c: usize,
+    requests_per_client: usize,
+    traffic: Traffic,
+) -> Vec<f64> {
+    let mut lat = Vec::with_capacity(requests_per_client);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    for i in 0..requests_per_client {
+        let theta = theta_for(traffic, cell, c, i, 8);
+        let v = vec![1.0; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&v)),
+        ]);
+        let rt = Timer::start();
+        writer.write_all(req.to_string_compact().as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        lat.push(rt.elapsed_s());
+        assert!(line.contains("\"grad\""), "bad reply: {line}");
+    }
+    lat
+}
+
+fn binary_client(
+    addr: std::net::SocketAddr,
+    cell: usize,
+    c: usize,
+    requests_per_client: usize,
+    traffic: Traffic,
+) -> Vec<f64> {
+    let mut lat = Vec::with_capacity(requests_per_client);
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut frame = Vec::new();
+    for i in 0..requests_per_client {
+        let theta = theta_for(traffic, cell, c, i, 8);
+        let v = vec![1.0; 8];
+        frame.clear();
+        wire::encode_request(
+            &RequestFrame {
+                opcode: wire::OP_VJP,
+                problem: "ridge",
+                theta: &theta,
+                v: &v,
+                ..RequestFrame::control(wire::OP_VJP)
+            },
+            &mut frame,
+        );
+        let rt = Timer::start();
+        stream.write_all(&frame).unwrap();
+        let reply = wire::read_reply(&mut stream).unwrap();
+        lat.push(rt.elapsed_s());
+        assert_eq!(reply.status, wire::STATUS_OK, "bad reply: {:?}", reply.error);
+        assert_eq!(reply.data.len(), 8);
+    }
+    lat
 }
 
 fn pct(sorted: &[f64], q: f64) -> f64 {
@@ -128,7 +192,7 @@ fn main() {
     ] {
         for &k in &[1usize, 8, 32] {
             cell += 1;
-            let (wall, mut lat) = run_load(addr, cell, k, requests, traffic);
+            let (wall, mut lat) = run_load(addr, cell, k, requests, traffic, Proto::Json);
             lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let n = lat.len();
             let rps = n as f64 / wall;
@@ -152,6 +216,112 @@ fn main() {
             ]));
         }
     }
+    // ---- wire-format tax: JSON vs binary on identical unique-θ traffic ----
+    // Unique θ's mean every request pays the full solve on both wires, so
+    // the p50/p95 gap is down to framing + float formatting/parsing alone.
+    let mut proto_p50 = [0.0f64; 2];
+    let mut proto_p95 = [0.0f64; 2];
+    for (slot, (pname, proto)) in
+        [("json", Proto::Json), ("binary", Proto::Binary)].into_iter().enumerate()
+    {
+        cell += 1;
+        let (wall, mut lat) = run_load(addr, cell, 32, requests, Traffic::UniqueTheta, proto);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = lat.len();
+        let rps = n as f64 / wall;
+        let mean = lat.iter().sum::<f64>() / n as f64;
+        proto_p50[slot] = pct(&lat, 0.5);
+        proto_p95[slot] = pct(&lat, 0.95);
+        println!(
+            "serve unique-theta k=32 proto={pname:<6}: {rps:>9.0} req/s  mean {:.3} ms  p50 {:.3} ms  p95 {:.3} ms",
+            mean * 1e3,
+            proto_p50[slot] * 1e3,
+            proto_p95[slot] * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("serve unique-theta k=32 proto={pname}"))),
+            ("traffic", Json::Str("unique-theta".into())),
+            ("proto", Json::Str(pname.into())),
+            ("clients", Json::Num(32.0)),
+            ("requests", Json::Num(n as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("rps", Json::Num(rps)),
+            ("mean_s", Json::Num(mean)),
+            ("p50_s", Json::Num(proto_p50[slot])),
+            ("p95_s", Json::Num(proto_p95[slot])),
+        ]));
+    }
+    // Ratio > 1.0 means binary is faster. Journaled, not asserted — shared
+    // CI runners are too noisy for a hard latency gate.
+    println!(
+        "proto comparison: binary is {:.2}x at p50, {:.2}x at p95 vs JSON",
+        proto_p50[0] / proto_p50[1],
+        proto_p95[0] / proto_p95[1]
+    );
+    rows.push(Json::obj(vec![
+        ("name", Json::Str("proto-comparison unique-theta k=32".into())),
+        ("json_p50_s", Json::Num(proto_p50[0])),
+        ("binary_p50_s", Json::Num(proto_p50[1])),
+        ("json_p95_s", Json::Num(proto_p95[0])),
+        ("binary_p95_s", Json::Num(proto_p95[1])),
+        ("p50_speedup", Json::Num(proto_p50[0] / proto_p50[1])),
+        ("p95_speedup", Json::Num(proto_p95[0] / proto_p95[1])),
+    ]));
+
+    // ---- cold vs warm restart: same θ-pool traffic, before/after reboot ---
+    // Life 1 pays a factorization per pool θ and persists its manifest;
+    // life 2 warm-starts from it and must pay ZERO new factorizations.
+    let manifest =
+        std::env::temp_dir().join(format!("idiff_manifest_bench_{}.json", std::process::id()));
+    for phase in ["cold", "warm"] {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let phase_addr = listener.local_addr().unwrap();
+        let srv = Arc::new(Server::new(ServeConfig {
+            batch_window: Duration::from_millis(1),
+            workers: 40,
+            ..ServeConfig::default()
+        }));
+        if phase == "warm" {
+            let warm = srv.load_manifest(&manifest).expect("load manifest");
+            assert!(warm.cold_start.is_none(), "bench warm start fell back: {:?}", warm.cold_start);
+        }
+        {
+            let srv = srv.clone();
+            std::thread::spawn(move || {
+                let _ = srv.serve_on(listener);
+            });
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let (wall, mut lat) = run_load(phase_addr, 0, 8, requests, Traffic::ThetaPool, Proto::Binary);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = lat.len();
+        let facts = srv.stats.factorizations.load(Ordering::Relaxed);
+        println!(
+            "serve restart {phase:<4}: {:>9.0} req/s  p50 {:.3} ms  p95 {:.3} ms  factorizations {facts}",
+            n as f64 / wall,
+            pct(&lat, 0.5) * 1e3,
+            pct(&lat, 0.95) * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("serve restart {phase}"))),
+            ("phase", Json::Str(phase.into())),
+            ("clients", Json::Num(8.0)),
+            ("requests", Json::Num(n as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("rps", Json::Num(n as f64 / wall)),
+            ("p50_s", Json::Num(pct(&lat, 0.5))),
+            ("p95_s", Json::Num(pct(&lat, 0.95))),
+            ("factorizations", Json::Num(facts as f64)),
+        ]));
+        if phase == "cold" {
+            assert!(facts > 0, "cold phase should have factorized the θ pool");
+            srv.save_manifest(&manifest).expect("save manifest");
+        } else {
+            assert_eq!(facts, 0, "warm restart must not re-factorize pool θ's");
+        }
+    }
+    let _ = std::fs::remove_file(&manifest);
+
     // Final engine counters: how much the batcher and cache absorbed.
     let stats = server.handle(r#"{"op":"stats"}"#);
     println!("engine stats: {}", stats.to_string_compact());

@@ -12,6 +12,7 @@
 use crate::diff::mode::DiffMode;
 use crate::linalg::mat::Mat;
 use crate::linalg::solve::SolvePrecision;
+use crate::util::pool::PoolVec;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -75,7 +76,9 @@ impl BatchKey {
 type BatchResult = Result<Mat, String>;
 
 struct BatchState {
-    inputs: Vec<Vec<f64>>,
+    /// Pooled input columns; the leader drops them (returning the buffers)
+    /// as soon as the dense block is assembled.
+    inputs: Vec<PoolVec>,
     /// Set once the leader has taken the inputs; late arrivals must retry
     /// into a fresh batch.
     closed: bool,
@@ -140,11 +143,14 @@ impl Batcher {
     pub fn submit(
         &self,
         key: BatchKey,
-        v: Vec<f64>,
+        v: PoolVec,
         rows: usize,
         compute: impl FnOnce(&Mat) -> BatchResult,
     ) -> (Result<Vec<f64>, String>, usize) {
         assert_eq!(v.len(), rows, "batch column length mismatch");
+        // Moved (not cloned) into whichever batch actually admits us — a
+        // race with a closing leader retries with the buffer still in hand.
+        let mut v = Some(v);
         loop {
             let batch = {
                 let mut open = self.open.lock().unwrap();
@@ -157,7 +163,7 @@ impl Batcher {
                     // fresh one.
                     continue;
                 }
-                st.inputs.push(v.clone());
+                st.inputs.push(v.take().expect("column consumed by a closed batch"));
                 let idx = st.inputs.len() - 1;
                 if st.inputs.len() >= self.max_batch {
                     // Wake a leader waiting out its window.
@@ -235,6 +241,9 @@ impl Batcher {
         for (j, col) in inputs.iter().enumerate() {
             block.set_col(j, col);
         }
+        // Input buffers go back to the pool before the (possibly long)
+        // compute, not after.
+        drop(inputs);
         // Phase 4: one block compute for the whole batch; a panic becomes a
         // shared error rather than a hang.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute(&block)))
@@ -254,6 +263,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::pool::Pool;
     use std::sync::atomic::AtomicUsize;
 
     /// N threads on one key with `max_batch = N`: exactly one compute over
@@ -262,14 +272,16 @@ mod tests {
     fn coalesces_concurrent_requests_into_one_compute() {
         let n = 6;
         let batcher = Arc::new(Batcher::new(Duration::from_secs(5), n));
+        let pool = Pool::new(8);
         let computes = Arc::new(AtomicUsize::new(0));
         let handles: Vec<_> = (0..n)
             .map(|i| {
                 let b = batcher.clone();
+                let pool = pool.clone();
                 let c = computes.clone();
                 std::thread::spawn(move || {
                     let key = BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64);
-                    let v = vec![i as f64; 3];
+                    let v = pool.take_f64_copy(&[i as f64; 3]);
                     let (res, size) = b.submit(key, v, 3, |block| {
                         c.fetch_add(1, Ordering::SeqCst);
                         // compute: 2× each column
@@ -297,14 +309,19 @@ mod tests {
     #[test]
     fn different_keys_do_not_coalesce() {
         let batcher = Batcher::new(Duration::from_millis(0), 8);
-        let (a, sa) =
-            batcher.submit(BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64), vec![1.0], 1, |b| {
-                Ok(b.clone())
-            });
-        let (c, sc) =
-            batcher.submit(BatchKey::new("p", BatchOp::Jvp, &[1.0], SolvePrecision::F64), vec![2.0], 1, |b| {
-                Ok(b.clone())
-            });
+        let pool = Pool::new(8);
+        let (a, sa) = batcher.submit(
+            BatchKey::new("p", BatchOp::Vjp, &[1.0], SolvePrecision::F64),
+            pool.take_f64_copy(&[1.0]),
+            1,
+            |b| Ok(b.clone()),
+        );
+        let (c, sc) = batcher.submit(
+            BatchKey::new("p", BatchOp::Jvp, &[1.0], SolvePrecision::F64),
+            pool.take_f64_copy(&[2.0]),
+            1,
+            |b| Ok(b.clone()),
+        );
         assert_eq!((a.unwrap(), sa), (vec![1.0], 1));
         assert_eq!((c.unwrap(), sc), (vec![2.0], 1));
         assert_eq!(batcher.stats().0, 2);
@@ -335,10 +352,14 @@ mod tests {
     #[test]
     fn compute_error_reaches_every_member_and_panic_is_caught() {
         let batcher = Batcher::new(Duration::from_millis(0), 4);
+        let pool = Pool::new(8);
         let key = BatchKey::new("p", BatchOp::Vjp, &[2.0], SolvePrecision::F64);
-        let (res, _) = batcher.submit(key.clone(), vec![0.0], 1, |_| Err("boom".into()));
+        let (res, _) =
+            batcher.submit(key.clone(), pool.take_f64(1), 1, |_| Err("boom".into()));
         assert_eq!(res.unwrap_err(), "boom");
-        let (res, _) = batcher.submit(key, vec![0.0], 1, |_| panic!("kaput"));
+        let (res, _) = batcher.submit(key, pool.take_f64(1), 1, |_| panic!("kaput"));
         assert!(res.unwrap_err().contains("panicked"));
+        // The leader returned both input buffers to the pool.
+        assert_eq!(pool.stats().recycled, 2);
     }
 }

@@ -25,6 +25,12 @@ impl ThetaKey {
             bits: theta.iter().map(|t| t.to_bits()).collect(),
         }
     }
+
+    /// Reconstruct θ from the stored bit patterns (exact — the manifest
+    /// round trip depends on it).
+    pub fn theta(&self) -> Vec<f64> {
+        self.bits.iter().map(|&b| f64::from_bits(b)).collect()
+    }
 }
 
 /// One cached (x*, factorization) pair, shared by reference so readers never
@@ -109,6 +115,98 @@ impl FactorCache {
             self.evictions.load(Ordering::Relaxed),
         )
     }
+
+    /// Every live entry, least-recently-used first — reinserting a snapshot
+    /// in order reproduces the recency ranking (manifest persistence).
+    pub fn snapshot(&self) -> Vec<(ThetaKey, CacheEntry)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .order
+            .iter()
+            .filter_map(|k| inner.map.get(k).map(|e| (k.clone(), e.clone())))
+            .collect()
+    }
+}
+
+struct RhoInner {
+    map: HashMap<ThetaKey, f64>,
+    order: Vec<ThetaKey>,
+}
+
+/// θ-keyed LRU of contraction estimates ρ(x*, θ) from power iteration.
+///
+/// `"mode":"auto"` (and depth-free unroll) needs ρ to pick a mode, and the
+/// power iteration costs tens of Jacobian products — by far the dominant
+/// term once the answer itself is solve-free. Repeat-(problem, θ) requests
+/// must pay it once; this cache is keyed exactly like [`FactorCache`] and
+/// persists in the same manifest.
+pub struct RhoCache {
+    inner: Mutex<RhoInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RhoCache {
+    pub fn new(capacity: usize) -> RhoCache {
+        RhoCache {
+            inner: Mutex::new(RhoInner { map: HashMap::new(), order: Vec::new() }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up ρ; refreshes recency on hit.
+    pub fn get(&self, key: &ThetaKey) -> Option<f64> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(key).copied() {
+            Some(rho) => {
+                inner.order.retain(|k| k != key);
+                inner.order.push(key.clone());
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(rho)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: ThetaKey, rho: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.order.retain(|k| k != &key);
+        inner.order.push(key.clone());
+        inner.map.insert(key, rho);
+        while inner.map.len() > self.capacity {
+            let victim = inner.order.remove(0);
+            inner.map.remove(&victim);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Entries least-recently-used first (manifest persistence).
+    pub fn snapshot(&self) -> Vec<(ThetaKey, f64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .order
+            .iter()
+            .filter_map(|k| inner.map.get(k).map(|&rho| (k.clone(), rho)))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -150,5 +248,47 @@ mod tests {
         assert!(c.get(&ThetaKey::new("ridge", &[1.0000000001])).is_none());
         let x = c.get(&ThetaKey::new("ridge", &[1.0])).unwrap();
         assert_eq!(x.x_star[0], 1.0);
+    }
+
+    #[test]
+    fn theta_key_reconstructs_theta_bit_exactly() {
+        let theta = [1.0, -0.0, 2.0 + 1e-9, 5e-324];
+        let k = ThetaKey::new("ridge", &theta);
+        let back = k.theta();
+        assert_eq!(back.len(), theta.len());
+        for (a, b) in theta.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_preserves_lru_order() {
+        let c = FactorCache::new(4);
+        c.insert(ThetaKey::new("ridge", &[1.0]), entry(1.0));
+        c.insert(ThetaKey::new("ridge", &[2.0]), entry(2.0));
+        c.get(&ThetaKey::new("ridge", &[1.0])); // 1.0 becomes most recent
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0.theta(), vec![2.0]);
+        assert_eq!(snap[1].0.theta(), vec![1.0]);
+    }
+
+    #[test]
+    fn rho_cache_lru_and_counters() {
+        let c = RhoCache::new(2);
+        let k1 = ThetaKey::new("ridge", &[1.0]);
+        let k2 = ThetaKey::new("ridge", &[2.0]);
+        let k3 = ThetaKey::new("ridge", &[3.0]);
+        assert_eq!(c.get(&k1), None);
+        c.insert(k1.clone(), 0.5);
+        c.insert(k2.clone(), 0.6);
+        assert_eq!(c.get(&k1), Some(0.5)); // k1 now most recent
+        c.insert(k3.clone(), 0.7); // evicts k2
+        assert_eq!(c.get(&k2), None);
+        assert_eq!(c.get(&k3), Some(0.7));
+        assert_eq!(c.len(), 2);
+        let (h, m) = c.stats();
+        assert_eq!((h, m), (2, 2));
+        assert_eq!(c.snapshot().len(), 2);
     }
 }

@@ -1,15 +1,26 @@
 //! Hypergradient serving subsystem: the whole optimality-mapping catalog
-//! behind one line-delimited JSON TCP protocol, with request micro-batching
-//! onto block solves, a θ-keyed factorization cache, and a bounded worker
+//! behind one TCP port speaking TWO wire protocols — line-delimited JSON for
+//! debuggability and a zero-copy length-prefixed binary frame protocol for
+//! the hot path — with request micro-batching onto block solves, a θ-keyed
+//! factorization cache, a θ-keyed contraction (ρ) cache, pooled request
+//! buffers, manifest persistence for warm restarts, and a bounded worker
 //! pool (no thread-per-connection).
 //!
-//! # Protocol reference (one JSON object per line, one reply line each)
+//! # Protocol auto-detection
+//!
+//! Both protocols share one listener. The first byte of a connection picks
+//! the protocol for its whole lifetime: binary frames open with the magic
+//! byte `0xB1` ([`wire::MAGIC`]), which can never begin a JSON value, so
+//! anything else is served as JSON lines. `telnet`/`nc` debugging therefore
+//! keeps working unchanged while SDK clients speak frames.
+//!
+//! # JSON line protocol (one JSON object per line, one reply line each)
 //!
 //! | request                                                        | reply |
 //! |----------------------------------------------------------------|-------|
 //! | `{"op":"ping"}`                                                | `{"ok":true}` |
 //! | `{"op":"problems"}`                                            | `{"problems":[{"name","desc","dim_x","dim_theta"},…]}` |
-//! | `{"op":"stats"}`                                               | serve counters (solves, batches, cache hits, …) |
+//! | `{"op":"stats"}`                                               | serve counters (solves, batches, cache hits, pool hits, …) |
 //! | `{"op":"solve","problem":P,"theta":[…]}`                       | `{"x":[…],"cached":bool}` |
 //! | `{"op":"hypergrad","problem":P,"theta":[…],"v":[… dim_x]}`     | `{"grad":[… dim_theta],"batched":k,"cached":bool,"mode":m}` |
 //! | `{"op":"jvp","problem":P,"theta":[…],"v":[… dim_theta]}`       | `{"jv":[… dim_x],"batched":k,"cached":bool,"mode":m}` |
@@ -20,6 +31,24 @@
 //! `problem = "ridge"`. Every failure — malformed JSON, unknown op or
 //! problem, wrong-length or non-finite vectors, oversized lines — is a
 //! `{"error": "…"}` reply; the connection stays open.
+//!
+//! # Binary frame protocol
+//!
+//! Frames carry the same requests with zero intermediate JSON values: f64
+//! payloads are read little-endian straight into pooled buffers and written
+//! straight back out of result vectors (see [`wire`] for the byte-exact
+//! layout). Requests are `[0xB1][version=1][u32 len]` + a payload of op /
+//! mode / precision bytes, `iters`, the problem name, and raw θ / v blocks;
+//! replies are `[0xB1][version][status][flags][u32 len]` + mode byte, batch
+//! size, a rows×cols f64 block, and an optional JSON text tail (used only by
+//! `problems` / `stats`, which stay JSON-shaped on both wires). Both wires
+//! answer from literally the same engine path ([`Server::execute`]), so
+//! every op × mode × precision combination is bitwise-identical across
+//! protocols (asserted by `rust/tests/protocol_equiv.rs`). A well-framed but
+//! malformed payload gets an error frame and the connection stays usable; a
+//! framing-level violation (bad magic/version, oversized length) gets an
+//! error frame followed by a close, since the stream can no longer be
+//! delimited safely.
 //!
 //! Derivative requests accept an optional `"precision"` field
 //! (`"f64"` default, or `"mixed"` for f32-inner/f64-refined solves on the
@@ -34,8 +63,9 @@
 //! zero solves, zero factorizations, error O(ρ) in the contraction factor),
 //! `"unroll"` (k-term truncated Neumann at x*, error O(ρᵏ); optional
 //! `"iters"` sets k), or `"auto"` (a warm θ-cache serves factored implicit;
-//! a cold one estimates ρ by power iteration — Jacobian products only — and
-//! picks the cheapest mode whose error bound meets the policy target). The
+//! a cold one estimates ρ — served from the θ-keyed ρ-cache when this
+//! (problem, θ) has been seen before, power iteration otherwise — and picks
+//! the cheapest mode whose error bound meets the policy target). The
 //! solve-free modes bypass the factorization cache entirely: they neither
 //! read nor populate it. Replies echo the requested mode in `"mode"`
 //! (cache hits report `"implicit"`, which is what they served). Requests
@@ -54,6 +84,22 @@
 //!    `implicit_vjp_multi`/`implicit_jvp_multi` block solve, and populates
 //!    the cache so subsequent repeats of θ take path 1.
 //!
+//! Request θ/v payloads live in recycled [`Pool`] buffers on both wires
+//! (hits/misses/recycled surface in the `stats` op), so the steady-state
+//! request path allocates nothing on the decode side.
+//!
+//! # Persistence
+//!
+//! With a manifest path configured, the θ-factorization cache, the ρ-cache
+//! and the catalog fingerprint serialize periodically (and on demand via
+//! [`Server::save_manifest`]) to a versioned JSON manifest, atomically
+//! (tmp + rename). A rebooted server warm-starts from it: repeat-θ traffic
+//! immediately takes the factored path with ZERO new factorizations
+//! (asserted by `rust/tests/persist_warm.rs`). A manifest with an unknown
+//! format or version produces a clean cold start, never a crash. There is
+//! no signal handling (zero-dependency build), so "graceful shutdown"
+//! persistence = the periodic writer plus `save_manifest` from the embedder.
+//!
 //! Connections are dispatched onto a bounded [`WorkerPool`]: at most
 //! `workers` connections are serviced concurrently, excess connections
 //! queue, and a connection idle past `idle_timeout` is closed so it cannot
@@ -62,7 +108,9 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod persist;
 pub mod registry;
+pub mod wire;
 
 use crate::diff::mode::{DiffMode, ModeDecision, ModePolicy};
 use crate::linalg::mat::Mat;
@@ -70,11 +118,13 @@ use crate::linalg::op::densify;
 use crate::linalg::solve::{counter, SolvePrecision};
 use crate::util::json::{self, Json};
 use crate::util::parallel::WorkerPool;
+use crate::util::pool::{Pool, PoolVec};
 use batcher::{BatchKey, BatchOp, Batcher};
-use cache::{CacheEntry, FactorCache, ThetaKey};
+use cache::{CacheEntry, FactorCache, RhoCache, ThetaKey};
 use registry::{Problem, Registry};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -90,12 +140,20 @@ pub struct ServeConfig {
     pub batch_max: usize,
     /// θ-keyed factorization cache capacity (entries across all problems).
     pub cache_capacity: usize,
-    /// Reject request lines longer than this many bytes.
+    /// Reject JSON request lines / binary frame payloads longer than this
+    /// many bytes.
     pub max_line_bytes: usize,
     /// Close a connection after this long with no request. A connection
     /// holds a pool worker while open, so idle clients must not be allowed
     /// to starve queued connections forever.
     pub idle_timeout: Duration,
+    /// Idle buffers the request pool retains per free-list.
+    pub pool_max_idle: usize,
+    /// Warm-state manifest location; None disables persistence entirely.
+    pub manifest_path: Option<PathBuf>,
+    /// Seconds between periodic manifest writes (0 = only explicit
+    /// [`Server::save_manifest`] calls persist).
+    pub persist_secs: u64,
 }
 
 impl Default for ServeConfig {
@@ -107,6 +165,9 @@ impl Default for ServeConfig {
             cache_capacity: 64,
             max_line_bytes: 1 << 20,
             idle_timeout: Duration::from_secs(30),
+            pool_max_idle: 256,
+            manifest_path: None,
+            persist_secs: 60,
         }
     }
 }
@@ -129,14 +190,74 @@ pub struct ServeStats {
     /// Dense d×d operators materialized while answering derivative
     /// requests (thread-local densify-counter deltas around each compute).
     pub densified: AtomicU64,
+    /// Power-iteration contraction estimates actually run (ρ-cache misses
+    /// on the solve-free path). Repeat-θ auto traffic must not bump this —
+    /// asserted by the ρ-cache tests.
+    pub rho_estimates: AtomicU64,
 }
 
-/// The serving engine. `handle` is the transport-free core (tests and
-/// benches call it directly); [`Server::serve`] is the TCP front.
+/// A decoded, transport-neutral request. Both wire protocols produce this,
+/// so they are answered by literally the same engine path; θ and v live in
+/// pooled buffers that recycle on drop.
+pub enum Request {
+    Ping,
+    Problems,
+    Stats,
+    Solve {
+        problem: String,
+        theta: PoolVec,
+    },
+    Derivative {
+        problem: String,
+        theta: PoolVec,
+        v: PoolVec,
+        op: BatchOp,
+        mode: DiffMode,
+        precision: SolvePrecision,
+        /// Explicit unroll depth (0 = policy-chosen).
+        iters: usize,
+    },
+    Jacobian {
+        problem: String,
+        theta: PoolVec,
+    },
+}
+
+/// A transport-neutral reply, rendered to a JSON object ([`reply_to_json`])
+/// or a binary frame ([`wire::encode_reply`]).
+pub enum Reply {
+    Pong,
+    /// Control-plane payloads (`problems`, `stats`) stay JSON-shaped on both
+    /// wires — they are a debugging surface, not a hot path.
+    Text(Json),
+    Solution {
+        x: Vec<f64>,
+        cached: bool,
+    },
+    Derivative {
+        out: Vec<f64>,
+        /// JSON reply key: `"grad"` for VJPs, `"jv"` for JVPs.
+        out_key: &'static str,
+        batched: usize,
+        cached: bool,
+        mode: &'static str,
+    },
+    Jacobian {
+        jac: Mat,
+        cached: bool,
+    },
+    Error(String),
+}
+
+/// The serving engine. `handle` (JSON lines) and `handle_frame` (binary
+/// payloads) are the transport-free cores — tests and benches call them
+/// directly; [`Server::serve`] is the TCP front speaking both.
 pub struct Server {
     registry: Registry,
     batcher: Batcher,
     cache: FactorCache,
+    rho_cache: RhoCache,
+    pool: Arc<Pool>,
     pub stats: ServeStats,
     cfg: ServeConfig,
 }
@@ -147,6 +268,8 @@ impl Server {
             registry: Registry::standard(),
             batcher: Batcher::new(cfg.batch_window, cfg.batch_max),
             cache: FactorCache::new(cfg.cache_capacity),
+            rho_cache: RhoCache::new(cfg.cache_capacity),
+            pool: Pool::new(cfg.pool_max_idle),
             stats: ServeStats::default(),
             cfg,
         }
@@ -160,57 +283,184 @@ impl Server {
         &self.registry
     }
 
-    /// Handle one request line, producing one reply value. Never panics:
-    /// internal panics are caught and reported as `{"error": …}`.
+    /// The shared request-buffer pool (clients embedding the engine can
+    /// borrow from the same free-lists the wire decoders use).
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+
+    /// Handle one JSON request line, producing one reply value. Never
+    /// panics: internal panics are caught and reported as `{"error": …}`.
     pub fn handle(&self, line: &str) -> Json {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.handle_inner(line)
+            self.handle_line(line)
         }))
-        .unwrap_or_else(|_| err_json("internal: request handler panicked"));
-        if reply.get("error").is_some() {
+        .unwrap_or_else(|_| Reply::Error("internal: request handler panicked".to_string()));
+        if matches!(reply, Reply::Error(_)) {
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
         }
-        reply
+        reply_to_json(reply)
     }
 
-    fn handle_inner(&self, line: &str) -> Json {
+    fn handle_line(&self, line: &str) -> Reply {
         if line.len() > self.cfg.max_line_bytes {
-            return err_json(&format!(
+            return Reply::Error(format!(
                 "request too large ({} bytes > {} max)",
                 line.len(),
                 self.cfg.max_line_bytes
             ));
         }
-        let req = match json::parse(line) {
-            Ok(r) => r,
-            Err(e) => return err_json(&format!("bad json: {e}")),
-        };
-        match req.str_or("op", "") {
-            "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
-            "problems" => self.op_problems(),
-            "stats" => self.op_stats(),
-            "solve" => self.with_problem(&req, |p, theta| self.op_solve(p, theta)),
-            "hypergrad" | "vjp" => {
-                self.with_problem(&req, |p, theta| self.op_derivative(p, theta, &req, BatchOp::Vjp))
-            }
-            "jvp" => {
-                self.with_problem(&req, |p, theta| self.op_derivative(p, theta, &req, BatchOp::Jvp))
-            }
-            "jacobian" => self.with_problem(&req, |p, theta| self.op_jacobian(p, theta)),
-            // Pre-registry aliases (PR 0 protocol).
-            "ridge_hypergrad" => match self.problem_and_theta_named(&req, "ridge") {
-                Ok((p, theta)) => self.op_derivative(p, &theta, &req, BatchOp::Vjp),
-                Err(e) => e,
-            },
-            "ridge_jacobian" => match self.problem_and_theta_named(&req, "ridge") {
-                Ok((p, theta)) => self.op_jacobian(p, &theta),
-                Err(e) => e,
-            },
-            "" => err_json("missing 'op'"),
-            other => err_json(&format!("unknown op '{other}'")),
+        match self.parse_request_json(line) {
+            Ok(req) => self.execute(req),
+            Err(e) => Reply::Error(e),
         }
     }
+
+    /// Handle one decoded binary frame payload (everything after the length
+    /// prefix). Same panic containment and counter behavior as [`handle`].
+    pub fn handle_frame(&self, payload: &[u8]) -> Reply {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match wire::decode_request(payload, &self.pool) {
+                Ok(req) => self.execute(req),
+                Err(e) => Reply::Error(e),
+            }
+        }))
+        .unwrap_or_else(|_| Reply::Error("internal: request handler panicked".to_string()));
+        if matches!(reply, Reply::Error(_)) {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        reply
+    }
+
+    /// The protocol-independent engine: every wire decodes into a
+    /// [`Request`] and is answered from here.
+    pub fn execute(&self, req: Request) -> Reply {
+        match req {
+            Request::Ping => Reply::Pong,
+            Request::Problems => Reply::Text(self.op_problems()),
+            Request::Stats => Reply::Text(self.op_stats()),
+            Request::Solve { problem, theta } => match self.lookup(&problem, &theta) {
+                Ok(p) => self.op_solve(p, &theta),
+                Err(e) => Reply::Error(e),
+            },
+            Request::Derivative { problem, theta, v, op, mode, precision, iters } => {
+                match self.lookup(&problem, &theta) {
+                    Ok(p) => self.op_derivative(p, &theta, v, op, mode, precision, iters),
+                    Err(e) => Reply::Error(e),
+                }
+            }
+            Request::Jacobian { problem, theta } => match self.lookup(&problem, &theta) {
+                Ok(p) => self.op_jacobian(p, &theta),
+                Err(e) => Reply::Error(e),
+            },
+        }
+    }
+
+    fn lookup(&self, name: &str, theta: &[f64]) -> Result<&Problem, String> {
+        if name.is_empty() {
+            return Err("missing 'problem'".to_string());
+        }
+        let p = self.registry.get(name).ok_or_else(|| {
+            let names: Vec<&str> = self.registry.problems().iter().map(|p| p.name).collect();
+            format!("unknown problem '{name}' (have: {})", names.join(", "))
+        })?;
+        if theta.len() != p.dim_theta() {
+            return Err(format!(
+                "'theta' must have length {}, got {}",
+                p.dim_theta(),
+                theta.len()
+            ));
+        }
+        p.validate_theta(theta)?;
+        Ok(p)
+    }
+
+    // ------------------------------------------------------ JSON decode --
+
+    fn parse_request_json(&self, line: &str) -> Result<Request, String> {
+        let req = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        match req.str_or("op", "") {
+            "ping" => Ok(Request::Ping),
+            "problems" => Ok(Request::Problems),
+            "stats" => Ok(Request::Stats),
+            "solve" => Ok(Request::Solve {
+                problem: required_problem(&req)?,
+                theta: self.json_vec(&req, "theta")?,
+            }),
+            "hypergrad" | "vjp" => self.json_derivative(&req, BatchOp::Vjp, None),
+            "jvp" => self.json_derivative(&req, BatchOp::Jvp, None),
+            "jacobian" => Ok(Request::Jacobian {
+                problem: required_problem(&req)?,
+                theta: self.json_vec(&req, "theta")?,
+            }),
+            // Pre-registry aliases (PR 0 protocol).
+            "ridge_hypergrad" => self.json_derivative(&req, BatchOp::Vjp, Some("ridge")),
+            "ridge_jacobian" => Ok(Request::Jacobian {
+                problem: "ridge".to_string(),
+                theta: self.json_vec(&req, "theta")?,
+            }),
+            "" => Err("missing 'op'".to_string()),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    fn json_derivative(
+        &self,
+        req: &Json,
+        op: BatchOp,
+        forced_problem: Option<&str>,
+    ) -> Result<Request, String> {
+        let problem = match forced_problem {
+            Some(name) => name.to_string(),
+            None => required_problem(req)?,
+        };
+        let theta = self.json_vec(req, "theta")?;
+        let v = self.json_vec(req, "v")?;
+        let precision = match req.get("precision") {
+            None => SolvePrecision::F64,
+            Some(j) => j
+                .as_str()
+                .and_then(SolvePrecision::parse)
+                .ok_or_else(|| "'precision' must be \"f64\" or \"mixed\"".to_string())?,
+        };
+        let mode = match req.get("mode") {
+            None => DiffMode::Implicit,
+            Some(j) => j.as_str().and_then(DiffMode::parse).ok_or_else(|| {
+                "'mode' must be \"implicit\", \"unroll\", \"one-step\" or \"auto\"".to_string()
+            })?,
+        };
+        // Explicit unroll depth (0 = let the policy derive it from ρ).
+        let iters = match req.get("iters") {
+            None => 0usize,
+            Some(j) => match j.as_f64() {
+                Some(k) if k.fract() == 0.0 && (1.0..=1e6).contains(&k) => k as usize,
+                _ => return Err("'iters' must be a positive integer".to_string()),
+            },
+        };
+        Ok(Request::Derivative { problem, theta, v, op, mode, precision, iters })
+    }
+
+    /// Decode a JSON number array into a pooled buffer (length validation
+    /// happens in [`Server::lookup`] / `op_derivative`, which know the
+    /// problem's dimensions).
+    fn json_vec(&self, req: &Json, key: &str) -> Result<PoolVec, String> {
+        let arr = req
+            .get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("missing '{key}'"))?;
+        let mut v = self.pool.take_f64(arr.len());
+        for (i, x) in arr.iter().enumerate() {
+            match x.as_f64() {
+                Some(f) if f.is_finite() => v[i] = f,
+                _ => return Err(format!("'{key}[{i}]' is not a finite number")),
+            }
+        }
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------- ops --
 
     fn op_problems(&self) -> Json {
         let rows: Vec<Json> = self
@@ -232,6 +482,8 @@ impl Server {
     fn op_stats(&self) -> Json {
         let (batches, coalesced) = self.batcher.stats();
         let (hits, misses, evictions) = self.cache.stats();
+        let (rho_hits, rho_misses) = self.rho_cache.stats();
+        let pool = self.pool.stats();
         Json::obj(vec![
             ("requests", Json::Num(self.stats.requests.load(Ordering::Relaxed) as f64)),
             ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
@@ -242,35 +494,24 @@ impl Server {
                 Json::Num(self.stats.factorizations.load(Ordering::Relaxed) as f64),
             ),
             ("densified", Json::Num(self.stats.densified.load(Ordering::Relaxed) as f64)),
+            (
+                "rho_estimates",
+                Json::Num(self.stats.rho_estimates.load(Ordering::Relaxed) as f64),
+            ),
             ("batches", Json::Num(batches as f64)),
             ("coalesced_requests", Json::Num(coalesced as f64)),
             ("cache_hits", Json::Num(hits as f64)),
             ("cache_misses", Json::Num(misses as f64)),
             ("cache_evictions", Json::Num(evictions as f64)),
             ("cache_len", Json::Num(self.cache.len() as f64)),
+            ("rho_cache_hits", Json::Num(rho_hits as f64)),
+            ("rho_cache_misses", Json::Num(rho_misses as f64)),
+            ("rho_cache_len", Json::Num(self.rho_cache.len() as f64)),
+            ("pool_hits", Json::Num(pool.hits as f64)),
+            ("pool_misses", Json::Num(pool.misses as f64)),
+            ("pool_recycled", Json::Num(pool.recycled as f64)),
             ("workers", Json::Num(self.cfg.workers as f64)),
         ])
-    }
-
-    fn with_problem(&self, req: &Json, f: impl FnOnce(&Problem, &[f64]) -> Json) -> Json {
-        let name = req.str_or("problem", "");
-        if name.is_empty() {
-            return err_json("missing 'problem'");
-        }
-        match self.problem_and_theta_named(req, name) {
-            Ok((p, theta)) => f(p, &theta),
-            Err(e) => e,
-        }
-    }
-
-    fn problem_and_theta_named(&self, req: &Json, name: &str) -> Result<(&Problem, Vec<f64>), Json> {
-        let p = self.registry.get(name).ok_or_else(|| {
-            let names: Vec<&str> = self.registry.problems().iter().map(|p| p.name).collect();
-            err_json(&format!("unknown problem '{name}' (have: {})", names.join(", ")))
-        })?;
-        let theta = parse_vec(req, "theta", p.dim_theta())?;
-        p.validate_theta(&theta).map_err(|e| err_json(&e))?;
-        Ok((p, theta))
     }
 
     /// x*(θ) through the cache; the bool reports whether this was a hit
@@ -293,9 +534,22 @@ impl Server {
         (x_star, false)
     }
 
-    fn op_solve(&self, p: &Problem, theta: &[f64]) -> Json {
+    /// ρ(x*, θ) through the θ-keyed ρ-cache; power iteration only on a
+    /// miss (counted in `rho_estimates`).
+    fn cached_contraction(&self, p: &Problem, theta: &[f64], x_star: &[f64]) -> f64 {
+        let key = ThetaKey::new(p.name, theta);
+        if let Some(rho) = self.rho_cache.get(&key) {
+            return rho;
+        }
+        let rho = p.contraction(x_star, theta);
+        self.stats.rho_estimates.fetch_add(1, Ordering::Relaxed);
+        self.rho_cache.insert(key, rho);
+        rho
+    }
+
+    fn op_solve(&self, p: &Problem, theta: &[f64]) -> Reply {
         let (x_star, was_hit) = self.cached_solution(p, theta);
-        Json::obj(vec![("x", Json::arr_f64(&x_star)), ("cached", Json::Bool(was_hit))])
+        Reply::Solution { x: x_star.as_ref().clone(), cached: was_hit }
     }
 
     /// The batched derivative path. Implicit/auto on a warm θ → factored
@@ -304,43 +558,24 @@ impl Server {
     /// policy. One-step / unroll / auto on a miss → micro-batch onto a
     /// Jacobian-free compute: zero solves, zero factorizations, cache
     /// bypassed by design.
-    fn op_derivative(&self, p: &Problem, theta: &[f64], req: &Json, op: BatchOp) -> Json {
+    #[allow(clippy::too_many_arguments)]
+    fn op_derivative(
+        &self,
+        p: &Problem,
+        theta: &[f64],
+        v: PoolVec,
+        op: BatchOp,
+        mode: DiffMode,
+        precision: SolvePrecision,
+        iters: usize,
+    ) -> Reply {
         let (in_dim, out_key) = match op {
             BatchOp::Vjp => (p.dim_x(), "grad"),
             BatchOp::Jvp => (p.dim_theta(), "jv"),
         };
-        let v = match parse_vec(req, "v", in_dim) {
-            Ok(v) => v,
-            Err(e) => return e,
-        };
-        let precision = match req.get("precision") {
-            None => SolvePrecision::F64,
-            Some(j) => match j.as_str().and_then(SolvePrecision::parse) {
-                Some(pr) => pr,
-                None => {
-                    return err_json("'precision' must be \"f64\" or \"mixed\"");
-                }
-            },
-        };
-        let mode = match req.get("mode") {
-            None => DiffMode::Implicit,
-            Some(j) => match j.as_str().and_then(DiffMode::parse) {
-                Some(m) => m,
-                None => {
-                    return err_json(
-                        "'mode' must be \"implicit\", \"unroll\", \"one-step\" or \"auto\"",
-                    );
-                }
-            },
-        };
-        // Explicit unroll depth (0 = let the policy derive it from ρ).
-        let iters = match req.get("iters") {
-            None => 0usize,
-            Some(j) => match j.as_f64() {
-                Some(k) if k.fract() == 0.0 && (1.0..=1e6).contains(&k) => k as usize,
-                _ => return err_json("'iters' must be a positive integer"),
-            },
-        };
+        if v.len() != in_dim {
+            return Reply::Error(format!("'v' must have length {in_dim}, got {}", v.len()));
+        }
 
         // Fast path: prefactored θ. Only implicit and auto look — the
         // explicit solve-free modes bypass the cache by design.
@@ -356,12 +591,13 @@ impl Server {
                 self.stats
                     .block_solves
                     .fetch_add((counter::count() - before) as u64, Ordering::Relaxed);
-                return Json::obj(vec![
-                    (out_key, Json::arr_f64(&out.col(0))),
-                    ("batched", Json::Num(1.0)),
-                    ("cached", Json::Bool(true)),
-                    ("mode", Json::Str("implicit".into())),
-                ]);
+                return Reply::Derivative {
+                    out: out.col(0),
+                    out_key,
+                    batched: 1,
+                    cached: true,
+                    mode: "implicit",
+                };
             }
         }
 
@@ -401,13 +637,14 @@ impl Server {
                 Ok(out)
             });
             return match col {
-                Ok(col) => Json::obj(vec![
-                    (out_key, Json::arr_f64(&col)),
-                    ("batched", Json::Num(size as f64)),
-                    ("cached", Json::Bool(false)),
-                    ("mode", Json::Str("implicit".into())),
-                ]),
-                Err(e) => err_json(&e),
+                Ok(col) => Reply::Derivative {
+                    out: col,
+                    out_key,
+                    batched: size,
+                    cached: false,
+                    mode: "implicit",
+                },
+                Err(e) => Reply::Error(e),
             };
         }
 
@@ -424,7 +661,8 @@ impl Server {
             let policy = ModePolicy::default();
             let need_rho =
                 mode == DiffMode::Auto || (mode == DiffMode::Unroll && iters == 0);
-            let rho = if need_rho { p.contraction(&x_star, theta) } else { f64::NAN };
+            let rho =
+                if need_rho { self.cached_contraction(p, theta, &x_star) } else { f64::NAN };
             let decision =
                 policy.resolve(mode, rho, false, if iters > 0 { Some(iters) } else { None });
             let solves_before = counter::count();
@@ -468,17 +706,18 @@ impl Server {
             Ok(out)
         });
         match col {
-            Ok(col) => Json::obj(vec![
-                (out_key, Json::arr_f64(&col)),
-                ("batched", Json::Num(size as f64)),
-                ("cached", Json::Bool(false)),
-                ("mode", Json::Str(mode.as_str().into())),
-            ]),
-            Err(e) => err_json(&e),
+            Ok(col) => Reply::Derivative {
+                out: col,
+                out_key,
+                batched: size,
+                cached: false,
+                mode: mode.as_str(),
+            },
+            Err(e) => Reply::Error(e),
         }
     }
 
-    fn op_jacobian(&self, p: &Problem, theta: &[f64]) -> Json {
+    fn op_jacobian(&self, p: &Problem, theta: &[f64]) -> Reply {
         let key = ThetaKey::new(p.name, theta);
         let (jac, was_hit) = if let Some(entry) = self.cache.get(&key) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -509,13 +748,13 @@ impl Server {
                 }
             }
         };
-        let rows: Vec<Json> = (0..jac.rows).map(|i| Json::arr_f64(jac.row(i))).collect();
-        Json::obj(vec![("jacobian", Json::Arr(rows)), ("cached", Json::Bool(was_hit))])
+        Reply::Jacobian { jac, cached: was_hit }
     }
 
     /// Serve connections from an already-bound listener, dispatching each
     /// onto the bounded worker pool. Blocks forever (until process exit).
     pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
+        self.clone().spawn_persist_thread();
         let pool = WorkerPool::new(self.cfg.workers);
         for stream in listener.incoming() {
             let stream = stream?;
@@ -527,6 +766,23 @@ impl Server {
         Ok(())
     }
 
+    /// Start the periodic manifest writer (a no-op unless both a manifest
+    /// path and a nonzero interval are configured). `serve_on` calls this;
+    /// embedders driving `handle`/`execute` directly can too.
+    pub fn spawn_persist_thread(self: Arc<Self>) {
+        let Some(path) = self.cfg.manifest_path.clone() else { return };
+        if self.cfg.persist_secs == 0 {
+            return;
+        }
+        let period = Duration::from_secs(self.cfg.persist_secs);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(period);
+            if let Err(e) = self.save_manifest(&path) {
+                eprintln!("idiff serve: manifest persist failed: {e}");
+            }
+        });
+    }
+
     /// Bind `addr` and serve (see [`Server::serve_on`]).
     pub fn serve(self: Arc<Self>, addr: &str) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
@@ -535,57 +791,129 @@ impl Server {
     }
 }
 
+/// Render a reply as the JSON line protocol's object shapes.
+pub fn reply_to_json(reply: Reply) -> Json {
+    match reply {
+        Reply::Pong => Json::obj(vec![("ok", Json::Bool(true))]),
+        Reply::Text(j) => j,
+        Reply::Solution { x, cached } => {
+            Json::obj(vec![("x", Json::arr_f64(&x)), ("cached", Json::Bool(cached))])
+        }
+        Reply::Derivative { out, out_key, batched, cached, mode } => Json::obj(vec![
+            (out_key, Json::arr_f64(&out)),
+            ("batched", Json::Num(batched as f64)),
+            ("cached", Json::Bool(cached)),
+            ("mode", Json::Str(mode.to_string())),
+        ]),
+        Reply::Jacobian { jac, cached } => {
+            let rows: Vec<Json> = (0..jac.rows).map(|i| Json::arr_f64(jac.row(i))).collect();
+            Json::obj(vec![("jacobian", Json::Arr(rows)), ("cached", Json::Bool(cached))])
+        }
+        Reply::Error(e) => Json::obj(vec![("error", Json::Str(e))]),
+    }
+}
+
+fn required_problem(req: &Json) -> Result<String, String> {
+    let name = req.str_or("problem", "");
+    if name.is_empty() {
+        return Err("missing 'problem'".to_string());
+    }
+    Ok(name.to_string())
+}
+
+fn is_disconnect(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::UnexpectedEof
+    )
+}
+
 fn handle_conn(server: &Server, stream: TcpStream) -> std::io::Result<()> {
     // An open connection holds a pool worker; an idle one must hand it back.
     let _ = stream.set_read_timeout(Some(server.cfg.idle_timeout));
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                return Ok(()); // idle timeout: close, release the worker
-            }
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // Protocol auto-detection: a binary connection's first byte is the
+    // frame magic 0xB1, which no JSON line can start with.
+    let first = match reader.fill_buf() {
+        Ok([]) => return Ok(()), // EOF before the first byte
+        Ok(buf) => buf[0],
+        Err(e) if is_disconnect(&e) => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    if first == wire::MAGIC {
+        serve_binary_conn(server, reader, writer)
+    } else {
+        serve_json_conn(server, reader, writer)
+    }
+}
+
+fn serve_json_conn(
+    server: &Server,
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+) -> std::io::Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(e) if is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
-        };
-        if line.trim().is_empty() {
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        let resp = server.handle(&line);
+        let resp = server.handle(trimmed);
         writer.write_all(resp.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
     }
-    Ok(())
 }
 
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("error", Json::Str(msg.to_string()))])
-}
-
-fn parse_vec(req: &Json, key: &str, expected: usize) -> Result<Vec<f64>, Json> {
-    let arr = req
-        .get(key)
-        .and_then(Json::as_arr)
-        .ok_or_else(|| err_json(&format!("missing '{key}'")))?;
-    if arr.len() != expected {
-        return Err(err_json(&format!(
-            "'{key}' must have length {expected}, got {}",
-            arr.len()
-        )));
-    }
-    let mut v = Vec::with_capacity(arr.len());
-    for (i, x) in arr.iter().enumerate() {
-        match x.as_f64() {
-            Some(f) if f.is_finite() => v.push(f),
-            _ => return Err(err_json(&format!("'{key}[{i}]' is not a finite number"))),
+fn serve_binary_conn(
+    server: &Server,
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+) -> std::io::Result<()> {
+    // One payload buffer and one reply buffer, recycled across every frame
+    // this connection ever sends.
+    let mut payload = server.pool.take_bytes(4096);
+    let mut out = server.pool.take_bytes(4096);
+    loop {
+        let mut hdr = [0u8; wire::REQUEST_HEADER_LEN];
+        match reader.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
         }
+        let len = match wire::parse_request_header(&hdr, server.cfg.max_line_bytes) {
+            Ok(len) => len,
+            Err(msg) => {
+                // Framing violation: the stream can no longer be delimited.
+                // Reply with an error frame, then close.
+                server.stats.requests.fetch_add(1, Ordering::Relaxed);
+                server.stats.errors.fetch_add(1, Ordering::Relaxed);
+                out.clear();
+                wire::encode_reply(&Reply::Error(msg), &mut out);
+                let _ = writer.write_all(&out);
+                return Ok(());
+            }
+        };
+        payload.resize(len, 0);
+        match reader.read_exact(&mut payload[..]) {
+            Ok(()) => {}
+            Err(e) if is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        let reply = server.handle_frame(&payload);
+        out.clear();
+        wire::encode_reply(&reply, &mut out);
+        writer.write_all(&out)?;
     }
-    Ok(v)
 }
 
 #[cfg(test)]
@@ -611,6 +939,10 @@ mod tests {
         assert!(arr.iter().any(|p| p.str_or("name", "") == "sparse_logreg"));
         let stats = s.handle(r#"{"op":"stats"}"#);
         assert!(stats.f64_or("requests", -1.0) >= 2.0);
+        // The new counters are part of the stats surface.
+        for key in ["rho_estimates", "rho_cache_hits", "pool_hits", "pool_recycled"] {
+            assert!(stats.get(key).is_some(), "stats missing '{key}'");
+        }
     }
 
     #[test]
@@ -741,6 +1073,8 @@ mod tests {
             assert!((a[i].as_f64().unwrap() - b[i].as_f64().unwrap()).abs() < 1e-7);
         }
         assert_eq!(s.stats.cache_hits.load(Ordering::Relaxed), 1);
+        // …and the second request's θ/v decode reused pooled buffers.
+        assert!(s.pool.stats().hits >= 2, "repeat request must hit the buffer pool");
     }
 
     /// The tentpole acceptance property: N concurrent hypergrad requests on
@@ -981,6 +1315,52 @@ mod tests {
         assert_eq!(vec_of(&r_cold, "grad").len(), 8);
         assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), solves_before);
         assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), facts_before);
+    }
+
+    /// Repeat (problem, θ) auto-mode requests on a cold factorization cache
+    /// must run power iteration exactly ONCE: the ρ-cache absorbs the rest.
+    #[test]
+    fn repeat_auto_theta_runs_power_iteration_once() {
+        let s = Server::new(quiet_cfg());
+        let theta = vec![1.3; 8];
+        let mk = |i: usize| {
+            let mut v = vec![0.0; 8];
+            v[i % 8] = 1.0;
+            Json::obj(vec![
+                ("op", Json::Str("hypergrad".into())),
+                ("problem", Json::Str("ridge".into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(&v)),
+                ("mode", Json::Str("auto".into())),
+            ])
+            .to_string_compact()
+        };
+        for i in 0..4 {
+            let r = s.handle(&mk(i));
+            assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+            // Distinct v's → distinct batches, all solve-free on the cold θ.
+            assert_eq!(r.get("cached"), Some(&Json::Bool(false)));
+        }
+        assert_eq!(
+            s.stats.rho_estimates.load(Ordering::Relaxed),
+            1,
+            "repeat-θ auto must serve ρ from the cache after the first estimate"
+        );
+        let (rho_hits, rho_misses) = s.rho_cache.stats();
+        assert_eq!((rho_hits, rho_misses), (3, 1));
+        // A different θ is a genuinely new estimate.
+        let theta2 = vec![0.65; 8];
+        let req = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta2)),
+            ("v", Json::arr_f64(&vec![1.0; 8])),
+            ("mode", Json::Str("auto".into())),
+        ]);
+        s.handle(&req.to_string_compact());
+        assert_eq!(s.stats.rho_estimates.load(Ordering::Relaxed), 2);
+        // Factorization cache stayed cold throughout (auto went solve-free).
+        assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 0);
     }
 
     #[test]

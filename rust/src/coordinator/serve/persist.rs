@@ -1,0 +1,418 @@
+//! Warm-start persistence: the θ-keyed factorization cache and the ρ-cache
+//! serialize to a versioned JSON manifest so a rebooted server answers
+//! repeat-θ traffic with ZERO new factorizations.
+//!
+//! # Manifest format (version 2)
+//!
+//! ```json
+//! {
+//!   "format": "idiff-serve-manifest",
+//!   "version": 2,
+//!   "catalog": [{"name": "...", "dim_x": n, "dim_theta": m}, …],
+//!   "entries": [
+//!     {"problem": "...", "theta": […], "x_star": […],
+//!      "fact": {"kind": "chol", "l": {"rows","cols","data"}}         |
+//!              {"kind": "lu", "lu": {…}, "piv": […], "sign": ±1}},
+//!     …  // least-recently-used first, so reinsertion reproduces recency
+//!   ],
+//!   "rho": [{"problem": "...", "theta": […], "rho": r}, …]
+//! }
+//! ```
+//!
+//! θ, x* and factor entries ride the exact-f64 JSON round trip
+//! (`util::json::fmt_f64`), so a save → load cycle reproduces cache keys
+//! and answers bit-for-bit. Mixed-precision factorizations are skipped on
+//! save (the cache only stores f64 factors on the serve path, and a cold
+//! re-factorization beats persisting f32 state).
+//!
+//! # Compatibility policy
+//!
+//! Loading NEVER crashes the server. A manifest with the wrong `format` or
+//! `version`, or one whose `catalog` disagrees with the running registry
+//! (dims changed, problems renamed), is reported as a clean cold start.
+//! Individually stale entries (unknown problem, wrong dims, non-finite or
+//! malformed factors) are skipped and counted; everything else restores.
+//! Only an unreadable/unparseable file is an `Err` — and callers treat
+//! that as a cold start too, it is just worth a louder log line.
+
+use super::cache::{CacheEntry, ThetaKey};
+use super::Server;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::lu::Lu;
+use crate::linalg::mat::Mat;
+use crate::linalg::solve::Factorization;
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::Arc;
+
+pub const MANIFEST_FORMAT: &str = "idiff-serve-manifest";
+/// Bumped whenever the entry layout changes; older manifests cold-start.
+pub const MANIFEST_VERSION: f64 = 2.0;
+
+/// What a manifest load did.
+#[derive(Debug, Default)]
+pub struct WarmStart {
+    /// Factorization-cache entries restored.
+    pub factorizations: usize,
+    /// ρ-cache entries restored.
+    pub rho_entries: usize,
+    /// Entries present in the manifest but dropped (stale problem, wrong
+    /// dims, malformed factor).
+    pub skipped: usize,
+    /// `Some(reason)` when the manifest as a whole was rejected and the
+    /// server is cold-starting (wrong format/version/catalog).
+    pub cold_start: Option<String>,
+}
+
+fn mat_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("data", Json::arr_f64(&m.data)),
+    ])
+}
+
+fn mat_from(j: &Json) -> Option<Mat> {
+    let rows = j.get("rows")?.as_f64()? as usize;
+    let cols = j.get("cols")?.as_f64()? as usize;
+    let data = vec_from(j.get("data")?)?;
+    if rows.checked_mul(cols)? != data.len() || data.iter().any(|x| !x.is_finite()) {
+        return None;
+    }
+    Some(Mat::from_vec(rows, cols, data))
+}
+
+fn vec_from(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+/// Serialize a factorization, or None for kinds that don't persist
+/// (mixed-precision factors are rebuilt rather than stored).
+fn fact_json(fact: &Factorization) -> Option<Json> {
+    match fact {
+        Factorization::Chol(c) => Some(Json::obj(vec![
+            ("kind", Json::Str("chol".to_string())),
+            ("l", mat_json(&c.l)),
+        ])),
+        Factorization::Lu(lu) => {
+            let (mat, piv, sign) = lu.parts();
+            Some(Json::obj(vec![
+                ("kind", Json::Str("lu".to_string())),
+                ("lu", mat_json(mat)),
+                ("piv", Json::Arr(piv.iter().map(|&p| Json::Num(p as f64)).collect())),
+                ("sign", Json::Num(sign)),
+            ]))
+        }
+        _ => None,
+    }
+}
+
+fn fact_from(j: &Json) -> Option<Factorization> {
+    match j.get("kind")?.as_str()? {
+        "chol" => {
+            let l = mat_from(j.get("l")?)?;
+            if l.rows != l.cols {
+                return None;
+            }
+            Some(Factorization::Chol(Cholesky { l }))
+        }
+        "lu" => {
+            let mat = mat_from(j.get("lu")?)?;
+            let piv: Option<Vec<usize>> = j
+                .get("piv")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let x = p.as_f64()?;
+                    if x.fract() == 0.0 && x >= 0.0 {
+                        Some(x as usize)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let sign = j.get("sign")?.as_f64()?;
+            Lu::from_parts(mat, piv?, sign).map(Factorization::Lu)
+        }
+        _ => None,
+    }
+}
+
+impl Server {
+    /// The full warm state as a manifest document.
+    pub fn manifest_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .cache
+            .snapshot()
+            .iter()
+            .filter_map(|(key, entry)| {
+                let fact = fact_json(&entry.fact)?;
+                Some(Json::obj(vec![
+                    ("problem", Json::Str(key.problem.clone())),
+                    ("theta", Json::arr_f64(&key.theta())),
+                    ("x_star", Json::arr_f64(&entry.x_star)),
+                    ("fact", fact),
+                ]))
+            })
+            .collect();
+        let rho: Vec<Json> = self
+            .rho_cache
+            .snapshot()
+            .iter()
+            .map(|(key, rho)| {
+                Json::obj(vec![
+                    ("problem", Json::Str(key.problem.clone())),
+                    ("theta", Json::arr_f64(&key.theta())),
+                    ("rho", Json::Num(*rho)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::Str(MANIFEST_FORMAT.to_string())),
+            ("version", Json::Num(MANIFEST_VERSION)),
+            ("catalog", self.registry.catalog_signature()),
+            ("entries", Json::Arr(entries)),
+            ("rho", Json::Arr(rho)),
+        ])
+    }
+
+    /// Write the manifest atomically (tmp file + rename), so a crash
+    /// mid-write never corrupts the previous good manifest.
+    pub fn save_manifest(&self, path: &Path) -> std::io::Result<()> {
+        let doc = self.manifest_json().to_string_pretty();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, doc)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load a manifest into the live caches. See the module docs for the
+    /// compatibility policy; this never panics on any file content.
+    pub fn load_manifest(&self, path: &Path) -> Result<WarmStart, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read manifest {}: {e}", path.display()))?;
+        let doc = crate::util::json::parse(&text)
+            .map_err(|e| format!("cannot parse manifest {}: {e}", path.display()))?;
+        let mut warm = WarmStart::default();
+        if doc.str_or("format", "") != MANIFEST_FORMAT {
+            warm.cold_start = Some("manifest format not recognized".to_string());
+            return Ok(warm);
+        }
+        let version = doc.f64_or("version", -1.0);
+        if version != MANIFEST_VERSION {
+            warm.cold_start = Some(format!(
+                "manifest version {version} (this build reads {MANIFEST_VERSION}); cold start"
+            ));
+            return Ok(warm);
+        }
+        if doc.get("catalog") != Some(&self.registry.catalog_signature()) {
+            warm.cold_start =
+                Some("manifest catalog does not match the running registry".to_string());
+            return Ok(warm);
+        }
+        for entry in doc.get("entries").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
+            if self.restore_entry(entry).is_some() {
+                warm.factorizations += 1;
+            } else {
+                warm.skipped += 1;
+            }
+        }
+        for entry in doc.get("rho").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
+            if self.restore_rho(entry).is_some() {
+                warm.rho_entries += 1;
+            } else {
+                warm.skipped += 1;
+            }
+        }
+        Ok(warm)
+    }
+
+    fn restore_entry(&self, entry: &Json) -> Option<()> {
+        let name = entry.get("problem")?.as_str()?;
+        let p = self.registry.get(name)?;
+        let theta = vec_from(entry.get("theta")?)?;
+        let x_star = vec_from(entry.get("x_star")?)?;
+        if theta.len() != p.dim_theta()
+            || x_star.len() != p.dim_x()
+            || theta.iter().chain(&x_star).any(|x| !x.is_finite())
+        {
+            return None;
+        }
+        let fact = fact_from(entry.get("fact")?)?;
+        if fact.dim() != p.dim_x() {
+            return None;
+        }
+        self.cache.insert(
+            ThetaKey::new(name, &theta),
+            CacheEntry { x_star: Arc::new(x_star), fact: Arc::new(fact) },
+        );
+        Some(())
+    }
+
+    fn restore_rho(&self, entry: &Json) -> Option<()> {
+        let name = entry.get("problem")?.as_str()?;
+        let p = self.registry.get(name)?;
+        let theta = vec_from(entry.get("theta")?)?;
+        let rho = entry.get("rho")?.as_f64()?;
+        if theta.len() != p.dim_theta()
+            || theta.iter().any(|x| !x.is_finite())
+            || !rho.is_finite()
+            || rho < 0.0
+        {
+            return None;
+        }
+        self.rho_cache.insert(ThetaKey::new(name, &theta), rho);
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ServeConfig, Server};
+    use super::*;
+    use std::time::Duration;
+
+    fn quiet() -> Server {
+        Server::new(ServeConfig {
+            batch_window: Duration::from_millis(0),
+            ..ServeConfig::default()
+        })
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("idiff_persist_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn factorization_round_trips_through_json_bit_exactly() {
+        // Cholesky
+        let spd = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let fact = Factorization::of_mat(&spd, true).unwrap();
+        let back = fact_from(&fact_json(&fact).unwrap()).unwrap();
+        match (&fact, &back) {
+            (Factorization::Chol(a), Factorization::Chol(b)) => {
+                for (x, y) in a.l.data.iter().zip(&b.l.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("expected Cholesky round trip"),
+        }
+        // LU of a non-symmetric matrix
+        let gen = Mat::from_vec(2, 2, vec![0.0, 2.0, 1.0, 7.0]);
+        let fact = Factorization::of_mat(&gen, false).unwrap();
+        let j = fact_json(&fact).unwrap();
+        let back = fact_from(&j).unwrap();
+        match (&fact, &back) {
+            (Factorization::Lu(a), Factorization::Lu(b)) => {
+                let (am, ap, asg) = a.parts();
+                let (bm, bp, bsg) = b.parts();
+                assert_eq!(ap, bp);
+                assert_eq!(asg, bsg);
+                for (x, y) in am.data.iter().zip(&bm.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("expected LU round trip"),
+        }
+        // Corrupt pivots are rejected, not trusted.
+        let mut bad = j.clone();
+        if let Json::Obj(fields) = &mut bad {
+            for (k, v) in fields.iter_mut() {
+                if k == "piv" {
+                    *v = Json::Arr(vec![Json::Num(9.0), Json::Num(0.0)]);
+                }
+            }
+        }
+        assert!(fact_from(&bad).is_none());
+    }
+
+    #[test]
+    fn save_load_reproduces_cache_state() {
+        let a = quiet();
+        // Warm two problems through the JSON front end.
+        let reqs = [
+            r#"{"op":"hypergrad","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1]}"#,
+            r#"{"op":"hypergrad","problem":"quad","theta":[0.5,0.6,0.7,0.8],"v":[1,1,1,1,1,1]}"#,
+        ];
+        for r in reqs {
+            assert!(a.handle(r).get("error").is_none());
+        }
+        assert_eq!(a.cache.len(), 2);
+        let path = tmp_path("roundtrip");
+        a.save_manifest(&path).unwrap();
+
+        let b = quiet();
+        let warm = b.load_manifest(&path).unwrap();
+        assert!(warm.cold_start.is_none(), "{:?}", warm.cold_start);
+        assert_eq!(warm.factorizations, 2);
+        assert_eq!(warm.skipped, 0);
+        assert_eq!(b.cache.len(), 2);
+        // Replays are cache hits with zero factorizations on the new server.
+        for r in reqs {
+            let reply = b.handle(r);
+            assert_eq!(reply.get("cached"), Some(&Json::Bool(true)), "{r}");
+        }
+        use std::sync::atomic::Ordering;
+        assert_eq!(b.stats.factorizations.load(Ordering::Relaxed), 0);
+        assert_eq!(b.stats.inner_solves.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_version_or_format_is_a_clean_cold_start() {
+        let path = tmp_path("oldversion");
+        // A version-1 manifest from a previous build.
+        std::fs::write(
+            &path,
+            r#"{"format":"idiff-serve-manifest","version":1,"entries":[{"junk":true}]}"#,
+        )
+        .unwrap();
+        let s = quiet();
+        let warm = s.load_manifest(&path).unwrap();
+        assert!(warm.cold_start.is_some());
+        assert_eq!(warm.factorizations, 0);
+        assert!(s.cache.is_empty());
+        // Foreign JSON file: also a cold start, not an error.
+        std::fs::write(&path, r#"{"hello":"world"}"#).unwrap();
+        assert!(s.load_manifest(&path).unwrap().cold_start.is_some());
+        // Unparseable garbage: an Err, still no panic, caches untouched.
+        std::fs::write(&path, "not json at all {{{").unwrap();
+        assert!(s.load_manifest(&path).is_err());
+        assert!(s.cache.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_entries_are_skipped_and_counted() {
+        let a = quiet();
+        let req = r#"{"op":"hypergrad","problem":"ridge","theta":[2,2,2,2,2,2,2,2],"v":[1,1,1,1,1,1,1,1]}"#;
+        assert!(a.handle(req).get("error").is_none());
+        let mut doc = a.manifest_json();
+        // Inject a stale entry for a problem this registry doesn't have.
+        if let Json::Obj(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "entries" {
+                    if let Json::Arr(entries) = v {
+                        let mut fake = entries[0].clone();
+                        if let Json::Obj(ef) = &mut fake {
+                            for (ek, ev) in ef.iter_mut() {
+                                if ek == "problem" {
+                                    *ev = Json::Str("retired_problem".to_string());
+                                }
+                            }
+                        }
+                        entries.push(fake);
+                    }
+                }
+            }
+        }
+        let path = tmp_path("stale");
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        let b = quiet();
+        let warm = b.load_manifest(&path).unwrap();
+        assert!(warm.cold_start.is_none());
+        assert_eq!(warm.factorizations, 1);
+        assert_eq!(warm.skipped, 1);
+        assert_eq!(b.cache.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

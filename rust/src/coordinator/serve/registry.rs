@@ -388,6 +388,26 @@ impl Registry {
     pub fn problems(&self) -> &[Problem] {
         &self.problems
     }
+
+    /// `[{name, dim_x, dim_theta}, …]` — the catalog fingerprint written
+    /// into persistence manifests. Warm-start validates each restored entry
+    /// against the live catalog, so this is informational (a human reading
+    /// the manifest, plus a cheap cross-check target), not a trust boundary.
+    pub fn catalog_signature(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.problems
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("name", Json::Str(p.name.to_string())),
+                        ("dim_x", Json::Num(p.dim_x() as f64)),
+                        ("dim_theta", Json::Num(p.dim_theta() as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
 }
 
 // ---------------------------------------------------------------- cores --

@@ -1,0 +1,626 @@
+//! Zero-copy binary frame codec for the serve protocol.
+//!
+//! The hot serving path should not pay for JSON: formatting every f64 to
+//! text and re-parsing it burns more time than the factored substitution
+//! that answers a warm-θ request. This codec moves θ/v/result vectors as
+//! raw little-endian f64 blocks, decoded straight into pooled buffers.
+//!
+//! # Request frame
+//!
+//! ```text
+//! [0]     magic      0xB1  (never a JSON first byte — '{' is 0x7B)
+//! [1]     version    1
+//! [2..6]  u32 LE     payload length in bytes
+//! payload:
+//!   [0]      u8      opcode (OP_PING … OP_JACOBIAN)
+//!   [1]      u8      mode   (MODE_* — MODE_NONE when defaulted)
+//!   [2]      u8      precision (PREC_F64 | PREC_MIXED)
+//!   [3]      u8      reserved (must be 0)
+//!   [4..8]   u32 LE  iters (explicit unroll depth; 0 = policy)
+//!   [8..10]  u16 LE  name_len, then name bytes (UTF-8 problem name)
+//!   [..]     u32 LE  n_theta, then n_theta × f64 LE
+//!   [..]     u32 LE  n_v,     then n_v × f64 LE
+//! ```
+//!
+//! Control ops (`ping`/`problems`/`stats`) send name/θ/v empty. Every
+//! request op carries the full layout — fixed shape beats per-op special
+//! cases at these sizes.
+//!
+//! # Reply frame
+//!
+//! ```text
+//! [0]     magic      0xB1
+//! [1]     version    1
+//! [2]     status     0 = ok, 1 = error
+//! [3]     flags      bit 0: answered from the θ-cache
+//! [4..8]  u32 LE     payload length
+//! ok payload:
+//!   [0]      u8      mode byte (MODE_* of the serving mechanism, or MODE_NONE)
+//!   [1..5]   u32 LE  batched (block-solve batch size; 0 for non-derivative ops)
+//!   [5..9]   u32 LE  rows
+//!   [9..13]  u32 LE  cols
+//!   [..]     rows×cols × f64 LE, row-major (x / grad / jv as a column;
+//!            the Jacobian as a matrix; empty for ping/problems/stats)
+//!   [..]     u32 LE  text_len, then text bytes (compact JSON — only
+//!            problems/stats use it; they are a debugging surface)
+//! err payload:
+//!   [0..4]   u32 LE  msg_len, then msg bytes (same strings as the JSON
+//!            protocol's "error" field)
+//! ```
+//!
+//! # Error policy
+//!
+//! A *framing* violation (wrong magic or version, payload length past the
+//! server limit) means the byte stream can no longer be delimited: the
+//! server sends one error frame and closes. A *well-framed but malformed*
+//! payload (unknown opcode, truncated vector block, bad UTF-8, trailing
+//! garbage) is an ordinary error frame and the connection stays usable —
+//! exactly like a JSON request with a bad field.
+
+use super::batcher::BatchOp;
+use super::{Reply, Request};
+use crate::diff::mode::DiffMode;
+use crate::linalg::solve::SolvePrecision;
+use crate::util::pool::Pool;
+use std::io::Read;
+use std::sync::Arc;
+
+/// First byte of every frame. 0xB1 is outside ASCII, so no JSON line —
+/// which must start with `{` (0x7B) or whitespace — can collide with it.
+pub const MAGIC: u8 = 0xB1;
+/// Bumped on any byte-layout change; both sides must agree exactly.
+pub const VERSION: u8 = 1;
+/// Request header: magic, version, u32 payload length.
+pub const REQUEST_HEADER_LEN: usize = 6;
+/// Reply header: magic, version, status, flags, u32 payload length.
+pub const REPLY_HEADER_LEN: usize = 8;
+
+pub const OP_PING: u8 = 0;
+pub const OP_PROBLEMS: u8 = 1;
+pub const OP_STATS: u8 = 2;
+pub const OP_SOLVE: u8 = 3;
+pub const OP_VJP: u8 = 4;
+pub const OP_JVP: u8 = 5;
+pub const OP_JACOBIAN: u8 = 6;
+
+pub const MODE_IMPLICIT: u8 = 0;
+pub const MODE_UNROLL: u8 = 1;
+pub const MODE_ONE_STEP: u8 = 2;
+pub const MODE_AUTO: u8 = 3;
+/// "field not set": derivative requests default to implicit, and replies
+/// to non-derivative ops have no mode.
+pub const MODE_NONE: u8 = 0xff;
+
+pub const PREC_F64: u8 = 0;
+pub const PREC_MIXED: u8 = 1;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+pub const FLAG_CACHED: u8 = 1;
+
+pub fn mode_to_byte(mode: DiffMode) -> u8 {
+    match mode {
+        DiffMode::Implicit => MODE_IMPLICIT,
+        DiffMode::Unroll => MODE_UNROLL,
+        DiffMode::OneStep => MODE_ONE_STEP,
+        DiffMode::Auto => MODE_AUTO,
+    }
+}
+
+fn mode_from_byte(b: u8) -> Result<DiffMode, String> {
+    match b {
+        MODE_IMPLICIT | MODE_NONE => Ok(DiffMode::Implicit),
+        MODE_UNROLL => Ok(DiffMode::Unroll),
+        MODE_ONE_STEP => Ok(DiffMode::OneStep),
+        MODE_AUTO => Ok(DiffMode::Auto),
+        other => Err(format!("bad mode byte {other:#04x}")),
+    }
+}
+
+/// The mode *string* a reply carries (`"implicit"`, `"one-step"`, …) back
+/// to its wire byte. Replies echo the engine's mode strings so both
+/// protocols stay bitwise-comparable.
+fn mode_byte_from_str(s: &str) -> u8 {
+    match DiffMode::parse(s) {
+        Some(m) => mode_to_byte(m),
+        None => MODE_NONE,
+    }
+}
+
+pub fn mode_str_from_byte(b: u8) -> &'static str {
+    match b {
+        MODE_IMPLICIT => "implicit",
+        MODE_UNROLL => "unroll",
+        MODE_ONE_STEP => "one-step",
+        MODE_AUTO => "auto",
+        _ => "",
+    }
+}
+
+// ------------------------------------------------------------- cursor --
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated frame: {what} needs {n} bytes, {} left",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Decode `n_elems` f64s straight into a pooled buffer.
+    fn f64_block(
+        &mut self,
+        n_elems: usize,
+        key: &str,
+        pool: &Arc<Pool>,
+    ) -> Result<crate::util::pool::PoolVec, String> {
+        let bytes = self.take(n_elems * 8, key)?;
+        let mut v = pool.take_f64(n_elems);
+        for i in 0..n_elems {
+            let mut raw = [0u8; 8];
+            raw.copy_from_slice(&bytes[i * 8..i * 8 + 8]);
+            let x = f64::from_le_bytes(raw);
+            if !x.is_finite() {
+                return Err(format!("'{key}[{i}]' is not a finite number"));
+            }
+            v[i] = x;
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------- server side --
+
+/// Validate a request header; returns the payload length. An `Err` here is
+/// a framing violation — the caller must close after replying.
+pub fn parse_request_header(hdr: &[u8; REQUEST_HEADER_LEN], max_payload: usize) -> Result<usize, String> {
+    if hdr[0] != MAGIC {
+        return Err(format!("bad frame magic {:#04x}", hdr[0]));
+    }
+    if hdr[1] != VERSION {
+        return Err(format!("unsupported protocol version {} (expected {VERSION})", hdr[1]));
+    }
+    let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]) as usize;
+    if len > max_payload {
+        return Err(format!("request too large ({len} bytes > {max_payload} max)"));
+    }
+    Ok(len)
+}
+
+/// Decode a request payload into the transport-neutral [`Request`]; θ and v
+/// land in pooled buffers. Errors here are *payload* errors: the connection
+/// stays open.
+pub fn decode_request(payload: &[u8], pool: &Arc<Pool>) -> Result<Request, String> {
+    let mut c = Cursor::new(payload);
+    let opcode = c.u8("opcode")?;
+    let mode_byte = c.u8("mode")?;
+    let prec_byte = c.u8("precision")?;
+    let _reserved = c.u8("reserved")?;
+    let iters = c.u32("iters")? as usize;
+    let name_len = c.u16("name length")? as usize;
+    let name_bytes = c.take(name_len, "problem name")?;
+    let name = std::str::from_utf8(name_bytes)
+        .map_err(|_| "problem name is not valid UTF-8".to_string())?
+        .to_string();
+    let n_theta = c.u32("theta length")? as usize;
+    if c.remaining() < n_theta.saturating_mul(8) {
+        return Err("truncated f64 block for 'theta'".to_string());
+    }
+    let theta = c.f64_block(n_theta, "theta", pool)?;
+    let n_v = c.u32("v length")? as usize;
+    if c.remaining() < n_v.saturating_mul(8) {
+        return Err("truncated f64 block for 'v'".to_string());
+    }
+    let v = c.f64_block(n_v, "v", pool)?;
+    if c.remaining() != 0 {
+        return Err(format!("trailing bytes in frame ({} after payload)", c.remaining()));
+    }
+    if iters > 1_000_000 {
+        return Err("'iters' must be a positive integer".to_string());
+    }
+    let precision = match prec_byte {
+        PREC_F64 => SolvePrecision::F64,
+        PREC_MIXED => SolvePrecision::MixedF32,
+        other => return Err(format!("'precision' byte {other:#04x} is not valid")),
+    };
+    match opcode {
+        OP_PING => Ok(Request::Ping),
+        OP_PROBLEMS => Ok(Request::Problems),
+        OP_STATS => Ok(Request::Stats),
+        OP_SOLVE => Ok(Request::Solve { problem: name, theta }),
+        OP_VJP | OP_JVP => Ok(Request::Derivative {
+            problem: name,
+            theta,
+            v,
+            op: if opcode == OP_VJP { BatchOp::Vjp } else { BatchOp::Jvp },
+            mode: mode_from_byte(mode_byte)?,
+            precision,
+            iters,
+        }),
+        OP_JACOBIAN => Ok(Request::Jacobian { problem: name, theta }),
+        other => Err(format!("unknown opcode {other}")),
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a reply frame (header + payload) to `out`.
+pub fn encode_reply(reply: &Reply, out: &mut Vec<u8>) {
+    let start = out.len();
+    out.push(MAGIC);
+    out.push(VERSION);
+    let (status, cached) = match reply {
+        Reply::Error(_) => (STATUS_ERR, false),
+        Reply::Solution { cached, .. } => (STATUS_OK, *cached),
+        Reply::Derivative { cached, .. } => (STATUS_OK, *cached),
+        Reply::Jacobian { cached, .. } => (STATUS_OK, *cached),
+        _ => (STATUS_OK, false),
+    };
+    out.push(status);
+    out.push(if cached { FLAG_CACHED } else { 0 });
+    push_u32(out, 0); // payload length, patched below
+    let body = out.len();
+    match reply {
+        Reply::Error(msg) => {
+            push_u32(out, msg.len() as u32);
+            out.extend_from_slice(msg.as_bytes());
+        }
+        Reply::Pong => {
+            out.push(MODE_NONE);
+            push_u32(out, 0); // batched
+            push_u32(out, 0); // rows
+            push_u32(out, 0); // cols
+            push_u32(out, 0); // text_len
+        }
+        Reply::Text(j) => {
+            out.push(MODE_NONE);
+            push_u32(out, 0);
+            push_u32(out, 0);
+            push_u32(out, 0);
+            let text = j.to_string_compact();
+            push_u32(out, text.len() as u32);
+            out.extend_from_slice(text.as_bytes());
+        }
+        Reply::Solution { x, .. } => {
+            out.push(MODE_NONE);
+            push_u32(out, 0);
+            push_u32(out, x.len() as u32);
+            push_u32(out, 1);
+            push_f64s(out, x);
+            push_u32(out, 0);
+        }
+        Reply::Derivative { out: data, batched, mode, .. } => {
+            out.push(mode_byte_from_str(mode));
+            push_u32(out, *batched as u32);
+            push_u32(out, data.len() as u32);
+            push_u32(out, 1);
+            push_f64s(out, data);
+            push_u32(out, 0);
+        }
+        Reply::Jacobian { jac, .. } => {
+            out.push(MODE_NONE);
+            push_u32(out, 0);
+            push_u32(out, jac.rows as u32);
+            push_u32(out, jac.cols as u32);
+            for i in 0..jac.rows {
+                push_f64s(out, jac.row(i));
+            }
+            push_u32(out, 0);
+        }
+    }
+    let len = (out.len() - body) as u32;
+    out[start + 4..start + 8].copy_from_slice(&len.to_le_bytes());
+}
+
+// ---------------------------------------------------------- client side --
+
+/// A request as the client assembles it. θ/v are plain slices — the client
+/// side of the codec is for tests, benches and SDKs, not the server path.
+pub struct RequestFrame<'a> {
+    pub opcode: u8,
+    pub mode: u8,
+    pub precision: u8,
+    pub iters: u32,
+    pub problem: &'a str,
+    pub theta: &'a [f64],
+    pub v: &'a [f64],
+}
+
+impl<'a> RequestFrame<'a> {
+    /// A control-plane request (ping / problems / stats).
+    pub fn control(opcode: u8) -> RequestFrame<'a> {
+        RequestFrame {
+            opcode,
+            mode: MODE_NONE,
+            precision: PREC_F64,
+            iters: 0,
+            problem: "",
+            theta: &[],
+            v: &[],
+        }
+    }
+}
+
+/// Append a full request frame (header + payload) to `out`.
+pub fn encode_request(req: &RequestFrame, out: &mut Vec<u8>) {
+    let start = out.len();
+    out.push(MAGIC);
+    out.push(VERSION);
+    push_u32(out, 0); // payload length, patched below
+    let body = out.len();
+    out.push(req.opcode);
+    out.push(req.mode);
+    out.push(req.precision);
+    out.push(0); // reserved
+    push_u32(out, req.iters);
+    debug_assert!(req.problem.len() <= u16::MAX as usize);
+    out.extend_from_slice(&(req.problem.len() as u16).to_le_bytes());
+    out.extend_from_slice(req.problem.as_bytes());
+    push_u32(out, req.theta.len() as u32);
+    push_f64s(out, req.theta);
+    push_u32(out, req.v.len() as u32);
+    push_f64s(out, req.v);
+    let len = (out.len() - body) as u32;
+    out[start + 2..start + 6].copy_from_slice(&len.to_le_bytes());
+}
+
+/// A decoded reply frame, client side.
+#[derive(Debug, Clone)]
+pub struct ReplyFrame {
+    pub status: u8,
+    pub cached: bool,
+    pub mode_byte: u8,
+    pub batched: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// rows×cols payload, row-major.
+    pub data: Vec<f64>,
+    /// Compact-JSON tail (problems/stats), empty otherwise.
+    pub text: String,
+    pub error: Option<String>,
+}
+
+/// Read one reply frame off a stream (blocking).
+pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReplyFrame> {
+    use std::io::{Error, ErrorKind};
+    let bad = |msg: String| Error::new(ErrorKind::InvalidData, msg);
+    let mut hdr = [0u8; REPLY_HEADER_LEN];
+    r.read_exact(&mut hdr)?;
+    if hdr[0] != MAGIC || hdr[1] != VERSION {
+        return Err(bad(format!("bad reply header {:#04x} {:#04x}", hdr[0], hdr[1])));
+    }
+    let status = hdr[2];
+    let cached = hdr[3] & FLAG_CACHED != 0;
+    let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut c = Cursor::new(&payload);
+    if status == STATUS_ERR {
+        let n = c.u32("error length").map_err(&bad)? as usize;
+        let msg = String::from_utf8_lossy(c.take(n, "error text").map_err(&bad)?).into_owned();
+        return Ok(ReplyFrame {
+            status,
+            cached,
+            mode_byte: MODE_NONE,
+            batched: 0,
+            rows: 0,
+            cols: 0,
+            data: Vec::new(),
+            text: String::new(),
+            error: Some(msg),
+        });
+    }
+    let mode_byte = c.u8("mode").map_err(&bad)?;
+    let batched = c.u32("batched").map_err(&bad)? as usize;
+    let rows = c.u32("rows").map_err(&bad)? as usize;
+    let cols = c.u32("cols").map_err(&bad)? as usize;
+    let n = rows * cols;
+    let bytes = c.take(n * 8, "f64 block").map_err(&bad)?;
+    let mut data = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(&bytes[i * 8..i * 8 + 8]);
+        data.push(f64::from_le_bytes(raw));
+    }
+    let tn = c.u32("text length").map_err(&bad)? as usize;
+    let text = String::from_utf8_lossy(c.take(tn, "text").map_err(&bad)?).into_owned();
+    Ok(ReplyFrame {
+        status,
+        cached,
+        mode_byte,
+        batched,
+        rows,
+        cols,
+        data,
+        text,
+        error: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::Pool;
+
+    fn pool() -> Arc<Pool> {
+        Pool::new(8)
+    }
+
+    #[test]
+    fn request_round_trips_through_the_codec() {
+        let theta = [1.0, -0.0, 2.0 + 1e-9, 5e-324];
+        let v = [0.25, -3.5];
+        let frame = RequestFrame {
+            opcode: OP_VJP,
+            mode: MODE_AUTO,
+            precision: PREC_MIXED,
+            iters: 7,
+            problem: "ridge",
+            theta: &theta,
+            v: &v,
+        };
+        let mut out = Vec::new();
+        encode_request(&frame, &mut out);
+        assert_eq!(out[0], MAGIC);
+        assert_eq!(out[1], VERSION);
+        let len = u32::from_le_bytes([out[2], out[3], out[4], out[5]]) as usize;
+        assert_eq!(len, out.len() - REQUEST_HEADER_LEN);
+        let req = decode_request(&out[REQUEST_HEADER_LEN..], &pool()).unwrap();
+        match req {
+            Request::Derivative { problem, theta: t, v: vv, op, mode, precision, iters } => {
+                assert_eq!(problem, "ridge");
+                assert_eq!(t.len(), 4);
+                for i in 0..4 {
+                    assert_eq!(t[i].to_bits(), theta[i].to_bits(), "theta[{i}]");
+                }
+                assert_eq!(&vv[..], &v[..]);
+                assert!(matches!(op, BatchOp::Vjp));
+                assert_eq!(mode, crate::diff::mode::DiffMode::Auto);
+                assert_eq!(precision, crate::linalg::solve::SolvePrecision::MixedF32);
+                assert_eq!(iters, 7);
+            }
+            _ => panic!("wrong request variant"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_clean_errors() {
+        let p = pool();
+        // unknown opcode
+        let mut out = Vec::new();
+        encode_request(&RequestFrame { opcode: 99, ..RequestFrame::control(OP_PING) }, &mut out);
+        let e = decode_request(&out[REQUEST_HEADER_LEN..], &p).unwrap_err();
+        assert!(e.contains("unknown opcode"), "{e}");
+        // truncated θ block: claim 4 f64s, supply 1
+        let mut out = Vec::new();
+        encode_request(
+            &RequestFrame {
+                opcode: OP_SOLVE,
+                problem: "ridge",
+                theta: &[1.0],
+                ..RequestFrame::control(OP_SOLVE)
+            },
+            &mut out,
+        );
+        let theta_count_at = REQUEST_HEADER_LEN + 8 + 2 + "ridge".len();
+        out[theta_count_at..theta_count_at + 4].copy_from_slice(&4u32.to_le_bytes());
+        let e = decode_request(&out[REQUEST_HEADER_LEN..], &p).unwrap_err();
+        assert!(e.contains("truncated"), "{e}");
+        // trailing garbage
+        let mut out = Vec::new();
+        encode_request(&RequestFrame::control(OP_PING), &mut out);
+        let len_fixed = (out.len() - REQUEST_HEADER_LEN + 2) as u32;
+        out.extend_from_slice(&[0xde, 0xad]);
+        out[2..6].copy_from_slice(&len_fixed.to_le_bytes());
+        let e = decode_request(&out[REQUEST_HEADER_LEN..], &p).unwrap_err();
+        assert!(e.contains("trailing"), "{e}");
+        // non-finite θ entry
+        let mut out = Vec::new();
+        encode_request(
+            &RequestFrame {
+                opcode: OP_SOLVE,
+                problem: "ridge",
+                theta: &[f64::NAN],
+                ..RequestFrame::control(OP_SOLVE)
+            },
+            &mut out,
+        );
+        let e = decode_request(&out[REQUEST_HEADER_LEN..], &p).unwrap_err();
+        assert!(e.contains("not a finite number"), "{e}");
+    }
+
+    #[test]
+    fn header_validation_catches_framing_violations() {
+        let mut hdr = [0u8; REQUEST_HEADER_LEN];
+        hdr[0] = MAGIC;
+        hdr[1] = VERSION;
+        hdr[2..6].copy_from_slice(&64u32.to_le_bytes());
+        assert_eq!(parse_request_header(&hdr, 1024), Ok(64));
+        let mut bad_magic = hdr;
+        bad_magic[0] = b'{';
+        assert!(parse_request_header(&bad_magic, 1024).unwrap_err().contains("magic"));
+        let mut bad_ver = hdr;
+        bad_ver[1] = 9;
+        assert!(parse_request_header(&bad_ver, 1024).unwrap_err().contains("version"));
+        let mut huge = hdr;
+        huge[2..6].copy_from_slice(&(1u32 << 30).to_le_bytes());
+        assert!(parse_request_header(&huge, 1024).unwrap_err().contains("too large"));
+    }
+
+    #[test]
+    fn reply_frames_round_trip_ok_and_error() {
+        // derivative reply
+        let reply = Reply::Derivative {
+            out: vec![1.5, -2.25, 1e-300],
+            out_key: "grad",
+            batched: 3,
+            cached: true,
+            mode: "one-step",
+        };
+        let mut buf = Vec::new();
+        encode_reply(&reply, &mut buf);
+        let f = read_reply(&mut &buf[..]).unwrap();
+        assert_eq!(f.status, STATUS_OK);
+        assert!(f.cached);
+        assert_eq!(f.mode_byte, MODE_ONE_STEP);
+        assert_eq!(mode_str_from_byte(f.mode_byte), "one-step");
+        assert_eq!(f.batched, 3);
+        assert_eq!((f.rows, f.cols), (3, 1));
+        assert_eq!(f.data, vec![1.5, -2.25, 1e-300]);
+        assert!(f.error.is_none());
+        // error reply
+        let mut buf = Vec::new();
+        encode_reply(&Reply::Error("missing 'problem'".into()), &mut buf);
+        let f = read_reply(&mut &buf[..]).unwrap();
+        assert_eq!(f.status, STATUS_ERR);
+        assert_eq!(f.error.as_deref(), Some("missing 'problem'"));
+        // jacobian reply carries the matrix shape
+        let jac = crate::linalg::mat::Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut buf = Vec::new();
+        encode_reply(&Reply::Jacobian { jac, cached: false }, &mut buf);
+        let f = read_reply(&mut &buf[..]).unwrap();
+        assert_eq!((f.rows, f.cols), (2, 2));
+        assert_eq!(f.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

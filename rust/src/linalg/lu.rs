@@ -65,6 +65,27 @@ impl Lu {
         self.lu.rows
     }
 
+    /// (packed LU factors, row permutation, permutation sign) — the serve
+    /// manifest's serialization surface.
+    pub fn parts(&self) -> (&Mat, &[usize], f64) {
+        (&self.lu, &self.piv, self.sign)
+    }
+
+    /// Rebuild a factorization from [`Lu::parts`] output (manifest
+    /// warm-start). Returns None unless the shapes form a square matrix with
+    /// a valid permutation vector and sign — a corrupt manifest entry must
+    /// degrade to a cache miss, never a panic in `solve`.
+    pub fn from_parts(lu: Mat, piv: Vec<usize>, sign: f64) -> Option<Lu> {
+        let n = lu.rows;
+        if lu.cols != n || piv.len() != n || piv.iter().any(|&p| p >= n) {
+            return None;
+        }
+        if sign != 1.0 && sign != -1.0 {
+            return None;
+        }
+        Some(Lu { lu, piv, sign })
+    }
+
     /// Solve A x = b.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let n = self.lu.rows;

@@ -6,6 +6,7 @@
 //! idiff run --exp all             # run everything at default (CI) scale
 //! idiff serve [--addr 127.0.0.1:7878] [--workers N] [--window-ms 2]
 //!             [--batch-max 32] [--cache 64]          # catalog request server
+//!             [--manifest PATH] [--persist-secs 60]  # warm-start persistence
 //! ```
 
 use idiff::coordinator;
@@ -34,9 +35,25 @@ fn main() {
                 batch_window: std::time::Duration::from_millis(args.get_u64("window-ms", 2)),
                 batch_max: args.get_usize("batch-max", defaults.batch_max),
                 cache_capacity: args.get_usize("cache", defaults.cache_capacity),
+                manifest_path: args.get("manifest").map(std::path::PathBuf::from),
+                persist_secs: args.get_u64("persist-secs", defaults.persist_secs),
                 ..defaults
             };
+            let manifest = cfg.manifest_path.clone();
             let server = std::sync::Arc::new(coordinator::serve::Server::new(cfg));
+            // Warm-start from a previous run's manifest, if there is one.
+            if let Some(path) = manifest.filter(|p| p.exists()) {
+                match server.load_manifest(&path) {
+                    Ok(warm) => match warm.cold_start {
+                        None => println!(
+                            "idiff serve: warm start from {} ({} factorizations, {} rho entries, {} skipped)",
+                            path.display(), warm.factorizations, warm.rho_entries, warm.skipped
+                        ),
+                        Some(reason) => println!("idiff serve: cold start — {reason}"),
+                    },
+                    Err(e) => eprintln!("idiff serve: cold start — {e}"),
+                }
+            }
             if let Err(e) = server.serve(&addr) {
                 eprintln!("server error: {e}");
                 std::process::exit(1);

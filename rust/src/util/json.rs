@@ -94,11 +94,7 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
-                        let _ = fmt::Write::write_fmt(out, format_args!("{}", *x as i64));
-                    } else {
-                        let _ = fmt::Write::write_fmt(out, format_args!("{x}"));
-                    }
+                    out.push_str(&fmt_f64(*x));
                 } else {
                     out.push_str("null"); // JSON has no NaN/Inf
                 }
@@ -138,6 +134,24 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Shortest decimal rendering of a finite f64 that parses back to exactly
+/// the same bits: the shorter of Rust's `{}` and `{:e}` forms (both emit the
+/// minimal round-trip digit string; `{}` never uses an exponent, so 1e300
+/// would be 301 characters without the `{:e}` candidate, while `{:e}` pads
+/// small values like `4e0`). Both forms are valid JSON numbers, `-0.0`
+/// included (`-0`), so serve manifests and protocol replies are bit-stable
+/// across a write/parse round trip.
+pub fn fmt_f64(x: f64) -> String {
+    debug_assert!(x.is_finite());
+    let plain = format!("{x}");
+    let exp = format!("{x:e}");
+    if exp.len() < plain.len() {
+        exp
+    } else {
+        plain
     }
 }
 
@@ -421,5 +435,55 @@ mod tests {
     fn unicode_roundtrip() {
         let j = Json::Str("héllo ∆ 日本".into());
         assert_eq!(parse(&j.to_string_compact()).unwrap(), j);
+    }
+
+    /// Property: every finite f64 survives emit → parse with the exact same
+    /// bit pattern (the manifest warm-start and the binary↔JSON protocol
+    /// equivalence sweep both rest on this).
+    #[test]
+    fn f64_round_trips_bit_exactly() {
+        let mut rng = crate::util::rng::Rng::new(0xf64);
+        let mut cases: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            f64::MAX,
+            f64::MIN,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            1e15,
+            1e16,
+            -1e300,
+            123456789.123456789,
+            2.0 + 1e-9,
+        ];
+        for _ in 0..2000 {
+            // Random bit patterns cover subnormals and extreme exponents.
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_finite() {
+                cases.push(x);
+            }
+            // Well-scaled values cover the common serving range.
+            let exp = rng.below(601) as i32 - 300;
+            cases.push((rng.uniform() - 0.5) * 10f64.powi(exp));
+        }
+        for x in cases {
+            let s = Json::Num(x).to_string_compact();
+            let back = parse(&s)
+                .unwrap_or_else(|e| panic!("{x:?} emitted as {s}, which failed to parse: {e}"))
+                .as_f64()
+                .unwrap();
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "{x:?} emitted as {s} parsed back to {back:?}"
+            );
+        }
+        // Non-finite values still degrade to null (JSON has no NaN/Inf).
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
     }
 }

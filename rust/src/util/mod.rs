@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,231 @@
+//! Buffer pooling for the serve hot path.
+//!
+//! Every derivative request used to allocate fresh `Vec<f64>`s for θ and v
+//! (and a scratch byte buffer per binary frame). At one-step / factored-cache
+//! latencies the allocator shows up in the profile, so the serve engine
+//! recycles buffers through a [`Pool`]: `take_*` hands out a cleared buffer
+//! (reusing a previously returned allocation when one is idle), and the RAII
+//! wrappers return the allocation on drop. Hit/miss/recycle counters surface
+//! through the serve `stats` op.
+//!
+//! Buffers above [`MAX_POOLED_LEN`] elements are dropped instead of pooled so
+//! a single oversized request cannot pin megabytes in the idle list forever.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Largest buffer (in elements) the idle lists will retain.
+pub const MAX_POOLED_LEN: usize = 1 << 20;
+
+/// Pool counter snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// `take_*` calls served from an idle buffer.
+    pub hits: u64,
+    /// `take_*` calls that had to allocate.
+    pub misses: u64,
+    /// Buffers returned to an idle list on drop.
+    pub recycled: u64,
+}
+
+/// Shared free-lists of `f64` and byte buffers.
+pub struct Pool {
+    f64s: Mutex<Vec<Vec<f64>>>,
+    bytes: Mutex<Vec<Vec<u8>>>,
+    /// Idle buffers retained per list; extras are dropped on return.
+    max_idle: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl Pool {
+    pub fn new(max_idle: usize) -> Arc<Pool> {
+        Arc::new(Pool {
+            f64s: Mutex::new(Vec::new()),
+            bytes: Mutex::new(Vec::new()),
+            max_idle: max_idle.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        })
+    }
+
+    /// A zeroed `f64` buffer of exactly `len` elements.
+    pub fn take_f64(self: &Arc<Self>, len: usize) -> PoolVec {
+        let mut buf = match self.f64s.lock().unwrap().pop() {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        PoolVec { buf, home: Arc::clone(self) }
+    }
+
+    /// A buffer pre-filled with a copy of `src`.
+    pub fn take_f64_copy(self: &Arc<Self>, src: &[f64]) -> PoolVec {
+        let mut buf = self.take_f64(src.len());
+        buf.copy_from_slice(src);
+        buf
+    }
+
+    /// An empty byte buffer with at least `cap` bytes of capacity.
+    pub fn take_bytes(self: &Arc<Self>, cap: usize) -> PoolBytes {
+        let mut buf = match self.bytes.lock().unwrap().pop() {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        buf.clear();
+        buf.reserve(cap);
+        PoolBytes { buf, home: Arc::clone(self) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+        }
+    }
+
+    fn put_f64(&self, buf: Vec<f64>) {
+        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_LEN {
+            return;
+        }
+        let mut list = self.f64s.lock().unwrap();
+        if list.len() < self.max_idle {
+            list.push(buf);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn put_bytes(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_LEN {
+            return;
+        }
+        let mut list = self.bytes.lock().unwrap();
+        if list.len() < self.max_idle {
+            list.push(buf);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A pooled `Vec<f64>`; derefs to the vector (and through it to `&[f64]`),
+/// returns its allocation to the pool on drop.
+pub struct PoolVec {
+    buf: Vec<f64>,
+    home: Arc<Pool>,
+}
+
+impl Deref for PoolVec {
+    type Target = Vec<f64>;
+    fn deref(&self) -> &Vec<f64> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PoolVec {
+    fn deref_mut(&mut self) -> &mut Vec<f64> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PoolVec {
+    fn drop(&mut self) {
+        self.home.put_f64(std::mem::take(&mut self.buf));
+    }
+}
+
+impl std::fmt::Debug for PoolVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.buf.fmt(f)
+    }
+}
+
+/// A pooled `Vec<u8>` (frame payload / reply scratch); same contract as
+/// [`PoolVec`].
+pub struct PoolBytes {
+    buf: Vec<u8>,
+    home: Arc<Pool>,
+}
+
+impl Deref for PoolBytes {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PoolBytes {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PoolBytes {
+    fn drop(&mut self) {
+        self.home.put_bytes(std::mem::take(&mut self.buf));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_recycled_and_counted() {
+        let pool = Pool::new(4);
+        {
+            let mut a = pool.take_f64(3);
+            a[0] = 7.0;
+            assert_eq!(&a[..], &[7.0, 0.0, 0.0]);
+        } // returned
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (0, 1, 1));
+        {
+            // Reuses the returned allocation, zeroed and resized.
+            let b = pool.take_f64(2);
+            assert_eq!(&b[..], &[0.0, 0.0]);
+        }
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (1, 1, 2));
+    }
+
+    #[test]
+    fn idle_list_is_bounded_and_oversized_buffers_are_dropped() {
+        let pool = Pool::new(2);
+        let taken: Vec<PoolVec> = (0..5).map(|_| pool.take_f64(1)).collect();
+        drop(taken); // only max_idle of the 5 survive
+        assert_eq!(pool.stats().recycled, 2);
+        drop(pool.take_f64(MAX_POOLED_LEN + 1));
+        assert_eq!(pool.stats().recycled, 2, "oversized buffer must not be pooled");
+    }
+
+    #[test]
+    fn take_f64_copy_and_bytes_round_trip() {
+        let pool = Pool::new(4);
+        let v = pool.take_f64_copy(&[1.5, -2.5]);
+        assert_eq!(&v[..], &[1.5, -2.5]);
+        let mut b = pool.take_bytes(16);
+        b.extend_from_slice(b"abc");
+        assert_eq!(&b[..], b"abc");
+        drop(v);
+        drop(b);
+        let again = pool.take_bytes(1);
+        assert!(again.is_empty(), "recycled byte buffer must come back cleared");
+    }
+}

@@ -1,0 +1,184 @@
+//! Kill → restart → warm-start: a server that saved its manifest answers
+//! repeat-θ traffic after reboot with ZERO new factorizations, zero inner
+//! solves, and bitwise-identical hypergradients; the ρ-cache warm-starts
+//! the same way so `"mode":"auto"` never re-runs power iteration on θ's a
+//! previous process already measured.
+
+use idiff::coordinator::serve::wire::{self, RequestFrame};
+use idiff::coordinator::serve::{ServeConfig, Server};
+use idiff::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn quiet() -> Server {
+    Server::new(ServeConfig { batch_window: Duration::from_millis(0), ..ServeConfig::default() })
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("idiff_warm_{tag}_{}.json", std::process::id()))
+}
+
+fn hypergrad_line(problem: &str, theta: &[f64], v: &[f64]) -> String {
+    Json::obj(vec![
+        ("op", Json::Str("hypergrad".to_string())),
+        ("problem", Json::Str(problem.to_string())),
+        ("theta", Json::arr_f64(theta)),
+        ("v", Json::arr_f64(v)),
+    ])
+    .to_string_compact()
+}
+
+fn grad_of(reply: &Json) -> Vec<f64> {
+    reply
+        .get("grad")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("no grad in {}", reply.to_string_compact()))
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect()
+}
+
+#[test]
+fn warm_restart_serves_repeat_theta_with_zero_factorizations() {
+    // Cholesky-cached (ridge, quad) and LU-cached (projgd) problems, two
+    // θ's each — the manifest must carry every factorization kind.
+    let thetas: Vec<(&str, Vec<f64>, usize)> = vec![
+        ("ridge", vec![1.0; 8], 8),
+        ("ridge", vec![0.4; 8], 8),
+        ("quad", vec![0.5, 0.6, 0.7, 0.8], 6),
+        ("projgd", vec![0.2, 0.4, 0.6, 0.8, 1.0], 5),
+    ];
+
+    // ---- life 1: serve, warm, persist, die -------------------------------
+    let a = quiet();
+    let mut cached_grads = Vec::new();
+    for (problem, theta, dim_x) in &thetas {
+        let v = vec![0.5; *dim_x];
+        let first = a.handle(&hypergrad_line(problem, theta, &v));
+        assert!(first.get("error").is_none(), "{}", first.to_string_compact());
+        // Second pass takes the factored path — THIS is the answer a warm
+        // restart must reproduce bitwise.
+        let second = a.handle(&hypergrad_line(problem, theta, &v));
+        assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
+        cached_grads.push(grad_of(&second));
+    }
+    let lived_factorizations = a.stats.factorizations.load(Ordering::Relaxed);
+    assert_eq!(lived_factorizations, thetas.len() as u64);
+    let path = tmp_path("restart");
+    a.save_manifest(&path).unwrap();
+    drop(a); // the "kill"
+
+    // ---- life 2: boot cold, load manifest, replay ------------------------
+    let b = quiet();
+    let warm = b.load_manifest(&path).unwrap();
+    assert!(warm.cold_start.is_none(), "unexpected cold start: {:?}", warm.cold_start);
+    assert_eq!(warm.factorizations as u64, lived_factorizations);
+    assert_eq!(warm.skipped, 0);
+    for ((problem, theta, dim_x), want) in thetas.iter().zip(&cached_grads) {
+        let v = vec![0.5; *dim_x];
+        let reply = b.handle(&hypergrad_line(problem, theta, &v));
+        assert_eq!(
+            reply.get("cached"),
+            Some(&Json::Bool(true)),
+            "{problem}: warm restart must serve from the restored cache"
+        );
+        let got = grad_of(&reply);
+        assert_eq!(got.len(), want.len());
+        for (i, (x, y)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{problem} grad[{i}]: pre-restart {x} vs post-restart {y}"
+            );
+        }
+    }
+    // The whole point: the reboot did no derivative work from scratch.
+    assert_eq!(b.stats.factorizations.load(Ordering::Relaxed), 0);
+    assert_eq!(b.stats.block_solves.load(Ordering::Relaxed), 0);
+    assert_eq!(b.stats.inner_solves.load(Ordering::Relaxed), 0);
+
+    // The binary wire sees the same warm state: a frame-decoded repeat-θ
+    // request is served cached, bitwise equal to the JSON answer.
+    let (problem, theta, dim_x) = &thetas[0];
+    let v = vec![0.5; *dim_x];
+    let mut frame = Vec::new();
+    wire::encode_request(
+        &RequestFrame {
+            opcode: wire::OP_VJP,
+            problem,
+            theta,
+            v: &v,
+            ..RequestFrame::control(wire::OP_VJP)
+        },
+        &mut frame,
+    );
+    match b.handle_frame(&frame[wire::REQUEST_HEADER_LEN..]) {
+        idiff::coordinator::serve::Reply::Derivative { out, cached, .. } => {
+            assert!(cached);
+            for (x, y) in cached_grads[0].iter().zip(&out) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        _ => panic!("expected a derivative reply"),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn rho_cache_persists_so_auto_mode_skips_power_iteration_after_reboot() {
+    let a = quiet();
+    let theta = vec![0.9; 8];
+    let mk = |v0: f64| {
+        Json::obj(vec![
+            ("op", Json::Str("hypergrad".to_string())),
+            ("problem", Json::Str("ridge".to_string())),
+            ("theta", Json::arr_f64(&theta)),
+            ("v", Json::arr_f64(&vec![v0; 8])),
+            ("mode", Json::Str("auto".to_string())),
+        ])
+        .to_string_compact()
+    };
+    assert!(a.handle(&mk(1.0)).get("error").is_none());
+    assert!(a.handle(&mk(2.0)).get("error").is_none());
+    // One estimate for both requests (ρ-cache absorbed the repeat) …
+    assert_eq!(a.stats.rho_estimates.load(Ordering::Relaxed), 1);
+    // … and auto stayed solve-free on this well-contracting problem.
+    assert_eq!(a.stats.factorizations.load(Ordering::Relaxed), 0);
+    let path = tmp_path("rho");
+    a.save_manifest(&path).unwrap();
+    drop(a);
+
+    let b = quiet();
+    let warm = b.load_manifest(&path).unwrap();
+    assert!(warm.cold_start.is_none());
+    assert_eq!(warm.rho_entries, 1);
+    assert!(b.handle(&mk(3.0)).get("error").is_none());
+    assert_eq!(
+        b.stats.rho_estimates.load(Ordering::Relaxed),
+        0,
+        "auto after reboot must reuse the persisted contraction estimate"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn manifest_version_skew_cold_starts_without_crashing_the_server() {
+    // A manifest written by some FUTURE version must not wedge this build:
+    // it reports a cold start and the server serves normally.
+    let path = tmp_path("future");
+    std::fs::write(
+        &path,
+        r#"{"format":"idiff-serve-manifest","version":99,"entries":[{"problem":"ridge","payload":"from-the-future"}]}"#,
+    )
+    .unwrap();
+    let s = quiet();
+    let warm = s.load_manifest(&path).unwrap();
+    assert!(warm.cold_start.is_some());
+    assert_eq!(warm.factorizations + warm.rho_entries, 0);
+    // Still a fully functional cold server.
+    let r = s.handle(&hypergrad_line("ridge", &[1.0; 8], &[1.0; 8]));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 1);
+    let _ = std::fs::remove_file(&path);
+}

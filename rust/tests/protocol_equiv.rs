@@ -1,0 +1,480 @@
+//! Binary ↔ JSON protocol equivalence.
+//!
+//! Two identically-constructed servers in one process replay the same
+//! request script — one over the JSON line protocol, one over binary
+//! frames — and every reply must agree BITWISE: f64 payloads, cached flags,
+//! batch sizes, mode strings, error strings, and the engine counters. This
+//! is what "same engine, two wires" means; the exact-f64 JSON formatter
+//! (`util::json::fmt_f64`) is what makes bitwise comparison possible at
+//! all. A second suite drives malformed and oversized binary frames and
+//! asserts the documented error policy: payload errors keep the connection
+//! usable, framing errors close it, and a JSON connection on the same port
+//! never notices.
+
+use idiff::coordinator::serve::wire::{self, ReplyFrame, RequestFrame};
+use idiff::coordinator::serve::{ServeConfig, Server};
+use idiff::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start(cfg: ServeConfig) -> (SocketAddr, Arc<Server>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = Arc::new(Server::new(cfg));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
+    (addr, server)
+}
+
+fn quiet_cfg() -> ServeConfig {
+    ServeConfig { batch_window: Duration::from_millis(0), ..ServeConfig::default() }
+}
+
+struct JsonClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl JsonClient {
+    fn connect(addr: SocketAddr) -> JsonClient {
+        let stream = TcpStream::connect(addr).expect("connect json");
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        JsonClient { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        idiff::util::json::parse(reply.trim()).expect("reply parses")
+    }
+}
+
+struct BinClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl BinClient {
+    fn connect(addr: SocketAddr) -> BinClient {
+        BinClient { stream: TcpStream::connect(addr).expect("connect bin"), buf: Vec::new() }
+    }
+
+    fn request(&mut self, frame: &RequestFrame) -> ReplyFrame {
+        self.buf.clear();
+        wire::encode_request(frame, &mut self.buf);
+        self.stream.write_all(&self.buf).unwrap();
+        wire::read_reply(&mut self.stream).expect("read reply frame")
+    }
+
+    /// Send raw bytes and try to read one reply frame.
+    fn raw(&mut self, bytes: &[u8]) -> std::io::Result<ReplyFrame> {
+        self.stream.write_all(bytes)?;
+        wire::read_reply(&mut self.stream)
+    }
+}
+
+/// One scripted request, renderable on either wire.
+#[derive(Clone)]
+struct Step {
+    op: &'static str, // "ping" | "problems" | "stats" | "solve" | "hypergrad" | "jvp" | "jacobian"
+    problem: String,
+    theta: Vec<f64>,
+    v: Vec<f64>,
+    mode: Option<&'static str>,
+    precision: Option<&'static str>,
+    iters: u32,
+}
+
+impl Step {
+    fn control(op: &'static str) -> Step {
+        Step {
+            op,
+            problem: String::new(),
+            theta: Vec::new(),
+            v: Vec::new(),
+            mode: None,
+            precision: None,
+            iters: 0,
+        }
+    }
+
+    fn to_json_line(&self) -> String {
+        let mut fields = vec![("op", Json::Str(self.op.to_string()))];
+        if !self.problem.is_empty() {
+            fields.push(("problem", Json::Str(self.problem.clone())));
+        }
+        if matches!(self.op, "solve" | "hypergrad" | "jvp" | "jacobian") {
+            fields.push(("theta", Json::arr_f64(&self.theta)));
+        }
+        if matches!(self.op, "hypergrad" | "jvp") {
+            fields.push(("v", Json::arr_f64(&self.v)));
+        }
+        if let Some(m) = self.mode {
+            fields.push(("mode", Json::Str(m.to_string())));
+        }
+        if let Some(p) = self.precision {
+            fields.push(("precision", Json::Str(p.to_string())));
+        }
+        if self.iters > 0 {
+            fields.push(("iters", Json::Num(self.iters as f64)));
+        }
+        Json::obj(fields).to_string_compact()
+    }
+
+    fn to_frame(&self) -> RequestFrame<'_> {
+        let opcode = match self.op {
+            "ping" => wire::OP_PING,
+            "problems" => wire::OP_PROBLEMS,
+            "stats" => wire::OP_STATS,
+            "solve" => wire::OP_SOLVE,
+            "hypergrad" => wire::OP_VJP,
+            "jvp" => wire::OP_JVP,
+            "jacobian" => wire::OP_JACOBIAN,
+            other => panic!("no opcode for {other}"),
+        };
+        let mode = match self.mode {
+            None => wire::MODE_NONE,
+            Some("implicit") => wire::MODE_IMPLICIT,
+            Some("unroll") => wire::MODE_UNROLL,
+            Some("one-step") => wire::MODE_ONE_STEP,
+            Some("auto") => wire::MODE_AUTO,
+            Some(other) => panic!("no mode byte for {other}"),
+        };
+        let precision = match self.precision {
+            None | Some("f64") => wire::PREC_F64,
+            Some("mixed") => wire::PREC_MIXED,
+            Some(other) => panic!("no precision byte for {other}"),
+        };
+        RequestFrame {
+            opcode,
+            mode,
+            precision,
+            iters: self.iters,
+            problem: &self.problem,
+            theta: &self.theta,
+            v: &self.v,
+        }
+    }
+}
+
+fn json_f64s(j: &Json, key: &str) -> Vec<f64> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("no '{key}' in {}", j.to_string_compact()))
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect()
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} (json) vs {y} (binary)");
+    }
+}
+
+/// Compare a JSON reply and a binary reply frame for one step.
+fn assert_equivalent(step: &Step, jr: &Json, bf: &ReplyFrame) {
+    let ctx = step.to_json_line();
+    if let Some(msg) = jr.get("error").and_then(Json::as_str) {
+        assert_eq!(bf.status, wire::STATUS_ERR, "{ctx}: json errored, binary did not");
+        assert_eq!(bf.error.as_deref(), Some(msg), "{ctx}: error strings differ");
+        return;
+    }
+    assert_eq!(bf.status, wire::STATUS_OK, "{ctx}: binary errored: {:?}", bf.error);
+    match step.op {
+        "ping" => {
+            assert_eq!(jr.get("ok"), Some(&Json::Bool(true)), "{ctx}");
+            assert_eq!((bf.rows, bf.cols), (0, 0), "{ctx}");
+        }
+        "problems" => {
+            let bj = idiff::util::json::parse(&bf.text).expect("problems text parses");
+            assert_eq!(jr, &bj, "{ctx}: catalog documents differ");
+        }
+        "stats" => {
+            // Counter VALUES legitimately differ across transports (the
+            // binary path also draws reply buffers from the pool), but the
+            // surface — the key set — must match.
+            let bj = idiff::util::json::parse(&bf.text).expect("stats text parses");
+            let keys = |j: &Json| match j {
+                Json::Obj(m) => m.keys().cloned().collect::<Vec<String>>(),
+                _ => panic!("stats is not an object"),
+            };
+            assert_eq!(keys(jr), keys(&bj), "{ctx}: stats key sets differ");
+        }
+        "solve" => {
+            assert_bitwise(&json_f64s(jr, "x"), &bf.data, &format!("{ctx}: x"));
+            assert_eq!((bf.rows, bf.cols), (bf.data.len(), 1), "{ctx}: shape");
+            assert_eq!(jr.get("cached"), Some(&Json::Bool(bf.cached)), "{ctx}: cached");
+        }
+        "hypergrad" | "jvp" => {
+            let key = if step.op == "hypergrad" { "grad" } else { "jv" };
+            assert_bitwise(&json_f64s(jr, key), &bf.data, &format!("{ctx}: {key}"));
+            assert_eq!(jr.f64_or("batched", -1.0) as usize, bf.batched, "{ctx}: batched");
+            assert_eq!(jr.get("cached"), Some(&Json::Bool(bf.cached)), "{ctx}: cached");
+            assert_eq!(
+                jr.str_or("mode", "<missing>"),
+                wire::mode_str_from_byte(bf.mode_byte),
+                "{ctx}: mode"
+            );
+        }
+        "jacobian" => {
+            let rows = jr.get("jacobian").and_then(Json::as_arr).expect("jacobian rows");
+            assert_eq!(rows.len(), bf.rows, "{ctx}: rows");
+            let mut flat = Vec::new();
+            for row in rows {
+                flat.extend(row.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()));
+            }
+            assert_eq!(bf.rows * bf.cols, flat.len(), "{ctx}: shape");
+            assert_bitwise(&flat, &bf.data, &format!("{ctx}: jacobian"));
+            assert_eq!(jr.get("cached"), Some(&Json::Bool(bf.cached)), "{ctx}: cached");
+        }
+        other => panic!("unhandled op {other}"),
+    }
+}
+
+/// Build the full sweep: every op, every mode × precision on the three
+/// densely-factorizable problems (Cholesky on ridge/quad, LU on projgd),
+/// default derivatives on the whole catalog, plus engine-level error cases.
+fn script(catalog: &[(String, usize, usize)]) -> Vec<Step> {
+    let mut steps = vec![Step::control("ping"), Step::control("problems")];
+    let theta_for = |dim: usize| (0..dim).map(|i| 0.6 + 0.1 * i as f64).collect::<Vec<f64>>();
+    let v_for = |dim: usize| (0..dim).map(|i| 0.3 - 0.05 * i as f64).collect::<Vec<f64>>();
+    for (name, dim_x, dim_theta) in catalog {
+        let theta = theta_for(*dim_theta);
+        steps.push(Step {
+            op: "solve",
+            problem: name.clone(),
+            theta: theta.clone(),
+            ..Step::control("solve")
+        });
+        steps.push(Step {
+            op: "jvp",
+            problem: name.clone(),
+            theta: theta.clone(),
+            v: v_for(*dim_theta),
+            ..Step::control("jvp")
+        });
+        let sweep = matches!(name.as_str(), "ridge" | "quad" | "projgd");
+        if !sweep {
+            continue;
+        }
+        for mode in [None, Some("one-step"), Some("unroll"), Some("auto")] {
+            for precision in [None, Some("mixed")] {
+                let iters = if mode == Some("unroll") { 4 } else { 0 };
+                steps.push(Step {
+                    op: "hypergrad",
+                    problem: name.clone(),
+                    theta: theta.clone(),
+                    v: v_for(*dim_x),
+                    mode,
+                    precision,
+                    iters,
+                });
+                steps.push(Step {
+                    op: "jvp",
+                    problem: name.clone(),
+                    theta: theta.clone(),
+                    v: v_for(*dim_theta),
+                    mode,
+                    precision,
+                    iters,
+                });
+            }
+        }
+        steps.push(Step {
+            op: "jacobian",
+            problem: name.clone(),
+            theta: theta.clone(),
+            ..Step::control("jacobian")
+        });
+        // Repeat-θ after the sweep: served from the warmed cache.
+        steps.push(Step {
+            op: "hypergrad",
+            problem: name.clone(),
+            theta: theta.clone(),
+            v: v_for(*dim_x),
+            ..Step::control("hypergrad")
+        });
+    }
+    // Engine-level errors must carry identical strings on both wires.
+    steps.push(Step {
+        op: "solve",
+        problem: "no_such_problem".to_string(),
+        theta: vec![1.0],
+        ..Step::control("solve")
+    });
+    steps.push(Step {
+        op: "hypergrad",
+        problem: "ridge".to_string(),
+        theta: theta_for(8),
+        v: vec![1.0, 2.0], // wrong length
+        ..Step::control("hypergrad")
+    });
+    steps.push(Step {
+        op: "solve",
+        problem: "svm".to_string(),
+        theta: vec![-1.0], // validate_theta rejects
+        ..Step::control("solve")
+    });
+    steps.push(Step::control("stats"));
+    steps
+}
+
+#[test]
+fn every_op_mode_precision_is_bitwise_identical_on_both_wires() {
+    // Two identically-constructed engines in one process (so any process-
+    // global state — GEMM autotune config — is shared), one per protocol.
+    let (json_addr, json_server) = start(quiet_cfg());
+    let (bin_addr, bin_server) = start(quiet_cfg());
+    let mut jc = JsonClient::connect(json_addr);
+    let mut bc = BinClient::connect(bin_addr);
+
+    // Discover the catalog once, through the wire itself.
+    let cat = jc.request(r#"{"op":"problems"}"#);
+    let catalog: Vec<(String, usize, usize)> = cat
+        .get("problems")
+        .and_then(Json::as_arr)
+        .expect("problems")
+        .iter()
+        .map(|p| {
+            (
+                p.str_or("name", "").to_string(),
+                p.f64_or("dim_x", 0.0) as usize,
+                p.f64_or("dim_theta", 0.0) as usize,
+            )
+        })
+        .collect();
+    assert_eq!(catalog.len(), 7);
+
+    let mut derivative_steps = 0;
+    for step in script(&catalog) {
+        let jr = jc.request(&step.to_json_line());
+        let bf = bc.request(&step.to_frame());
+        assert_equivalent(&step, &jr, &bf);
+        if matches!(step.op, "hypergrad" | "jvp") {
+            derivative_steps += 1;
+        }
+    }
+    assert!(derivative_steps > 40, "sweep actually swept ({derivative_steps} steps)");
+
+    // The two engines walked identical state machines: every engine-level
+    // counter agrees (pool counters are transport-dependent by design —
+    // the catalog discovery request above is also why `requests` differs).
+    use std::sync::atomic::Ordering;
+    let pairs = [
+        ("block_solves", &json_server.stats.block_solves, &bin_server.stats.block_solves),
+        ("inner_solves", &json_server.stats.inner_solves, &bin_server.stats.inner_solves),
+        ("factorizations", &json_server.stats.factorizations, &bin_server.stats.factorizations),
+        ("densified", &json_server.stats.densified, &bin_server.stats.densified),
+        ("rho_estimates", &json_server.stats.rho_estimates, &bin_server.stats.rho_estimates),
+        ("cache_hits", &json_server.stats.cache_hits, &bin_server.stats.cache_hits),
+    ];
+    for (name, a, b) in pairs {
+        assert_eq!(a.load(Ordering::Relaxed), b.load(Ordering::Relaxed), "counter {name}");
+    }
+}
+
+#[test]
+fn both_protocols_share_one_port_and_one_cache() {
+    let (addr, server) = start(quiet_cfg());
+    let mut jc = JsonClient::connect(addr);
+    let mut bc = BinClient::connect(addr);
+    let theta: Vec<f64> = vec![1.25; 8];
+    let v: Vec<f64> = vec![0.5; 8];
+
+    // JSON warms the θ-cache…
+    let step = Step {
+        op: "hypergrad",
+        problem: "ridge".to_string(),
+        theta: theta.clone(),
+        v: v.clone(),
+        ..Step::control("hypergrad")
+    };
+    let jr = jc.request(&step.to_json_line());
+    assert_eq!(jr.get("cached"), Some(&Json::Bool(false)));
+    // …and the binary connection reaps the factored fast path, bitwise.
+    let bf = bc.request(&step.to_frame());
+    assert!(bf.cached, "binary request must hit the cache the JSON request warmed");
+    assert_bitwise(&json_f64s(&jr, "grad"), &bf.data, "cross-protocol grad");
+    use std::sync::atomic::Ordering;
+    assert_eq!(server.stats.block_solves.load(Ordering::Relaxed), 1);
+    assert_eq!(server.stats.factorizations.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn malformed_binary_frames_follow_the_error_policy() {
+    let (addr, _server) = start(quiet_cfg());
+
+    // 1. Unknown opcode: a payload error — error frame, connection usable.
+    let mut bc = BinClient::connect(addr);
+    let mut bad = Vec::new();
+    wire::encode_request(
+        &RequestFrame { opcode: 42, ..RequestFrame::control(wire::OP_PING) },
+        &mut bad,
+    );
+    let f = bc.raw(&bad).unwrap();
+    assert_eq!(f.status, wire::STATUS_ERR);
+    assert!(f.error.as_deref().unwrap_or("").contains("unknown opcode"), "{:?}", f.error);
+    let pong = bc.request(&RequestFrame::control(wire::OP_PING));
+    assert_eq!(pong.status, wire::STATUS_OK, "connection must survive a payload error");
+
+    // 2. Truncated f64 block: payload error, connection usable.
+    let mut frame = Vec::new();
+    wire::encode_request(
+        &RequestFrame {
+            opcode: wire::OP_SOLVE,
+            problem: "ridge",
+            theta: &[1.0, 2.0],
+            ..RequestFrame::control(wire::OP_SOLVE)
+        },
+        &mut frame,
+    );
+    // Lie about n_theta (the u32 right after the 8-byte fixed part + name).
+    let at = wire::REQUEST_HEADER_LEN + 8 + 2 + "ridge".len();
+    frame[at..at + 4].copy_from_slice(&100u32.to_le_bytes());
+    let f = bc.raw(&frame).unwrap();
+    assert_eq!(f.status, wire::STATUS_ERR);
+    assert!(f.error.as_deref().unwrap_or("").contains("truncated"), "{:?}", f.error);
+    let pong = bc.request(&RequestFrame::control(wire::OP_PING));
+    assert_eq!(pong.status, wire::STATUS_OK);
+
+    // 3. Oversized payload length: a FRAMING error — error frame, then close.
+    let (small_addr, _small) =
+        start(ServeConfig { max_line_bytes: 64, ..quiet_cfg() });
+    let mut bc2 = BinClient::connect(small_addr);
+    let mut huge = vec![wire::MAGIC, wire::VERSION];
+    huge.extend_from_slice(&(1_000_000u32).to_le_bytes());
+    let f = bc2.raw(&huge).unwrap();
+    assert_eq!(f.status, wire::STATUS_ERR);
+    assert!(f.error.as_deref().unwrap_or("").contains("too large"), "{:?}", f.error);
+    let mut probe = [0u8; 1];
+    assert_eq!(
+        bc2.stream.read(&mut probe).unwrap_or(0),
+        0,
+        "server must close after a framing violation"
+    );
+
+    // 4. Wrong protocol version: framing error, then close.
+    let mut bc3 = BinClient::connect(addr);
+    let mut verr = vec![wire::MAGIC, 99];
+    verr.extend_from_slice(&0u32.to_le_bytes());
+    let f = bc3.raw(&verr).unwrap();
+    assert_eq!(f.status, wire::STATUS_ERR);
+    assert!(f.error.as_deref().unwrap_or("").contains("version"), "{:?}", f.error);
+    let mut probe = [0u8; 1];
+    assert_eq!(bc3.stream.read(&mut probe).unwrap_or(0), 0);
+
+    // 5. A JSON connection to the same server is oblivious to all of this.
+    let mut jc = JsonClient::connect(addr);
+    let r = jc.request(r#"{"op":"ping"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+}
