@@ -22,8 +22,15 @@
 //! Journals mean/median/p95 latency and requests/s to `BENCH_serve.json`
 //! (uploaded by CI next to `BENCH_linalg.json`).
 //!
-//! Run: cargo bench --bench perf_serve [-- --requests 80]
+//! With `--cluster`, a sharding section runs too: k ∈ {64, 256} binary
+//! clients drive an in-process θ-consistent-hash router in front of 1/2/4
+//! `idiff serve --shard` child processes (throughput-scaling rows), plus an
+//! overload cell measuring the admission reject and mode-aware degrade
+//! paths on a solve-saturated engine.
+//!
+//! Run: cargo bench --bench perf_serve [-- --requests 80 --cluster]
 
+use idiff::coordinator::serve::cluster::router::{Router, RouterConfig};
 use idiff::coordinator::serve::wire::{self, RequestFrame};
 use idiff::coordinator::serve::{ServeConfig, Server};
 use idiff::util::cli::Args;
@@ -40,6 +47,9 @@ enum Traffic {
     SharedTheta,
     ThetaPool,
     UniqueTheta,
+    /// 64-θ pool in a range disjoint from every other shape — wide enough
+    /// that a consistent-hash ring spreads it across 4 shards.
+    ClusterPool,
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -59,8 +69,60 @@ fn theta_for(traffic: Traffic, cell: usize, client: usize, i: usize, dim: usize)
         Traffic::UniqueTheta => {
             2.0 + 1e-9 * (cell * 100_000_000 + client * 1_000_000 + i) as f64
         }
+        Traffic::ClusterPool => 3.0 + 0.01 * ((client * 13 + i) % 64) as f64,
     };
     vec![base; dim]
+}
+
+/// A shard child process (`idiff serve --shard i/N`), killed on drop.
+struct ShardProc {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_shard(i: usize, n: usize, workers: usize) -> ShardProc {
+    let shard = format!("{i}/{n}");
+    let workers = workers.to_string();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_idiff"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--window-ms",
+            "1",
+            "--workers",
+            &workers,
+            "--shard",
+            &shard,
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn shard");
+    let stdout = child.stdout.take().expect("shard stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("shard stdout") > 0, "shard died at boot");
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().expect("addr token").to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    ShardProc { child, addr }
 }
 
 fn run_load(
@@ -321,6 +383,123 @@ fn main() {
         }
     }
     let _ = std::fs::remove_file(&manifest);
+
+    // ---- cluster scaling: k clients × {1,2,4} shard processes ------------
+    // Opt-in (--cluster): spawns child processes, so the quick default run
+    // stays self-contained. Clients speak the binary wire to an in-process
+    // router fronting `idiff serve --shard i/N` children; steady-state
+    // traffic is the 64-θ ClusterPool, so rows measure how the ring spreads
+    // the cache (and the request load) across shards.
+    if args.flag("cluster") {
+        let creq = args.get_usize("cluster-requests", 10);
+        for &nshards in &[1usize, 2, 4] {
+            let shards: Vec<ShardProc> =
+                (0..nshards).map(|i| spawn_shard(i, nshards, 300)).collect();
+            let router = Arc::new(Router::new(RouterConfig {
+                shards: shards.iter().map(|s| s.addr.clone()).collect(),
+                workers: 300,
+                ..RouterConfig::default()
+            }));
+            let rlistener = TcpListener::bind("127.0.0.1:0").expect("bind router");
+            let raddr = rlistener.local_addr().unwrap();
+            {
+                let router = router.clone();
+                std::thread::spawn(move || {
+                    let _ = router.serve_on(rlistener);
+                });
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            for &k in &[64usize, 256] {
+                cell += 1;
+                let (wall, mut lat) =
+                    run_load(raddr, cell, k, creq, Traffic::ClusterPool, Proto::Binary);
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = lat.len();
+                let rps = n as f64 / wall;
+                println!(
+                    "serve cluster shards={nshards} k={k:<3}: {rps:>9.0} req/s  p50 {:.3} ms  p95 {:.3} ms",
+                    pct(&lat, 0.5) * 1e3,
+                    pct(&lat, 0.95) * 1e3
+                );
+                rows.push(Json::obj(vec![
+                    ("name", Json::Str(format!("serve cluster shards={nshards} k={k}"))),
+                    ("shards", Json::Num(nshards as f64)),
+                    ("clients", Json::Num(k as f64)),
+                    ("requests", Json::Num(n as f64)),
+                    ("wall_s", Json::Num(wall)),
+                    ("rps", Json::Num(rps)),
+                    ("p50_s", Json::Num(pct(&lat, 0.5))),
+                    ("p95_s", Json::Num(pct(&lat, 0.95))),
+                    (
+                        "forwarded",
+                        Json::Num(router.stats.forwarded.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "failovers",
+                        Json::Num(router.stats.failovers.load(Ordering::Relaxed) as f64),
+                    ),
+                ]));
+            }
+        }
+
+        // ---- overload reject + mode-aware degrade, solve lane saturated --
+        // In-process engine with ONE solve slot deliberately held: implicit
+        // requests shed with the canonical reject; auto requests with a
+        // cached ρ are served solve-free (degraded). Both paths journaled.
+        let srv = Server::new(ServeConfig {
+            batch_window: Duration::from_millis(0),
+            max_solve_inflight: 1,
+            ..ServeConfig::default()
+        });
+        let theta_auto = vec![0.9; 8];
+        let auto_line = Json::obj(vec![
+            ("op", Json::Str("hypergrad".into())),
+            ("problem", Json::Str("ridge".into())),
+            ("theta", Json::arr_f64(&theta_auto)),
+            ("v", Json::arr_f64(&vec![1.0; 8])),
+            ("mode", Json::Str("auto".into())),
+        ])
+        .to_string_compact();
+        let r = srv.handle(&auto_line);
+        assert!(r.get("error").is_none(), "warm-up failed: {}", r.to_string_compact());
+        let hold = srv.admission().solve_slot().expect("claim the only solve slot");
+        let m = 200usize;
+        let t = Timer::start();
+        for i in 0..m {
+            let theta = vec![4.0 + 1e-6 * i as f64; 8];
+            let line = Json::obj(vec![
+                ("op", Json::Str("hypergrad".into())),
+                ("problem", Json::Str("ridge".into())),
+                ("theta", Json::arr_f64(&theta)),
+                ("v", Json::arr_f64(&vec![1.0; 8])),
+            ])
+            .to_string_compact();
+            let r = srv.handle(&line);
+            assert_eq!(r.to_string_compact(), r#"{"error":"overloaded"}"#);
+        }
+        let reject_wall = t.elapsed_s();
+        let t = Timer::start();
+        for _ in 0..m {
+            let r = srv.handle(&auto_line);
+            assert_eq!(r.get("degraded"), Some(&Json::Bool(true)), "expected degraded reply");
+        }
+        let degrade_wall = t.elapsed_s();
+        drop(hold);
+        assert_eq!(srv.admission().rejected(), m as u64);
+        assert_eq!(srv.admission().degraded_one_step(), m as u64);
+        println!(
+            "serve cluster overload: reject {:>9.0} req/s  degrade-to-one-step {:>9.0} req/s",
+            m as f64 / reject_wall,
+            m as f64 / degrade_wall
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str("serve cluster overload-degrade".into())),
+            ("rejected", Json::Num(m as f64)),
+            ("degraded_one_step", Json::Num(m as f64)),
+            ("reject_rps", Json::Num(m as f64 / reject_wall)),
+            ("degrade_rps", Json::Num(m as f64 / degrade_wall)),
+        ]));
+    }
 
     // Final engine counters: how much the batcher and cache absorbed.
     let stats = server.handle(r#"{"op":"stats"}"#);

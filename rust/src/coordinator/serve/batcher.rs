@@ -106,6 +106,16 @@ impl Batch {
     }
 }
 
+/// Decrements the submit-inflight gauge on every exit path (including the
+/// catch_unwind-recovered leader panic).
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// The coalescing front of the serve engine.
 pub struct Batcher {
     window: Duration,
@@ -113,6 +123,10 @@ pub struct Batcher {
     open: Mutex<HashMap<BatchKey, Arc<Batch>>>,
     batches: AtomicU64,
     coalesced_requests: AtomicU64,
+    /// Requests currently inside `submit` (queued in an open batch or
+    /// computing). The admission layer reads this as the live depth of
+    /// the compute queue.
+    inflight: AtomicU64,
 }
 
 impl Batcher {
@@ -126,7 +140,13 @@ impl Batcher {
             open: Mutex::new(HashMap::new()),
             batches: AtomicU64::new(0),
             coalesced_requests: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
         }
+    }
+
+    /// Requests currently inside `submit` (live gauge, not monotonic).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
     }
 
     /// (batches executed, requests that shared a batch with at least one
@@ -148,6 +168,8 @@ impl Batcher {
         compute: impl FnOnce(&Mat) -> BatchResult,
     ) -> (Result<Vec<f64>, String>, usize) {
         assert_eq!(v.len(), rows, "batch column length mismatch");
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let _inflight = InflightGuard(&self.inflight);
         // Moved (not cloned) into whichever batch actually admits us — a
         // race with a closing leader retries with the buffer still in hand.
         let mut v = Some(v);

@@ -174,6 +174,14 @@ impl RhoCache {
         }
     }
 
+    /// Look up ρ WITHOUT touching recency or the hit/miss counters. The
+    /// admission degrade probe uses this: deciding whether a saturated
+    /// `"mode":"auto"` request can be served solve-free must not distort
+    /// the ρ-cache statistics the tests (and operators) reason about.
+    pub fn peek(&self, key: &ThetaKey) -> Option<f64> {
+        self.inner.lock().unwrap().map.get(key).copied()
+    }
+
     pub fn insert(&self, key: ThetaKey, rho: f64) {
         let mut inner = self.inner.lock().unwrap();
         inner.order.retain(|k| k != &key);

@@ -1,0 +1,252 @@
+//! Minimal actor/supervisor runtime for the serving tier.
+//!
+//! Replaces the flat `util::parallel::WorkerPool` accept loop with the two
+//! pieces a shardable server actually needs:
+//!
+//! * [`Mailbox`] — a bounded MPMC message ring (Mutex + Condvar over a
+//!   `VecDeque`). `try_send` **never blocks**: when the ring is full the
+//!   message comes straight back as [`SendError::Full`] so the caller can
+//!   shed load (`{"error":"overloaded"}`) instead of queueing unboundedly.
+//!   That non-blocking contract is what admission control hangs off.
+//! * [`supervise`] — N actor threads drain one shared mailbox; each actor
+//!   is watched by a supervisor thread that detects a panic via
+//!   `JoinHandle::join` and respawns the actor (counted, with a small
+//!   backoff). Pending messages survive a restart because they live in the
+//!   shared mailbox; only the message being processed at the instant of
+//!   the panic is lost — for the serve tier that is one TCP connection,
+//!   which the client sees as a disconnect and retries.
+//!
+//! Zero dependencies, std threads only — same discipline as the rest of
+//! the crate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Why a `try_send` bounced; the message is handed back in both cases.
+pub enum SendError<T> {
+    /// The ring is at capacity — shed load or retry later.
+    Full(T),
+    /// The mailbox was closed — no actor will ever drain it again.
+    Closed(T),
+}
+
+impl<T> SendError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            SendError::Full(m) | SendError::Closed(m) => m,
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SendError::Full(_) => "SendError::Full",
+            SendError::Closed(_) => "SendError::Closed",
+        })
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer message ring.
+pub struct Mailbox<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+    capacity: usize,
+    /// Lock-free depth gauge so `stats` can report queue depth without
+    /// contending on the mailbox mutex.
+    depth: AtomicUsize,
+}
+
+impl<T> Mailbox<T> {
+    pub fn new(capacity: usize) -> Arc<Mailbox<T>> {
+        Arc::new(Mailbox {
+            state: Mutex::new(State { queue: VecDeque::with_capacity(capacity.max(1)), closed: false }),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+            depth: AtomicUsize::new(0),
+        })
+    }
+
+    /// Non-blocking send. Full or closed rings hand the message back.
+    pub fn try_send(&self, msg: T) -> Result<(), SendError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SendError::Closed(msg));
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(SendError::Full(msg));
+        }
+        st.queue.push_back(msg);
+        self.depth.store(st.queue.len(), Ordering::Relaxed);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive. `None` means the mailbox is closed *and* drained —
+    /// the actor's clean-exit signal.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(msg) = st.queue.pop_front() {
+                self.depth.store(st.queue.len(), Ordering::Relaxed);
+                return Some(msg);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Close the mailbox: senders get `Closed`, actors drain what is left
+    /// and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    /// Messages currently queued (approximate; lock-free read).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Handle to a supervised actor group. Dropping it detaches the threads
+/// (they exit when the mailbox closes); `join` waits for that exit.
+pub struct Supervisor {
+    threads: Vec<JoinHandle<()>>,
+    restarts: Arc<AtomicU64>,
+}
+
+impl Supervisor {
+    /// Total actor restarts across the group (panics recovered).
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Wait for every supervisor to finish. Only returns after the mailbox
+    /// has been closed and drained.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn `actors` supervised actor threads draining `mailbox` with
+/// `handler`. Each panic in `handler` is recovered by that actor's
+/// supervisor: the restart counter is bumped, the actor thread is
+/// respawned after a short backoff, and the shared mailbox keeps feeding
+/// it. Restarts are recorded in `restarts` (shared with the server's
+/// `stats` op).
+pub fn supervise<T: Send + 'static>(
+    name: &str,
+    actors: usize,
+    mailbox: Arc<Mailbox<T>>,
+    handler: Arc<dyn Fn(T) + Send + Sync>,
+    restarts: Arc<AtomicU64>,
+) -> Supervisor {
+    let threads = (0..actors.max(1))
+        .map(|i| {
+            let mb = mailbox.clone();
+            let h = handler.clone();
+            let r = restarts.clone();
+            let label = format!("{name}-{i}");
+            std::thread::Builder::new()
+                .name(format!("{label}-sup"))
+                .spawn(move || loop {
+                    let mb2 = mb.clone();
+                    let h2 = h.clone();
+                    let actor = std::thread::Builder::new()
+                        .name(label.clone())
+                        .spawn(move || {
+                            while let Some(msg) = mb2.recv() {
+                                h2(msg);
+                            }
+                        })
+                        .expect("spawn actor thread");
+                    match actor.join() {
+                        // Clean exit: mailbox closed and drained.
+                        Ok(()) => break,
+                        // Panic: count it, back off briefly, respawn.
+                        Err(_) => {
+                            r.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                })
+                .expect("spawn supervisor thread")
+        })
+        .collect();
+    Supervisor { threads, restarts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mailbox_bounds_and_sheds() {
+        let mb: Arc<Mailbox<u32>> = Mailbox::new(2);
+        assert!(mb.try_send(1).is_ok());
+        assert!(mb.try_send(2).is_ok());
+        match mb.try_send(3) {
+            Err(SendError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(mb.depth(), 2);
+        assert_eq!(mb.recv(), Some(1));
+        assert!(mb.try_send(3).is_ok());
+        mb.close();
+        match mb.try_send(4) {
+            Err(SendError::Closed(4)) => {}
+            other => panic!("expected Closed(4), got {other:?}"),
+        }
+        // Drain continues after close, then signals exit.
+        assert_eq!(mb.recv(), Some(2));
+        assert_eq!(mb.recv(), Some(3));
+        assert_eq!(mb.recv(), None);
+    }
+
+    #[test]
+    fn supervisor_restarts_panicked_actor_and_keeps_draining() {
+        let mb: Arc<Mailbox<u32>> = Mailbox::new(64);
+        let processed = Arc::new(AtomicUsize::new(0));
+        let restarts = Arc::new(AtomicU64::new(0));
+        let p = processed.clone();
+        let sup = supervise(
+            "test-actor",
+            2,
+            mb.clone(),
+            Arc::new(move |msg: u32| {
+                if msg == 13 {
+                    panic!("poison message");
+                }
+                p.fetch_add(1, Ordering::SeqCst);
+            }),
+            restarts.clone(),
+        );
+        for i in 0..20 {
+            // Blocking-ish send: the ring is larger than the message count.
+            mb.try_send(i).unwrap();
+        }
+        mb.close();
+        sup.join();
+        // 19 good messages processed, exactly the poison one lost.
+        assert_eq!(processed.load(Ordering::SeqCst), 19);
+        assert_eq!(restarts.load(Ordering::Relaxed), 1);
+    }
+}

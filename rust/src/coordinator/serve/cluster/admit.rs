@@ -1,0 +1,189 @@
+//! Admission control and backpressure for a serving shard (or router).
+//!
+//! Three bounded resources, each with a lock-free gauge:
+//!
+//! * **accept queue** — the connection mailbox (`actor::Mailbox`) is
+//!   bounded by construction; its depth is mirrored here so the `stats`
+//!   op can report it without reaching into the mailbox.
+//! * **inflight requests** — data-plane requests (solve / derivative /
+//!   jacobian) currently executing. `admit()` hands out an RAII gauge
+//!   guard or refuses; control-plane ops (ping/problems/stats) are never
+//!   refused — health checks must keep working under overload.
+//! * **solve slots** — requests queued for the implicit path's block
+//!   solve + factorization (`solve_slot()`). This is the expensive,
+//!   latency-heavy queue; when it saturates the server becomes
+//!   *mode-aware*: `"mode":"implicit"` requests are rejected with
+//!   `{"error":"overloaded"}`, while `"mode":"auto"` requests with a
+//!   cached contraction ρ degrade to the solve-free one-step/Neumann
+//!   answer instead of queueing (counted in `degraded_one_step`).
+//!
+//! All limits are runtime-adjustable atomics (`set_max_*`) so tests and
+//! operators can tighten them on a live server; `0` means unbounded,
+//! which is the default — a standalone `idiff serve` behaves exactly as
+//! before unless limits are configured.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+fn limit_of(raw: usize) -> usize {
+    if raw == 0 {
+        usize::MAX
+    } else {
+        raw
+    }
+}
+
+/// RAII inflight-gauge guard: decrements on drop.
+pub struct Slot<'a> {
+    gauge: &'a AtomicUsize,
+}
+
+impl Drop for Slot<'_> {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Shared admission state for one process.
+pub struct Admission {
+    max_inflight: AtomicUsize,
+    max_solve_inflight: AtomicUsize,
+    inflight: AtomicUsize,
+    solve_inflight: AtomicUsize,
+    queue_depth: AtomicUsize,
+    rejected: AtomicU64,
+    degraded_one_step: AtomicU64,
+}
+
+impl Admission {
+    /// `0` for either limit means unbounded.
+    pub fn new(max_inflight: usize, max_solve_inflight: usize) -> Admission {
+        Admission {
+            max_inflight: AtomicUsize::new(max_inflight),
+            max_solve_inflight: AtomicUsize::new(max_solve_inflight),
+            inflight: AtomicUsize::new(0),
+            solve_inflight: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            degraded_one_step: AtomicU64::new(0),
+        }
+    }
+
+    fn acquire<'a>(&self, gauge: &'a AtomicUsize, max: usize) -> Option<Slot<'a>> {
+        let prev = gauge.fetch_add(1, Ordering::Relaxed);
+        if prev >= max {
+            gauge.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(Slot { gauge })
+    }
+
+    /// Admit one data-plane request, or refuse (caller replies
+    /// `{"error":"overloaded"}` and counts `note_rejected`).
+    pub fn admit(&self) -> Option<Slot<'_>> {
+        let max = limit_of(self.max_inflight.load(Ordering::Relaxed));
+        self.acquire(&self.inflight, max)
+    }
+
+    /// Claim a slot on the implicit-path solve queue.
+    pub fn solve_slot(&self) -> Option<Slot<'_>> {
+        let max = limit_of(self.max_solve_inflight.load(Ordering::Relaxed));
+        self.acquire(&self.solve_inflight, max)
+    }
+
+    /// True when every solve slot is taken — the mode-aware degrade
+    /// trigger. Always false when the limit is unbounded.
+    pub fn solve_saturated(&self) -> bool {
+        let max = limit_of(self.max_solve_inflight.load(Ordering::Relaxed));
+        self.solve_inflight.load(Ordering::Relaxed) >= max
+    }
+
+    pub fn set_max_inflight(&self, n: usize) {
+        self.max_inflight.store(n, Ordering::Relaxed);
+    }
+
+    pub fn set_max_solve_inflight(&self, n: usize) {
+        self.max_solve_inflight.store(n, Ordering::Relaxed);
+    }
+
+    /// Accept-queue depth mirror, maintained by the accept loop.
+    pub fn conn_enqueued(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_dequeued(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_degraded(&self) {
+        self.degraded_one_step.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // ---- gauges / counters for the stats op --------------------------
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn solve_inflight(&self) -> usize {
+        self.solve_inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded_one_step(&self) -> u64 {
+        self.degraded_one_step.load(Ordering::Relaxed)
+    }
+}
+
+/// The canonical overload reject, identical on both wires: the JSON wire
+/// sends `{"error":"overloaded"}`, the binary wire an error frame whose
+/// message is this string.
+pub const OVERLOADED: &str = "overloaded";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_limits_are_unbounded() {
+        let a = Admission::new(0, 0);
+        let slots: Vec<_> = (0..1000).map(|_| a.admit().expect("unbounded")).collect();
+        assert_eq!(a.inflight(), 1000);
+        assert!(!a.solve_saturated());
+        drop(slots);
+        assert_eq!(a.inflight(), 0);
+    }
+
+    #[test]
+    fn inflight_limit_refuses_and_releases() {
+        let a = Admission::new(2, 0);
+        let s1 = a.admit().unwrap();
+        let _s2 = a.admit().unwrap();
+        assert!(a.admit().is_none());
+        drop(s1);
+        assert!(a.admit().is_some());
+    }
+
+    #[test]
+    fn solve_saturation_tracks_slots() {
+        let a = Admission::new(0, 1);
+        assert!(!a.solve_saturated());
+        let slot = a.solve_slot().unwrap();
+        assert!(a.solve_saturated());
+        assert!(a.solve_slot().is_none());
+        drop(slot);
+        assert!(!a.solve_saturated());
+        // Limits are live-adjustable.
+        a.set_max_solve_inflight(0);
+        assert!(!a.solve_saturated());
+    }
+}

@@ -1,0 +1,26 @@
+//! Sharded serving tier: actor runtime, θ-consistent-hash ring, admission
+//! control, and the front-end router.
+//!
+//! Layering (each piece is usable alone; `serve::Server` composes the
+//! first three, `idiff route` runs the fourth):
+//!
+//! * [`actor`] — bounded MPMC mailboxes + supervised restart-on-panic
+//!   actor threads. The shard server and the router both run their
+//!   connection handling on this runtime instead of the flat
+//!   `WorkerPool` accept loop.
+//! * [`ring`] — the deterministic consistent-hash ring assigning every
+//!   (problem, θ) to exactly one shard. Router forwarding, shard manifest
+//!   slicing, and the cluster tests all derive the same assignment from
+//!   the same pure function.
+//! * [`admit`] — bounded inflight / queue-depth / solve-slot accounting
+//!   with the `overloaded` reject and the mode-aware degrade trigger
+//!   (saturated solve queue + `"mode":"auto"` + cached ρ ⇒ solve-free
+//!   answer instead of queueing).
+//! * [`router`] — the `idiff route` process: both client wires unchanged,
+//!   ring-position forwarding over pooled upstream connections, health
+//!   checks, failover with cold-start re-hash, drain-on-SIGTERM.
+
+pub mod actor;
+pub mod admit;
+pub mod ring;
+pub mod router;

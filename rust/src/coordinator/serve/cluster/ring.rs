@@ -1,0 +1,176 @@
+//! θ-consistent-hash ring: assigns each (problem, θ) to exactly one shard.
+//!
+//! The ring is a **pure function** of the member set and the vnode count —
+//! no RNG, no process state — so every process in the cluster (router,
+//! shards, tests) independently computes the *same* assignment. That is
+//! what makes "zero duplicate factorizations cluster-wide" enforceable
+//! without any coordination traffic: the router forwards by ring position,
+//! and each shard's warm-start loader drops manifest entries it does not
+//! own (see `serve::persist`).
+//!
+//! Design: classic consistent hashing with virtual nodes. Each member `m`
+//! contributes `vnodes` points at `fnv1a("idiff-ring" · m · v)`; a key is
+//! owned by the first point clockwise from its hash. Removing a member
+//! removes only that member's points, so only the keys on its arcs move
+//! (≈ 1/N of the keyspace) — the failover/"cold-start re-hash" property
+//! the router relies on when a shard dies. Keys are hashed from the
+//! *canonical θ bytes* (IEEE-754 bit pattern, little-endian) plus the
+//! problem name, exactly the identity `cache::ThetaKey` uses, so ring
+//! ownership and cache keying can never disagree.
+
+/// 64-bit FNV-1a. Stable across platforms and processes; no allocation.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Consistent-hash ring over a set of shard ids.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// (point hash, owning member), sorted by hash then member so the
+    /// ordering is total even under hash collisions.
+    points: Vec<(u64, u32)>,
+    members: Vec<u32>,
+    vnodes: usize,
+}
+
+/// Default virtual nodes per member: enough that a 2–8 shard ring is
+/// balanced to within a few percent, cheap enough to rebuild on failover.
+pub const DEFAULT_VNODES: usize = 64;
+
+impl Ring {
+    /// Build a ring over `members` with `vnodes` points per member.
+    /// Duplicate member ids are deduplicated; an empty member set yields
+    /// an empty ring (`owner` returns `None` — the router's "no healthy
+    /// shards" case).
+    pub fn new(members: &[u32], vnodes: usize) -> Ring {
+        let vnodes = vnodes.max(1);
+        let mut ms: Vec<u32> = members.to_vec();
+        ms.sort_unstable();
+        ms.dedup();
+        let mut points = Vec::with_capacity(ms.len() * vnodes);
+        for &m in &ms {
+            for v in 0..vnodes as u32 {
+                let mut buf = [0u8; 18];
+                buf[..10].copy_from_slice(b"idiff-ring");
+                buf[10..14].copy_from_slice(&m.to_le_bytes());
+                buf[14..18].copy_from_slice(&v.to_le_bytes());
+                points.push((fnv1a(&buf), m));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, members: ms, vnodes }
+    }
+
+    /// Canonical routing key for a request: problem name bytes, a 0xff
+    /// separator (never valid inside UTF-8), then each θ component's
+    /// IEEE-754 bits little-endian. Matches `cache::ThetaKey` identity:
+    /// bitwise-equal θ ⇒ same key ⇒ same shard ⇒ one cache entry.
+    pub fn route_key(problem: &str, theta: &[f64]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut step = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for &b in problem.as_bytes() {
+            step(b);
+        }
+        step(0xff);
+        for t in theta {
+            for b in t.to_bits().to_le_bytes() {
+                step(b);
+            }
+        }
+        h
+    }
+
+    /// Member owning `key`: the first ring point at or clockwise-after it.
+    pub fn owner(&self, key: u64) -> Option<u32> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let i = self.points.partition_point(|&(h, _)| h < key);
+        let i = if i == self.points.len() { 0 } else { i };
+        Some(self.points[i].1)
+    }
+
+    /// Shard owning a (problem, θ) request.
+    pub fn shard_for(&self, problem: &str, theta: &[f64]) -> Option<u32> {
+        self.owner(Self::route_key(problem, theta))
+    }
+
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<(String, Vec<f64>)> {
+        (0..n)
+            .map(|i| {
+                let theta: Vec<f64> = (0..8).map(|j| 1.0 + i as f64 * 0.01 + j as f64).collect();
+                ("ridge".to_string(), theta)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_instances() {
+        let a = Ring::new(&[0, 1, 2, 3], DEFAULT_VNODES);
+        let b = Ring::new(&[3, 2, 1, 0, 2], DEFAULT_VNODES); // order/dup-insensitive
+        for (p, t) in keys(500) {
+            assert_eq!(a.shard_for(&p, &t), b.shard_for(&p, &t));
+        }
+    }
+
+    #[test]
+    fn removal_moves_only_the_dead_members_keys() {
+        let full = Ring::new(&[0, 1, 2, 3], DEFAULT_VNODES);
+        let without2 = Ring::new(&[0, 1, 3], DEFAULT_VNODES);
+        let mut moved = 0usize;
+        let ks = keys(1000);
+        for (p, t) in &ks {
+            let before = full.shard_for(p, t).unwrap();
+            let after = without2.shard_for(p, t).unwrap();
+            if before == 2 {
+                moved += 1;
+                assert_ne!(after, 2);
+            } else {
+                assert_eq!(before, after, "key owned by a surviving shard moved");
+            }
+        }
+        // ~1/4 of the keyspace belonged to shard 2; allow generous slack.
+        assert!(moved > 100 && moved < 450, "moved {moved}/1000 — ring unbalanced");
+    }
+
+    #[test]
+    fn route_key_matches_bitwise_theta_identity() {
+        let t1 = vec![1.0, -0.0, 2.5];
+        let t2 = vec![1.0, 0.0, 2.5]; // -0.0 and 0.0 differ bitwise → different keys
+        assert_ne!(Ring::route_key("ridge", &t1), Ring::route_key("ridge", &t2));
+        assert_eq!(Ring::route_key("ridge", &t1), Ring::route_key("ridge", &t1.clone()));
+        assert_ne!(Ring::route_key("ridge", &t1), Ring::route_key("lasso", &t1));
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let r = Ring::new(&[], DEFAULT_VNODES);
+        assert!(r.is_empty());
+        assert_eq!(r.shard_for("ridge", &[1.0]), None);
+    }
+}

@@ -1,0 +1,637 @@
+//! Front-end router: one process, both wires, N shards behind it.
+//!
+//! `idiff route --shards host:port,host:port,...` speaks the *exact* client
+//! protocols the shards speak — the JSON line protocol and the binary frame
+//! protocol from `serve::wire`, auto-detected per connection by first byte —
+//! so existing clients point at the router unchanged. Each data-plane
+//! request is routed by the θ-consistent-hash ring ([`super::ring::Ring`])
+//! over the healthy member set and forwarded over a pooled upstream
+//! connection; replies are relayed verbatim (binary frames byte-for-byte,
+//! JSON lines unmodified), so every error string and float bit pattern a
+//! shard produces is exactly what the client sees.
+//!
+//! Failure handling: a shard that fails an upstream round trip (after one
+//! fresh-connection retry, so a stale pooled socket is not mistaken for a
+//! dead shard) is marked unhealthy and the ring is rebuilt without it —
+//! in-flight and future keys for its arcs re-hash onto the survivors
+//! (cold-start on the new owner, counted in `failovers`). A background
+//! health thread pings every shard each `health_secs` and folds recovered
+//! shards back into the ring. Control plane: `ping` answers locally,
+//! `stats` aggregates router counters plus every healthy shard's stats,
+//! `problems` forwards like any routed request (the catalog is identical
+//! cluster-wide — shards publish a catalog fingerprint in `stats`).
+//!
+//! The router is stateless (no caches, no manifest): on SIGTERM/SIGINT it
+//! stops admitting, drains in-flight requests (bounded by `drain_secs`),
+//! and exits.
+
+use super::super::{wire, Reply};
+use super::actor::Mailbox;
+use super::admit::{Admission, OVERLOADED};
+use super::ring::{Ring, DEFAULT_VNODES};
+use crate::util::json::{self, Json};
+use crate::util::pool::Pool;
+use crate::util::signal;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Router knobs. Defaults mirror the shard server's posture: generous
+/// bounds, nothing rejected until a limit is configured or a queue fills.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Upstream shard addresses (`host:port`). Ring member i = shards[i].
+    pub shards: Vec<String>,
+    /// Connection-actor threads.
+    pub workers: usize,
+    /// Bounded accept-queue depth; overflow is shed with `overloaded`.
+    pub accept_queue: usize,
+    /// Max concurrently forwarded requests (0 = unbounded).
+    pub max_inflight: usize,
+    /// Seconds between shard health pings.
+    pub health_secs: u64,
+    /// Virtual nodes per shard on the ring (must match nothing — the ring
+    /// is router-local — but keep the default unless experimenting).
+    pub vnodes: usize,
+    /// Reject client JSON lines longer than this.
+    pub max_line_bytes: usize,
+    /// Close idle client connections after this long.
+    pub idle_timeout: Duration,
+    /// Upstream I/O timeout per forwarded request (covers a cold solve).
+    pub upstream_timeout: Duration,
+    /// Idle upstream connections kept pooled per shard per wire.
+    pub upstream_idle: usize,
+    /// Graceful-shutdown drain bound.
+    pub drain_secs: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: Vec::new(),
+            workers: crate::util::parallel::default_workers(),
+            accept_queue: 1024,
+            max_inflight: 0,
+            health_secs: 2,
+            vnodes: DEFAULT_VNODES,
+            max_line_bytes: 1 << 20,
+            idle_timeout: Duration::from_secs(30),
+            upstream_timeout: Duration::from_secs(30),
+            upstream_idle: 16,
+            drain_secs: 10,
+        }
+    }
+}
+
+/// Monotonic router counters (reported by the `stats` op).
+#[derive(Default)]
+pub struct RouterStats {
+    pub forwarded: AtomicU64,
+    pub failovers: AtomicU64,
+    pub health_transitions: AtomicU64,
+}
+
+struct ShardHandle {
+    addr: String,
+    healthy: AtomicBool,
+    json_conns: Mutex<Vec<TcpStream>>,
+    bin_conns: Mutex<Vec<TcpStream>>,
+}
+
+impl ShardHandle {
+    fn new(addr: String) -> ShardHandle {
+        ShardHandle {
+            addr,
+            healthy: AtomicBool::new(true),
+            json_conns: Mutex::new(Vec::new()),
+            bin_conns: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    /// Ring over the currently-healthy shard indices; rebuilt on every
+    /// health transition.
+    ring: RwLock<Ring>,
+    pool: Arc<Pool>,
+    pub admission: Admission,
+    pub stats: RouterStats,
+    restarts: Arc<AtomicU64>,
+    draining: AtomicBool,
+    cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        assert!(!cfg.shards.is_empty(), "router needs at least one shard");
+        let shards: Vec<ShardHandle> =
+            cfg.shards.iter().map(|a| ShardHandle::new(a.clone())).collect();
+        let members: Vec<u32> = (0..shards.len() as u32).collect();
+        Router {
+            ring: RwLock::new(Ring::new(&members, cfg.vnodes)),
+            shards,
+            pool: Pool::new(64),
+            admission: Admission::new(cfg.max_inflight, 0),
+            stats: RouterStats::default(),
+            restarts: Arc::new(AtomicU64::new(0)),
+            draining: AtomicBool::new(false),
+            cfg,
+        }
+    }
+
+    pub fn shard_addrs(&self) -> Vec<&str> {
+        self.shards.iter().map(|s| s.addr.as_str()).collect()
+    }
+
+    fn healthy_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.healthy.load(Ordering::Relaxed)).count()
+    }
+
+    fn rebuild_ring(&self) {
+        let members: Vec<u32> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.healthy.load(Ordering::Relaxed))
+            .map(|(i, _)| i as u32)
+            .collect();
+        *self.ring.write().unwrap() = Ring::new(&members, self.cfg.vnodes);
+    }
+
+    fn set_health(&self, idx: usize, up: bool) {
+        if self.shards[idx].healthy.swap(up, Ordering::Relaxed) != up {
+            self.stats.health_transitions.fetch_add(1, Ordering::Relaxed);
+            if !up {
+                // Dead shard: its pooled connections are garbage.
+                self.shards[idx].json_conns.lock().unwrap().clear();
+                self.shards[idx].bin_conns.lock().unwrap().clear();
+            }
+            self.rebuild_ring();
+        }
+    }
+
+    fn route(&self, problem: &str, theta: &[f64]) -> Option<usize> {
+        self.ring.read().unwrap().shard_for(problem, theta).map(|m| m as usize)
+    }
+
+    // ----------------------------------------------------- upstream I/O --
+
+    fn connect(&self, idx: usize) -> std::io::Result<TcpStream> {
+        let addr = &self.shards[idx].addr;
+        let sock = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotFound, "bad shard addr"))?;
+        let conn = TcpStream::connect_timeout(&sock, Duration::from_millis(1500))?;
+        conn.set_read_timeout(Some(self.cfg.upstream_timeout))?;
+        conn.set_write_timeout(Some(self.cfg.upstream_timeout))?;
+        conn.set_nodelay(true)?;
+        Ok(conn)
+    }
+
+    fn checkin(&self, conns: &Mutex<Vec<TcpStream>>, conn: TcpStream) {
+        let mut free = conns.lock().unwrap();
+        if free.len() < self.cfg.upstream_idle {
+            free.push(conn);
+        }
+    }
+
+    /// One JSON round trip on `conn`; the reply line comes back without its
+    /// trailing newline.
+    fn json_round_trip(conn: &mut TcpStream, line: &str) -> std::io::Result<String> {
+        conn.write_all(line.as_bytes())?;
+        conn.write_all(b"\n")?;
+        let mut resp = String::new();
+        let mut reader = BufReader::new(conn);
+        if reader.read_line(&mut resp)? == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "shard closed"));
+        }
+        while resp.ends_with('\n') || resp.ends_with('\r') {
+            resp.pop();
+        }
+        Ok(resp)
+    }
+
+    /// Forward one JSON line to shard `idx`, reusing a pooled upstream
+    /// connection when one is alive. A stale pooled socket gets ONE fresh
+    /// retry before the failure counts against the shard.
+    fn forward_json(&self, idx: usize, line: &str) -> std::io::Result<String> {
+        if let Some(mut conn) = self.shards[idx].json_conns.lock().unwrap().pop() {
+            if let Ok(resp) = Self::json_round_trip(&mut conn, line) {
+                self.checkin(&self.shards[idx].json_conns, conn);
+                return Ok(resp);
+            }
+            // fall through: pooled conn was stale — retry fresh below
+        }
+        let mut conn = self.connect(idx)?;
+        let resp = Self::json_round_trip(&mut conn, line)?;
+        self.checkin(&self.shards[idx].json_conns, conn);
+        Ok(resp)
+    }
+
+    /// One binary round trip: write the raw request frame, read the raw
+    /// reply frame (header + payload) into `out` verbatim.
+    fn binary_round_trip(
+        conn: &mut TcpStream,
+        frame: &[u8],
+        out: &mut Vec<u8>,
+    ) -> std::io::Result<()> {
+        conn.write_all(frame)?;
+        let mut hdr = [0u8; wire::REPLY_HEADER_LEN];
+        conn.read_exact(&mut hdr)?;
+        if hdr[0] != wire::MAGIC || hdr[1] != wire::VERSION {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad upstream reply header",
+            ));
+        }
+        let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+        out.clear();
+        out.extend_from_slice(&hdr);
+        out.resize(wire::REPLY_HEADER_LEN + len, 0);
+        conn.read_exact(&mut out[wire::REPLY_HEADER_LEN..])?;
+        Ok(())
+    }
+
+    /// Forward one raw binary request frame to shard `idx`; the raw reply
+    /// frame lands in `out`. Same stale-socket retry policy as JSON.
+    fn forward_binary(&self, idx: usize, frame: &[u8], out: &mut Vec<u8>) -> std::io::Result<()> {
+        if let Some(mut conn) = self.shards[idx].bin_conns.lock().unwrap().pop() {
+            if Self::binary_round_trip(&mut conn, frame, out).is_ok() {
+                self.checkin(&self.shards[idx].bin_conns, conn);
+                return Ok(());
+            }
+        }
+        let mut conn = self.connect(idx)?;
+        Self::binary_round_trip(&mut conn, frame, out)?;
+        self.checkin(&self.shards[idx].bin_conns, conn);
+        Ok(())
+    }
+
+    /// Route + forward with failover: every upstream failure marks the
+    /// shard down, rebuilds the ring, and re-hashes onto the survivors
+    /// (their cold caches re-warm on first touch — the "cold-start
+    /// re-hash"). Bounded by the shard count.
+    fn forward_routed<T>(
+        &self,
+        problem: &str,
+        theta: &[f64],
+        mut attempt: impl FnMut(&Self, usize) -> std::io::Result<T>,
+    ) -> Result<T, String> {
+        for tries in 0..self.shards.len().max(1) {
+            let Some(idx) = self.route(problem, theta) else { break };
+            match attempt(self, idx) {
+                Ok(t) => {
+                    self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                    if tries > 0 {
+                        self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(t);
+                }
+                Err(_) => self.set_health(idx, false),
+            }
+        }
+        Err("no healthy shards".to_string())
+    }
+
+    // --------------------------------------------------- control plane --
+
+    /// Aggregate stats: router counters plus each healthy shard's own
+    /// `stats` reply (fetched over the binary wire). Both client wires
+    /// serve THIS object, so the values are identical by construction.
+    fn aggregate_stats(&self) -> Json {
+        let mut rows = Vec::with_capacity(self.shards.len());
+        let mut req = Vec::new();
+        wire::encode_request(&wire::RequestFrame::control(wire::OP_STATS), &mut req);
+        for (i, s) in self.shards.iter().enumerate() {
+            let healthy = s.healthy.load(Ordering::Relaxed);
+            let stats = if healthy {
+                let mut raw = Vec::new();
+                self.forward_binary(i, &req, &mut raw)
+                    .ok()
+                    .and_then(|_| wire::read_reply(&mut &raw[..]).ok())
+                    .and_then(|f| json::parse(&f.text).ok())
+            } else {
+                None
+            };
+            rows.push(Json::obj(vec![
+                ("addr", Json::Str(s.addr.clone())),
+                ("healthy", Json::Bool(healthy)),
+                ("stats", stats.unwrap_or(Json::Null)),
+            ]));
+        }
+        Json::obj(vec![
+            ("router", Json::Bool(true)),
+            ("shards_total", Json::Num(self.shards.len() as f64)),
+            ("shards_healthy", Json::Num(self.healthy_count() as f64)),
+            ("ring_size", Json::Num(self.healthy_count() as f64)),
+            ("forwarded", Json::Num(self.stats.forwarded.load(Ordering::Relaxed) as f64)),
+            ("failovers", Json::Num(self.stats.failovers.load(Ordering::Relaxed) as f64)),
+            (
+                "health_transitions",
+                Json::Num(self.stats.health_transitions.load(Ordering::Relaxed) as f64),
+            ),
+            ("rejected", Json::Num(self.admission.rejected() as f64)),
+            ("inflight", Json::Num(self.admission.inflight() as f64)),
+            ("queue_depth", Json::Num(self.admission.queue_depth() as f64)),
+            ("actor_restarts", Json::Num(self.restarts.load(Ordering::Relaxed) as f64)),
+            ("shards", Json::Arr(rows)),
+        ])
+    }
+
+    fn spawn_health_thread(self: &Arc<Self>) {
+        let me = self.clone();
+        let period = Duration::from_secs(self.cfg.health_secs.max(1));
+        std::thread::Builder::new()
+            .name("route-health".to_string())
+            .spawn(move || {
+                let mut ping = Vec::new();
+                wire::encode_request(&wire::RequestFrame::control(wire::OP_PING), &mut ping);
+                loop {
+                    std::thread::sleep(period);
+                    for i in 0..me.shards.len() {
+                        let up = me.ping_shard(i, &ping);
+                        me.set_health(i, up);
+                    }
+                }
+            })
+            .expect("spawn health thread");
+    }
+
+    fn ping_shard(&self, idx: usize, ping_frame: &[u8]) -> bool {
+        let ok = (|| -> std::io::Result<bool> {
+            let mut conn = self.connect(idx)?;
+            conn.set_read_timeout(Some(Duration::from_millis(2000)))?;
+            conn.write_all(ping_frame)?;
+            let reply = wire::read_reply(&mut conn)?;
+            Ok(reply.status == wire::STATUS_OK)
+        })();
+        ok.unwrap_or(false)
+    }
+
+    fn spawn_drain_watcher(self: &Arc<Self>) {
+        signal::install();
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name("route-drain".to_string())
+            .spawn(move || loop {
+                std::thread::sleep(Duration::from_millis(50));
+                if signal::requested() {
+                    me.draining.store(true, Ordering::SeqCst);
+                    let deadline = Instant::now() + Duration::from_secs(me.cfg.drain_secs);
+                    while me.admission.inflight() > 0 && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    println!("idiff route: drained {} shards, exiting", me.shards.len());
+                    std::process::exit(0);
+                }
+            })
+            .expect("spawn drain watcher");
+    }
+
+    // ----------------------------------------------------- client side --
+
+    /// Answer one JSON request line (no trailing newline on the result).
+    pub fn handle_json_line(&self, line: &str) -> String {
+        if line.len() > self.cfg.max_line_bytes {
+            let e = format!(
+                "request too large ({} bytes > {} max)",
+                line.len(),
+                self.cfg.max_line_bytes
+            );
+            return Json::obj(vec![("error", Json::Str(e))]).to_string_compact();
+        }
+        // Routing peek: op + problem + θ. A line we cannot parse still gets
+        // forwarded (to a deterministic shard) so the client receives the
+        // engine's canonical error string, not a router-flavored one.
+        let parsed = json::parse(line).ok();
+        let op = parsed.as_ref().map(|j| j.str_or("op", "").to_string()).unwrap_or_default();
+        match op.as_str() {
+            "ping" => return Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact(),
+            "stats" => return self.aggregate_stats().to_string_compact(),
+            _ => {}
+        }
+        if self.draining.load(Ordering::Relaxed) {
+            self.admission.note_rejected();
+            return overloaded_json();
+        }
+        let Some(_slot) = self.admission.admit() else {
+            self.admission.note_rejected();
+            return overloaded_json();
+        };
+        let (problem, theta) = route_identity_json(parsed.as_ref(), &op);
+        match self.forward_routed(&problem, &theta, |me, idx| me.forward_json(idx, line)) {
+            Ok(resp) => resp,
+            Err(e) => Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
+        }
+    }
+
+    /// Answer one binary request frame (raw header+payload in, raw reply
+    /// frame appended to `out`).
+    fn handle_frame(&self, hdr: &[u8; wire::REQUEST_HEADER_LEN], payload: &[u8], out: &mut Vec<u8>) {
+        out.clear();
+        let req = match wire::decode_request(payload, &self.pool) {
+            Ok(r) => r,
+            Err(e) => {
+                // A shard would answer this payload error identically —
+                // encode_reply is shared code — so answer locally.
+                wire::encode_reply(&Reply::Error(e), out);
+                return;
+            }
+        };
+        use super::super::Request;
+        let (problem, theta): (String, Vec<f64>) = match &req {
+            Request::Ping => {
+                wire::encode_reply(&Reply::Pong, out);
+                return;
+            }
+            Request::Stats => {
+                wire::encode_reply(&Reply::Text(self.aggregate_stats()), out);
+                return;
+            }
+            Request::Problems => (String::new(), Vec::new()),
+            Request::Solve { problem, theta } | Request::Jacobian { problem, theta } => {
+                (problem.clone(), theta.to_vec())
+            }
+            Request::Derivative { problem, theta, .. } => (problem.clone(), theta.to_vec()),
+        };
+        if self.draining.load(Ordering::Relaxed) {
+            self.admission.note_rejected();
+            wire::encode_reply(&Reply::Error(OVERLOADED.to_string()), out);
+            return;
+        }
+        let Some(_slot) = self.admission.admit() else {
+            self.admission.note_rejected();
+            wire::encode_reply(&Reply::Error(OVERLOADED.to_string()), out);
+            return;
+        };
+        // Rebuild the full raw request frame for verbatim forwarding.
+        let mut frame = Vec::with_capacity(hdr.len() + payload.len());
+        frame.extend_from_slice(hdr);
+        frame.extend_from_slice(payload);
+        let mut relayed = Vec::new();
+        let res = self.forward_routed(&problem, &theta, |me, idx| {
+            me.forward_binary(idx, &frame, &mut relayed)
+        });
+        match res {
+            Ok(()) => out.extend_from_slice(&relayed),
+            Err(e) => wire::encode_reply(&Reply::Error(e), out),
+        }
+    }
+
+    // ----------------------------------------------------------- serve --
+
+    /// Serve client connections from an already-bound listener through the
+    /// supervised actor group. Blocks forever.
+    pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
+        self.spawn_health_thread();
+        self.spawn_drain_watcher();
+        let mailbox: Arc<Mailbox<TcpStream>> = Mailbox::new(self.cfg.accept_queue);
+        let me = self.clone();
+        let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = Arc::new(move |stream| {
+            me.admission.conn_dequeued();
+            let _ = handle_client_conn(&me, stream);
+        });
+        let _sup = super::actor::supervise(
+            "route-conn",
+            self.cfg.workers,
+            mailbox.clone(),
+            handler,
+            self.restarts.clone(),
+        );
+        for stream in listener.incoming() {
+            let stream = stream?;
+            self.admission.conn_enqueued();
+            if let Err(e) = mailbox.try_send(stream) {
+                self.admission.conn_dequeued();
+                self.admission.note_rejected();
+                shed_connection(e.into_inner());
+            }
+        }
+        Ok(())
+    }
+
+    /// Bind `addr` (report the actual bound address — `:0` picks a free
+    /// port) and serve.
+    pub fn serve(self: Arc<Self>, addr: &str) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        println!(
+            "idiff route: listening on {local} ({} shards: {})",
+            self.shards.len(),
+            self.shard_addrs().join(", ")
+        );
+        self.serve_on(listener)
+    }
+}
+
+fn overloaded_json() -> String {
+    Json::obj(vec![("error", Json::Str(OVERLOADED.to_string()))]).to_string_compact()
+}
+
+/// Best-effort reject for a connection shed at the accept queue, before the
+/// wire is even known: a JSON error line (binary clients see a framing
+/// error and close — still a clean, prompt reject, never a hang).
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.write_all(overloaded_json().as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+/// Routing identity of a parsed JSON request: problem name (with the
+/// legacy `ridge_*` aliases folded in) + θ. Unroutable requests map to the
+/// empty identity, which the ring still assigns deterministically.
+fn route_identity_json(parsed: Option<&Json>, op: &str) -> (String, Vec<f64>) {
+    let Some(req) = parsed else { return (String::new(), Vec::new()) };
+    let problem = if op.starts_with("ridge_") {
+        "ridge".to_string()
+    } else {
+        req.str_or("problem", "").to_string()
+    };
+    let theta: Vec<f64> = req
+        .get("theta")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+        .unwrap_or_default();
+    (problem, theta)
+}
+
+fn handle_client_conn(router: &Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(router.cfg.idle_timeout));
+    let _ = stream.set_nodelay(true);
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let first = match reader.fill_buf() {
+        Ok([]) => return Ok(()),
+        Ok(buf) => buf[0],
+        Err(e) if super::super::is_disconnect(&e) => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    if first == wire::MAGIC {
+        route_binary_conn(router, reader, writer)
+    } else {
+        route_json_conn(router, reader, writer)
+    }
+}
+
+fn route_json_conn(
+    router: &Arc<Router>,
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+) -> std::io::Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(e) if super::super::is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let resp = router.handle_json_line(trimmed);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn route_binary_conn(
+    router: &Arc<Router>,
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+) -> std::io::Result<()> {
+    let mut payload = router.pool.take_bytes(4096);
+    let mut out = router.pool.take_bytes(4096);
+    loop {
+        let mut hdr = [0u8; wire::REQUEST_HEADER_LEN];
+        match reader.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if super::super::is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        let len = match wire::parse_request_header(&hdr, router.cfg.max_line_bytes) {
+            Ok(len) => len,
+            Err(msg) => {
+                // Framing violation: same policy as a shard — error
+                // frame, then close.
+                out.clear();
+                wire::encode_reply(&Reply::Error(msg), &mut out);
+                let _ = writer.write_all(&out);
+                return Ok(());
+            }
+        };
+        payload.resize(len, 0);
+        match reader.read_exact(&mut payload[..]) {
+            Ok(()) => {}
+            Err(e) if super::super::is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        router.handle_frame(&hdr, &payload, &mut out);
+        writer.write_all(&out)?;
+    }
+}

@@ -3,8 +3,10 @@
 //! debuggability and a zero-copy length-prefixed binary frame protocol for
 //! the hot path — with request micro-batching onto block solves, a θ-keyed
 //! factorization cache, a θ-keyed contraction (ρ) cache, pooled request
-//! buffers, manifest persistence for warm restarts, and a bounded worker
-//! pool (no thread-per-connection).
+//! buffers, manifest persistence for warm restarts, and a supervised actor
+//! runtime (bounded connection mailbox, restart-on-panic — no
+//! thread-per-connection). The [`cluster`] module shards this engine across
+//! processes behind a θ-consistent-hash router with admission control.
 //!
 //! # Protocol auto-detection
 //!
@@ -96,18 +98,31 @@
 //! (tmp + rename). A rebooted server warm-starts from it: repeat-θ traffic
 //! immediately takes the factored path with ZERO new factorizations
 //! (asserted by `rust/tests/persist_warm.rs`). A manifest with an unknown
-//! format or version produces a clean cold start, never a crash. There is
-//! no signal handling (zero-dependency build), so "graceful shutdown"
-//! persistence = the periodic writer plus `save_manifest` from the embedder.
+//! format or version produces a clean cold start, never a crash. With
+//! `handle_signals` set (the `idiff serve` binary sets it; embedded servers
+//! do not), SIGTERM/SIGINT trips a signal-safe latch and a watcher thread
+//! writes the manifest once more before exiting — graceful shutdown loses
+//! no warm state. A sharded server (`cfg.shard = Some((i, n))`) restores
+//! only ring-owned manifest entries, so shard manifests partition cleanly.
 //!
-//! Connections are dispatched onto a bounded [`WorkerPool`]: at most
-//! `workers` connections are serviced concurrently, excess connections
-//! queue, and a connection idle past `idle_timeout` is closed so it cannot
-//! pin a worker (size `workers` to the expected number of concurrently
-//! ACTIVE clients).
+//! # Connection runtime and admission
+//!
+//! Accepted connections enter a bounded [`cluster::actor::Mailbox`] drained
+//! by `workers` supervised connection actors: a panicking actor is restarted
+//! by its supervisor (`actor_restarts` in `stats`) without dropping the
+//! listener, excess connections past `accept_queue` are shed with a prompt
+//! `{"error":"overloaded"}`, and a connection idle past `idle_timeout` is
+//! closed so it cannot pin an actor. [`cluster::admit::Admission`] bounds
+//! the data plane: at most `max_inflight` requests execute at once, at most
+//! `max_solve_inflight` of them on the implicit block-solve lane. A
+//! saturated solve lane rejects implicit work up front and degrades
+//! `"mode":"auto"` requests with a cached contractive ρ to solve-free
+//! answers (flagged `"degraded":true`, counted in `degraded_one_step`)
+//! instead of queueing them.
 
 pub mod batcher;
 pub mod cache;
+pub mod cluster;
 pub mod persist;
 pub mod registry;
 pub mod wire;
@@ -117,10 +132,12 @@ use crate::linalg::mat::Mat;
 use crate::linalg::op::densify;
 use crate::linalg::solve::{counter, SolvePrecision};
 use crate::util::json::{self, Json};
-use crate::util::parallel::WorkerPool;
 use crate::util::pool::{Pool, PoolVec};
 use batcher::{BatchKey, BatchOp, Batcher};
 use cache::{CacheEntry, FactorCache, RhoCache, ThetaKey};
+use cluster::actor::Mailbox;
+use cluster::admit::{Admission, OVERLOADED};
+use cluster::ring::{Ring, DEFAULT_VNODES};
 use registry::{Problem, Registry};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -154,6 +171,28 @@ pub struct ServeConfig {
     /// Seconds between periodic manifest writes (0 = only explicit
     /// [`Server::save_manifest`] calls persist).
     pub persist_secs: u64,
+    /// Cluster shard identity as (index, count). `None` = standalone.
+    /// A sharded server reports its slot in `stats` and filters its
+    /// warm-start manifest to ring-owned entries; it still answers any θ
+    /// it is asked (the router re-hashes onto survivors on failover).
+    pub shard: Option<(usize, usize)>,
+    /// Virtual nodes per shard on the consistent-hash ring. Must match the
+    /// router's setting (both default to [`DEFAULT_VNODES`]).
+    pub vnodes: usize,
+    /// Bounded accept-queue depth; connections past it are shed with a
+    /// prompt `overloaded` reject instead of queueing unboundedly.
+    pub accept_queue: usize,
+    /// Max concurrently executing data-plane requests (0 = unbounded).
+    pub max_inflight: usize,
+    /// Max requests queued/executing on the implicit block-solve path
+    /// (0 = unbounded). When saturated, implicit requests are shed and
+    /// `"mode":"auto"` requests with a cached ρ degrade to solve-free
+    /// answers.
+    pub max_solve_inflight: usize,
+    /// Install the SIGTERM/SIGINT latch and write the manifest on shutdown.
+    /// Off by default so embedded servers (tests, benches) never touch
+    /// process-wide signal state; `idiff serve` turns it on.
+    pub handle_signals: bool,
 }
 
 impl Default for ServeConfig {
@@ -168,6 +207,12 @@ impl Default for ServeConfig {
             pool_max_idle: 256,
             manifest_path: None,
             persist_secs: 60,
+            shard: None,
+            vnodes: DEFAULT_VNODES,
+            accept_queue: 1024,
+            max_inflight: 0,
+            max_solve_inflight: 0,
+            handle_signals: false,
         }
     }
 }
@@ -240,6 +285,11 @@ pub enum Reply {
         out_key: &'static str,
         batched: usize,
         cached: bool,
+        /// Served solve-free under admission pressure (saturated solve
+        /// queue + `"mode":"auto"` + cached ρ). JSON adds
+        /// `"degraded":true`; the binary wire sets
+        /// [`wire::FLAG_DEGRADED`].
+        degraded: bool,
         mode: &'static str,
     },
     Jacobian {
@@ -258,20 +308,53 @@ pub struct Server {
     cache: FactorCache,
     rho_cache: RhoCache,
     pool: Arc<Pool>,
+    admission: Admission,
+    /// (own shard index, ring over all shard ids) — `None` standalone.
+    ring: Option<(usize, Ring)>,
+    /// Actor restarts recovered by the connection supervisors.
+    restarts: Arc<AtomicU64>,
     pub stats: ServeStats,
     cfg: ServeConfig,
 }
 
 impl Server {
     pub fn new(cfg: ServeConfig) -> Server {
+        if let Some((i, n)) = cfg.shard {
+            assert!(n >= 1 && i < n, "shard index {i} out of range for {n} shards");
+        }
+        let ring = cfg.shard.map(|(i, n)| {
+            let members: Vec<u32> = (0..n as u32).collect();
+            (i, Ring::new(&members, cfg.vnodes))
+        });
         Server {
             registry: Registry::standard(),
             batcher: Batcher::new(cfg.batch_window, cfg.batch_max),
             cache: FactorCache::new(cfg.cache_capacity),
             rho_cache: RhoCache::new(cfg.cache_capacity),
             pool: Pool::new(cfg.pool_max_idle),
+            admission: Admission::new(cfg.max_inflight, cfg.max_solve_inflight),
+            ring,
+            restarts: Arc::new(AtomicU64::new(0)),
             stats: ServeStats::default(),
             cfg,
+        }
+    }
+
+    /// The admission-control state (limits are live-adjustable; tests and
+    /// operators tighten them on a running server).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Does the consistent-hash ring assign this (problem, θ) to THIS
+    /// shard? Standalone servers own everything. Used by the warm-start
+    /// loader to keep each shard's manifest slice disjoint; requests are
+    /// never refused on ownership (failover re-hashes foreign keys here
+    /// on purpose).
+    pub fn owns(&self, problem: &str, theta: &[f64]) -> bool {
+        match &self.ring {
+            None => true,
+            Some((idx, ring)) => ring.shard_for(problem, theta) == Some(*idx as u32),
         }
     }
 
@@ -337,6 +420,21 @@ impl Server {
     /// The protocol-independent engine: every wire decodes into a
     /// [`Request`] and is answered from here.
     pub fn execute(&self, req: Request) -> Reply {
+        // Admission: data-plane requests hold an inflight slot for their
+        // whole execution; past the limit they are shed with the canonical
+        // `overloaded` reject. The control plane (ping/problems/stats) is
+        // never refused — the router's health checks and an operator's
+        // diagnostics must keep working exactly when the server is busiest.
+        let _inflight = match req {
+            Request::Ping | Request::Problems | Request::Stats => None,
+            _ => match self.admission.admit() {
+                Some(slot) => Some(slot),
+                None => {
+                    self.admission.note_rejected();
+                    return Reply::Error(OVERLOADED.to_string());
+                }
+            },
+        };
         match req {
             Request::Ping => Reply::Pong,
             Request::Problems => Reply::Text(self.op_problems()),
@@ -484,6 +582,7 @@ impl Server {
         let (hits, misses, evictions) = self.cache.stats();
         let (rho_hits, rho_misses) = self.rho_cache.stats();
         let pool = self.pool.stats();
+        let (shard_id, shard_count) = self.cfg.shard.unwrap_or((0, 1));
         Json::obj(vec![
             ("requests", Json::Num(self.stats.requests.load(Ordering::Relaxed) as f64)),
             ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
@@ -511,6 +610,22 @@ impl Server {
             ("pool_misses", Json::Num(pool.misses as f64)),
             ("pool_recycled", Json::Num(pool.recycled as f64)),
             ("workers", Json::Num(self.cfg.workers as f64)),
+            // Cluster / admission fields (identical on both wires — the
+            // binary `stats` reply carries this same JSON text).
+            ("shard_id", Json::Num(shard_id as f64)),
+            ("shard_count", Json::Num(shard_count as f64)),
+            ("ring_size", Json::Num(shard_count as f64)),
+            ("inflight", Json::Num(self.admission.inflight() as f64)),
+            ("solve_inflight", Json::Num(self.admission.solve_inflight() as f64)),
+            ("queue_depth", Json::Num(self.admission.queue_depth() as f64)),
+            ("batcher_inflight", Json::Num(self.batcher.inflight() as f64)),
+            ("rejected", Json::Num(self.admission.rejected() as f64)),
+            ("degraded_one_step", Json::Num(self.admission.degraded_one_step() as f64)),
+            ("actor_restarts", Json::Num(self.restarts.load(Ordering::Relaxed) as f64)),
+            (
+                "catalog_fingerprint",
+                Json::Str(format!("{:016x}", self.registry.catalog_fingerprint())),
+            ),
         ])
     }
 
@@ -597,11 +712,42 @@ impl Server {
                     batched: 1,
                     cached: true,
                     mode: "implicit",
+                    degraded: false,
                 };
             }
         }
 
+        // Mode-aware degradation. When the solve lane is saturated, an
+        // `"mode":"auto"` request whose ρ is already cached can be answered
+        // solve-free (one-step / unroll) instead of queueing behind the
+        // backlog — the closure below re-reads the same cached ρ, so the
+        // decision is deterministic. A saturated auto request whose cached ρ
+        // demands implicit is rejected here rather than queued; implicit
+        // requests reject atomically at `solve_slot()` acquisition below.
+        let mut degraded = false;
+        if self.admission.solve_saturated() && mode == DiffMode::Auto {
+            if let Some(rho) = self.rho_cache.peek(&ThetaKey::new(p.name, theta)) {
+                if matches!(ModePolicy::default().select(rho, false), ModeDecision::Implicit) {
+                    self.admission.note_rejected();
+                    return Reply::Error(OVERLOADED.to_string());
+                }
+                degraded = true;
+                self.admission.note_degraded();
+            }
+        }
+
         if mode == DiffMode::Implicit {
+            // Admission: the implicit path queues onto the solve lane; when
+            // that lane is full the request is rejected up front instead of
+            // growing an unbounded backlog. The slot guard spans the whole
+            // batched solve.
+            let _solve_slot = match self.admission.solve_slot() {
+                Some(slot) => slot,
+                None => {
+                    self.admission.note_rejected();
+                    return Reply::Error(OVERLOADED.to_string());
+                }
+            };
             // Batched implicit path: coalesce same-(problem, θ, op,
             // precision) requests into one block solve, then prefactor for
             // future repeats of this θ.
@@ -643,6 +789,7 @@ impl Server {
                     batched: size,
                     cached: false,
                     mode: "implicit",
+                    degraded: false,
                 },
                 Err(e) => Reply::Error(e),
             };
@@ -712,6 +859,7 @@ impl Server {
                 batched: size,
                 cached: false,
                 mode: mode.as_str(),
+                degraded,
             },
             Err(e) => Reply::Error(e),
         }
@@ -723,6 +871,16 @@ impl Server {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             (p.jacobian_factored(&entry.fact, &entry.x_star, theta), true)
         } else {
+            // A cold Jacobian rides the solve lane like implicit derivatives
+            // do; saturation rejects instead of queueing (cache hits above
+            // stay solve-free and are always served).
+            let _solve_slot = match self.admission.solve_slot() {
+                Some(slot) => slot,
+                None => {
+                    self.admission.note_rejected();
+                    return Reply::Error(OVERLOADED.to_string());
+                }
+            };
             // One inner solve either way; the factorization decides between
             // the direct and the iterative Jacobian path.
             let x_star = p.solve(theta);
@@ -752,18 +910,66 @@ impl Server {
     }
 
     /// Serve connections from an already-bound listener, dispatching each
-    /// onto the bounded worker pool. Blocks forever (until process exit).
+    /// onto the supervised actor runtime: a bounded mailbox of accepted
+    /// connections drained by `cfg.workers` connection actors. A panicking
+    /// actor is restarted by its supervisor (counted in `actor_restarts`);
+    /// an accept burst past `cfg.accept_queue` is shed with an
+    /// `{"error":"overloaded"}` line instead of an unbounded backlog.
+    /// Blocks forever (until process exit).
     pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
         self.clone().spawn_persist_thread();
-        let pool = WorkerPool::new(self.cfg.workers);
+        if self.cfg.handle_signals {
+            self.clone().spawn_shutdown_watcher();
+        }
+        let mailbox = Mailbox::new(self.cfg.accept_queue);
+        let me = self.clone();
+        let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = Arc::new(move |stream| {
+            me.admission.conn_dequeued();
+            let _ = handle_conn(&me, stream);
+        });
+        let _sup = cluster::actor::supervise(
+            "serve-conn",
+            self.cfg.workers,
+            mailbox.clone(),
+            handler,
+            self.restarts.clone(),
+        );
         for stream in listener.incoming() {
             let stream = stream?;
-            let me = self.clone();
-            pool.submit(move || {
-                let _ = handle_conn(&me, stream);
-            });
+            self.admission.conn_enqueued();
+            if let Err(e) = mailbox.try_send(stream) {
+                self.admission.conn_dequeued();
+                self.admission.note_rejected();
+                shed(e.into_inner());
+            }
         }
         Ok(())
+    }
+
+    /// Install the SIGTERM/SIGINT latch and a watcher thread that writes the
+    /// warm-start manifest (when configured) before exiting. Only called
+    /// when `cfg.handle_signals` is set — the `idiff serve` binary opts in;
+    /// embedded servers (tests, benches) never install process-wide
+    /// handlers.
+    pub fn spawn_shutdown_watcher(self: Arc<Self>) {
+        crate::util::signal::install();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_millis(50));
+            if crate::util::signal::requested() {
+                if let Some(path) = &self.cfg.manifest_path {
+                    match self.save_manifest(path) {
+                        Ok(()) => println!(
+                            "idiff serve: shutdown manifest written to {}",
+                            path.display()
+                        ),
+                        Err(e) => {
+                            eprintln!("idiff serve: shutdown manifest write failed: {e}")
+                        }
+                    }
+                }
+                std::process::exit(0);
+            }
+        });
     }
 
     /// Start the periodic manifest writer (a no-op unless both a manifest
@@ -783,10 +989,21 @@ impl Server {
         });
     }
 
-    /// Bind `addr` and serve (see [`Server::serve_on`]).
+    /// Bind `addr` and serve (see [`Server::serve_on`]). Prints the bound
+    /// address (not the requested one) so `--addr host:0` callers — the e2e
+    /// harness, scripted shard launchers — can parse the ephemeral port.
     pub fn serve(self: Arc<Self>, addr: &str) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
-        println!("idiff serve: listening on {addr} ({} workers)", self.cfg.workers);
+        let local = listener.local_addr()?;
+        match self.cfg.shard {
+            Some((i, n)) => println!(
+                "idiff serve: listening on {local} ({} workers, shard {i}/{n})",
+                self.cfg.workers
+            ),
+            None => {
+                println!("idiff serve: listening on {local} ({} workers)", self.cfg.workers)
+            }
+        }
         self.serve_on(listener)
     }
 }
@@ -799,12 +1016,20 @@ pub fn reply_to_json(reply: Reply) -> Json {
         Reply::Solution { x, cached } => {
             Json::obj(vec![("x", Json::arr_f64(&x)), ("cached", Json::Bool(cached))])
         }
-        Reply::Derivative { out, out_key, batched, cached, mode } => Json::obj(vec![
-            (out_key, Json::arr_f64(&out)),
-            ("batched", Json::Num(batched as f64)),
-            ("cached", Json::Bool(cached)),
-            ("mode", Json::Str(mode.to_string())),
-        ]),
+        Reply::Derivative { out, out_key, batched, cached, mode, degraded } => {
+            let mut members = vec![
+                (out_key, Json::arr_f64(&out)),
+                ("batched", Json::Num(batched as f64)),
+                ("cached", Json::Bool(cached)),
+                ("mode", Json::Str(mode.to_string())),
+            ];
+            // Only present when true, so pre-cluster replies stay
+            // byte-identical.
+            if degraded {
+                members.push(("degraded", Json::Bool(true)));
+            }
+            Json::obj(members)
+        }
         Reply::Jacobian { jac, cached } => {
             let rows: Vec<Json> = (0..jac.rows).map(|i| Json::arr_f64(jac.row(i))).collect();
             Json::obj(vec![("jacobian", Json::Arr(rows)), ("cached", Json::Bool(cached))])
@@ -821,7 +1046,15 @@ fn required_problem(req: &Json) -> Result<String, String> {
     Ok(name.to_string())
 }
 
-fn is_disconnect(e: &std::io::Error) -> bool {
+/// Best-effort overload reply for a connection shed at the accept queue.
+/// Shedding happens before protocol detection, so the reject is the JSON
+/// line; a binary client sees a short read and treats the connection as
+/// refused — either way the stream closes immediately.
+fn shed(mut stream: TcpStream) {
+    let _ = stream.write_all(b"{\"error\":\"overloaded\"}\n");
+}
+
+pub(crate) fn is_disconnect(e: &std::io::Error) -> bool {
     matches!(
         e.kind(),
         std::io::ErrorKind::WouldBlock
@@ -856,6 +1089,9 @@ fn serve_json_conn(
     mut writer: TcpStream,
 ) -> std::io::Result<()> {
     let mut line = String::new();
+    // One pooled reply buffer recycled across every line this connection
+    // sends — replies serialize straight into it (no per-reply String).
+    let mut out = server.pool.take_bytes(4096);
     loop {
         line.clear();
         match reader.read_line(&mut line) {
@@ -869,8 +1105,10 @@ fn serve_json_conn(
             continue;
         }
         let resp = server.handle(trimmed);
-        writer.write_all(resp.to_string_compact().as_bytes())?;
-        writer.write_all(b"\n")?;
+        out.clear();
+        resp.write_compact_bytes(&mut out);
+        out.push(b'\n');
+        writer.write_all(&out)?;
     }
 }
 

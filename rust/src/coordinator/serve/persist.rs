@@ -237,6 +237,13 @@ impl Server {
         {
             return None;
         }
+        // Shard manifest slice: a sharded server only warm-starts entries
+        // the consistent-hash ring assigns to it (counted as skipped), so
+        // N shard manifests partition a standalone manifest cleanly and no
+        // factorization is ever duplicated cluster-wide at restore time.
+        if !self.owns(name, &theta) {
+            return None;
+        }
         let fact = fact_from(entry.get("fact")?)?;
         if fact.dim() != p.dim_x() {
             return None;
@@ -258,6 +265,10 @@ impl Server {
             || !rho.is_finite()
             || rho < 0.0
         {
+            return None;
+        }
+        // Same ring-ownership slice as factorization entries.
+        if !self.owns(name, &theta) {
             return None;
         }
         self.rho_cache.insert(ThetaKey::new(name, &theta), rho);

@@ -408,6 +408,14 @@ impl Registry {
                 .collect(),
         )
     }
+
+    /// FNV-1a fingerprint of the compact catalog signature. Every shard in
+    /// a cluster must report the same value (the cluster tests assert it):
+    /// ring routing is only meaningful when all shards serve one catalog.
+    /// Reported by the `stats` op as a hex string.
+    pub fn catalog_fingerprint(&self) -> u64 {
+        super::cluster::ring::fnv1a(self.catalog_signature().to_string_compact().as_bytes())
+    }
 }
 
 // ---------------------------------------------------------------- cores --

@@ -97,6 +97,10 @@ pub const PREC_MIXED: u8 = 1;
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
 pub const FLAG_CACHED: u8 = 1;
+/// Reply flag bit: this derivative was served solve-free because the solve
+/// queue was saturated (mode-aware admission degrade). The JSON wire's
+/// equivalent is a `"degraded": true` member.
+pub const FLAG_DEGRADED: u8 = 2;
 
 pub fn mode_to_byte(mode: DiffMode) -> u8 {
     match mode {
@@ -290,15 +294,15 @@ pub fn encode_reply(reply: &Reply, out: &mut Vec<u8>) {
     let start = out.len();
     out.push(MAGIC);
     out.push(VERSION);
-    let (status, cached) = match reply {
-        Reply::Error(_) => (STATUS_ERR, false),
-        Reply::Solution { cached, .. } => (STATUS_OK, *cached),
-        Reply::Derivative { cached, .. } => (STATUS_OK, *cached),
-        Reply::Jacobian { cached, .. } => (STATUS_OK, *cached),
-        _ => (STATUS_OK, false),
+    let (status, cached, degraded) = match reply {
+        Reply::Error(_) => (STATUS_ERR, false, false),
+        Reply::Solution { cached, .. } => (STATUS_OK, *cached, false),
+        Reply::Derivative { cached, degraded, .. } => (STATUS_OK, *cached, *degraded),
+        Reply::Jacobian { cached, .. } => (STATUS_OK, *cached, false),
+        _ => (STATUS_OK, false, false),
     };
     out.push(status);
-    out.push(if cached { FLAG_CACHED } else { 0 });
+    out.push(if cached { FLAG_CACHED } else { 0 } | if degraded { FLAG_DEGRADED } else { 0 });
     push_u32(out, 0); // payload length, patched below
     let body = out.len();
     match reply {
@@ -410,6 +414,8 @@ pub fn encode_request(req: &RequestFrame, out: &mut Vec<u8>) {
 pub struct ReplyFrame {
     pub status: u8,
     pub cached: bool,
+    /// Served solve-free under admission pressure (see [`FLAG_DEGRADED`]).
+    pub degraded: bool,
     pub mode_byte: u8,
     pub batched: usize,
     pub rows: usize,
@@ -432,6 +438,7 @@ pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReplyFrame> {
     }
     let status = hdr[2];
     let cached = hdr[3] & FLAG_CACHED != 0;
+    let degraded = hdr[3] & FLAG_DEGRADED != 0;
     let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
@@ -442,6 +449,7 @@ pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReplyFrame> {
         return Ok(ReplyFrame {
             status,
             cached,
+            degraded,
             mode_byte: MODE_NONE,
             batched: 0,
             rows: 0,
@@ -468,6 +476,7 @@ pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReplyFrame> {
     Ok(ReplyFrame {
         status,
         cached,
+        degraded,
         mode_byte,
         batched,
         rows,
@@ -596,6 +605,7 @@ mod tests {
             out_key: "grad",
             batched: 3,
             cached: true,
+            degraded: true,
             mode: "one-step",
         };
         let mut buf = Vec::new();
@@ -603,6 +613,7 @@ mod tests {
         let f = read_reply(&mut &buf[..]).unwrap();
         assert_eq!(f.status, STATUS_OK);
         assert!(f.cached);
+        assert!(f.degraded);
         assert_eq!(f.mode_byte, MODE_ONE_STEP);
         assert_eq!(mode_str_from_byte(f.mode_byte), "one-step");
         assert_eq!(f.batched, 3);

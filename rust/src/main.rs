@@ -7,10 +7,40 @@
 //! idiff serve [--addr 127.0.0.1:7878] [--workers N] [--window-ms 2]
 //!             [--batch-max 32] [--cache 64]          # catalog request server
 //!             [--manifest PATH] [--persist-secs 60]  # warm-start persistence
+//!             [--shard i/N] [--vnodes 64]            # cluster shard identity
+//!             [--accept-queue 1024] [--max-inflight 0]
+//!             [--max-solve-inflight 0]               # admission control
+//! idiff route --shards host:a,host:b[,...]           # consistent-hash front
+//!             [--addr 127.0.0.1:7979] [--workers N] [--vnodes 64]
+//!             [--accept-queue 1024] [--max-inflight 0] [--health-secs 2]
 //! ```
+//!
+//! A sharded serve (`--shard i/N`) owns the ring slice i of N: its manifest
+//! (suffixed `.shard-i-of-N`) restores only ring-owned θ's, and the `route`
+//! front forwards each (problem, θ) to its owner so no factorization is
+//! ever computed twice cluster-wide. SIGTERM/SIGINT on a serve process
+//! writes the manifest before exiting; on a router it drains inflight
+//! requests first.
 
 use idiff::coordinator;
 use idiff::util::cli::Args;
+
+/// Parse `--shard i/N` (e.g. `0/2`). Exits with a usage error on nonsense —
+/// a mis-sharded server would silently drop its whole warm-start slice.
+fn parse_shard(spec: &str) -> (usize, usize) {
+    let parts: Vec<&str> = spec.split('/').collect();
+    let parsed = match parts[..] {
+        [i, n] => match (i.parse::<usize>(), n.parse::<usize>()) {
+            (Ok(i), Ok(n)) if n >= 1 && i < n => Some((i, n)),
+            _ => None,
+        },
+        _ => None,
+    };
+    parsed.unwrap_or_else(|| {
+        eprintln!("invalid --shard '{spec}' (expected i/N with 0 <= i < N, e.g. 0/2)");
+        std::process::exit(2);
+    })
+}
 
 fn main() {
     let args = Args::parse();
@@ -30,13 +60,27 @@ fn main() {
         Some("serve") => {
             let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
             let defaults = coordinator::serve::ServeConfig::default();
+            let shard = args.get("shard").map(parse_shard);
+            // Each shard persists its own manifest slice; suffix the path so
+            // N shards sharing a --manifest flag never clobber each other.
+            let manifest_path = args.get("manifest").map(|p| match shard {
+                Some((i, n)) => std::path::PathBuf::from(format!("{p}.shard-{i}-of-{n}")),
+                None => std::path::PathBuf::from(p),
+            });
             let cfg = coordinator::serve::ServeConfig {
                 workers: args.get_usize("workers", defaults.workers),
                 batch_window: std::time::Duration::from_millis(args.get_u64("window-ms", 2)),
                 batch_max: args.get_usize("batch-max", defaults.batch_max),
                 cache_capacity: args.get_usize("cache", defaults.cache_capacity),
-                manifest_path: args.get("manifest").map(std::path::PathBuf::from),
+                manifest_path,
                 persist_secs: args.get_u64("persist-secs", defaults.persist_secs),
+                shard,
+                vnodes: args.get_usize("vnodes", defaults.vnodes),
+                accept_queue: args.get_usize("accept-queue", defaults.accept_queue),
+                max_inflight: args.get_usize("max-inflight", defaults.max_inflight),
+                max_solve_inflight: args
+                    .get_usize("max-solve-inflight", defaults.max_solve_inflight),
+                handle_signals: true,
                 ..defaults
             };
             let manifest = cfg.manifest_path.clone();
@@ -59,9 +103,40 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        Some("route") => {
+            let addr = args.get_or("addr", "127.0.0.1:7979").to_string();
+            let shards: Vec<String> = args
+                .get_or("shards", "")
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if shards.is_empty() {
+                eprintln!("idiff route needs --shards host:port[,host:port...]");
+                std::process::exit(2);
+            }
+            let defaults = coordinator::serve::cluster::router::RouterConfig::default();
+            let cfg = coordinator::serve::cluster::router::RouterConfig {
+                shards,
+                workers: args.get_usize("workers", defaults.workers),
+                accept_queue: args.get_usize("accept-queue", defaults.accept_queue),
+                max_inflight: args.get_usize("max-inflight", defaults.max_inflight),
+                health_secs: args.get_u64("health-secs", defaults.health_secs),
+                vnodes: args.get_usize("vnodes", defaults.vnodes),
+                drain_secs: args.get_u64("drain-secs", defaults.drain_secs),
+                ..defaults
+            };
+            let router =
+                std::sync::Arc::new(coordinator::serve::cluster::router::Router::new(cfg));
+            if let Err(e) = router.serve(&addr) {
+                eprintln!("router error: {e}");
+                std::process::exit(1);
+            }
+        }
         _ => {
             println!("idiff — Efficient and Modular Implicit Differentiation (NeurIPS 2022) reproduction");
-            println!("usage: idiff <list|run|serve> [--exp NAME] [--key value ...]");
+            println!("usage: idiff <list|run|serve|route> [--exp NAME] [--key value ...]");
             println!();
             coordinator::list_experiments();
         }

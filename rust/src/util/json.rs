@@ -88,6 +88,49 @@ impl Json {
         s
     }
 
+    /// Compact serialization straight into a byte buffer. The JSON wire's
+    /// reply path writes into a pooled `PoolBytes` with this — one reply
+    /// buffer recycled across a connection's lifetime instead of a fresh
+    /// `String` per reply. Byte-identical to `to_string_compact()`.
+    pub fn write_compact_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            Json::Null => out.extend_from_slice(b"null"),
+            Json::Bool(b) => {
+                out.extend_from_slice(if *b { b"true" as &[u8] } else { b"false" })
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.extend_from_slice(fmt_f64(*x).as_bytes());
+                } else {
+                    out.extend_from_slice(b"null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped_bytes(out, s),
+            Json::Arr(a) => {
+                out.push(b'[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    v.write_compact_bytes(out);
+                }
+                out.push(b']');
+            }
+            Json::Obj(m) => {
+                out.push(b'{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    write_escaped_bytes(out, k);
+                    out.push(b':');
+                    v.write_compact_bytes(out);
+                }
+                out.push(b'}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -180,6 +223,27 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+fn write_escaped_bytes(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                out.extend_from_slice(format!("\\u{:04x}", c as u32).as_bytes());
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
 }
 
 /// Parse a JSON document. Returns an error message with byte offset on
@@ -485,5 +549,23 @@ mod tests {
         // Non-finite values still degrade to null (JSON has no NaN/Inf).
         assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn byte_writer_matches_string_writer() {
+        let doc = Json::obj(vec![
+            ("grad", Json::arr_f64(&[1.5, -0.0, 2.0 + 1e-9, 1e300, f64::NAN])),
+            ("cached", Json::Bool(true)),
+            ("mode", Json::Str("one-step".to_string())),
+            ("weird \"key\"\n\t\u{1}", Json::Null),
+            ("nested", Json::Arr(vec![Json::obj(vec![("k", Json::Num(0.25))]), Json::Arr(vec![])])),
+            ("unicode", Json::Str("θ→∂".to_string())),
+        ]);
+        let mut bytes = Vec::new();
+        doc.write_compact_bytes(&mut bytes);
+        assert_eq!(bytes, doc.to_string_compact().into_bytes());
+        // And the buffer appends rather than clobbers (callers clear it).
+        doc.write_compact_bytes(&mut bytes);
+        assert_eq!(bytes.len(), 2 * doc.to_string_compact().len());
     }
 }

@@ -11,6 +11,7 @@ pub mod json;
 pub mod parallel;
 pub mod pool;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 pub mod table;
 pub mod testkit;

@@ -2,9 +2,11 @@
 //!
 //! Provides `parallel_for_each` — split a work list across worker threads with
 //! captured closures — used by the coordinator to fan experiments out — and
-//! [`WorkerPool`], a bounded long-lived pool the serve subsystem dispatches
-//! connections onto (replacing unbounded thread-per-connection). On a
-//! single-core box both degrade gracefully to (nearly) serial execution.
+//! [`WorkerPool`], a bounded long-lived general-purpose pool (the serve
+//! subsystem's connection dispatch moved to the supervised
+//! `coordinator::serve::cluster::actor` runtime, which restarts panicked
+//! workers). On a single-core box both degrade gracefully to (nearly)
+//! serial execution.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};

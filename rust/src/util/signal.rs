@@ -1,0 +1,74 @@
+//! Minimal zero-dependency SIGTERM/SIGINT latch for graceful shutdown.
+//!
+//! The crate links no libc wrapper, so the handler is registered through
+//! the C `signal(2)` symbol directly. The handler itself does the only
+//! async-signal-safe thing possible: it sets a static `AtomicBool`.
+//! Consumers (`Server::spawn_shutdown_watcher`, the router's drain
+//! watcher) poll [`requested`] from an ordinary thread and run the actual
+//! shutdown work — manifest write, drain, exit — in normal code.
+//!
+//! On non-Unix targets `install` is a no-op and [`requested`] only ever
+//! fires via [`request`] (the programmatic path tests use).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+
+    extern "C" {
+        /// `sighandler_t signal(int signum, sighandler_t handler)` —
+        /// present on every Unix libc this crate targets.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        super::SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+            signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+}
+
+/// Register the SIGTERM/SIGINT latch. Idempotent; safe to call from every
+/// subsystem that wants shutdown notice.
+pub fn install() {
+    imp::install();
+}
+
+/// Has a shutdown been requested (signal received or [`request`] called)?
+pub fn requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Programmatic shutdown request — same latch the signal handler sets.
+pub fn request() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latch_sets_and_install_is_safe() {
+        install();
+        install(); // idempotent
+        // NOTE: not asserting `!requested()` first — another test in the
+        // process could legitimately have requested shutdown.
+        request();
+        assert!(requested());
+    }
+}

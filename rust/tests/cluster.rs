@@ -1,0 +1,462 @@
+//! Sharded serving tier, end to end.
+//!
+//! Four layers of coverage:
+//!
+//! 1. **Ring property test** — growing/shrinking the member set moves only
+//!    the arcs of the added/removed member (≈ 1/N of the keyspace), and the
+//!    assignment is a pure function of the member set (deterministic across
+//!    independently constructed rings — the property the router and the
+//!    shard manifest slicer both rely on).
+//! 2. **Engine-level admission** — a saturated solve lane rejects implicit
+//!    (and cold-Jacobian) work with the canonical `overloaded` error,
+//!    degrades `"mode":"auto"` requests with a cached contractive ρ to
+//!    solve-free answers (flagged + counted), and never refuses cache hits
+//!    or the control plane.
+//! 3. **Both wires under pressure** — the overload reject and the degraded
+//!    flag are identical across the JSON and binary protocols, and the
+//!    `stats` op reports the same cluster fields on both.
+//! 4. **Two shard processes + router process** — exactly one factorization
+//!    per θ cluster-wide (zero duplicates), verbatim relaying on both
+//!    wires, and failover after a shard kill without poisoning the
+//!    survivor's cache. Plus SIGTERM graceful shutdown writing the
+//!    warm-start manifest.
+
+use idiff::coordinator::serve::cluster::ring::{Ring, DEFAULT_VNODES};
+use idiff::coordinator::serve::wire::{self, ReplyFrame, RequestFrame};
+use idiff::coordinator::serve::{ServeConfig, Server};
+use idiff::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------- helpers --
+
+fn quiet_cfg() -> ServeConfig {
+    ServeConfig { batch_window: Duration::from_millis(0), ..ServeConfig::default() }
+}
+
+fn start(cfg: ServeConfig) -> (SocketAddr, Arc<Server>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = Arc::new(Server::new(cfg));
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_on(listener);
+        });
+    }
+    (addr, server)
+}
+
+fn hypergrad_line(problem: &str, theta: &[f64], v: &[f64], mode: Option<&str>) -> String {
+    let mut members = vec![
+        ("op", Json::Str("hypergrad".to_string())),
+        ("problem", Json::Str(problem.to_string())),
+        ("theta", Json::arr_f64(theta)),
+        ("v", Json::arr_f64(v)),
+    ];
+    if let Some(m) = mode {
+        members.push(("mode", Json::Str(m.to_string())));
+    }
+    Json::obj(members).to_string_compact()
+}
+
+struct JsonClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl JsonClient {
+    fn connect(addr: &str) -> JsonClient {
+        let stream = TcpStream::connect(addr).expect("connect json");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        JsonClient { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        idiff::util::json::parse(reply.trim())
+            .unwrap_or_else(|e| panic!("reply '{}' does not parse: {e}", reply.trim()))
+    }
+}
+
+struct BinClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl BinClient {
+    fn connect(addr: &str) -> BinClient {
+        let stream = TcpStream::connect(addr).expect("connect bin");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        BinClient { stream, buf: Vec::new() }
+    }
+
+    fn request(&mut self, frame: &RequestFrame) -> ReplyFrame {
+        self.buf.clear();
+        wire::encode_request(frame, &mut self.buf);
+        self.stream.write_all(&self.buf).unwrap();
+        wire::read_reply(&mut self.stream).expect("read reply frame")
+    }
+}
+
+fn vjp_frame<'a>(problem: &'a str, theta: &'a [f64], v: &'a [f64], mode: u8) -> RequestFrame<'a> {
+    RequestFrame {
+        opcode: wire::OP_VJP,
+        mode,
+        problem,
+        theta,
+        v,
+        ..RequestFrame::control(wire::OP_VJP)
+    }
+}
+
+// ----------------------------------------------------- 1. ring properties --
+
+#[test]
+fn ring_membership_changes_move_only_the_affected_arcs() {
+    let keys: Vec<Vec<f64>> =
+        (0..800).map(|i| (0..8).map(|j| 0.3 + i as f64 * 0.017 + j as f64 * 0.9).collect()).collect();
+    for n in 2..=5u32 {
+        let members: Vec<u32> = (0..n).collect();
+        let grown: Vec<u32> = (0..=n).collect();
+        let small = Ring::new(&members, DEFAULT_VNODES);
+        let big = Ring::new(&grown, DEFAULT_VNODES);
+        // Determinism: an independently built identical ring agrees everywhere.
+        let small2 = Ring::new(&members, DEFAULT_VNODES);
+        let mut moved = 0usize;
+        for t in &keys {
+            let before = small.shard_for("ridge", t).unwrap();
+            assert_eq!(small2.shard_for("ridge", t).unwrap(), before);
+            let after = big.shard_for("ridge", t).unwrap();
+            if before != after {
+                // Growth may only move keys TO the new member.
+                assert_eq!(after, n, "key moved between surviving members on growth");
+                moved += 1;
+            }
+        }
+        // Expect ≈ keys/(n+1) moved; allow wide slack (the assignment is
+        // deterministic, so this bound is about ring balance, not luck).
+        let expect = keys.len() / (n as usize + 1);
+        assert!(
+            moved > expect / 3 && moved < expect * 3,
+            "n={n}: moved {moved}, expected ≈{expect}"
+        );
+    }
+}
+
+// ------------------------------------------------- 2. engine-level admission --
+
+#[test]
+fn saturated_solve_lane_rejects_implicit_and_degrades_cached_auto() {
+    let s = Server::new(quiet_cfg());
+    let theta_warm = vec![1.1; 8];
+    let theta_auto = vec![0.9; 8];
+    let theta_cold = vec![1.7; 8];
+    let v = vec![0.5; 8];
+
+    // Warm one implicit θ (factored) and one auto ρ before applying pressure.
+    let r = s.handle(&hypergrad_line("ridge", &theta_warm, &v, None));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    let r = s.handle(&hypergrad_line("ridge", &theta_auto, &v, Some("auto")));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    assert!(r.get("degraded").is_none(), "no pressure yet: {}", r.to_string_compact());
+    let factorizations_before = s.stats.factorizations.load(Ordering::Relaxed);
+
+    // Saturate the solve lane: limit 1, and hold that one slot.
+    s.admission().set_max_solve_inflight(1);
+    let hold = s.admission().solve_slot().expect("claim the only solve slot");
+
+    // Implicit on a cold θ: canonical reject.
+    let r = s.handle(&hypergrad_line("ridge", &theta_cold, &v, None));
+    assert_eq!(r.to_string_compact(), r#"{"error":"overloaded"}"#);
+    // Cold Jacobian rides the same lane.
+    let jac = Json::obj(vec![
+        ("op", Json::Str("jacobian".to_string())),
+        ("problem", Json::Str("ridge".to_string())),
+        ("theta", Json::arr_f64(&theta_cold)),
+    ])
+    .to_string_compact();
+    assert_eq!(s.handle(&jac).to_string_compact(), r#"{"error":"overloaded"}"#);
+    assert_eq!(s.admission().rejected(), 2);
+
+    // Auto with a cached contractive ρ: served solve-free, flagged degraded.
+    let r = s.handle(&hypergrad_line("ridge", &theta_auto, &v, Some("auto")));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    assert_eq!(r.get("degraded"), Some(&Json::Bool(true)));
+    assert_eq!(s.admission().degraded_one_step(), 1);
+
+    // Auto with a COLD ρ is not degraded (no cached estimate to lean on) —
+    // it runs the ordinary solve-free path.
+    let r = s.handle(&hypergrad_line("ridge", &[0.85; 8], &v, Some("auto")));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    assert!(r.get("degraded").is_none());
+    assert_eq!(s.admission().degraded_one_step(), 1);
+
+    // Cache hits and the control plane are always served under pressure.
+    let r = s.handle(&hypergrad_line("ridge", &theta_warm, &v, None));
+    assert_eq!(r.get("cached"), Some(&Json::Bool(true)));
+    assert!(r.get("degraded").is_none());
+    assert!(s.handle(r#"{"op":"stats"}"#).get("error").is_none());
+
+    // No factorization happened under saturation…
+    assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), factorizations_before);
+    // …and releasing the slot restores the implicit path.
+    drop(hold);
+    let r = s.handle(&hypergrad_line("ridge", &theta_cold, &v, None));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+}
+
+// -------------------------------------------- 3. both wires under pressure --
+
+#[test]
+fn overload_and_degrade_are_identical_on_both_wires() {
+    let (addr, server) = start(quiet_cfg());
+    let addr = addr.to_string();
+    let mut jc = JsonClient::connect(&addr);
+    let mut bc = BinClient::connect(&addr);
+    let theta_auto = vec![0.9; 8];
+    let theta_cold = vec![2.3; 8];
+    let v = vec![0.5; 8];
+
+    // Warm the ρ-cache, then saturate the solve lane.
+    let r = jc.request(&hypergrad_line("ridge", &theta_auto, &v, Some("auto")));
+    assert!(r.get("error").is_none());
+    server.admission().set_max_solve_inflight(1);
+    let _hold = server.admission().solve_slot().expect("claim the only solve slot");
+
+    // Overload reject, both wires.
+    let r = jc.request(&hypergrad_line("ridge", &theta_cold, &v, None));
+    assert_eq!(r.to_string_compact(), r#"{"error":"overloaded"}"#);
+    let f = bc.request(&vjp_frame("ridge", &theta_cold, &v, wire::MODE_IMPLICIT));
+    assert_eq!(f.status, wire::STATUS_ERR);
+    assert_eq!(f.error.as_deref(), Some("overloaded"));
+    assert!(!f.degraded);
+
+    // Degraded auto, both wires (flag in JSON, flag bit on the frame).
+    let r = jc.request(&hypergrad_line("ridge", &theta_auto, &v, Some("auto")));
+    assert_eq!(r.get("degraded"), Some(&Json::Bool(true)));
+    let f = bc.request(&vjp_frame("ridge", &theta_auto, &v, wire::MODE_AUTO));
+    assert_eq!(f.status, wire::STATUS_OK);
+    assert!(f.degraded, "binary wire must carry FLAG_DEGRADED");
+    assert_eq!(server.admission().degraded_one_step(), 2);
+
+    // The cluster stats fields exist and agree across wires.
+    let js = jc.request(r#"{"op":"stats"}"#);
+    let bs = bc.request(&RequestFrame::control(wire::OP_STATS));
+    let bjson = idiff::util::json::parse(&bs.text).expect("binary stats text parses");
+    for key in [
+        "shard_id",
+        "shard_count",
+        "ring_size",
+        "solve_inflight",
+        "queue_depth",
+        "rejected",
+        "degraded_one_step",
+        "actor_restarts",
+        "catalog_fingerprint",
+    ] {
+        assert_eq!(js.get(key), bjson.get(key), "stats field '{key}' differs across wires");
+        assert!(js.get(key).is_some(), "stats field '{key}' missing");
+    }
+    assert_eq!(js.get("shard_id"), Some(&Json::Num(0.0)));
+    assert_eq!(js.get("shard_count"), Some(&Json::Num(1.0)));
+    assert_eq!(js.get("rejected"), Some(&Json::Num(2.0)));
+    assert_eq!(js.get("degraded_one_step"), Some(&Json::Num(2.0)));
+}
+
+// -------------------------------------- 4. shard + router processes (e2e) --
+
+struct Proc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_idiff(args: &[&str], listen_tag: &str) -> Proc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_idiff"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn idiff");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("read child stdout") == 0 {
+            panic!("{listen_tag} exited before announcing its address");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().expect("address token").to_string();
+        }
+    };
+    // Keep draining stdout so the child never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    Proc { child, addr }
+}
+
+fn shard_rows(stats: &Json) -> Vec<(String, bool, f64)> {
+    stats
+        .get("shards")
+        .and_then(Json::as_arr)
+        .expect("router stats has a shards array")
+        .iter()
+        .map(|row| {
+            (
+                row.str_or("addr", "").to_string(),
+                row.get("healthy") == Some(&Json::Bool(true)),
+                row.get("stats")
+                    .and_then(|s| s.get("factorizations"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(-1.0),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn two_shard_cluster_deduplicates_factorizations_and_fails_over() {
+    let shard0 = spawn_idiff(
+        &["serve", "--addr", "127.0.0.1:0", "--workers", "2", "--window-ms", "0", "--shard", "0/2"],
+        "shard 0",
+    );
+    let shard1 = spawn_idiff(
+        &["serve", "--addr", "127.0.0.1:0", "--workers", "2", "--window-ms", "0", "--shard", "1/2"],
+        "shard 1",
+    );
+    let shards_arg = format!("{},{}", shard0.addr, shard1.addr);
+    let router = spawn_idiff(
+        &["route", "--addr", "127.0.0.1:0", "--workers", "2", "--health-secs", "1", "--shards", &shards_arg],
+        "router",
+    );
+
+    let thetas: Vec<Vec<f64>> = (0..24).map(|i| vec![1.0 + 0.01 * i as f64; 8]).collect();
+    let v = vec![0.5; 8];
+
+    // 24 distinct θ, 3 passes each, through the router. First pass factors;
+    // repeats must hit the owning shard's cache (proof the ring is sticky).
+    let mut jc = JsonClient::connect(&router.addr);
+    for pass in 0..3 {
+        for t in &thetas {
+            let r = jc.request(&hypergrad_line("ridge", t, &v, None));
+            assert!(r.get("error").is_none(), "pass {pass}: {}", r.to_string_compact());
+            if pass > 0 {
+                assert_eq!(
+                    r.get("cached"),
+                    Some(&Json::Bool(true)),
+                    "repeat-θ must be served from the owning shard's cache"
+                );
+            }
+        }
+    }
+    let stats = jc.request(r#"{"op":"stats"}"#);
+    let rows = shard_rows(&stats);
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|(_, healthy, _)| *healthy));
+    let (f0, f1) = (rows[0].2, rows[1].2);
+    assert!(f0 > 0.0 && f1 > 0.0, "ring left a shard idle: {f0}/{f1}");
+    assert_eq!(
+        f0 + f1,
+        thetas.len() as f64,
+        "exactly one factorization per θ cluster-wide (zero duplicates)"
+    );
+
+    // Same cluster, binary wire: repeats stay cached, no new factorizations.
+    let mut bc = BinClient::connect(&router.addr);
+    for t in thetas.iter().take(6) {
+        let f = bc.request(&vjp_frame("ridge", t, &v, wire::MODE_IMPLICIT));
+        assert_eq!(f.status, wire::STATUS_OK);
+        assert!(f.cached, "binary repeat-θ through the router must be cached");
+    }
+    let bs = bc.request(&RequestFrame::control(wire::OP_STATS));
+    let brows = shard_rows(&idiff::util::json::parse(&bs.text).unwrap());
+    assert_eq!(brows[0].2 + brows[1].2, thetas.len() as f64);
+
+    // Kill shard 0: its arcs re-hash onto shard 1 (cold start there, one
+    // factorization per migrated θ), shard-1-native θ's stay cached — the
+    // survivor's cache is not poisoned.
+    drop(shard0);
+    let mut jc = JsonClient::connect(&router.addr);
+    for t in &thetas {
+        let r = jc.request(&hypergrad_line("ridge", t, &v, None));
+        assert!(r.get("error").is_none(), "failover: {}", r.to_string_compact());
+    }
+    let stats = jc.request(r#"{"op":"stats"}"#);
+    let rows = shard_rows(&stats);
+    assert!(!rows[0].1, "killed shard must be marked unhealthy");
+    assert_eq!(
+        rows[1].2,
+        f1 + f0,
+        "survivor re-factors exactly the migrated θ's, keeps its own cache"
+    );
+    let failovers =
+        stats.get("failovers").and_then(Json::as_f64).expect("router reports failovers");
+    assert!(failovers >= 1.0);
+    drop(jc);
+    drop(router);
+    drop(shard1);
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_writes_the_warm_start_manifest_before_exit() {
+    let manifest =
+        std::env::temp_dir().join(format!("idiff_cluster_sigterm_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&manifest);
+    let manifest_str = manifest.to_str().unwrap().to_string();
+    let mut server = spawn_idiff(
+        &[
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--window-ms",
+            "0",
+            "--persist-secs",
+            "0",
+            "--manifest",
+            &manifest_str,
+        ],
+        "server",
+    );
+    let mut jc = JsonClient::connect(&server.addr);
+    let r = jc.request(&hypergrad_line("ridge", &[1.25; 8], &[0.5; 8], None));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    assert!(!manifest.exists(), "manifest must not exist before shutdown (persist-secs 0)");
+
+    let pid = server.child.id().to_string();
+    assert!(Command::new("kill")
+        .args(["-s", "TERM", &pid])
+        .status()
+        .expect("send SIGTERM")
+        .success());
+    let status = server.child.wait().expect("child exit");
+    assert!(status.success(), "graceful shutdown must exit 0, got {status}");
+
+    let text = std::fs::read_to_string(&manifest).expect("SIGTERM must write the manifest");
+    let doc = idiff::util::json::parse(&text).expect("manifest parses");
+    let entries = doc.get("entries").and_then(Json::as_arr).expect("entries array");
+    assert_eq!(entries.len(), 1, "one factored θ was live at shutdown");
+    let _ = std::fs::remove_file(&manifest);
+}
