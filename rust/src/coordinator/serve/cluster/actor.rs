@@ -10,20 +10,25 @@
 //!   That non-blocking contract is what admission control hangs off.
 //! * [`supervise`] — N actor threads drain one shared mailbox; each actor
 //!   is watched by a supervisor thread that detects a panic via
-//!   `JoinHandle::join` and respawns the actor (counted, with a small
-//!   backoff). Pending messages survive a restart because they live in the
-//!   shared mailbox; only the message being processed at the instant of
-//!   the panic is lost — for the serve tier that is one TCP connection,
-//!   which the client sees as a disconnect and retries.
+//!   `JoinHandle::join` and respawns the actor (counted, with a capped
+//!   exponential backoff that resets once a respawned actor stays healthy).
+//!   A slot that keeps crashing — more than [`STORM_MAX_RESTARTS`] restarts
+//!   inside one [`STORM_WINDOW`] — is given up (counted in `give_ups`)
+//!   instead of burning a core on a panic loop forever. Pending messages
+//!   survive a restart because they live in the shared mailbox; only the
+//!   message being processed at the instant of the panic is lost — for the
+//!   serve tier that is one TCP connection, which the client sees as a
+//!   disconnect and retries.
 //!
 //! Zero dependencies, std threads only — same discipline as the rest of
 //! the crate.
 
+use super::faults;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Why a `try_send` bounced; the message is handed back in both cases.
 pub enum SendError<T> {
@@ -146,45 +151,94 @@ impl Supervisor {
     }
 }
 
+/// Restarts one supervisor slot tolerates inside a rolling [`STORM_WINDOW`]
+/// before giving up on the slot: past this a crash is deterministic
+/// (respawning cannot help) and the loop would only starve healthy actors.
+pub const STORM_MAX_RESTARTS: u32 = 30;
+/// The rolling window the restart-storm guard counts over.
+pub const STORM_WINDOW: Duration = Duration::from_secs(60);
+/// Respawn backoff: starts here, doubles per consecutive crash…
+const BACKOFF_START: Duration = Duration::from_millis(10);
+/// …capped here.
+const BACKOFF_CAP: Duration = Duration::from_secs(1);
+/// An actor that ran at least this long before panicking was healthy:
+/// its slot's backoff resets to [`BACKOFF_START`].
+const HEALTHY_RUN: Duration = Duration::from_secs(1);
+
 /// Spawn `actors` supervised actor threads draining `mailbox` with
 /// `handler`. Each panic in `handler` is recovered by that actor's
 /// supervisor: the restart counter is bumped, the actor thread is
-/// respawned after a short backoff, and the shared mailbox keeps feeding
-/// it. Restarts are recorded in `restarts` (shared with the server's
-/// `stats` op).
+/// respawned after a capped exponential backoff (reset once a respawn
+/// stays up), and the shared mailbox keeps feeding it. A slot restarting
+/// more than [`STORM_MAX_RESTARTS`] times inside one [`STORM_WINDOW`] is
+/// abandoned and counted in `give_ups`. Restarts/give-ups are recorded in
+/// the shared counters the server's `stats` op reports.
 pub fn supervise<T: Send + 'static>(
     name: &str,
     actors: usize,
     mailbox: Arc<Mailbox<T>>,
     handler: Arc<dyn Fn(T) + Send + Sync>,
     restarts: Arc<AtomicU64>,
+    give_ups: Arc<AtomicU64>,
 ) -> Supervisor {
     let threads = (0..actors.max(1))
         .map(|i| {
             let mb = mailbox.clone();
             let h = handler.clone();
             let r = restarts.clone();
+            let g = give_ups.clone();
             let label = format!("{name}-{i}");
             std::thread::Builder::new()
                 .name(format!("{label}-sup"))
-                .spawn(move || loop {
-                    let mb2 = mb.clone();
-                    let h2 = h.clone();
-                    let actor = std::thread::Builder::new()
-                        .name(label.clone())
-                        .spawn(move || {
-                            while let Some(msg) = mb2.recv() {
-                                h2(msg);
+                .spawn(move || {
+                    let mut backoff = BACKOFF_START;
+                    let mut window_start = Instant::now();
+                    let mut window_restarts = 0u32;
+                    loop {
+                        let mb2 = mb.clone();
+                        let h2 = h.clone();
+                        let actor = std::thread::Builder::new()
+                            .name(label.clone())
+                            .spawn(move || {
+                                while let Some(msg) = mb2.recv() {
+                                    // Fault probe: `panic` unwinds here and
+                                    // exercises this supervisor; the
+                                    // message-shaped actions just lose the
+                                    // message (the client sees a disconnect).
+                                    if faults::at(faults::SITE_ACTOR).is_some() {
+                                        continue;
+                                    }
+                                    h2(msg);
+                                }
+                            })
+                            .expect("spawn actor thread");
+                        let started = Instant::now();
+                        match actor.join() {
+                            // Clean exit: mailbox closed and drained.
+                            Ok(()) => break,
+                            // Panic: count it, back off, respawn — unless
+                            // this slot is crash-storming.
+                            Err(_) => {
+                                r.fetch_add(1, Ordering::Relaxed);
+                                if started.elapsed() >= HEALTHY_RUN {
+                                    backoff = BACKOFF_START;
+                                }
+                                if window_start.elapsed() >= STORM_WINDOW {
+                                    window_start = Instant::now();
+                                    window_restarts = 0;
+                                }
+                                window_restarts += 1;
+                                if window_restarts > STORM_MAX_RESTARTS {
+                                    g.fetch_add(1, Ordering::Relaxed);
+                                    eprintln!(
+                                        "idiff: actor slot {label} abandoned after \
+                                         {window_restarts} restarts inside {STORM_WINDOW:?}"
+                                    );
+                                    break;
+                                }
+                                std::thread::sleep(backoff);
+                                backoff = (backoff * 2).min(BACKOFF_CAP);
                             }
-                        })
-                        .expect("spawn actor thread");
-                    match actor.join() {
-                        // Clean exit: mailbox closed and drained.
-                        Ok(()) => break,
-                        // Panic: count it, back off briefly, respawn.
-                        Err(_) => {
-                            r.fetch_add(1, Ordering::Relaxed);
-                            std::thread::sleep(Duration::from_millis(10));
                         }
                     }
                 })
@@ -226,6 +280,7 @@ mod tests {
         let mb: Arc<Mailbox<u32>> = Mailbox::new(64);
         let processed = Arc::new(AtomicUsize::new(0));
         let restarts = Arc::new(AtomicU64::new(0));
+        let give_ups = Arc::new(AtomicU64::new(0));
         let p = processed.clone();
         let sup = supervise(
             "test-actor",
@@ -238,6 +293,7 @@ mod tests {
                 p.fetch_add(1, Ordering::SeqCst);
             }),
             restarts.clone(),
+            give_ups.clone(),
         );
         for i in 0..20 {
             // Blocking-ish send: the ring is larger than the message count.
@@ -248,5 +304,7 @@ mod tests {
         // 19 good messages processed, exactly the poison one lost.
         assert_eq!(processed.load(Ordering::SeqCst), 19);
         assert_eq!(restarts.load(Ordering::Relaxed), 1);
+        // One panic is far below the storm threshold.
+        assert_eq!(give_ups.load(Ordering::Relaxed), 0);
     }
 }

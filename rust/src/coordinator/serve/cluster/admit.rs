@@ -149,6 +149,11 @@ impl Admission {
 /// message is this string.
 pub const OVERLOADED: &str = "overloaded";
 
+/// The canonical deadline reject, identical on both wires: a request whose
+/// deadline budget ran out — on arrival or at the solve-lane gate — is
+/// answered with this typed error instead of queueing past-due work.
+pub const DEADLINE_EXCEEDED: &str = "deadline_exceeded";
+
 #[cfg(test)]
 mod tests {
     use super::*;

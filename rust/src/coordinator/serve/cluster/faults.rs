@@ -1,0 +1,226 @@
+//! Fault injection for chaos testing.
+//!
+//! A fault *plan* names sites in the serving path and attaches an action to
+//! each. Sites are compiled into the real code path (`faults::at("site")`)
+//! but cost one relaxed atomic load when no plan is installed, so production
+//! binaries pay nothing.
+//!
+//! Plan grammar (comma-separated rules):
+//!
+//! ```text
+//! site=action[@k]
+//! action ::= drop | delay-<ms> | close-mid-frame | panic
+//! ```
+//!
+//! `@k` makes the rule fire on every k-th hit of the site (default: every
+//! hit). Example: `IDIFF_FAULTS="shard-reply=close-mid-frame@3,actor=panic@50"`.
+//!
+//! Actions:
+//! - `drop` — the caller discards the in-flight message (router: treat the
+//!   forward attempt as failed; shard: swallow the request without replying).
+//! - `delay-<ms>` — executed here: the calling thread sleeps, then proceeds.
+//! - `close-mid-frame` — the caller writes a partial frame and closes the
+//!   connection.
+//! - `panic` — executed here: the calling thread panics (exercises the actor
+//!   supervisor).
+//!
+//! The plan comes from the `IDIFF_FAULTS` environment variable (loaded once,
+//! on first probe) or programmatically via [`install`] — tests that share a
+//! process must use [`install`]/[`clear`] and run their faulted sections
+//! sequentially, since the plan is process-global.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+/// What to do when a faulted site is hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Caller drops the in-flight message.
+    Drop,
+    /// Sleep this many milliseconds (executed inside [`at`]), then proceed.
+    Delay(u64),
+    /// Caller writes a truncated frame and closes the connection.
+    CloseMidFrame,
+    /// Panic the calling thread (executed inside [`at`]).
+    Panic,
+}
+
+/// Shard-side: just after a request frame/line has been read.
+pub const SITE_SHARD_REQUEST: &str = "shard-request";
+/// Shard-side: just before a reply frame/line is written.
+pub const SITE_SHARD_REPLY: &str = "shard-reply";
+/// Router-side: just before relaying a request upstream.
+pub const SITE_ROUTER_FORWARD: &str = "router-forward";
+/// Actor runtime: at the top of every supervised message dispatch.
+pub const SITE_ACTOR: &str = "actor";
+
+struct Rule {
+    site: String,
+    action: Action,
+    every: u64,
+    hits: u64,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+static ENV_LOAD: Once = Once::new();
+
+fn parse_action(spec: &str) -> Result<Action, String> {
+    match spec {
+        "drop" => Ok(Action::Drop),
+        "close-mid-frame" => Ok(Action::CloseMidFrame),
+        "panic" => Ok(Action::Panic),
+        _ => {
+            if let Some(ms) = spec.strip_prefix("delay-") {
+                let ms: u64 = ms
+                    .parse()
+                    .map_err(|_| format!("bad delay milliseconds in fault action `{spec}`"))?;
+                Ok(Action::Delay(ms))
+            } else {
+                Err(format!(
+                    "unknown fault action `{spec}` (want drop | delay-<ms> | close-mid-frame | panic)"
+                ))
+            }
+        }
+    }
+}
+
+fn parse_plan(plan: &str) -> Result<Vec<Rule>, String> {
+    let mut rules = Vec::new();
+    for part in plan.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, rest) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault rule `{part}` is missing `=`"))?;
+        let (action_spec, every) = match rest.split_once('@') {
+            Some((a, k)) => {
+                let k: u64 = k
+                    .parse()
+                    .map_err(|_| format!("bad `@every` count in fault rule `{part}`"))?;
+                if k == 0 {
+                    return Err(format!("`@0` in fault rule `{part}` would never fire"));
+                }
+                (a, k)
+            }
+            None => (rest, 1),
+        };
+        rules.push(Rule {
+            site: site.trim().to_string(),
+            action: parse_action(action_spec.trim())?,
+            every,
+            hits: 0,
+        });
+    }
+    Ok(rules)
+}
+
+/// Install a fault plan for this process, replacing any previous plan.
+pub fn install(plan: &str) -> Result<(), String> {
+    let rules = parse_plan(plan)?;
+    let active = !rules.is_empty();
+    *PLAN.lock().unwrap() = rules;
+    ACTIVE.store(active, Ordering::Release);
+    Ok(())
+}
+
+/// Remove the fault plan; every subsequent [`at`] probe is a no-op.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::Release);
+    PLAN.lock().unwrap().clear();
+}
+
+fn ensure_env_loaded() {
+    ENV_LOAD.call_once(|| {
+        if let Ok(plan) = std::env::var("IDIFF_FAULTS") {
+            if let Err(e) = install(&plan) {
+                eprintln!("idiff: ignoring IDIFF_FAULTS: {e}");
+            }
+        }
+    });
+}
+
+/// Probe a fault site. Returns `Some(Action::Drop)` / `Some(Action::CloseMidFrame)`
+/// for the caller to act on; `Delay` sleeps here and `Panic` panics here, so
+/// callers only ever see the two message-shaped actions. `None` = no fault.
+pub fn at(site: &str) -> Option<Action> {
+    ensure_env_loaded();
+    if !ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    let fired = {
+        let mut plan = PLAN.lock().unwrap();
+        let mut fired = None;
+        for rule in plan.iter_mut() {
+            if rule.site == site {
+                rule.hits += 1;
+                if rule.hits % rule.every == 0 {
+                    fired = Some(rule.action);
+                }
+                break;
+            }
+        }
+        fired
+    };
+    match fired {
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        Some(Action::Panic) => panic!("injected fault: panic at site `{site}`"),
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_rejects_malformed_rules() {
+        assert!(parse_plan("shard-reply=close-mid-frame").is_ok());
+        assert!(parse_plan("a=drop,b=delay-25@3,c=panic@7").is_ok());
+        assert!(parse_plan("no-equals-sign").is_err());
+        assert!(parse_plan("a=explode").is_err());
+        assert!(parse_plan("a=delay-xyz").is_err());
+        assert!(parse_plan("a=drop@0").is_err());
+        assert!(parse_plan("a=drop@two").is_err());
+        assert!(parse_plan("").unwrap().is_empty());
+    }
+
+    // One test exercises the process-global plan end to end: the global is
+    // shared across the test binary's threads, so splitting this into several
+    // #[test] fns would race.
+    #[test]
+    fn install_fire_every_and_clear() {
+        // Unset: zero-cost probe.
+        clear();
+        assert_eq!(at(SITE_SHARD_REQUEST), None);
+
+        // `@3` fires on hits 3, 6, ... only.
+        install("shard-request=drop@3").unwrap();
+        assert_eq!(at(SITE_SHARD_REQUEST), None);
+        assert_eq!(at(SITE_SHARD_REQUEST), None);
+        assert_eq!(at(SITE_SHARD_REQUEST), Some(Action::Drop));
+        assert_eq!(at(SITE_SHARD_REQUEST), None);
+        // Other sites are untouched.
+        assert_eq!(at(SITE_ROUTER_FORWARD), None);
+
+        // Delay executes inside `at` and then reports "no action".
+        install("router-forward=delay-1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert_eq!(at(SITE_ROUTER_FORWARD), None);
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+
+        // Panic executes inside `at`.
+        install("actor=panic").unwrap();
+        let caught = std::panic::catch_unwind(|| at(SITE_ACTOR));
+        assert!(caught.is_err());
+
+        clear();
+        assert_eq!(at(SITE_ACTOR), None);
+    }
+}

@@ -17,10 +17,14 @@
 //!   (saturated solve queue + `"mode":"auto"` + cached ρ ⇒ solve-free
 //!   answer instead of queueing).
 //! * [`router`] — the `idiff route` process: both client wires unchanged,
-//!   ring-position forwarding over pooled upstream connections, health
-//!   checks, failover with cold-start re-hash, drain-on-SIGTERM.
+//!   ring-position forwarding over pooled upstream connections, circuit-
+//!   breaker health tracking with jittered probe backoff, failover to the
+//!   replicated ring successor, drain-on-SIGTERM.
+//! * [`faults`] — the fault-injection plan (`IDIFF_FAULTS`) used by the
+//!   chaos sweep; a relaxed-load no-op when no plan is installed.
 
 pub mod actor;
 pub mod admit;
+pub mod faults;
 pub mod ring;
 pub mod router;

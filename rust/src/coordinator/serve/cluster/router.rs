@@ -10,16 +10,33 @@
 //! JSON lines unmodified), so every error string and float bit pattern a
 //! shard produces is exactly what the client sees.
 //!
-//! Failure handling: a shard that fails an upstream round trip (after one
-//! fresh-connection retry, so a stale pooled socket is not mistaken for a
-//! dead shard) is marked unhealthy and the ring is rebuilt without it —
-//! in-flight and future keys for its arcs re-hash onto the survivors
-//! (cold-start on the new owner, counted in `failovers`). A background
-//! health thread pings every shard each `health_secs` and folds recovered
-//! shards back into the ring. Control plane: `ping` answers locally,
-//! `stats` aggregates router counters plus every healthy shard's stats,
-//! `problems` forwards like any routed request (the catalog is identical
-//! cluster-wide — shards publish a catalog fingerprint in `stats`).
+//! Failure handling: every shard sits behind a per-shard circuit breaker.
+//! An upstream round-trip failure (after one fresh-connection retry, so a
+//! stale pooled socket is not mistaken for a dead shard) counts against
+//! the breaker; at `breaker_threshold` consecutive failures the breaker
+//! **opens** — the shard's pooled connections are discarded and the ring
+//! is rebuilt without it, so in-flight and future keys for its arcs
+//! re-hash onto the survivors (served from their replicated warm state,
+//! counted in `failovers`). An open breaker is probed by the health
+//! thread on a *jittered exponential backoff* (base `health_secs`,
+//! doubling per failed probe, capped at a minute): when the probe is due
+//! the breaker goes **half-open**, exactly one ping decides — success
+//! closes the breaker and folds the shard back into the ring, failure
+//! re-opens it with a doubled backoff. All transitions are counted
+//! (`breaker_opened` / `breaker_half_open` / `breaker_closed`).
+//!
+//! Deadlines: a request's budget (`"deadline_ms"` member / binary header
+//! field) is decremented by the router's own elapsed time before each
+//! relay, so shards always see the *remaining* budget; a budget that runs
+//! out at the router is answered `{"error":"deadline_exceeded"}` locally.
+//! An upstream error observed *after* the deadline passed does NOT trip
+//! the breaker — a shard that is merely slower than one request's budget
+//! is not dead.
+//!
+//! Control plane: `ping` answers locally, `stats` aggregates router
+//! counters plus every healthy shard's stats, `problems` forwards like
+//! any routed request (the catalog is identical cluster-wide — shards
+//! publish a catalog fingerprint in `stats`).
 //!
 //! The router is stateless (no caches, no manifest): on SIGTERM/SIGINT it
 //! stops admitting, drains in-flight requests (bounded by `drain_secs`),
@@ -27,10 +44,12 @@
 
 use super::super::{wire, Reply};
 use super::actor::Mailbox;
-use super::admit::{Admission, OVERLOADED};
+use super::admit::{Admission, DEADLINE_EXCEEDED, OVERLOADED};
+use super::faults;
 use super::ring::{Ring, DEFAULT_VNODES};
 use crate::util::json::{self, Json};
 use crate::util::pool::Pool;
+use crate::util::rng::Rng;
 use crate::util::signal;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -65,6 +84,14 @@ pub struct RouterConfig {
     pub upstream_idle: usize,
     /// Graceful-shutdown drain bound.
     pub drain_secs: u64,
+    /// Upstream TCP connect timeout (`--connect-ms`).
+    pub connect_timeout: Duration,
+    /// Health-probe read timeout (`--probe-ms`).
+    pub probe_timeout: Duration,
+    /// Consecutive upstream failures that open a shard's circuit breaker
+    /// (`--breaker-threshold`). The default of 1 keeps the pre-breaker
+    /// behavior: the first failure fails over immediately.
+    pub breaker_threshold: u32,
 }
 
 impl Default for RouterConfig {
@@ -81,6 +108,9 @@ impl Default for RouterConfig {
             upstream_timeout: Duration::from_secs(30),
             upstream_idle: 16,
             drain_secs: 10,
+            connect_timeout: Duration::from_millis(1500),
+            probe_timeout: Duration::from_millis(2000),
+            breaker_threshold: 1,
         }
     }
 }
@@ -91,11 +121,50 @@ pub struct RouterStats {
     pub forwarded: AtomicU64,
     pub failovers: AtomicU64,
     pub health_transitions: AtomicU64,
+    /// Requests answered `deadline_exceeded` at the router (budget ran out
+    /// before or during the relay).
+    pub deadline_exceeded: AtomicU64,
+    pub breaker_opened: AtomicU64,
+    pub breaker_half_open: AtomicU64,
+    pub breaker_closed: AtomicU64,
 }
+
+/// Circuit-breaker state machine guarding one shard.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BreakerState {
+    /// Serving: in the ring, failures counted against the threshold.
+    Closed,
+    /// Tripped: out of the ring, waiting out a jittered backoff.
+    Open,
+    /// Probation: exactly one health probe decides close vs re-open.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+struct Breaker {
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// When an open breaker's next half-open probe is due.
+    next_probe_at: Instant,
+    /// Current backoff (doubles per failed probe, capped).
+    backoff: Duration,
+}
+
+/// Open-breaker probe backoff never exceeds this.
+const BACKOFF_CAP: Duration = Duration::from_secs(60);
 
 struct ShardHandle {
     addr: String,
-    healthy: AtomicBool,
+    breaker: Mutex<Breaker>,
     json_conns: Mutex<Vec<TcpStream>>,
     bin_conns: Mutex<Vec<TcpStream>>,
 }
@@ -104,7 +173,12 @@ impl ShardHandle {
     fn new(addr: String) -> ShardHandle {
         ShardHandle {
             addr,
-            healthy: AtomicBool::new(true),
+            breaker: Mutex::new(Breaker {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                next_probe_at: Instant::now(),
+                backoff: Duration::from_secs(1),
+            }),
             json_conns: Mutex::new(Vec::new()),
             bin_conns: Mutex::new(Vec::new()),
         }
@@ -120,7 +194,12 @@ pub struct Router {
     pub admission: Admission,
     pub stats: RouterStats,
     restarts: Arc<AtomicU64>,
+    give_ups: Arc<AtomicU64>,
     draining: AtomicBool,
+    /// Monotone nonce folded into each backoff-jitter seed so repeated
+    /// openings of the same breaker never reuse a jitter stream (no
+    /// wall-clock seeding — the RNG stays deterministic per process run).
+    jitter_nonce: AtomicU64,
     cfg: RouterConfig,
 }
 
@@ -137,7 +216,9 @@ impl Router {
             admission: Admission::new(cfg.max_inflight, 0),
             stats: RouterStats::default(),
             restarts: Arc::new(AtomicU64::new(0)),
+            give_ups: Arc::new(AtomicU64::new(0)),
             draining: AtomicBool::new(false),
+            jitter_nonce: AtomicU64::new(0),
             cfg,
         }
     }
@@ -146,29 +227,89 @@ impl Router {
         self.shards.iter().map(|s| s.addr.as_str()).collect()
     }
 
-    fn healthy_count(&self) -> usize {
-        self.shards.iter().filter(|s| s.healthy.load(Ordering::Relaxed)).count()
+    fn breaker_state(&self, idx: usize) -> BreakerState {
+        self.shards[idx].breaker.lock().unwrap().state
     }
 
+    fn healthy_count(&self) -> usize {
+        (0..self.shards.len()).filter(|&i| self.breaker_state(i) == BreakerState::Closed).count()
+    }
+
+    /// Ring over the shards whose breakers are closed. Half-open shards
+    /// stay out: exactly one health probe — not client traffic — decides
+    /// whether they come back.
     fn rebuild_ring(&self) {
-        let members: Vec<u32> = self
-            .shards
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.healthy.load(Ordering::Relaxed))
-            .map(|(i, _)| i as u32)
+        let members: Vec<u32> = (0..self.shards.len())
+            .filter(|&i| self.breaker_state(i) == BreakerState::Closed)
+            .map(|i| i as u32)
             .collect();
         *self.ring.write().unwrap() = Ring::new(&members, self.cfg.vnodes);
     }
 
-    fn set_health(&self, idx: usize, up: bool) {
-        if self.shards[idx].healthy.swap(up, Ordering::Relaxed) != up {
-            self.stats.health_transitions.fetch_add(1, Ordering::Relaxed);
-            if !up {
-                // Dead shard: its pooled connections are garbage.
-                self.shards[idx].json_conns.lock().unwrap().clear();
-                self.shards[idx].bin_conns.lock().unwrap().clear();
+    /// Jittered backoff: `base` plus up to 50% extra, so a fleet of
+    /// routers probing the same dead shard does not thunder in sync.
+    fn jittered(&self, idx: usize, base: Duration) -> Duration {
+        let nonce = self.jitter_nonce.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Rng::new(0x6a69_7474_6572 ^ ((idx as u64) << 32) ^ nonce);
+        base + Duration::from_millis((base.as_millis() as f64 * 0.5 * rng.uniform()) as u64)
+    }
+
+    /// One upstream failure against shard `idx`'s breaker. Closed trips to
+    /// open at the threshold; a failed half-open probe re-opens with a
+    /// doubled backoff. Opening discards the shard's pooled connections
+    /// and rebuilds the ring without it.
+    fn record_failure(&self, idx: usize) {
+        let mut opened = false;
+        {
+            let mut b = self.shards[idx].breaker.lock().unwrap();
+            b.consecutive_failures += 1;
+            match b.state {
+                BreakerState::Closed => {
+                    if b.consecutive_failures >= self.cfg.breaker_threshold.max(1) {
+                        b.state = BreakerState::Open;
+                        b.backoff = Duration::from_secs(self.cfg.health_secs.max(1));
+                        let wait = self.jittered(idx, b.backoff);
+                        b.next_probe_at = Instant::now() + wait;
+                        opened = true;
+                    }
+                }
+                BreakerState::HalfOpen => {
+                    b.state = BreakerState::Open;
+                    b.backoff = (b.backoff * 2).min(BACKOFF_CAP);
+                    let wait = self.jittered(idx, b.backoff);
+                    b.next_probe_at = Instant::now() + wait;
+                    opened = true;
+                }
+                BreakerState::Open => {}
             }
+        }
+        if opened {
+            self.stats.breaker_opened.fetch_add(1, Ordering::Relaxed);
+            self.stats.health_transitions.fetch_add(1, Ordering::Relaxed);
+            // Dead shard: its pooled connections are garbage.
+            self.shards[idx].json_conns.lock().unwrap().clear();
+            self.shards[idx].bin_conns.lock().unwrap().clear();
+            self.rebuild_ring();
+        }
+    }
+
+    /// One successful round trip / probe against shard `idx`'s breaker:
+    /// resets the failure count; a non-closed breaker closes and the shard
+    /// folds back into the ring.
+    fn record_success(&self, idx: usize) {
+        let closed = {
+            let mut b = self.shards[idx].breaker.lock().unwrap();
+            b.consecutive_failures = 0;
+            if b.state != BreakerState::Closed {
+                b.state = BreakerState::Closed;
+                true
+            } else {
+                false
+            }
+        };
+        if closed {
+            self.stats.breaker_closed.fetch_add(1, Ordering::Relaxed);
+            self.stats.health_transitions.fetch_add(1, Ordering::Relaxed);
             self.rebuild_ring();
         }
     }
@@ -185,11 +326,24 @@ impl Router {
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotFound, "bad shard addr"))?;
-        let conn = TcpStream::connect_timeout(&sock, Duration::from_millis(1500))?;
+        let conn = TcpStream::connect_timeout(&sock, self.cfg.connect_timeout)?;
         conn.set_read_timeout(Some(self.cfg.upstream_timeout))?;
         conn.set_write_timeout(Some(self.cfg.upstream_timeout))?;
         conn.set_nodelay(true)?;
         Ok(conn)
+    }
+
+    /// Per-attempt upstream read timeout: the configured ceiling, shrunk to
+    /// the request's remaining deadline budget so a past-due relay fails
+    /// fast instead of waiting out the full upstream timeout.
+    fn attempt_timeout(&self, deadline: Option<Instant>) -> Duration {
+        match deadline {
+            None => self.cfg.upstream_timeout,
+            Some(d) => d
+                .saturating_duration_since(Instant::now())
+                .min(self.cfg.upstream_timeout)
+                .max(Duration::from_millis(1)),
+        }
     }
 
     fn checkin(&self, conns: &Mutex<Vec<TcpStream>>, conn: TcpStream) {
@@ -200,14 +354,19 @@ impl Router {
     }
 
     /// One JSON round trip on `conn`; the reply line comes back without its
-    /// trailing newline.
+    /// trailing newline. A reply with NO trailing newline is a shard that
+    /// died mid-line — that partial frame must count as an upstream failure
+    /// (and fail over), never be relayed to the client as if complete.
     fn json_round_trip(conn: &mut TcpStream, line: &str) -> std::io::Result<String> {
         conn.write_all(line.as_bytes())?;
         conn.write_all(b"\n")?;
         let mut resp = String::new();
         let mut reader = BufReader::new(conn);
-        if reader.read_line(&mut resp)? == 0 {
-            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "shard closed"));
+        if reader.read_line(&mut resp)? == 0 || !resp.ends_with('\n') {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "shard closed mid-reply",
+            ));
         }
         while resp.ends_with('\n') || resp.ends_with('\r') {
             resp.pop();
@@ -218,8 +377,15 @@ impl Router {
     /// Forward one JSON line to shard `idx`, reusing a pooled upstream
     /// connection when one is alive. A stale pooled socket gets ONE fresh
     /// retry before the failure counts against the shard.
-    fn forward_json(&self, idx: usize, line: &str) -> std::io::Result<String> {
+    fn forward_json(
+        &self,
+        idx: usize,
+        line: &str,
+        deadline: Option<Instant>,
+    ) -> std::io::Result<String> {
+        let timeout = self.attempt_timeout(deadline);
         if let Some(mut conn) = self.shards[idx].json_conns.lock().unwrap().pop() {
+            let _ = conn.set_read_timeout(Some(timeout));
             if let Ok(resp) = Self::json_round_trip(&mut conn, line) {
                 self.checkin(&self.shards[idx].json_conns, conn);
                 return Ok(resp);
@@ -227,6 +393,7 @@ impl Router {
             // fall through: pooled conn was stale — retry fresh below
         }
         let mut conn = self.connect(idx)?;
+        conn.set_read_timeout(Some(timeout))?;
         let resp = Self::json_round_trip(&mut conn, line)?;
         self.checkin(&self.shards[idx].json_conns, conn);
         Ok(resp)
@@ -258,40 +425,70 @@ impl Router {
 
     /// Forward one raw binary request frame to shard `idx`; the raw reply
     /// frame lands in `out`. Same stale-socket retry policy as JSON.
-    fn forward_binary(&self, idx: usize, frame: &[u8], out: &mut Vec<u8>) -> std::io::Result<()> {
+    fn forward_binary(
+        &self,
+        idx: usize,
+        frame: &[u8],
+        out: &mut Vec<u8>,
+        deadline: Option<Instant>,
+    ) -> std::io::Result<()> {
+        let timeout = self.attempt_timeout(deadline);
         if let Some(mut conn) = self.shards[idx].bin_conns.lock().unwrap().pop() {
+            let _ = conn.set_read_timeout(Some(timeout));
             if Self::binary_round_trip(&mut conn, frame, out).is_ok() {
                 self.checkin(&self.shards[idx].bin_conns, conn);
                 return Ok(());
             }
         }
         let mut conn = self.connect(idx)?;
+        conn.set_read_timeout(Some(timeout))?;
         Self::binary_round_trip(&mut conn, frame, out)?;
         self.checkin(&self.shards[idx].bin_conns, conn);
         Ok(())
     }
 
-    /// Route + forward with failover: every upstream failure marks the
-    /// shard down, rebuilds the ring, and re-hashes onto the survivors
-    /// (their cold caches re-warm on first touch — the "cold-start
-    /// re-hash"). Bounded by the shard count.
+    /// Route + forward with failover: every upstream failure counts
+    /// against the shard's breaker; an opened breaker rebuilds the ring
+    /// and the request re-hashes onto the survivors (served from their
+    /// replicated warm state, counted in `failovers`). Bounded by the
+    /// shard count. A failure observed after the request's deadline
+    /// passed is answered `deadline_exceeded` WITHOUT tripping the
+    /// breaker — slow is not dead.
     fn forward_routed<T>(
         &self,
         problem: &str,
         theta: &[f64],
+        deadline: Option<Instant>,
         mut attempt: impl FnMut(&Self, usize) -> std::io::Result<T>,
     ) -> Result<T, String> {
         for tries in 0..self.shards.len().max(1) {
+            if expired(deadline) {
+                self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                return Err(DEADLINE_EXCEEDED.to_string());
+            }
             let Some(idx) = self.route(problem, theta) else { break };
+            // Fault site: an injected forward fault counts like a real
+            // upstream failure and exercises this exact failover path.
+            if faults::at(faults::SITE_ROUTER_FORWARD).is_some() {
+                self.record_failure(idx);
+                continue;
+            }
             match attempt(self, idx) {
                 Ok(t) => {
+                    self.record_success(idx);
                     self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
                     if tries > 0 {
                         self.stats.failovers.fetch_add(1, Ordering::Relaxed);
                     }
                     return Ok(t);
                 }
-                Err(_) => self.set_health(idx, false),
+                Err(_) => {
+                    if expired(deadline) {
+                        self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                        return Err(DEADLINE_EXCEEDED.to_string());
+                    }
+                    self.record_failure(idx);
+                }
             }
         }
         Err("no healthy shards".to_string())
@@ -307,10 +504,11 @@ impl Router {
         let mut req = Vec::new();
         wire::encode_request(&wire::RequestFrame::control(wire::OP_STATS), &mut req);
         for (i, s) in self.shards.iter().enumerate() {
-            let healthy = s.healthy.load(Ordering::Relaxed);
+            let state = self.breaker_state(i);
+            let healthy = state == BreakerState::Closed;
             let stats = if healthy {
                 let mut raw = Vec::new();
-                self.forward_binary(i, &req, &mut raw)
+                self.forward_binary(i, &req, &mut raw, None)
                     .ok()
                     .and_then(|_| wire::read_reply(&mut &raw[..]).ok())
                     .and_then(|f| json::parse(&f.text).ok())
@@ -320,6 +518,7 @@ impl Router {
             rows.push(Json::obj(vec![
                 ("addr", Json::Str(s.addr.clone())),
                 ("healthy", Json::Bool(healthy)),
+                ("state", Json::Str(state.as_str().to_string())),
                 ("stats", stats.unwrap_or(Json::Null)),
             ]));
         }
@@ -334,10 +533,27 @@ impl Router {
                 "health_transitions",
                 Json::Num(self.stats.health_transitions.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "deadline_exceeded",
+                Json::Num(self.stats.deadline_exceeded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "breaker_opened",
+                Json::Num(self.stats.breaker_opened.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "breaker_half_open",
+                Json::Num(self.stats.breaker_half_open.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "breaker_closed",
+                Json::Num(self.stats.breaker_closed.load(Ordering::Relaxed) as f64),
+            ),
             ("rejected", Json::Num(self.admission.rejected() as f64)),
             ("inflight", Json::Num(self.admission.inflight() as f64)),
             ("queue_depth", Json::Num(self.admission.queue_depth() as f64)),
             ("actor_restarts", Json::Num(self.restarts.load(Ordering::Relaxed) as f64)),
+            ("actor_give_ups", Json::Num(self.give_ups.load(Ordering::Relaxed) as f64)),
             ("shards", Json::Arr(rows)),
         ])
     }
@@ -352,19 +568,51 @@ impl Router {
                 wire::encode_request(&wire::RequestFrame::control(wire::OP_PING), &mut ping);
                 loop {
                     std::thread::sleep(period);
-                    for i in 0..me.shards.len() {
-                        let up = me.ping_shard(i, &ping);
-                        me.set_health(i, up);
-                    }
+                    me.health_pass(&ping);
                 }
             })
             .expect("spawn health thread");
     }
 
+    /// One health sweep. Closed shards get a liveness ping whose failures
+    /// count toward the breaker threshold like request failures do. An
+    /// open shard whose backoff has elapsed moves to half-open, and a
+    /// single probe decides: success closes the breaker, failure re-opens
+    /// it with a doubled (jittered) backoff.
+    fn health_pass(&self, ping_frame: &[u8]) {
+        for i in 0..self.shards.len() {
+            let probe = {
+                let mut b = self.shards[i].breaker.lock().unwrap();
+                match b.state {
+                    BreakerState::Closed => true,
+                    BreakerState::Open | BreakerState::HalfOpen => {
+                        if Instant::now() >= b.next_probe_at {
+                            if b.state == BreakerState::Open {
+                                b.state = BreakerState::HalfOpen;
+                                self.stats.breaker_half_open.fetch_add(1, Ordering::Relaxed);
+                            }
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                }
+            };
+            if !probe {
+                continue;
+            }
+            if self.ping_shard(i, ping_frame) {
+                self.record_success(i);
+            } else {
+                self.record_failure(i);
+            }
+        }
+    }
+
     fn ping_shard(&self, idx: usize, ping_frame: &[u8]) -> bool {
         let ok = (|| -> std::io::Result<bool> {
             let mut conn = self.connect(idx)?;
-            conn.set_read_timeout(Some(Duration::from_millis(2000)))?;
+            conn.set_read_timeout(Some(self.cfg.probe_timeout))?;
             conn.write_all(ping_frame)?;
             let reply = wire::read_reply(&mut conn)?;
             Ok(reply.status == wire::STATUS_OK)
@@ -396,6 +644,7 @@ impl Router {
 
     /// Answer one JSON request line (no trailing newline on the result).
     pub fn handle_json_line(&self, line: &str) -> String {
+        let arrival = Instant::now();
         if line.len() > self.cfg.max_line_bytes {
             let e = format!(
                 "request too large ({} bytes > {} max)",
@@ -422,16 +671,52 @@ impl Router {
             self.admission.note_rejected();
             return overloaded_json();
         };
+        // Deadline budget: start the clock at arrival, relay the REMAINING
+        // budget so the shard's own enforcement accounts for router time.
+        // A malformed member forwards verbatim — the shard answers with
+        // the engine's canonical validation error.
+        let deadline = parsed
+            .as_ref()
+            .and_then(|j| j.get("deadline_ms"))
+            .and_then(Json::as_f64)
+            .filter(|ms| ms.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(ms))
+            .and_then(|ms| (ms > 0.0).then(|| arrival + Duration::from_millis(ms as u64)));
         let (problem, theta) = route_identity_json(parsed.as_ref(), &op);
-        match self.forward_routed(&problem, &theta, |me, idx| me.forward_json(idx, line)) {
+        let rewritten;
+        let relay: &str = match (deadline, parsed) {
+            (Some(d), Some(mut j)) => {
+                let rem = remaining_ms(d);
+                if rem == 0 {
+                    self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                    return deadline_json();
+                }
+                if let Json::Obj(map) = &mut j {
+                    map.insert("deadline_ms".to_string(), Json::Num(rem as f64));
+                }
+                rewritten = j.to_string_compact();
+                &rewritten
+            }
+            _ => line,
+        };
+        match self.forward_routed(&problem, &theta, deadline, |me, idx| {
+            me.forward_json(idx, relay, deadline)
+        }) {
             Ok(resp) => resp,
             Err(e) => Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
         }
     }
 
     /// Answer one binary request frame (raw header+payload in, raw reply
-    /// frame appended to `out`).
-    fn handle_frame(&self, hdr: &[u8; wire::REQUEST_HEADER_LEN], payload: &[u8], out: &mut Vec<u8>) {
+    /// frame appended to `out`). `deadline_ms` is the header's budget (0 =
+    /// none); the clock started at `arrival`.
+    fn handle_frame(
+        &self,
+        hdr: &[u8; wire::REQUEST_HEADER_LEN],
+        payload: &[u8],
+        deadline_ms: u32,
+        arrival: Instant,
+        out: &mut Vec<u8>,
+    ) {
         out.clear();
         let req = match wire::decode_request(payload, &self.pool) {
             Ok(r) => r,
@@ -452,6 +737,15 @@ impl Router {
                 wire::encode_reply(&Reply::Text(self.aggregate_stats()), out);
                 return;
             }
+            Request::Replicate { .. } => {
+                // Replication is shard-to-shard; a replica delta has no θ
+                // identity to route by and must never transit the router.
+                wire::encode_reply(
+                    &Reply::Error("replicate frames are shard-to-shard only".to_string()),
+                    out,
+                );
+                return;
+            }
             Request::Problems => (String::new(), Vec::new()),
             Request::Solve { problem, theta } | Request::Jacobian { problem, theta } => {
                 (problem.clone(), theta.to_vec())
@@ -468,13 +762,23 @@ impl Router {
             wire::encode_reply(&Reply::Error(OVERLOADED.to_string()), out);
             return;
         };
+        let deadline = (deadline_ms > 0)
+            .then(|| arrival + Duration::from_millis(deadline_ms as u64));
         // Rebuild the full raw request frame for verbatim forwarding.
         let mut frame = Vec::with_capacity(hdr.len() + payload.len());
         frame.extend_from_slice(hdr);
         frame.extend_from_slice(payload);
         let mut relayed = Vec::new();
-        let res = self.forward_routed(&problem, &theta, |me, idx| {
-            me.forward_binary(idx, &frame, &mut relayed)
+        let res = self.forward_routed(&problem, &theta, deadline, |me, idx| {
+            // Patch the header's budget to what is REMAINING before this
+            // attempt (never 0 — on the wire, 0 means "no deadline"; a
+            // spent budget is caught by forward_routed's expiry gate).
+            if let Some(d) = deadline {
+                let rem = remaining_ms(d).max(1);
+                frame[wire::REQUEST_DEADLINE_OFFSET..wire::REQUEST_DEADLINE_OFFSET + 4]
+                    .copy_from_slice(&rem.to_le_bytes());
+            }
+            me.forward_binary(idx, &frame, &mut relayed, deadline)
         });
         match res {
             Ok(()) => out.extend_from_slice(&relayed),
@@ -501,6 +805,7 @@ impl Router {
             mailbox.clone(),
             handler,
             self.restarts.clone(),
+            self.give_ups.clone(),
         );
         for stream in listener.incoming() {
             let stream = stream?;
@@ -530,6 +835,22 @@ impl Router {
 
 fn overloaded_json() -> String {
     Json::obj(vec![("error", Json::Str(OVERLOADED.to_string()))]).to_string_compact()
+}
+
+fn deadline_json() -> String {
+    Json::obj(vec![("error", Json::Str(DEADLINE_EXCEEDED.to_string()))]).to_string_compact()
+}
+
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.map_or(false, |d| Instant::now() >= d)
+}
+
+/// Whole milliseconds left until `deadline` (0 = already passed).
+fn remaining_ms(deadline: Instant) -> u32 {
+    deadline
+        .saturating_duration_since(Instant::now())
+        .as_millis()
+        .min(u32::MAX as u128) as u32
 }
 
 /// Best-effort reject for a connection shed at the accept queue, before the
@@ -614,8 +935,10 @@ fn route_binary_conn(
             Err(e) if super::super::is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
         }
-        let len = match wire::parse_request_header(&hdr, router.cfg.max_line_bytes) {
-            Ok(len) => len,
+        let arrival = Instant::now();
+        let (len, deadline_ms) = match wire::parse_request_header(&hdr, router.cfg.max_line_bytes)
+        {
+            Ok(parsed) => parsed,
             Err(msg) => {
                 // Framing violation: same policy as a shard — error
                 // frame, then close.
@@ -631,7 +954,7 @@ fn route_binary_conn(
             Err(e) if super::super::is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
         }
-        router.handle_frame(&hdr, &payload, &mut out);
+        router.handle_frame(&hdr, &payload, deadline_ms, arrival, &mut out);
         writer.write_all(&out)?;
     }
 }

@@ -39,8 +39,9 @@
 //! Frames carry the same requests with zero intermediate JSON values: f64
 //! payloads are read little-endian straight into pooled buffers and written
 //! straight back out of result vectors (see [`wire`] for the byte-exact
-//! layout). Requests are `[0xB1][version=1][u32 len]` + a payload of op /
-//! mode / precision bytes, `iters`, the problem name, and raw θ / v blocks;
+//! layout). Requests are `[0xB1][version=2][u32 deadline_ms][u32 len]` + a
+//! payload of op / mode / precision bytes, `iters`, the problem name, and
+//! raw θ / v blocks;
 //! replies are `[0xB1][version][status][flags][u32 len]` + mode byte, batch
 //! size, a rows×cols f64 block, and an optional JSON text tail (used only by
 //! `problems` / `stats`, which stay JSON-shaped on both wires). Both wires
@@ -119,6 +120,31 @@
 //! `"mode":"auto"` requests with a cached contractive ρ to solve-free
 //! answers (flagged `"degraded":true`, counted in `degraded_one_step`)
 //! instead of queueing them.
+//!
+//! # Deadlines
+//!
+//! Every data-plane request may carry an optional deadline budget — the
+//! JSON member `"deadline_ms"` or the binary header's u32 deadline field
+//! (0 = none on both wires). The budget starts when the request is read;
+//! a request whose budget has expired — on arrival, or by the time it
+//! would claim a solve slot — is answered `{"error":"deadline_exceeded"}`
+//! instead of queueing past-due work (counted in `deadline_exceeded`).
+//! The cluster router decrements the budget by its own elapsed time before
+//! relaying, so shards always see the *remaining* budget.
+//!
+//! # Replication
+//!
+//! A sharded server with `--peers` configured runs a replicator thread:
+//! every `replicate_secs` it ships each warm cache entry it *owns* to the
+//! shard that would inherit that θ if this shard died (the key's owner on
+//! the ring minus self — exactly the router's failover re-hash), over the
+//! binary wire's internal `OP_REPLICATE` op. The receiver installs the
+//! entries bypassing its ownership filter and WITHOUT counting
+//! factorizations (like a manifest restore), so router failover after a
+//! shard death lands on a warm replica: the migrated θ-slice is served
+//! bitwise-identically with ZERO new factorizations (asserted end-to-end
+//! in `rust/tests/cluster.rs`). `replicated_out`/`replicated_in` count
+//! shipped/installed entries on both sides.
 
 pub mod batcher;
 pub mod cache;
@@ -136,15 +162,17 @@ use crate::util::pool::{Pool, PoolVec};
 use batcher::{BatchKey, BatchOp, Batcher};
 use cache::{CacheEntry, FactorCache, RhoCache, ThetaKey};
 use cluster::actor::Mailbox;
-use cluster::admit::{Admission, OVERLOADED};
+use cluster::admit::{Admission, DEADLINE_EXCEEDED, OVERLOADED};
+use cluster::faults;
 use cluster::ring::{Ring, DEFAULT_VNODES};
 use registry::{Problem, Registry};
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serve-side knobs.
 #[derive(Clone, Debug)]
@@ -193,6 +221,13 @@ pub struct ServeConfig {
     /// Off by default so embedded servers (tests, benches) never touch
     /// process-wide signal state; `idiff serve` turns it on.
     pub handle_signals: bool,
+    /// Addresses of every shard in the cluster, index-aligned with shard
+    /// ids (`peers[i]` is shard i — including this shard's own address).
+    /// Empty disables replication.
+    pub peers: Vec<String>,
+    /// Seconds between replication passes (0 = replication off even with
+    /// peers configured).
+    pub replicate_secs: u64,
 }
 
 impl Default for ServeConfig {
@@ -213,6 +248,8 @@ impl Default for ServeConfig {
             max_inflight: 0,
             max_solve_inflight: 0,
             handle_signals: false,
+            peers: Vec::new(),
+            replicate_secs: 5,
         }
     }
 }
@@ -239,6 +276,16 @@ pub struct ServeStats {
     /// on the solve-free path). Repeat-θ auto traffic must not bump this —
     /// asserted by the ρ-cache tests.
     pub rho_estimates: AtomicU64,
+    /// Requests refused because their deadline budget had already expired
+    /// (on arrival or at the solve-lane gate).
+    pub deadline_exceeded: AtomicU64,
+    /// Warm cache entries (factorizations + ρ) shipped to a ring successor
+    /// by the replicator thread.
+    pub replicated_out: AtomicU64,
+    /// Warm cache entries installed from a peer's replica deltas. Replica
+    /// installs never count as `factorizations` — same accounting as a
+    /// manifest restore.
+    pub replicated_in: AtomicU64,
 }
 
 /// A decoded, transport-neutral request. Both wire protocols produce this,
@@ -265,6 +312,11 @@ pub enum Request {
     Jacobian {
         problem: String,
         theta: PoolVec,
+    },
+    /// Internal shard→shard warm-state transfer (binary wire only,
+    /// `OP_REPLICATE`): a replica-delta document to install.
+    Replicate {
+        doc: String,
     },
 }
 
@@ -313,6 +365,8 @@ pub struct Server {
     ring: Option<(usize, Ring)>,
     /// Actor restarts recovered by the connection supervisors.
     restarts: Arc<AtomicU64>,
+    /// Actor slots abandoned by the restart-storm guard.
+    give_ups: Arc<AtomicU64>,
     pub stats: ServeStats,
     cfg: ServeConfig,
 }
@@ -335,6 +389,7 @@ impl Server {
             admission: Admission::new(cfg.max_inflight, cfg.max_solve_inflight),
             ring,
             restarts: Arc::new(AtomicU64::new(0)),
+            give_ups: Arc::new(AtomicU64::new(0)),
             stats: ServeStats::default(),
             cfg,
         }
@@ -387,6 +442,7 @@ impl Server {
     }
 
     fn handle_line(&self, line: &str) -> Reply {
+        let arrival = Instant::now();
         if line.len() > self.cfg.max_line_bytes {
             return Reply::Error(format!(
                 "request too large ({} bytes > {} max)",
@@ -395,7 +451,9 @@ impl Server {
             ));
         }
         match self.parse_request_json(line) {
-            Ok(req) => self.execute(req),
+            Ok((req, deadline_ms)) => {
+                self.execute_with_deadline(req, deadline_of(arrival, deadline_ms))
+            }
             Err(e) => Reply::Error(e),
         }
     }
@@ -403,10 +461,17 @@ impl Server {
     /// Handle one decoded binary frame payload (everything after the length
     /// prefix). Same panic containment and counter behavior as [`handle`].
     pub fn handle_frame(&self, payload: &[u8]) -> Reply {
+        self.handle_frame_deadline(payload, 0)
+    }
+
+    /// [`Server::handle_frame`] with the header's deadline budget (0 = no
+    /// deadline); the budget starts counting now.
+    pub fn handle_frame_deadline(&self, payload: &[u8], deadline_ms: u32) -> Reply {
+        let deadline = deadline_of(Instant::now(), deadline_ms);
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match wire::decode_request(payload, &self.pool) {
-                Ok(req) => self.execute(req),
+                Ok(req) => self.execute_with_deadline(req, deadline),
                 Err(e) => Reply::Error(e),
             }
         }))
@@ -417,40 +482,72 @@ impl Server {
         reply
     }
 
-    /// The protocol-independent engine: every wire decodes into a
-    /// [`Request`] and is answered from here.
+    /// The protocol-independent engine with no deadline.
     pub fn execute(&self, req: Request) -> Reply {
+        self.execute_with_deadline(req, None)
+    }
+
+    /// The protocol-independent engine: every wire decodes into a
+    /// [`Request`] and is answered from here. A data-plane request whose
+    /// deadline has already passed — on arrival, or again at the solve-lane
+    /// gate inside the ops — gets the typed `deadline_exceeded` error
+    /// instead of queueing past-due work. Control-plane ops ignore
+    /// deadlines like they ignore admission: health checks must always
+    /// answer.
+    pub fn execute_with_deadline(&self, req: Request, deadline: Option<Instant>) -> Reply {
         // Admission: data-plane requests hold an inflight slot for their
         // whole execution; past the limit they are shed with the canonical
         // `overloaded` reject. The control plane (ping/problems/stats) is
         // never refused — the router's health checks and an operator's
         // diagnostics must keep working exactly when the server is busiest.
         let _inflight = match req {
-            Request::Ping | Request::Problems | Request::Stats => None,
-            _ => match self.admission.admit() {
-                Some(slot) => Some(slot),
-                None => {
-                    self.admission.note_rejected();
-                    return Reply::Error(OVERLOADED.to_string());
+            Request::Ping | Request::Problems | Request::Stats | Request::Replicate { .. } => None,
+            _ => {
+                // A past-due request is not admitted at all: the typed error
+                // is cheaper than any queueing, and the client has already
+                // given up on the answer.
+                if expired(deadline) {
+                    self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                    return Reply::Error(DEADLINE_EXCEEDED.to_string());
                 }
-            },
+                match self.admission.admit() {
+                    Some(slot) => Some(slot),
+                    None => {
+                        self.admission.note_rejected();
+                        return Reply::Error(OVERLOADED.to_string());
+                    }
+                }
+            }
         };
         match req {
             Request::Ping => Reply::Pong,
             Request::Problems => Reply::Text(self.op_problems()),
             Request::Stats => Reply::Text(self.op_stats()),
+            Request::Replicate { doc } => match self.apply_replica_delta(&doc) {
+                Ok((facts, rho)) => {
+                    self.stats.replicated_in.fetch_add(facts + rho, Ordering::Relaxed);
+                    Reply::Text(Json::obj(vec![
+                        ("replicated", Json::Bool(true)),
+                        ("entries", Json::Num(facts as f64)),
+                        ("rho", Json::Num(rho as f64)),
+                    ]))
+                }
+                Err(e) => Reply::Error(e),
+            },
             Request::Solve { problem, theta } => match self.lookup(&problem, &theta) {
                 Ok(p) => self.op_solve(p, &theta),
                 Err(e) => Reply::Error(e),
             },
             Request::Derivative { problem, theta, v, op, mode, precision, iters } => {
                 match self.lookup(&problem, &theta) {
-                    Ok(p) => self.op_derivative(p, &theta, v, op, mode, precision, iters),
+                    Ok(p) => {
+                        self.op_derivative(p, &theta, v, op, mode, precision, iters, deadline)
+                    }
                     Err(e) => Reply::Error(e),
                 }
             }
             Request::Jacobian { problem, theta } => match self.lookup(&problem, &theta) {
-                Ok(p) => self.op_jacobian(p, &theta),
+                Ok(p) => self.op_jacobian(p, &theta, deadline),
                 Err(e) => Reply::Error(e),
             },
         }
@@ -477,9 +574,22 @@ impl Server {
 
     // ------------------------------------------------------ JSON decode --
 
-    fn parse_request_json(&self, line: &str) -> Result<Request, String> {
+    /// Parse one JSON request line into `(request, deadline_ms)` —
+    /// `"deadline_ms"` is an optional member on any op (0 = no deadline).
+    fn parse_request_json(&self, line: &str) -> Result<(Request, u32), String> {
         let req = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
-        match req.str_or("op", "") {
+        let deadline_ms = match req.get("deadline_ms") {
+            None => 0u32,
+            Some(j) => match j.as_f64() {
+                Some(ms) if ms.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&ms) => {
+                    ms as u32
+                }
+                _ => {
+                    return Err("'deadline_ms' must be a non-negative integer".to_string());
+                }
+            },
+        };
+        let parsed = match req.str_or("op", "") {
             "ping" => Ok(Request::Ping),
             "problems" => Ok(Request::Problems),
             "stats" => Ok(Request::Stats),
@@ -501,7 +611,8 @@ impl Server {
             }),
             "" => Err("missing 'op'".to_string()),
             other => Err(format!("unknown op '{other}'")),
-        }
+        };
+        parsed.map(|r| (r, deadline_ms))
     }
 
     fn json_derivative(
@@ -621,7 +732,20 @@ impl Server {
             ("batcher_inflight", Json::Num(self.batcher.inflight() as f64)),
             ("rejected", Json::Num(self.admission.rejected() as f64)),
             ("degraded_one_step", Json::Num(self.admission.degraded_one_step() as f64)),
+            (
+                "deadline_exceeded",
+                Json::Num(self.stats.deadline_exceeded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replicated_out",
+                Json::Num(self.stats.replicated_out.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replicated_in",
+                Json::Num(self.stats.replicated_in.load(Ordering::Relaxed) as f64),
+            ),
             ("actor_restarts", Json::Num(self.restarts.load(Ordering::Relaxed) as f64)),
+            ("actor_give_ups", Json::Num(self.give_ups.load(Ordering::Relaxed) as f64)),
             (
                 "catalog_fingerprint",
                 Json::Str(format!("{:016x}", self.registry.catalog_fingerprint())),
@@ -683,6 +807,7 @@ impl Server {
         mode: DiffMode,
         precision: SolvePrecision,
         iters: usize,
+        deadline: Option<Instant>,
     ) -> Reply {
         let (in_dim, out_key) = match op {
             BatchOp::Vjp => (p.dim_x(), "grad"),
@@ -737,6 +862,12 @@ impl Server {
         }
 
         if mode == DiffMode::Implicit {
+            // Deadline gate at the solve lane: a request whose budget ran
+            // out while it waited must not claim a solve slot.
+            if expired(deadline) {
+                self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                return Reply::Error(DEADLINE_EXCEEDED.to_string());
+            }
             // Admission: the implicit path queues onto the solve lane; when
             // that lane is full the request is rejected up front instead of
             // growing an unbounded backlog. The slot guard spans the whole
@@ -865,12 +996,19 @@ impl Server {
         }
     }
 
-    fn op_jacobian(&self, p: &Problem, theta: &[f64]) -> Reply {
+    fn op_jacobian(&self, p: &Problem, theta: &[f64], deadline: Option<Instant>) -> Reply {
         let key = ThetaKey::new(p.name, theta);
         let (jac, was_hit) = if let Some(entry) = self.cache.get(&key) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             (p.jacobian_factored(&entry.fact, &entry.x_star, theta), true)
         } else {
+            // Same deadline gate as the implicit derivative path: past-due
+            // work never claims a solve slot (cache hits above are cheap
+            // enough to always answer).
+            if expired(deadline) {
+                self.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                return Reply::Error(DEADLINE_EXCEEDED.to_string());
+            }
             // A cold Jacobian rides the solve lane like implicit derivatives
             // do; saturation rejects instead of queueing (cache hits above
             // stay solve-free and are always served).
@@ -918,6 +1056,7 @@ impl Server {
     /// Blocks forever (until process exit).
     pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
         self.clone().spawn_persist_thread();
+        self.clone().spawn_replicator_thread();
         if self.cfg.handle_signals {
             self.clone().spawn_shutdown_watcher();
         }
@@ -933,6 +1072,7 @@ impl Server {
             mailbox.clone(),
             handler,
             self.restarts.clone(),
+            self.give_ups.clone(),
         );
         for stream in listener.incoming() {
             let stream = stream?;
@@ -989,6 +1129,102 @@ impl Server {
         });
     }
 
+    /// Start the warm-state replicator (a no-op unless this server is a
+    /// shard with `peers` configured and a nonzero interval). Each pass
+    /// ships every owned warm entry this shard has not shipped yet to the
+    /// shard that would inherit its θ on this shard's death — the key's
+    /// owner on the ring *minus self*, which is exactly the re-hash the
+    /// router performs on failover. `serve_on` calls this; embedded
+    /// sharded servers can too.
+    pub fn spawn_replicator_thread(self: Arc<Self>) {
+        let Some((idx, _)) = self.cfg.shard else { return };
+        if self.cfg.peers.is_empty() || self.cfg.replicate_secs == 0 {
+            return;
+        }
+        let period = Duration::from_secs(self.cfg.replicate_secs);
+        std::thread::spawn(move || {
+            let mut shipped_facts: HashSet<ThetaKey> = HashSet::new();
+            let mut shipped_rho: HashSet<ThetaKey> = HashSet::new();
+            loop {
+                std::thread::sleep(period);
+                self.replicate_once(idx, &mut shipped_facts, &mut shipped_rho);
+            }
+        });
+    }
+
+    /// One replication pass; returns how many entries shipped. One frame
+    /// per entry keeps every delta far under `max_line_bytes`; the
+    /// shipped-sets make a steady-state pass free (failures stay
+    /// un-shipped and retry next pass).
+    fn replicate_once(
+        &self,
+        idx: usize,
+        shipped_facts: &mut HashSet<ThetaKey>,
+        shipped_rho: &mut HashSet<ThetaKey>,
+    ) -> usize {
+        let Some((_, ring)) = &self.ring else { return 0 };
+        let survivors: Vec<u32> =
+            ring.members().iter().copied().filter(|&m| m != idx as u32).collect();
+        if survivors.is_empty() {
+            return 0;
+        }
+        // The ring without this shard: where each of our keys would land
+        // if we died right now.
+        let successors = Ring::new(&survivors, self.cfg.vnodes);
+        let mut shipped = 0usize;
+        for (key, entry) in self.cache.snapshot() {
+            if shipped_facts.contains(&key) || !self.owns(&key.problem, &key.theta()) {
+                continue;
+            }
+            let Some(target) = successors.owner(Ring::route_key(&key.problem, &key.theta()))
+            else {
+                continue;
+            };
+            let doc =
+                self.replica_delta_doc(&[(key.clone(), entry)], &[], idx).to_string_compact();
+            if self.ship_delta(target, &doc) {
+                shipped_facts.insert(key);
+                self.stats.replicated_out.fetch_add(1, Ordering::Relaxed);
+                shipped += 1;
+            }
+        }
+        for (key, rho) in self.rho_cache.snapshot() {
+            if shipped_rho.contains(&key) || !self.owns(&key.problem, &key.theta()) {
+                continue;
+            }
+            let Some(target) = successors.owner(Ring::route_key(&key.problem, &key.theta()))
+            else {
+                continue;
+            };
+            let doc =
+                self.replica_delta_doc(&[], &[(key.clone(), rho)], idx).to_string_compact();
+            if self.ship_delta(target, &doc) {
+                shipped_rho.insert(key);
+                self.stats.replicated_out.fetch_add(1, Ordering::Relaxed);
+                shipped += 1;
+            }
+        }
+        shipped
+    }
+
+    /// Ship one replica-delta document to peer shard `target` over a
+    /// fresh binary-wire connection. Failures are silent by design —
+    /// replication is best-effort background work and the next pass
+    /// retries anything that did not land.
+    fn ship_delta(&self, target: u32, doc: &str) -> bool {
+        let Some(addr) = self.cfg.peers.get(target as usize) else { return false };
+        let mut frame = Vec::new();
+        wire::encode_replicate(doc.as_bytes(), &mut frame);
+        let Ok(mut stream) = TcpStream::connect(addr) else { return false };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+        if stream.write_all(&frame).is_err() {
+            return false;
+        }
+        matches!(wire::read_reply(&mut stream), Ok(reply) if reply.status == wire::STATUS_OK)
+    }
+
     /// Bind `addr` and serve (see [`Server::serve_on`]). Prints the bound
     /// address (not the requested one) so `--addr host:0` callers — the e2e
     /// harness, scripted shard launchers — can parse the ephemeral port.
@@ -1036,6 +1272,17 @@ pub fn reply_to_json(reply: Reply) -> Json {
         }
         Reply::Error(e) => Json::obj(vec![("error", Json::Str(e))]),
     }
+}
+
+/// Absolute deadline for a request that arrived at `arrival` carrying a
+/// `deadline_ms` budget (0 = no deadline, the wire default on both
+/// protocols).
+fn deadline_of(arrival: Instant, deadline_ms: u32) -> Option<Instant> {
+    (deadline_ms > 0).then(|| arrival + Duration::from_millis(deadline_ms as u64))
+}
+
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.map_or(false, |d| Instant::now() >= d)
 }
 
 fn required_problem(req: &Json) -> Result<String, String> {
@@ -1104,10 +1351,23 @@ fn serve_json_conn(
         if trimmed.is_empty() {
             continue;
         }
+        match faults::at(faults::SITE_SHARD_REQUEST) {
+            Some(faults::Action::Drop) => continue, // swallow: no reply
+            Some(faults::Action::CloseMidFrame) => return Ok(()),
+            _ => {}
+        }
         let resp = server.handle(trimmed);
         out.clear();
         resp.write_compact_bytes(&mut out);
         out.push(b'\n');
+        match faults::at(faults::SITE_SHARD_REPLY) {
+            Some(faults::Action::Drop) => continue, // reply lost in flight
+            Some(faults::Action::CloseMidFrame) => {
+                let _ = writer.write_all(&out[..out.len().min(3)]);
+                return Ok(());
+            }
+            _ => {}
+        }
         writer.write_all(&out)?;
     }
 }
@@ -1128,8 +1388,9 @@ fn serve_binary_conn(
             Err(e) if is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
         }
-        let len = match wire::parse_request_header(&hdr, server.cfg.max_line_bytes) {
-            Ok(len) => len,
+        let (len, deadline_ms) = match wire::parse_request_header(&hdr, server.cfg.max_line_bytes)
+        {
+            Ok(parsed) => parsed,
             Err(msg) => {
                 // Framing violation: the stream can no longer be delimited.
                 // Reply with an error frame, then close.
@@ -1147,9 +1408,22 @@ fn serve_binary_conn(
             Err(e) if is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
         }
-        let reply = server.handle_frame(&payload);
+        match faults::at(faults::SITE_SHARD_REQUEST) {
+            Some(faults::Action::Drop) => continue, // swallow: no reply
+            Some(faults::Action::CloseMidFrame) => return Ok(()),
+            _ => {}
+        }
+        let reply = server.handle_frame_deadline(&payload, deadline_ms);
         out.clear();
         wire::encode_reply(&reply, &mut out);
+        match faults::at(faults::SITE_SHARD_REPLY) {
+            Some(faults::Action::Drop) => continue, // reply lost in flight
+            Some(faults::Action::CloseMidFrame) => {
+                let _ = writer.write_all(&out[..out.len().min(3)]);
+                return Ok(());
+            }
+            _ => {}
+        }
         writer.write_all(&out)?;
     }
 }
@@ -1630,5 +1904,62 @@ mod tests {
             assert_eq!(jv.len(), p.dim_x(), "{}", p.name);
             assert!(jv.iter().all(|x| x.as_f64().unwrap().is_finite()), "{}", p.name);
         }
+    }
+
+    /// A data-plane request whose deadline has already passed gets the
+    /// typed `deadline_exceeded` error and never touches the solve path;
+    /// the control plane ignores deadlines entirely.
+    #[test]
+    fn expired_deadlines_get_the_typed_error_and_never_solve() {
+        let s = Server::new(quiet_cfg());
+        assert_eq!(deadline_of(Instant::now(), 0), None, "0 = no deadline");
+        assert!(!expired(None));
+        let past = Some(Instant::now() - Duration::from_millis(5));
+        assert!(expired(past));
+        assert!(!expired(Some(Instant::now() + Duration::from_secs(3600))));
+
+        let line = r#"{"op":"hypergrad","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1]}"#;
+        let (req, deadline_ms) = s.parse_request_json(line).unwrap();
+        assert_eq!(deadline_ms, 0, "no member = no deadline");
+        match s.execute_with_deadline(req, past) {
+            Reply::Error(e) => assert_eq!(e, DEADLINE_EXCEEDED),
+            _ => panic!("expected the typed deadline error"),
+        }
+        // Past-due cold Jacobians gate at the solve lane too.
+        let jline = r#"{"op":"jacobian","problem":"ridge","theta":[1,1,1,1,1,1,1,1]}"#;
+        let (jreq, _) = s.parse_request_json(jline).unwrap();
+        assert!(matches!(s.execute_with_deadline(jreq, past), Reply::Error(e) if e == DEADLINE_EXCEEDED));
+        assert_eq!(s.stats.deadline_exceeded.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.inner_solves.load(Ordering::Relaxed), 0);
+        assert_eq!(s.stats.block_solves.load(Ordering::Relaxed), 0);
+        assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 0);
+        // Health checks must answer exactly when things are past due.
+        assert!(matches!(s.execute_with_deadline(Request::Ping, past), Reply::Pong));
+    }
+
+    /// The JSON wire's `"deadline_ms"` member: a generous budget answers
+    /// normally, malformed budgets are clean errors, and the new
+    /// fault-tolerance counters are part of the stats surface.
+    #[test]
+    fn deadline_ms_member_parses_and_counters_surface_in_stats() {
+        let s = Server::new(quiet_cfg());
+        let r = s.handle(
+            r#"{"op":"hypergrad","problem":"ridge","theta":[1,1,1,1,1,1,1,1],"v":[1,1,1,1,1,1,1,1],"deadline_ms":60000}"#,
+        );
+        assert!(r.get("grad").is_some(), "{}", r.to_string_compact());
+        for bad in [r#""deadline_ms":-5"#, r#""deadline_ms":1.5"#, r#""deadline_ms":"soon""#] {
+            let line = format!(r#"{{"op":"ping",{bad}}}"#);
+            let r = s.handle(&line);
+            assert!(
+                r.str_or("error", "").contains("deadline_ms"),
+                "{}",
+                r.to_string_compact()
+            );
+        }
+        let stats = s.handle(r#"{"op":"stats"}"#);
+        for key in ["deadline_exceeded", "replicated_out", "replicated_in", "actor_give_ups"] {
+            assert!(stats.get(key).is_some(), "stats missing '{key}'");
+        }
+        assert_eq!(stats.f64_or("deadline_exceeded", -1.0), 0.0);
     }
 }

@@ -28,12 +28,25 @@
 //! # Compatibility policy
 //!
 //! Loading NEVER crashes the server. A manifest with the wrong `format` or
-//! `version`, or one whose `catalog` disagrees with the running registry
-//! (dims changed, problems renamed), is reported as a clean cold start.
-//! Individually stale entries (unknown problem, wrong dims, non-finite or
-//! malformed factors) are skipped and counted; everything else restores.
-//! Only an unreadable/unparseable file is an `Err` — and callers treat
-//! that as a cold start too, it is just worth a louder log line.
+//! `version`, one whose `catalog` disagrees with the running registry
+//! (dims changed, problems renamed), a file of non-JSON garbage (including
+//! invalid UTF-8 or a write truncated mid-JSON), or valid JSON of the wrong
+//! shape is reported as a clean cold start (`WarmStart::cold_start` names
+//! the reason). Individually stale entries (unknown problem, wrong dims,
+//! non-finite or malformed factors) are skipped and counted; everything
+//! else restores. Only an *unreadable* file (I/O error) is an `Err` — and
+//! callers treat that as a cold start too, it is just worth a louder log
+//! line.
+//!
+//! # Replica deltas
+//!
+//! Sharded servers ship warm state to their ring successor as
+//! `idiff-replica-delta` documents over the binary wire's `OP_REPLICATE`
+//! op (see [`Server::replica_delta_doc`] / [`Server::apply_replica_delta`]).
+//! A delta reuses the manifest entry layout but is installed *bypassing*
+//! the ring-ownership filter — a replica holds its predecessor's slice on
+//! purpose — and never bumps the `factorizations` counter, exactly like a
+//! manifest restore, so cluster-wide factorization counts stay a partition.
 
 use super::cache::{CacheEntry, ThetaKey};
 use super::Server;
@@ -48,6 +61,8 @@ use std::sync::Arc;
 pub const MANIFEST_FORMAT: &str = "idiff-serve-manifest";
 /// Bumped whenever the entry layout changes; older manifests cold-start.
 pub const MANIFEST_VERSION: f64 = 2.0;
+/// Format tag of shard→shard replica-delta documents (OP_REPLICATE).
+pub const REPLICA_FORMAT: &str = "idiff-replica-delta";
 
 /// What a manifest load did.
 #[derive(Debug, Default)]
@@ -138,6 +153,26 @@ fn fact_from(j: &Json) -> Option<Factorization> {
     }
 }
 
+/// One factorization-cache entry in manifest/replica-delta layout.
+fn entry_json(key: &ThetaKey, entry: &CacheEntry) -> Option<Json> {
+    let fact = fact_json(&entry.fact)?;
+    Some(Json::obj(vec![
+        ("problem", Json::Str(key.problem.clone())),
+        ("theta", Json::arr_f64(&key.theta())),
+        ("x_star", Json::arr_f64(&entry.x_star)),
+        ("fact", fact),
+    ]))
+}
+
+/// One ρ-cache entry in manifest/replica-delta layout.
+fn rho_json(key: &ThetaKey, rho: f64) -> Json {
+    Json::obj(vec![
+        ("problem", Json::Str(key.problem.clone())),
+        ("theta", Json::arr_f64(&key.theta())),
+        ("rho", Json::Num(rho)),
+    ])
+}
+
 impl Server {
     /// The full warm state as a manifest document.
     pub fn manifest_json(&self) -> Json {
@@ -145,27 +180,13 @@ impl Server {
             .cache
             .snapshot()
             .iter()
-            .filter_map(|(key, entry)| {
-                let fact = fact_json(&entry.fact)?;
-                Some(Json::obj(vec![
-                    ("problem", Json::Str(key.problem.clone())),
-                    ("theta", Json::arr_f64(&key.theta())),
-                    ("x_star", Json::arr_f64(&entry.x_star)),
-                    ("fact", fact),
-                ]))
-            })
+            .filter_map(|(key, entry)| entry_json(key, entry))
             .collect();
         let rho: Vec<Json> = self
             .rho_cache
             .snapshot()
             .iter()
-            .map(|(key, rho)| {
-                Json::obj(vec![
-                    ("problem", Json::Str(key.problem.clone())),
-                    ("theta", Json::arr_f64(&key.theta())),
-                    ("rho", Json::Num(*rho)),
-                ])
-            })
+            .map(|(key, rho)| rho_json(key, *rho))
             .collect();
         Json::obj(vec![
             ("format", Json::Str(MANIFEST_FORMAT.to_string())),
@@ -186,13 +207,25 @@ impl Server {
     }
 
     /// Load a manifest into the live caches. See the module docs for the
-    /// compatibility policy; this never panics on any file content.
+    /// compatibility policy; this never panics on any file content. Corrupt
+    /// bytes (truncated write, garbage, invalid UTF-8) are a *counted cold
+    /// start*, not an `Err` — only failing to read the file at all is.
     pub fn load_manifest(&self, path: &Path) -> Result<WarmStart, String> {
-        let text = std::fs::read_to_string(path)
+        let raw = std::fs::read(path)
             .map_err(|e| format!("cannot read manifest {}: {e}", path.display()))?;
-        let doc = crate::util::json::parse(&text)
-            .map_err(|e| format!("cannot parse manifest {}: {e}", path.display()))?;
         let mut warm = WarmStart::default();
+        // Invalid UTF-8 can only come from a corrupt file; lossy-decode so
+        // it reaches the parser and fails there instead of erroring here.
+        let doc = match crate::util::json::parse(&String::from_utf8_lossy(&raw)) {
+            Ok(doc) => doc,
+            Err(e) => {
+                warm.cold_start = Some(format!(
+                    "manifest {} is corrupt ({e}); cold start",
+                    path.display()
+                ));
+                return Ok(warm);
+            }
+        };
         if doc.str_or("format", "") != MANIFEST_FORMAT {
             warm.cold_start = Some("manifest format not recognized".to_string());
             return Ok(warm);
@@ -210,14 +243,14 @@ impl Server {
             return Ok(warm);
         }
         for entry in doc.get("entries").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
-            if self.restore_entry(entry).is_some() {
+            if self.restore_entry(entry, true).is_some() {
                 warm.factorizations += 1;
             } else {
                 warm.skipped += 1;
             }
         }
         for entry in doc.get("rho").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
-            if self.restore_rho(entry).is_some() {
+            if self.restore_rho(entry, true).is_some() {
                 warm.rho_entries += 1;
             } else {
                 warm.skipped += 1;
@@ -226,7 +259,63 @@ impl Server {
         Ok(warm)
     }
 
-    fn restore_entry(&self, entry: &Json) -> Option<()> {
+    /// Build a replica-delta document carrying the given cache slices to a
+    /// ring successor. Layout matches the manifest entries; `from_shard`
+    /// identifies the sender for the receiver's logs/stats.
+    pub fn replica_delta_doc(
+        &self,
+        entries: &[(ThetaKey, CacheEntry)],
+        rho: &[(ThetaKey, f64)],
+        from_shard: usize,
+    ) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(REPLICA_FORMAT.to_string())),
+            ("version", Json::Num(MANIFEST_VERSION)),
+            ("from_shard", Json::Num(from_shard as f64)),
+            ("catalog", self.registry.catalog_signature()),
+            (
+                "entries",
+                Json::Arr(entries.iter().filter_map(|(k, e)| entry_json(k, e)).collect()),
+            ),
+            ("rho", Json::Arr(rho.iter().map(|(k, r)| rho_json(k, *r)).collect())),
+        ])
+    }
+
+    /// Install a replica delta received over OP_REPLICATE. Entries are
+    /// installed *without* the ring-ownership filter (a replica holds its
+    /// predecessor's slice) and without touching the `factorizations`
+    /// counter — identical accounting to a manifest restore. Returns
+    /// (factorization entries, ρ entries) installed.
+    pub fn apply_replica_delta(&self, doc: &str) -> Result<(u64, u64), String> {
+        let doc = crate::util::json::parse(doc).map_err(|e| format!("bad replica delta: {e}"))?;
+        if doc.str_or("format", "") != REPLICA_FORMAT {
+            return Err("replica delta format not recognized".to_string());
+        }
+        let version = doc.f64_or("version", -1.0);
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "replica delta version {version} (this build reads {MANIFEST_VERSION})"
+            ));
+        }
+        if doc.get("catalog") != Some(&self.registry.catalog_signature()) {
+            return Err("replica delta catalog does not match the running registry".to_string());
+        }
+        let mut facts = 0u64;
+        let mut rho = 0u64;
+        for entry in doc.get("entries").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
+            if self.restore_entry(entry, false).is_some() {
+                facts += 1;
+            }
+        }
+        for entry in doc.get("rho").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
+            if self.restore_rho(entry, false).is_some() {
+                rho += 1;
+            }
+        }
+        Ok((facts, rho))
+    }
+
+    fn restore_entry(&self, entry: &Json, enforce_ownership: bool) -> Option<()> {
         let name = entry.get("problem")?.as_str()?;
         let p = self.registry.get(name)?;
         let theta = vec_from(entry.get("theta")?)?;
@@ -241,7 +330,9 @@ impl Server {
         // the consistent-hash ring assigns to it (counted as skipped), so
         // N shard manifests partition a standalone manifest cleanly and no
         // factorization is ever duplicated cluster-wide at restore time.
-        if !self.owns(name, &theta) {
+        // Replica deltas install with the filter off: a replica holds its
+        // ring predecessor's slice by design.
+        if enforce_ownership && !self.owns(name, &theta) {
             return None;
         }
         let fact = fact_from(entry.get("fact")?)?;
@@ -255,7 +346,7 @@ impl Server {
         Some(())
     }
 
-    fn restore_rho(&self, entry: &Json) -> Option<()> {
+    fn restore_rho(&self, entry: &Json, enforce_ownership: bool) -> Option<()> {
         let name = entry.get("problem")?.as_str()?;
         let p = self.registry.get(name)?;
         let theta = vec_from(entry.get("theta")?)?;
@@ -268,7 +359,7 @@ impl Server {
             return None;
         }
         // Same ring-ownership slice as factorization entries.
-        if !self.owns(name, &theta) {
+        if enforce_ownership && !self.owns(name, &theta) {
             return None;
         }
         self.rho_cache.insert(ThetaKey::new(name, &theta), rho);
@@ -385,11 +476,37 @@ mod tests {
         // Foreign JSON file: also a cold start, not an error.
         std::fs::write(&path, r#"{"hello":"world"}"#).unwrap();
         assert!(s.load_manifest(&path).unwrap().cold_start.is_some());
-        // Unparseable garbage: an Err, still no panic, caches untouched.
+        // Unparseable garbage: a counted cold start, no panic, caches untouched.
         std::fs::write(&path, "not json at all {{{").unwrap();
-        assert!(s.load_manifest(&path).is_err());
+        let warm = s.load_manifest(&path).unwrap();
+        assert!(warm.cold_start.is_some());
         assert!(s.cache.is_empty());
+        // A missing file is the only Err: nothing was read at all.
         let _ = std::fs::remove_file(&path);
+        assert!(s.load_manifest(&path).is_err());
+    }
+
+    #[test]
+    fn replica_delta_installs_foreign_slice_without_counting_factorizations() {
+        use std::sync::atomic::Ordering;
+        let a = quiet();
+        let req = r#"{"op":"hypergrad","problem":"ridge","theta":[3,3,3,3,3,3,3,3],"v":[1,1,1,1,1,1,1,1]}"#;
+        assert!(a.handle(req).get("error").is_none());
+        let entries = a.cache.snapshot();
+        let rho = a.rho_cache.snapshot();
+        let doc = a.replica_delta_doc(&entries, &rho, 0).to_string_compact();
+
+        let b = quiet();
+        let (facts, _) = b.apply_replica_delta(&doc).unwrap();
+        assert_eq!(facts, 1);
+        assert_eq!(b.cache.len(), 1);
+        // Replicated state serves cache hits with zero local factorizations.
+        let reply = b.handle(req);
+        assert_eq!(reply.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(b.stats.factorizations.load(Ordering::Relaxed), 0);
+        // Wrong format / version / catalog are typed errors, not installs.
+        assert!(b.apply_replica_delta(r#"{"format":"nope"}"#).is_err());
+        assert!(b.apply_replica_delta("garbage {{{").is_err());
     }
 
     #[test]

@@ -9,10 +9,13 @@
 //!
 //! ```text
 //! [0]     magic      0xB1  (never a JSON first byte — '{' is 0x7B)
-//! [1]     version    1
-//! [2..6]  u32 LE     payload length in bytes
+//! [1]     version    2
+//! [2..6]  u32 LE     deadline_ms (request budget; 0 = no deadline. The
+//!                    router decrements this in place before relaying, so
+//!                    a shard sees only the *remaining* budget.)
+//! [6..10] u32 LE     payload length in bytes
 //! payload:
-//!   [0]      u8      opcode (OP_PING … OP_JACOBIAN)
+//!   [0]      u8      opcode (OP_PING … OP_REPLICATE)
 //!   [1]      u8      mode   (MODE_* — MODE_NONE when defaulted)
 //!   [2]      u8      precision (PREC_F64 | PREC_MIXED)
 //!   [3]      u8      reserved (must be 0)
@@ -20,6 +23,9 @@
 //!   [8..10]  u16 LE  name_len, then name bytes (UTF-8 problem name)
 //!   [..]     u32 LE  n_theta, then n_theta × f64 LE
 //!   [..]     u32 LE  n_v,     then n_v × f64 LE
+//! OP_REPLICATE payload (shard→shard warm-state transfer) replaces the
+//! name/θ/v tail after the 8 fixed prelude bytes with:
+//!   [8..12]  u32 LE  doc_len, then doc bytes (UTF-8 replica-delta JSON)
 //! ```
 //!
 //! Control ops (`ping`/`problems`/`stats`) send name/θ/v empty. Every
@@ -30,7 +36,7 @@
 //!
 //! ```text
 //! [0]     magic      0xB1
-//! [1]     version    1
+//! [1]     version    2
 //! [2]     status     0 = ok, 1 = error
 //! [3]     flags      bit 0: answered from the θ-cache
 //! [4..8]  u32 LE     payload length
@@ -69,9 +75,13 @@ use std::sync::Arc;
 /// which must start with `{` (0x7B) or whitespace — can collide with it.
 pub const MAGIC: u8 = 0xB1;
 /// Bumped on any byte-layout change; both sides must agree exactly.
-pub const VERSION: u8 = 1;
-/// Request header: magic, version, u32 payload length.
-pub const REQUEST_HEADER_LEN: usize = 6;
+/// v2 widened the request header with a u32 deadline budget.
+pub const VERSION: u8 = 2;
+/// Request header: magic, version, u32 deadline_ms, u32 payload length.
+pub const REQUEST_HEADER_LEN: usize = 10;
+/// Byte offset of the u32 deadline_ms field inside the request header —
+/// the router patches the remaining budget in place at this offset.
+pub const REQUEST_DEADLINE_OFFSET: usize = 2;
 /// Reply header: magic, version, status, flags, u32 payload length.
 pub const REPLY_HEADER_LEN: usize = 8;
 
@@ -82,6 +92,9 @@ pub const OP_SOLVE: u8 = 3;
 pub const OP_VJP: u8 = 4;
 pub const OP_JVP: u8 = 5;
 pub const OP_JACOBIAN: u8 = 6;
+/// Internal shard→shard op: install a warm-state replica delta. Never
+/// routed — the replicator thread connects to its successor directly.
+pub const OP_REPLICATE: u8 = 7;
 
 pub const MODE_IMPLICIT: u8 = 0;
 pub const MODE_UNROLL: u8 = 1;
@@ -208,20 +221,25 @@ impl<'a> Cursor<'a> {
 
 // ---------------------------------------------------------- server side --
 
-/// Validate a request header; returns the payload length. An `Err` here is
-/// a framing violation — the caller must close after replying.
-pub fn parse_request_header(hdr: &[u8; REQUEST_HEADER_LEN], max_payload: usize) -> Result<usize, String> {
+/// Validate a request header; returns `(payload length, deadline_ms)`
+/// (deadline 0 = none). An `Err` here is a framing violation — the caller
+/// must close after replying.
+pub fn parse_request_header(
+    hdr: &[u8; REQUEST_HEADER_LEN],
+    max_payload: usize,
+) -> Result<(usize, u32), String> {
     if hdr[0] != MAGIC {
         return Err(format!("bad frame magic {:#04x}", hdr[0]));
     }
     if hdr[1] != VERSION {
         return Err(format!("unsupported protocol version {} (expected {VERSION})", hdr[1]));
     }
-    let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]) as usize;
+    let deadline_ms = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]);
+    let len = u32::from_le_bytes([hdr[6], hdr[7], hdr[8], hdr[9]]) as usize;
     if len > max_payload {
         return Err(format!("request too large ({len} bytes > {max_payload} max)"));
     }
-    Ok(len)
+    Ok((len, deadline_ms))
 }
 
 /// Decode a request payload into the transport-neutral [`Request`]; θ and v
@@ -234,6 +252,17 @@ pub fn decode_request(payload: &[u8], pool: &Arc<Pool>) -> Result<Request, Strin
     let prec_byte = c.u8("precision")?;
     let _reserved = c.u8("reserved")?;
     let iters = c.u32("iters")? as usize;
+    if opcode == OP_REPLICATE {
+        let doc_len = c.u32("replica doc length")? as usize;
+        let doc_bytes = c.take(doc_len, "replica doc")?;
+        let doc = std::str::from_utf8(doc_bytes)
+            .map_err(|_| "replica doc is not valid UTF-8".to_string())?
+            .to_string();
+        if c.remaining() != 0 {
+            return Err(format!("trailing bytes in frame ({} after payload)", c.remaining()));
+        }
+        return Ok(Request::Replicate { doc });
+    }
     let name_len = c.u16("name length")? as usize;
     let name_bytes = c.take(name_len, "problem name")?;
     let name = std::str::from_utf8(name_bytes)
@@ -366,6 +395,8 @@ pub struct RequestFrame<'a> {
     pub mode: u8,
     pub precision: u8,
     pub iters: u32,
+    /// Deadline budget in milliseconds; 0 = no deadline.
+    pub deadline_ms: u32,
     pub problem: &'a str,
     pub theta: &'a [f64],
     pub v: &'a [f64],
@@ -379,6 +410,7 @@ impl<'a> RequestFrame<'a> {
             mode: MODE_NONE,
             precision: PREC_F64,
             iters: 0,
+            deadline_ms: 0,
             problem: "",
             theta: &[],
             v: &[],
@@ -391,6 +423,7 @@ pub fn encode_request(req: &RequestFrame, out: &mut Vec<u8>) {
     let start = out.len();
     out.push(MAGIC);
     out.push(VERSION);
+    push_u32(out, req.deadline_ms);
     push_u32(out, 0); // payload length, patched below
     let body = out.len();
     out.push(req.opcode);
@@ -406,7 +439,29 @@ pub fn encode_request(req: &RequestFrame, out: &mut Vec<u8>) {
     push_u32(out, req.v.len() as u32);
     push_f64s(out, req.v);
     let len = (out.len() - body) as u32;
-    out[start + 2..start + 6].copy_from_slice(&len.to_le_bytes());
+    out[start + 6..start + 10].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append a full OP_REPLICATE frame carrying a replica-delta document.
+/// Shard→shard only; replicas carry no deadline (best-effort background
+/// work) and no name/θ/v tail — the doc length is u32, so deltas are not
+/// bound by the u16 problem-name limit.
+pub fn encode_replicate(doc: &[u8], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.push(MAGIC);
+    out.push(VERSION);
+    push_u32(out, 0); // deadline: none
+    push_u32(out, 0); // payload length, patched below
+    let body = out.len();
+    out.push(OP_REPLICATE);
+    out.push(MODE_NONE);
+    out.push(PREC_F64);
+    out.push(0); // reserved
+    push_u32(out, 0); // iters
+    push_u32(out, doc.len() as u32);
+    out.extend_from_slice(doc);
+    let len = (out.len() - body) as u32;
+    out[start + 6..start + 10].copy_from_slice(&len.to_le_bytes());
 }
 
 /// A decoded reply frame, client side.
@@ -505,6 +560,7 @@ mod tests {
             mode: MODE_AUTO,
             precision: PREC_MIXED,
             iters: 7,
+            deadline_ms: 250,
             problem: "ridge",
             theta: &theta,
             v: &v,
@@ -513,8 +569,13 @@ mod tests {
         encode_request(&frame, &mut out);
         assert_eq!(out[0], MAGIC);
         assert_eq!(out[1], VERSION);
-        let len = u32::from_le_bytes([out[2], out[3], out[4], out[5]]) as usize;
+        let deadline = u32::from_le_bytes([out[2], out[3], out[4], out[5]]);
+        assert_eq!(deadline, 250);
+        let len = u32::from_le_bytes([out[6], out[7], out[8], out[9]]) as usize;
         assert_eq!(len, out.len() - REQUEST_HEADER_LEN);
+        let mut hdr = [0u8; REQUEST_HEADER_LEN];
+        hdr.copy_from_slice(&out[..REQUEST_HEADER_LEN]);
+        assert_eq!(parse_request_header(&hdr, 1 << 20), Ok((len, 250)));
         let req = decode_request(&out[REQUEST_HEADER_LEN..], &pool()).unwrap();
         match req {
             Request::Derivative { problem, theta: t, v: vv, op, mode, precision, iters } => {
@@ -561,7 +622,7 @@ mod tests {
         encode_request(&RequestFrame::control(OP_PING), &mut out);
         let len_fixed = (out.len() - REQUEST_HEADER_LEN + 2) as u32;
         out.extend_from_slice(&[0xde, 0xad]);
-        out[2..6].copy_from_slice(&len_fixed.to_le_bytes());
+        out[6..10].copy_from_slice(&len_fixed.to_le_bytes());
         let e = decode_request(&out[REQUEST_HEADER_LEN..], &p).unwrap_err();
         assert!(e.contains("trailing"), "{e}");
         // non-finite θ entry
@@ -584,8 +645,11 @@ mod tests {
         let mut hdr = [0u8; REQUEST_HEADER_LEN];
         hdr[0] = MAGIC;
         hdr[1] = VERSION;
-        hdr[2..6].copy_from_slice(&64u32.to_le_bytes());
-        assert_eq!(parse_request_header(&hdr, 1024), Ok(64));
+        hdr[6..10].copy_from_slice(&64u32.to_le_bytes());
+        assert_eq!(parse_request_header(&hdr, 1024), Ok((64, 0)));
+        hdr[REQUEST_DEADLINE_OFFSET..REQUEST_DEADLINE_OFFSET + 4]
+            .copy_from_slice(&1500u32.to_le_bytes());
+        assert_eq!(parse_request_header(&hdr, 1024), Ok((64, 1500)));
         let mut bad_magic = hdr;
         bad_magic[0] = b'{';
         assert!(parse_request_header(&bad_magic, 1024).unwrap_err().contains("magic"));
@@ -593,8 +657,31 @@ mod tests {
         bad_ver[1] = 9;
         assert!(parse_request_header(&bad_ver, 1024).unwrap_err().contains("version"));
         let mut huge = hdr;
-        huge[2..6].copy_from_slice(&(1u32 << 30).to_le_bytes());
+        huge[6..10].copy_from_slice(&(1u32 << 30).to_le_bytes());
         assert!(parse_request_header(&huge, 1024).unwrap_err().contains("too large"));
+    }
+
+    #[test]
+    fn replicate_frames_round_trip_their_doc() {
+        let doc = r#"{"format":"idiff-replica-delta","entries":[]}"#;
+        let mut out = Vec::new();
+        encode_replicate(doc.as_bytes(), &mut out);
+        let mut hdr = [0u8; REQUEST_HEADER_LEN];
+        hdr.copy_from_slice(&out[..REQUEST_HEADER_LEN]);
+        let (len, deadline) = parse_request_header(&hdr, 1 << 20).unwrap();
+        assert_eq!(deadline, 0);
+        assert_eq!(len, out.len() - REQUEST_HEADER_LEN);
+        match decode_request(&out[REQUEST_HEADER_LEN..], &pool()).unwrap() {
+            Request::Replicate { doc: d } => assert_eq!(d, doc),
+            _ => panic!("wrong request variant"),
+        }
+        // truncated doc is a clean payload error
+        let mut short = out.clone();
+        short.truncate(out.len() - 3);
+        let short_len = (short.len() - REQUEST_HEADER_LEN) as u32;
+        short[6..10].copy_from_slice(&short_len.to_le_bytes());
+        let e = decode_request(&short[REQUEST_HEADER_LEN..], &pool()).unwrap_err();
+        assert!(e.contains("truncated"), "{e}");
     }
 
     #[test]

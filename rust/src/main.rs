@@ -8,19 +8,24 @@
 //!             [--batch-max 32] [--cache 64]          # catalog request server
 //!             [--manifest PATH] [--persist-secs 60]  # warm-start persistence
 //!             [--shard i/N] [--vnodes 64]            # cluster shard identity
+//!             [--peers host:a,host:b] [--replicate-secs 5]  # warm-state replication
 //!             [--accept-queue 1024] [--max-inflight 0]
 //!             [--max-solve-inflight 0]               # admission control
 //! idiff route --shards host:a,host:b[,...]           # consistent-hash front
 //!             [--addr 127.0.0.1:7979] [--workers N] [--vnodes 64]
 //!             [--accept-queue 1024] [--max-inflight 0] [--health-secs 2]
+//!             [--connect-ms 1500] [--probe-ms 2000]  # upstream/probe timeouts
+//!             [--breaker-threshold 1]                # failures that open a breaker
 //! ```
 //!
 //! A sharded serve (`--shard i/N`) owns the ring slice i of N: its manifest
 //! (suffixed `.shard-i-of-N`) restores only ring-owned θ's, and the `route`
 //! front forwards each (problem, θ) to its owner so no factorization is
-//! ever computed twice cluster-wide. SIGTERM/SIGINT on a serve process
-//! writes the manifest before exiting; on a router it drains inflight
-//! requests first.
+//! ever computed twice cluster-wide. With `--peers` (index-aligned with
+//! shard ids) each shard additionally replicates its warm θ-slice to its
+//! ring successor, so failover lands on a warm replica. SIGTERM/SIGINT on
+//! a serve process writes the manifest before exiting; on a router it
+//! drains inflight requests first.
 
 use idiff::coordinator;
 use idiff::util::cli::Args;
@@ -81,6 +86,14 @@ fn main() {
                 max_solve_inflight: args
                     .get_usize("max-solve-inflight", defaults.max_solve_inflight),
                 handle_signals: true,
+                peers: args
+                    .get_or("peers", "")
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+                replicate_secs: args.get_u64("replicate-secs", defaults.replicate_secs),
                 ..defaults
             };
             let manifest = cfg.manifest_path.clone();
@@ -125,6 +138,15 @@ fn main() {
                 health_secs: args.get_u64("health-secs", defaults.health_secs),
                 vnodes: args.get_usize("vnodes", defaults.vnodes),
                 drain_secs: args.get_u64("drain-secs", defaults.drain_secs),
+                connect_timeout: std::time::Duration::from_millis(
+                    args.get_u64("connect-ms", defaults.connect_timeout.as_millis() as u64),
+                ),
+                probe_timeout: std::time::Duration::from_millis(
+                    args.get_u64("probe-ms", defaults.probe_timeout.as_millis() as u64),
+                ),
+                breaker_threshold: args
+                    .get_u64("breaker-threshold", defaults.breaker_threshold as u64)
+                    as u32,
                 ..defaults
             };
             let router =

@@ -1,0 +1,372 @@
+//! Chaos sweep: the serving tier under injected faults.
+//!
+//! Each scenario spawns real shard/router processes with an `IDIFF_FAULTS`
+//! plan in the environment of exactly the process under attack, then drives
+//! client traffic through the front door and checks ONE invariant:
+//!
+//! > every request is answered — a result or a typed error
+//! > (`overloaded` / `deadline_exceeded` / `no healthy shards`) — within
+//! > its deadline budget; nothing ever hangs.
+//!
+//! Scenarios: dropped requests and replies truncated mid-frame on a shard
+//! (router must fail over, never relay a partial line), dropped forwards
+//! inside the router (jittered retry), actor panics (supervisor restarts,
+//! counted), and injected latency against a tight deadline (typed
+//! `deadline_exceeded`, bounded wall time). A final non-faulted scenario
+//! measures failover recovery time with and without warm-state replication
+//! and journals the rows to `BENCH_faults.json` for the CI `chaos` job.
+//!
+//! Fault plans ride in child-process environments, so the scenarios are
+//! independent and safe to run in parallel test threads.
+
+use idiff::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Client-side ceiling: any reply slower than this counts as a hang.
+const HANG: Duration = Duration::from_secs(20);
+
+// ---------------------------------------------------------------- helpers --
+
+struct Proc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn an `idiff` child with extra environment (the fault plan goes only
+/// into the process under attack) and wait for its listen announcement.
+fn spawn_idiff(args: &[&str], envs: &[(&str, &str)], tag: &str) -> Proc {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_idiff"));
+    cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::null());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawn idiff");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("read child stdout") == 0 {
+            panic!("{tag} exited before announcing its address");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().expect("address token").to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    Proc { child, addr }
+}
+
+/// Reserve two distinct loopback ports (both bound before either drops).
+fn reserve_two_ports() -> (u16, u16) {
+    let a = TcpListener::bind("127.0.0.1:0").expect("reserve port a");
+    let b = TcpListener::bind("127.0.0.1:0").expect("reserve port b");
+    (a.local_addr().unwrap().port(), b.local_addr().unwrap().port())
+}
+
+fn hypergrad_line(theta: &[f64], v: &[f64], deadline_ms: Option<u64>) -> String {
+    let mut members = vec![
+        ("op", Json::Str("hypergrad".to_string())),
+        ("problem", Json::Str("ridge".to_string())),
+        ("theta", Json::arr_f64(theta)),
+        ("v", Json::arr_f64(v)),
+    ];
+    if let Some(ms) = deadline_ms {
+        members.push(("deadline_ms", Json::Num(ms as f64)));
+    }
+    Json::obj(members).to_string_compact()
+}
+
+/// One fresh-connection request that tolerates injected failure: `None`
+/// means the connection died or timed out (never a silent hang — the read
+/// timeout bounds it), `Some` is a parsed reply line.
+fn try_request(addr: &str, line: &str, timeout: Duration) -> Option<Json> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(timeout)).ok()?;
+    stream.set_write_timeout(Some(timeout)).ok()?;
+    let mut reader = BufReader::new(stream.try_clone().ok()?);
+    stream.write_all(line.as_bytes()).ok()?;
+    stream.write_all(b"\n").ok()?;
+    let mut resp = String::new();
+    if reader.read_line(&mut resp).ok()? == 0 || !resp.ends_with('\n') {
+        return None;
+    }
+    idiff::util::json::parse(resp.trim()).ok()
+}
+
+/// Non-tolerant request: the route under test must always answer.
+fn request(addr: &str, line: &str) -> Json {
+    try_request(addr, line, HANG)
+        .unwrap_or_else(|| panic!("request through {addr} hung or died: {line}"))
+}
+
+/// One numeric stats field straight from a process, retried a few times so
+/// an injected fault on the stats connection itself cannot flake the test.
+fn stat(addr: &str, key: &str) -> f64 {
+    for _ in 0..5 {
+        if let Some(r) = try_request(addr, r#"{"op":"stats"}"#, Duration::from_secs(5)) {
+            if let Some(x) = r.get(key).and_then(Json::as_f64) {
+                return x;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("could not read stats field '{key}' from {addr}");
+}
+
+fn thetas(n: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|i| vec![1.0 + 0.01 * i as f64; 8]).collect()
+}
+
+/// The full typed-error vocabulary a faulted cluster may answer with.
+fn is_typed_error(r: &Json) -> bool {
+    matches!(
+        r.get("error").and_then(|e| e.as_str()),
+        Some("overloaded") | Some("deadline_exceeded") | Some("no healthy shards")
+    )
+}
+
+fn spawn_two_shards_and_router(
+    shard0_env: &[(&str, &str)],
+    router_env: &[(&str, &str)],
+    peers: bool,
+    router_extra: &[&str],
+) -> (Proc, Proc, Proc) {
+    let (pa, pb) = reserve_two_ports();
+    let addr_a = format!("127.0.0.1:{pa}");
+    let addr_b = format!("127.0.0.1:{pb}");
+    let both = format!("{addr_a},{addr_b}");
+    let mut args0 =
+        vec!["serve", "--addr", &addr_a, "--workers", "2", "--window-ms", "0", "--shard", "0/2"];
+    let mut args1 =
+        vec!["serve", "--addr", &addr_b, "--workers", "2", "--window-ms", "0", "--shard", "1/2"];
+    if peers {
+        for args in [&mut args0, &mut args1] {
+            args.extend_from_slice(&["--peers", &both, "--replicate-secs", "1"]);
+        }
+    }
+    let shard0 = spawn_idiff(&args0, shard0_env, "shard 0");
+    let shard1 = spawn_idiff(&args1, &[], "shard 1");
+    let mut rargs = vec![
+        "route", "--addr", "127.0.0.1:0", "--workers", "2", "--health-secs", "1", "--shards",
+        &both,
+    ];
+    rargs.extend_from_slice(router_extra);
+    let router = spawn_idiff(&rargs, router_env, "router");
+    (shard0, shard1, router)
+}
+
+// -------------------------------------------- 1. shard drops + truncation --
+
+#[test]
+fn dropped_requests_and_truncated_replies_are_answered_typed_and_bounded() {
+    let plan = "shard-request=drop@4,shard-reply=close-mid-frame@5";
+    let (_shard0, _shard1, router) =
+        spawn_two_shards_and_router(&[("IDIFF_FAULTS", plan)], &[], false, &[]);
+    let v = vec![0.5; 8];
+    let mut ok = 0usize;
+    for t in &thetas(24) {
+        let t0 = Instant::now();
+        let r = request(&router.addr, &hypergrad_line(t, &v, Some(2500)));
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "reply took {:?} against a 2.5s deadline",
+            t0.elapsed()
+        );
+        if r.get("grad").is_some() {
+            ok += 1;
+        } else {
+            assert!(is_typed_error(&r), "untyped reply under faults: {}", r.to_string_compact());
+        }
+    }
+    // The fault-free shard plus failover keeps well over half the traffic up.
+    assert!(ok >= 12, "only {ok}/24 requests served under shard faults");
+}
+
+// ------------------------------------------------- 2. router-forward drops --
+
+#[test]
+fn router_forward_drops_retry_onto_a_survivor_and_every_request_succeeds() {
+    // Threshold 3 keeps single drops from opening a breaker: the retry
+    // re-hashes within the same ring and must succeed on its own.
+    let (_shard0, _shard1, router) = spawn_two_shards_and_router(
+        &[],
+        &[("IDIFF_FAULTS", "router-forward=drop@3")],
+        false,
+        &["--breaker-threshold", "3"],
+    );
+    let v = vec![0.5; 8];
+    for t in &thetas(24) {
+        let r = request(&router.addr, &hypergrad_line(t, &v, Some(10_000)));
+        assert!(
+            r.get("grad").is_some(),
+            "a dropped forward must be retried, not surfaced: {}",
+            r.to_string_compact()
+        );
+    }
+    let retried = stat(&router.addr, "failovers");
+    assert!(retried >= 1.0, "the drop plan never fired (failovers = {retried})");
+}
+
+// --------------------------------------------------------- 3. actor panics --
+
+#[test]
+fn actor_panics_are_supervised_restarted_and_counted() {
+    let shard = spawn_idiff(
+        &["serve", "--addr", "127.0.0.1:0", "--workers", "2", "--window-ms", "0"],
+        &[("IDIFF_FAULTS", "actor=panic@5")],
+        "shard",
+    );
+    let v = vec![0.5; 8];
+    let (mut ok, mut dropped) = (0usize, 0usize);
+    for t in &thetas(25) {
+        // Fresh connection per request: each one is a supervised message,
+        // so every 5th connection dies to the injected panic.
+        let t0 = Instant::now();
+        match try_request(&shard.addr, &hypergrad_line(t, &v, None), Duration::from_secs(5)) {
+            Some(r) if r.get("grad").is_some() => ok += 1,
+            Some(r) => panic!("unexpected reply: {}", r.to_string_compact()),
+            None => dropped += 1,
+        }
+        assert!(t0.elapsed() < Duration::from_secs(6), "connection neither served nor died");
+    }
+    assert!(dropped >= 1, "the panic plan never fired");
+    assert!(ok >= 15, "supervisor failed to keep the shard serving: {ok}/25");
+    assert!(
+        stat(&shard.addr, "actor_restarts") >= 1.0,
+        "panics must be recovered by the supervisor, not eaten"
+    );
+    assert_eq!(stat(&shard.addr, "actor_give_ups"), 0.0, "far below the storm threshold");
+}
+
+// ------------------------------------------- 4. injected latency, deadline --
+
+#[test]
+fn injected_latency_against_a_tight_deadline_yields_typed_deadline_errors() {
+    let (_shard0, _shard1, router) = spawn_two_shards_and_router(
+        &[("IDIFF_FAULTS", "shard-request=delay-3000")],
+        &[],
+        false,
+        &[],
+    );
+    let v = vec![0.5; 8];
+    let (mut served, mut expired) = (0usize, 0usize);
+    for t in &thetas(24) {
+        let t0 = Instant::now();
+        let r = request(&router.addr, &hypergrad_line(t, &v, Some(500)));
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "a 500ms deadline took {:?} to resolve",
+            t0.elapsed()
+        );
+        if r.get("grad").is_some() {
+            served += 1;
+        } else {
+            assert_eq!(
+                r.get("error").and_then(|e| e.as_str()),
+                Some("deadline_exceeded"),
+                "slow shard must yield the typed deadline error: {}",
+                r.to_string_compact()
+            );
+            expired += 1;
+        }
+    }
+    // The ring splits the θ's across both shards: the slow shard's slice
+    // expires, the healthy shard's slice is served.
+    assert!(served >= 1, "healthy shard's slice should still be served");
+    assert!(expired >= 1, "delayed shard's slice should expire typed");
+    assert!(stat(&router.addr, "deadline_exceeded") >= expired as f64);
+}
+
+// ----------------------------- 5. failover recovery journal (no faults) --
+
+/// Warm `n` θ's through the router; returns per-shard factorization counts.
+fn warm(router: &Proc, shard0: &Proc, shard1: &Proc, n: usize) -> (f64, f64) {
+    let v = vec![0.5; 8];
+    for t in &thetas(n) {
+        let r = request(&router.addr, &hypergrad_line(t, &v, None));
+        assert!(r.get("error").is_none(), "warmup: {}", r.to_string_compact());
+    }
+    (stat(&shard0.addr, "factorizations"), stat(&shard1.addr, "factorizations"))
+}
+
+/// Kill shard 0, then time (a) the first successful reply and (b) a full
+/// clean pass over every θ. Returns (first_ms, pass_ms, new_factorizations).
+fn measure_failover(router: &Proc, shard0: Proc, shard1: &Proc, n: usize) -> (f64, f64, f64) {
+    let v = vec![0.5; 8];
+    let before = stat(&shard1.addr, "factorizations");
+    drop(shard0); // SIGKILL
+    let t0 = Instant::now();
+    let mut first_ms = None;
+    for t in &thetas(n) {
+        let r = request(&router.addr, &hypergrad_line(t, &v, Some(15_000)));
+        assert!(r.get("error").is_none(), "failover: {}", r.to_string_compact());
+        first_ms.get_or_insert_with(|| t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let pass_ms = t0.elapsed().as_secs_f64() * 1e3;
+    (first_ms.unwrap(), pass_ms, stat(&shard1.addr, "factorizations") - before)
+}
+
+#[test]
+fn failover_recovery_is_journaled_replicated_vs_cold() {
+    let n = 16;
+
+    // Replicated: wait for the warm slice to land on the successor first.
+    let (shard0, shard1, router) = spawn_two_shards_and_router(&[], &[], true, &[]);
+    let (f0, f1) = warm(&router, &shard0, &shard1, n);
+    assert_eq!(f0 + f1, n as f64);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while stat(&shard1.addr, "replicated_in") < f0 || stat(&shard0.addr, "replicated_in") < f1 {
+        assert!(Instant::now() < deadline, "replication never completed");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let (warm_first, warm_pass, warm_new) = measure_failover(&router, shard0, &shard1, n);
+    assert_eq!(warm_new, 0.0, "replicated failover must cost zero new factorizations");
+    drop(router);
+    drop(shard1);
+
+    // Cold: identical cluster, no replication — the survivor re-factors.
+    let (shard0, shard1, router) = spawn_two_shards_and_router(&[], &[], false, &[]);
+    let (f0, _f1) = warm(&router, &shard0, &shard1, n);
+    let (cold_first, cold_pass, cold_new) = measure_failover(&router, shard0, &shard1, n);
+    assert_eq!(cold_new, f0, "cold failover re-factors exactly the migrated slice");
+
+    let row = |scenario: &str, first: f64, pass: f64, refactored: f64| {
+        Json::obj(vec![
+            ("scenario", Json::Str(scenario.to_string())),
+            ("thetas", Json::Num(n as f64)),
+            ("first_reply_ms", Json::Num(first)),
+            ("full_pass_ms", Json::Num(pass)),
+            ("new_factorizations", Json::Num(refactored)),
+        ])
+    };
+    let journal = Json::obj(vec![
+        ("bench", Json::Str("faults".to_string())),
+        (
+            "rows",
+            Json::Arr(vec![
+                row("failover_replicated", warm_first, warm_pass, warm_new),
+                row("failover_cold", cold_first, cold_pass, cold_new),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_faults.json", journal.to_string_pretty()) {
+        Ok(()) => println!("[chaos] wrote BENCH_faults.json"),
+        Err(e) => eprintln!("[chaos] FAILED to write BENCH_faults.json: {e}"),
+    }
+}

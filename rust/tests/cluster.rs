@@ -417,6 +417,117 @@ fn two_shard_cluster_deduplicates_factorizations_and_fails_over() {
     drop(shard1);
 }
 
+/// Reserve two distinct loopback ports by binding both before dropping
+/// either. The shard processes need to know each other's address up front
+/// (`--peers` is index-aligned with shard ids), so `--addr 127.0.0.1:0`
+/// self-assignment is not an option here.
+fn reserve_two_ports() -> (u16, u16) {
+    let a = TcpListener::bind("127.0.0.1:0").expect("reserve port a");
+    let b = TcpListener::bind("127.0.0.1:0").expect("reserve port b");
+    (a.local_addr().unwrap().port(), b.local_addr().unwrap().port())
+}
+
+/// One numeric field out of a shard's own `stats` reply (fresh connection
+/// per call so the poll below never observes a stale pipelined reply).
+fn shard_stat(addr: &str, key: &str) -> f64 {
+    let mut c = JsonClient::connect(addr);
+    c.request(r#"{"op":"stats"}"#).get(key).and_then(Json::as_f64).unwrap_or(-1.0)
+}
+
+#[test]
+fn killed_shard_fails_over_onto_its_warm_replica_with_zero_new_factorizations() {
+    let (pa, pb) = reserve_two_ports();
+    let addr_a = format!("127.0.0.1:{pa}");
+    let addr_b = format!("127.0.0.1:{pb}");
+    let peers = format!("{addr_a},{addr_b}");
+    let shard0 = spawn_idiff(
+        &[
+            "serve", "--addr", &addr_a, "--workers", "2", "--window-ms", "0",
+            "--shard", "0/2", "--peers", &peers, "--replicate-secs", "1",
+        ],
+        "shard 0",
+    );
+    let shard1 = spawn_idiff(
+        &[
+            "serve", "--addr", &addr_b, "--workers", "2", "--window-ms", "0",
+            "--shard", "1/2", "--peers", &peers, "--replicate-secs", "1",
+        ],
+        "shard 1",
+    );
+    let router = spawn_idiff(
+        &["route", "--addr", "127.0.0.1:0", "--workers", "2", "--health-secs", "1", "--shards", &peers],
+        "router",
+    );
+
+    // Warm 24 distinct θ's through the router and keep every grad verbatim.
+    let thetas: Vec<Vec<f64>> = (0..24).map(|i| vec![1.0 + 0.01 * i as f64; 8]).collect();
+    let v = vec![0.5; 8];
+    let mut jc = JsonClient::connect(&router.addr);
+    let mut first_grads: Vec<Vec<Json>> = Vec::new();
+    for t in &thetas {
+        let r = jc.request(&hypergrad_line("ridge", t, &v, None));
+        assert!(r.get("error").is_none(), "warmup: {}", r.to_string_compact());
+        first_grads.push(r.get("grad").and_then(Json::as_arr).expect("grad").to_vec());
+    }
+    let f0 = shard_stat(&shard0.addr, "factorizations");
+    let f1 = shard_stat(&shard1.addr, "factorizations");
+    assert!(f0 > 0.0 && f1 > 0.0, "ring left a shard idle: {f0}/{f1}");
+    assert_eq!(f0 + f1, thetas.len() as f64, "one factorization per θ cluster-wide");
+
+    // Wait for the 1-second replicator to ship each shard's owned slice to
+    // its ring successor (the other shard). Facts ship before ρ entries, so
+    // `replicated_in >= peer facts` means every factorization has landed.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let into_1 = shard_stat(&shard1.addr, "replicated_in");
+        let into_0 = shard_stat(&shard0.addr, "replicated_in");
+        if into_1 >= f0 && into_0 >= f1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replication never completed: shard1 got {into_1}/{f0}, shard0 got {into_0}/{f1}"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(shard_stat(&shard0.addr, "replicated_out") >= f0);
+
+    // SIGKILL shard 0. Its arcs re-hash onto shard 1, which must serve the
+    // migrated θ's FROM THE REPLICA: every answer cached, bitwise-identical
+    // to the pre-kill grad, and not a single new factorization.
+    drop(shard0);
+    let mut jc = JsonClient::connect(&router.addr);
+    for (t, want) in thetas.iter().zip(&first_grads) {
+        let r = jc.request(&hypergrad_line("ridge", t, &v, None));
+        assert!(r.get("error").is_none(), "failover: {}", r.to_string_compact());
+        assert_eq!(
+            r.get("cached"),
+            Some(&Json::Bool(true)),
+            "failover must land on the warm replica, not re-factor: {}",
+            r.to_string_compact()
+        );
+        assert_eq!(
+            r.get("grad").and_then(Json::as_arr).expect("grad"),
+            want.as_slice(),
+            "replicated answer must be bitwise-identical to the original"
+        );
+    }
+    assert_eq!(
+        shard_stat(&shard1.addr, "factorizations"),
+        f1,
+        "warm failover must cost zero new factorizations"
+    );
+
+    // The router agrees: breaker open on the dead shard, survivor untouched.
+    let stats = jc.request(r#"{"op":"stats"}"#);
+    let rows = shard_rows(&stats);
+    assert!(!rows[0].1, "killed shard must be marked unhealthy");
+    assert_eq!(rows[1].2, f1, "router sees the survivor's factorizations unchanged");
+    drop(jc);
+    drop(router);
+    drop(shard1);
+}
+
 #[cfg(unix)]
 #[test]
 fn sigterm_writes_the_warm_start_manifest_before_exit() {

@@ -162,6 +162,53 @@ fn rho_cache_persists_so_auto_mode_skips_power_iteration_after_reboot() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// Shared shape of every corrupt-manifest case: `load_manifest` must come
+/// back `Ok` with a cold-start *reason* (a counted, clean cold start — not
+/// an `Err`, not a panic, not a partial restore), and the server must then
+/// serve from scratch as if no manifest existed.
+fn assert_clean_cold_start(path: &PathBuf, what: &str) {
+    let s = quiet();
+    let warm = s.load_manifest(path).unwrap_or_else(|e| panic!("{what}: load must be Ok: {e}"));
+    assert!(warm.cold_start.is_some(), "{what}: corruption must be reported as a cold start");
+    assert_eq!(warm.factorizations + warm.rho_entries, 0, "{what}: nothing may be restored");
+    let r = s.handle(&hypergrad_line("ridge", &[1.0; 8], &[1.0; 8]));
+    assert!(r.get("error").is_none(), "{what}: {}", r.to_string_compact());
+    assert_eq!(s.stats.factorizations.load(Ordering::Relaxed), 1, "{what}: cold server factors");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn manifest_truncated_mid_write_cold_starts_cleanly() {
+    // A crash mid-`save_manifest` leaves a valid prefix of real JSON: warm
+    // a server, persist, then cut the file in half.
+    let a = quiet();
+    let r = a.handle(&hypergrad_line("ridge", &[1.3; 8], &[0.5; 8]));
+    assert!(r.get("error").is_none(), "{}", r.to_string_compact());
+    let path = tmp_path("truncated");
+    a.save_manifest(&path).unwrap();
+    drop(a);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.len() > 64, "manifest unexpectedly small");
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert_clean_cold_start(&path, "truncated manifest");
+}
+
+#[test]
+fn manifest_of_garbage_bytes_cold_starts_cleanly() {
+    // Not even UTF-8, let alone JSON.
+    let path = tmp_path("garbage");
+    std::fs::write(&path, [0xff, 0xfe, 0x00, 0x9c, 0xb1, 0x42, 0xff, 0x07]).unwrap();
+    assert_clean_cold_start(&path, "garbage-bytes manifest");
+}
+
+#[test]
+fn manifest_of_wrong_shaped_json_cold_starts_cleanly() {
+    // Parses fine, is simply not a manifest.
+    let path = tmp_path("wrong_shape");
+    std::fs::write(&path, "[1,2,3]").unwrap();
+    assert_clean_cold_start(&path, "wrong-shape manifest");
+}
+
 #[test]
 fn manifest_version_skew_cold_starts_without_crashing_the_server() {
     // A manifest written by some FUTURE version must not wedge this build:

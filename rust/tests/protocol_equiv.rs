@@ -158,6 +158,7 @@ impl Step {
             mode,
             precision,
             iters: self.iters,
+            deadline_ms: 0,
             problem: &self.problem,
             theta: &self.theta,
             v: &self.v,
@@ -452,6 +453,7 @@ fn malformed_binary_frames_follow_the_error_policy() {
         start(ServeConfig { max_line_bytes: 64, ..quiet_cfg() });
     let mut bc2 = BinClient::connect(small_addr);
     let mut huge = vec![wire::MAGIC, wire::VERSION];
+    huge.extend_from_slice(&0u32.to_le_bytes()); // deadline field: none
     huge.extend_from_slice(&(1_000_000u32).to_le_bytes());
     let f = bc2.raw(&huge).unwrap();
     assert_eq!(f.status, wire::STATUS_ERR);
@@ -466,7 +468,8 @@ fn malformed_binary_frames_follow_the_error_policy() {
     // 4. Wrong protocol version: framing error, then close.
     let mut bc3 = BinClient::connect(addr);
     let mut verr = vec![wire::MAGIC, 99];
-    verr.extend_from_slice(&0u32.to_le_bytes());
+    verr.extend_from_slice(&0u32.to_le_bytes()); // deadline field
+    verr.extend_from_slice(&0u32.to_le_bytes()); // payload length
     let f = bc3.raw(&verr).unwrap();
     assert_eq!(f.status, wire::STATUS_ERR);
     assert!(f.error.as_deref().unwrap_or("").contains("version"), "{:?}", f.error);
